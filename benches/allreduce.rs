@@ -1,0 +1,61 @@
+//! Gradient all-reduce benchmarks: exact-mean accumulation over replica
+//! gradients (the data-parallel sync on the training critical path) and the
+//! ring cost model across scales.
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::cluster::{ring_allreduce_cost, GradAccumulator};
+use dcl::net::CostModel;
+use dcl::runtime::executor::make_literal;
+use dcl::util::rng::Rng;
+
+fn main() {
+    let mut r = Runner::from_args();
+    let mut rng = Rng::new(1);
+
+    // resnet18_sim-like gradient set: (3072x512), (512,), (512x256),
+    // (256,), (256x40), (40,)
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![3072, 512], vec![512], vec![512, 256], vec![256],
+        vec![256, 40], vec![40],
+    ];
+    let grads: Vec<Vec<xla::Literal>> = (0..4)
+        .map(|_| {
+            shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    let v: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                    make_literal(&v, s).unwrap()
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut acc = GradAccumulator::new(shapes.clone());
+    let bytes = acc.payload_bytes();
+    r.bench_items("accumulate_4replicas_1.8Mparam", bytes * 4, || {
+        for g in &grads {
+            acc.add(g).unwrap();
+        }
+        black_box(acc.reduce(&CostModel::default()).unwrap());
+    });
+
+    // add() alone (per replica on the critical path).
+    let mut acc2 = GradAccumulator::new(shapes.clone());
+    r.bench_items("add_one_replica", bytes, || {
+        acc2.add(&grads[0]).unwrap();
+        if acc2.replicas() >= 64 {
+            black_box(acc2.reduce(&CostModel::default()).unwrap());
+        }
+    });
+
+    // Ring cost model across scales (pure arithmetic).
+    let cm = CostModel::default();
+    r.bench("ring_cost_model_sweep", || {
+        for n in [2usize, 8, 32, 128] {
+            black_box(ring_allreduce_cost(&cm, n, 25_557_032 * 4));
+        }
+    });
+
+    r.write_csv("allreduce.csv");
+}

@@ -1,0 +1,72 @@
+//! Micro-benchmarks of the rehearsal-buffer hot paths: Algorithm-1 updates,
+//! row fetches (the RDMA-read served to peers), metadata snapshots, and the
+//! per-policy insert cost. These are the costs the paper must keep small
+//! enough to hide behind training (§IV-B/§IV-C).
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::buffer::LocalBuffer;
+use dcl::config::EvictionPolicy;
+use dcl::tensor::Sample;
+use dcl::util::rng::Rng;
+
+const DIM: usize = 3072; // 32x32x3 like the experiments
+
+fn sample(rng: &mut Rng, class: u32) -> Sample {
+    Sample::new(class, (0..DIM).map(|_| rng.f32()).collect())
+}
+
+fn filled_buffer(policy: EvictionPolicy, classes: u32, per_class: usize) -> LocalBuffer {
+    let buf = LocalBuffer::new((classes as usize) * per_class, policy, 7);
+    let mut rng = Rng::new(3);
+    for c in 0..classes {
+        for _ in 0..per_class {
+            buf.insert(sample(&mut rng, c));
+        }
+    }
+    buf
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let mut rng = Rng::new(1);
+
+    // Algorithm 1: one batch update (b=56, c=14) against a warm buffer.
+    let buf = filled_buffer(EvictionPolicy::Random, 40, 18);
+    let batch: Vec<Sample> = (0..56).map(|i| sample(&mut rng, i % 40)).collect();
+    let mut urng = Rng::new(9);
+    r.bench_items("algorithm1_update_b56_c14", 56, || {
+        black_box(buf.update_with_batch(&batch, 14, 56, &mut urng));
+    });
+
+    // Per-policy insert cost at capacity (every insert evicts).
+    for policy in [EvictionPolicy::Random, EvictionPolicy::Fifo,
+                   EvictionPolicy::Reservoir] {
+        let buf = filled_buffer(policy, 8, 32);
+        let mut i = 0u32;
+        r.bench(&format!("insert_evict_{}", policy.name()), || {
+            i = i.wrapping_add(1);
+            buf.insert(sample(&mut urng, i % 8));
+        });
+    }
+
+    // Row fetch: the consolidated bulk read a peer's sampling plan issues
+    // (r=7 rows from one node).
+    let buf = filled_buffer(EvictionPolicy::Random, 40, 18);
+    let picks: Vec<(u32, usize)> = (0..7).map(|i| (i as u32 * 5, i)).collect();
+    r.bench_items("fetch_rows_r7", 7, || {
+        black_box(buf.fetch_rows(&picks));
+    });
+
+    // Metadata snapshot (the planner's per-peer counts gather).
+    r.bench("snapshot_counts_40classes", || {
+        black_box(buf.snapshot_counts());
+    });
+
+    // Local sampling (N=1 degenerate / local-only ablation).
+    let mut srng = Rng::new(11);
+    r.bench_items("sample_local_r7", 7, || {
+        black_box(buf.sample_local(7, &mut srng));
+    });
+
+    r.write_csv("buffer_ops.csv");
+}

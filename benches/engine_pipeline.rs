@@ -1,0 +1,65 @@
+//! Engine pipeline benchmark (the abl-async microscale view): cost of the
+//! Listing-1 `update()` primitive in async vs blocking mode, at several
+//! cluster sizes. In async mode the foreground cost is ~channel traffic;
+//! in blocking mode the full populate+sample round sits on the caller.
+
+use std::sync::Arc;
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::engine::{EngineParams, RehearsalEngine};
+use dcl::net::{CostModel, Fabric};
+use dcl::tensor::{Batch, Sample};
+use dcl::util::rng::Rng;
+
+fn make_fabric(n: usize) -> Arc<Fabric> {
+    let mut rng = Rng::new(5);
+    let buffers = (0..n)
+        .map(|w| {
+            let b = LocalBuffer::new(720, EvictionPolicy::Random, w as u64);
+            for c in 0..40u32 {
+                for _ in 0..18 {
+                    b.insert(Sample::new(c, (0..3072).map(|_| rng.f32()).collect()));
+                }
+            }
+            Arc::new(b)
+        })
+        .collect();
+    Arc::new(Fabric::new(buffers, CostModel::default(), false))
+}
+
+fn batch(rng: &mut Rng) -> Batch {
+    Batch::new(
+        (0..56)
+            .map(|_| Sample::new(rng.below(40) as u32,
+                                 (0..3072).map(|_| rng.f32()).collect()))
+            .collect(),
+    )
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let mut rng = Rng::new(1);
+
+    for n in [2usize, 4, 8] {
+        for (async_updates, mode) in [(true, "async"), (false, "blocking")] {
+            let fabric = make_fabric(n);
+            let params = EngineParams {
+                batch: 56,
+                reps: 7,
+                candidates: 14,
+                scope: SamplingScope::Global,
+                async_updates,
+            };
+            let mut engine = RehearsalEngine::new(0, fabric, params, 42);
+            let b = batch(&mut rng);
+            r.bench(&format!("update_{mode}_n{n}"), || {
+                black_box(engine.update(&b).unwrap());
+            });
+            engine.finish().unwrap();
+        }
+    }
+
+    r.write_csv("engine_pipeline.csv");
+}

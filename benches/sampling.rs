@@ -1,0 +1,83 @@
+//! Global-sampling planner benchmarks: plan construction cost vs cluster
+//! size and r, plus plan+execute through the fabric. The planner runs once
+//! per iteration per worker in the background thread — it must stay in the
+//! tens-of-microseconds range to hide behind any realistic train step.
+
+use std::sync::Arc;
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::net::{CostModel, Fabric};
+use dcl::sampling::GlobalSampler;
+use dcl::tensor::Sample;
+use dcl::util::rng::Rng;
+
+fn counts(workers: usize, classes: usize, per_class: usize) -> Vec<Vec<(u32, usize)>> {
+    (0..workers)
+        .map(|_| (0..classes).map(|c| (c as u32, per_class)).collect())
+        .collect()
+}
+
+fn fabric(workers: usize, classes: u32, per_class: usize) -> Arc<Fabric> {
+    let mut rng = Rng::new(5);
+    let buffers = (0..workers)
+        .map(|w| {
+            let b = LocalBuffer::new(classes as usize * per_class,
+                                     EvictionPolicy::Random, w as u64);
+            for c in 0..classes {
+                for _ in 0..per_class {
+                    b.insert(Sample::new(
+                        c, (0..3072).map(|_| rng.f32()).collect()));
+                }
+            }
+            Arc::new(b)
+        })
+        .collect();
+    Arc::new(Fabric::new(buffers, CostModel::default(), false))
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+
+    // Plan-only cost at increasing cluster sizes (metadata already in hand).
+    for n in [4usize, 16, 64, 128] {
+        let cts = counts(n, 40, 18);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(2);
+        r.bench(&format!("plan_r7_n{n}"), || {
+            black_box(sampler.plan(&cts, 7, &mut rng));
+        });
+    }
+
+    // Plan cost vs r at fixed N=16.
+    for reps in [3usize, 7, 14, 56] {
+        let cts = counts(16, 40, 18);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(3);
+        r.bench(&format!("plan_n16_r{reps}"), || {
+            black_box(sampler.plan(&cts, reps, &mut rng));
+        });
+    }
+
+    // Full round: gather counts + plan + execute over the fabric (N=4,
+    // the testbed's measured configuration).
+    let f = fabric(4, 40, 18);
+    let sampler = GlobalSampler::new(0, SamplingScope::Global);
+    let mut rng = Rng::new(4);
+    r.bench_items("gather_plan_execute_n4_r7", 7, || {
+        let cts = f.gather_counts(0);
+        let plan = sampler.plan(&cts, 7, &mut rng);
+        black_box(sampler.execute(&f, &plan).unwrap());
+    });
+
+    // Local-only ablation comparison.
+    let local = GlobalSampler::new(0, SamplingScope::LocalOnly);
+    r.bench_items("gather_plan_execute_local_only", 7, || {
+        let cts = f.gather_counts(0);
+        let plan = local.plan(&cts, 7, &mut rng);
+        black_box(local.execute(&f, &plan).unwrap());
+    });
+
+    r.write_csv("sampling.csv");
+}

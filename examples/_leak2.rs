@@ -1,0 +1,33 @@
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines().find(|l| l.starts_with("VmRSS")).unwrap()
+        .split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+fn main() -> anyhow::Result<()> {
+    let dir = dcl::testkit::artifacts_dir().unwrap();
+    let m = dcl::runtime::Manifest::load(&dir)?;
+    let exec = dcl::runtime::ModelExecutor::new(&m, "resnet50_sim", &[7])?;
+    let (mut params, mut moms) = exec.init_state()?;
+    let mut rng = dcl::util::rng::Rng::new(1);
+    let mk = |rng: &mut dcl::util::rng::Rng, rows: usize| {
+        dcl::tensor::Batch::new((0..rows).map(|_| dcl::tensor::Sample::new(
+            rng.below(40) as u32,
+            (0..3072).map(|_| rng.normal() as f32).collect())).collect())
+    };
+    let b = mk(&mut rng, 56); let r = mk(&mut rng, 7);
+    let shapes: Vec<Vec<usize>> = exec.meta.params.iter().map(|p| p.shape.clone()).collect();
+    let mut acc = dcl::cluster::GradAccumulator::new(shapes);
+    let cost = dcl::net::CostModel::default();
+    println!("base {:.0}MB", rss_mb());
+    for i in 0..12 {
+        for _w in 0..2 {
+            let out = exec.train_step_aug(&params, &b, &r)?;
+            acc.add(&out.grads)?;
+        }
+        let (mean, _) = acc.reduce(&cost)?;
+        let (p, mm) = exec.apply_update(params, moms, &mean, 0.01)?;
+        params = p; moms = mm;
+        if i % 3 == 2 { println!("iter {i}: {:.0}MB", rss_mb()); }
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: the smallest complete use of the public API.
+//!
+//! Builds a 2-worker simulated cluster, trains a small classifier over a
+//! 4-task class-incremental stream with the distributed rehearsal buffer,
+//! and prints the accuracy trajectory. Uses the tiny AOT artifact geometry,
+//! so it finishes in well under a minute.
+//!
+//! Run with: `make artifacts && cargo run --release --example quickstart`
+
+use dcl::config::Strategy;
+use dcl::train::trainer::run_experiment;
+
+fn main() -> anyhow::Result<()> {
+    let Some(mut cfg) = dcl::testkit::tiny_config() else {
+        eprintln!("artifacts/tiny missing — run `make artifacts` first");
+        return Ok(());
+    };
+    cfg.training.epochs_per_task = 3;
+    cfg.training.strategy = Strategy::Rehearsal;
+    cfg.buffer.percent_of_dataset = 30.0;
+    cfg.validate()?;
+
+    println!("distributed rehearsal buffer quickstart");
+    println!("  workers: {}   tasks: {}   classes: {}   |B|: {}% (S_max={}/worker)",
+             cfg.cluster.workers, cfg.data.num_tasks, cfg.data.num_classes,
+             cfg.buffer.percent_of_dataset, cfg.per_worker_capacity());
+    println!("  batch b={} + r={} representatives, c={} candidates/iter\n",
+             cfg.training.batch, cfg.training.reps, cfg.training.candidates);
+
+    let report = run_experiment(&cfg)?;
+
+    for e in &report.epochs {
+        if let Some(ev) = &e.eval {
+            println!("epoch {:>2} (task {}): accuracy_T  top-1 {:.3}  top-5 {:.3}   train loss {:.3}",
+                     e.epoch, e.task, ev.top1_accuracy_t, ev.accuracy_t,
+                     e.train_loss);
+        }
+    }
+    println!("\nfinal accuracy_T (Eq. 1): top-1 {:.3}, top-5 {:.3}",
+             report.final_top1_accuracy_t, report.final_accuracy_t);
+    println!("buffer management fully overlapped: augment-wait {:.3} ms/iter \
+              vs train {:.1} ms/iter",
+             report.breakdown_ms.2, report.breakdown_ms.1);
+    Ok(())
+}

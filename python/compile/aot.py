@@ -1,0 +1,184 @@
+"""AOT lowering: JAX/Pallas → HLO text + manifest, consumed by the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model variant this emits::
+
+    {v}_train_b{b}.hlo.txt           plain step (baselines): params,x,y ->
+                                     (loss, top1, top5, *grads)
+    {v}_train_aug_b{b}_r{r}.hlo.txt  rehearsal step: params,xb,yb,xr,yr ->
+                                     (loss, top1, top5, *grads)
+    {v}_update.hlo.txt               params,moms,grads,lr -> (*params,*moms)
+    {v}_eval_b{eb}.hlo.txt           params,x,y -> (loss_sum, top1, top5)
+    {v}_init.bin                     init params, flat little-endian f32 in
+                                     manifest order
+
+plus ``manifest.json`` describing shapes, argument order, hyperparameters and
+file names — the single contract between the Python compile path and the Rust
+request path. Python never runs after this script.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--classes 40]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple so the Rust side
+    can always decompose with to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def flops_per_step(variant: M.Variant, num_classes: int, batch: int) -> int:
+    """Analytic fwd+bwd FLOPs (3 GEMMs per layer, 2MNK each) for perfmodel."""
+    total = 0
+    for fin, fout in M.layer_dims(variant, num_classes):
+        total += 3 * 2 * batch * fin * fout
+    return total
+
+
+def lower_variant(v: M.Variant, out_dir: str, num_classes: int, batch: int,
+                  reps_list, eval_batch: int, seed: int) -> dict:
+    print(f"[aot] variant {v.name}")
+    pspec = M.param_spec(v, num_classes)
+    p_args = [_spec(s) for _, s in pspec]
+    d = M.INPUT_DIM
+
+    files = {}
+
+    # Plain train step (incremental / from-scratch baselines).
+    f_train = os.path.join(out_dir, f"{v.name}_train_b{batch}.hlo.txt")
+    lowered = jax.jit(M.train_step).lower(
+        p_args, _spec((batch, d)), _spec((batch,), jnp.int32))
+    _write(f_train, to_hlo_text(lowered))
+    files["train"] = os.path.basename(f_train)
+
+    # Rehearsal train steps, one per requested r.
+    files["train_aug"] = {}
+    for r in reps_list:
+        f_aug = os.path.join(out_dir, f"{v.name}_train_aug_b{batch}_r{r}.hlo.txt")
+        lowered = jax.jit(M.train_step_aug).lower(
+            p_args, _spec((batch, d)), _spec((batch,), jnp.int32),
+            _spec((r, d)), _spec((r,), jnp.int32))
+        _write(f_aug, to_hlo_text(lowered))
+        files["train_aug"][str(r)] = os.path.basename(f_aug)
+
+    # Optimizer step.
+    f_upd = os.path.join(out_dir, f"{v.name}_update.hlo.txt")
+    upd = functools.partial(
+        M.apply_update, momentum=v.momentum, weight_decay=v.weight_decay)
+    lowered = jax.jit(upd).lower(p_args, p_args, p_args, _spec((1,)))
+    _write(f_upd, to_hlo_text(lowered))
+    files["update"] = os.path.basename(f_upd)
+
+    # Eval step.
+    f_eval = os.path.join(out_dir, f"{v.name}_eval_b{eval_batch}.hlo.txt")
+    lowered = jax.jit(M.eval_step).lower(
+        p_args, _spec((eval_batch, d)), _spec((eval_batch,), jnp.int32))
+    _write(f_eval, to_hlo_text(lowered))
+    files["eval"] = os.path.basename(f_eval)
+
+    # Initial parameters: flat little-endian f32 in manifest order.
+    params = M.init_params(v, num_classes, seed)
+    f_init = os.path.join(out_dir, f"{v.name}_init.bin")
+    with open(f_init, "wb") as f:
+        for p in params:
+            f.write(jnp.asarray(p, jnp.float32).tobytes())
+    print(f"  wrote {f_init} ({sum(p.size for p in params) * 4 / 1e6:.2f} MB)")
+
+    return {
+        "label": v.label,
+        "hidden": list(v.hidden),
+        "base_lr": v.base_lr,
+        "weight_decay": v.weight_decay,
+        "momentum": v.momentum,
+        "num_params": M.num_params(v, num_classes),
+        "flops_per_step_b1": flops_per_step(v, num_classes, 1),
+        "params": [{"name": n, "shape": list(s)} for n, s in pspec],
+        "init_file": os.path.basename(f_init),
+        "artifacts": files,
+        "arg_order": {
+            "train": "params..., x[b,d] f32, y[b] i32",
+            "train_aug": "params..., xb[b,d] f32, yb[b] i32, xr[r,d] f32, yr[r] i32",
+            "update": "params..., moms..., grads..., lr[1] f32",
+            "eval": "params..., x[eb,d] f32, y[eb] i32",
+        },
+        "out_order": {
+            "train": "loss, top1, top5, grads...",
+            "train_aug": "loss, top1, top5, grads...",
+            "update": "params..., moms...",
+            "eval": "loss_sum, top1, top5",
+        },
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--classes", type=int, default=40,
+                    help="total classes K (paper: 1000; scaled default 40)")
+    ap.add_argument("--batch", type=int, default=56, help="mini-batch size b")
+    ap.add_argument("--reps-list", default="7",
+                    help="comma-separated r values to lower train_aug for")
+    ap.add_argument("--eval-batch", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--variants", default=",".join(M.VARIANTS),
+                    help="comma-separated subset of variants to lower")
+    args = ap.parse_args(argv)
+
+    reps_list = [int(r) for r in args.reps_list.split(",") if r]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "input_dim": M.INPUT_DIM,
+        "num_classes": args.classes,
+        "batch": args.batch,
+        "reps_list": reps_list,
+        "eval_batch": args.eval_batch,
+        "seed": args.seed,
+        "variants": {},
+    }
+    for name in args.variants.split(","):
+        v = M.VARIANTS[name]
+        manifest["variants"][name] = lower_variant(
+            v, args.out_dir, args.classes, args.batch, reps_list,
+            args.eval_batch, args.seed)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

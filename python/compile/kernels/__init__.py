@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (interpret=True for CPU-PJRT execution).
+
+Every kernel here is the TPU-idiom rethink of a hot-path step of the paper's
+training pipeline (see DESIGN.md §Hardware-Adaptation):
+
+- ``matmul``       — VMEM-tiled MXU matmul; compute core of fwd/bwd.
+- ``softmax_xent`` — fused log-softmax + cross-entropy (fwd and bwd kernels).
+- ``sgd_momentum`` — fused single-pass optimizer update.
+- ``concat_rows``  — mini-batch augmentation assembly (m' = m ⊕ reps) done
+                     inside the compiled step, mirroring the paper's
+                     augmented-mini-batch construction.
+
+Each has a pure-jnp oracle in :mod:`compile.kernels.ref`, checked by pytest +
+hypothesis in ``python/tests``.
+"""
+
+from .matmul import matmul, dense
+from .softmax_xent import softmax_xent
+from .sgd_momentum import sgd_momentum
+from .concat_rows import concat_rows
+
+__all__ = ["matmul", "dense", "softmax_xent", "sgd_momentum", "concat_rows"]

@@ -1,0 +1,125 @@
+"""Tiled matmul Pallas kernel — the MXU-shaped compute core of every layer.
+
+TPU mapping of the paper's cuBLAS/cuDNN hot path (DESIGN.md §Hardware-
+Adaptation): instead of tensor-core WMMA tiles scheduled by threadblocks, we
+express the HBM→VMEM schedule with a ``BlockSpec`` grid over (M, N) output
+tiles. The contraction (K) dimension stays VMEM-resident per tile — for the
+layer sizes in this project (K ≤ 3072) an ``(bm, K)`` activation tile plus a
+``(K, bn)`` weight tile fit comfortably in the ~16 MiB VMEM budget, so no K
+loop / accumulator scratch is needed. f32 accumulation is requested explicitly
+(``preferred_element_type``), matching MXU semantics for bf16 inputs.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is what the
+Rust runtime loads (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-tile shape. 128 matches the MXU systolic array edge; callers
+# with smaller problem sizes get the whole dimension as a single block.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+# VMEM budget we tile for (bytes). Used by `vmem_footprint` and asserted in
+# tests so kernel changes cannot silently blow the scratchpad.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction, f32 accumulate."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (dims are padded first,
+    so in practice this returns `preferred` unless dim < preferred)."""
+    if dim <= preferred:
+        return dim
+    b = preferred
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN) -> jax.Array:
+    """``x @ w`` via the Pallas tile kernel.
+
+    x: (M, K), w: (K, N) → (M, N). M and N are zero-padded up to the tile
+    shape and the result is sliced back; zero padding is exact for matmul.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"matmul shapes {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, m) if m < bm else bm
+    bn = min(bn, n) if n < bn else bn
+    xp = _pad_to(x, 0, bm)
+    wp = _pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def vmem_footprint(m: int, k: int, n: int, *, bm: int = DEFAULT_BM,
+                   bn: int = DEFAULT_BN, itemsize: int = 4) -> int:
+    """Bytes of VMEM used by one grid step: x tile + w tile + out tile."""
+    bm = min(bm, m)
+    bn = min(bn, n)
+    return itemsize * (bm * k + k * bn + bm * bn)
+
+
+@jax.custom_vjp
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer ``x @ w + b`` with both passes on the kernel.
+
+    custom_vjp is required because autodiff cannot trace through
+    ``pallas_call``; the backward pass reuses the same tile kernel for the
+    two gradient GEMMs (dx = dy·wᵀ, dw = xᵀ·dy).
+    """
+    return matmul(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = dy.sum(axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

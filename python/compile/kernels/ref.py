@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+pytest/hypothesis suites in ``python/tests`` assert kernel == oracle over
+swept shapes and dtypes; nothing in here may import pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return matmul_ref(x, w) + b
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-row cross entropy, f32, shape (B,)."""
+    x = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(x, axis=1)
+    picked = jnp.take_along_axis(x, labels[:, None], axis=1)[:, 0]
+    return lse - picked
+
+
+def softmax_xent_grad_ref(logits: jax.Array, labels: jax.Array,
+                          g: jax.Array) -> jax.Array:
+    """d/dlogits of sum(g * xent)."""
+    x = logits.astype(jnp.float32)
+    p = jax.nn.softmax(x, axis=1)
+    onehot = jax.nn.one_hot(labels, x.shape[1], dtype=jnp.float32)
+    return ((p - onehot) * g[:, None]).astype(logits.dtype)
+
+
+def sgd_momentum_ref(w, m, g, lr, *, mu=0.9, wd=0.0):
+    m2 = mu * m + g + wd * w
+    w2 = w - jnp.asarray(lr, w.dtype) * m2
+    return w2, m2
+
+
+def concat_rows_ref(x: jax.Array, reps: jax.Array) -> jax.Array:
+    return jnp.concatenate([x, reps], axis=0)

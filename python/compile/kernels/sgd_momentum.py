@@ -1,0 +1,78 @@
+"""Fused SGD-momentum + weight-decay update kernel.
+
+The classic optimizer step is four HBM passes (read w, read m, read g, write
+both); here it is one fused elementwise pass per parameter chunk:
+
+    m' = mu * m + g + wd * w
+    w' = w - lr * m'
+
+``lr`` changes every step (warmup / decay schedule driven by the Rust
+coordinator), so it is a runtime (1,) input rather than a compile-time
+constant; ``mu`` and ``wd`` are per-variant hyperparameters baked in at
+lowering time.
+
+Parameters of any rank are flattened to 1-D, padded to the chunk size, and
+gridded; padding lanes compute garbage that is sliced away (no aliasing, so
+this is safe).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 512 * 1024  # elements per grid step (2 MiB f32 per operand)
+# Perf note (EXPERIMENTS.md §Perf L1): 64 Ki chunks put the biggest tensor
+# (3072x1024) through 48 grid steps of the interpret-mode while-loop and the
+# lowered update step measured 441 ms on the CPU testbed; 512 Ki chunks
+# (6 operand buffers x 2 MiB = 12 MiB, still within the 16 MiB VMEM budget)
+# cut the grid 8x. See the sweep in EXPERIMENTS.md.
+
+
+def _sgd_kernel(w_ref, m_ref, g_ref, lr_ref, w2_ref, m2_ref, *, mu, wd):
+    w = w_ref[...]
+    m = m_ref[...]
+    g = g_ref[...]
+    lr = lr_ref[0]
+    m2 = mu * m + g + wd * w
+    m2_ref[...] = m2
+    w2_ref[...] = w - lr * m2
+
+
+@functools.partial(jax.jit, static_argnames=("mu", "wd", "chunk"))
+def sgd_momentum(w: jax.Array, m: jax.Array, g: jax.Array, lr: jax.Array,
+                 *, mu: float = 0.9, wd: float = 0.0, chunk: int = CHUNK):
+    """Returns ``(w', m')`` with the same shape/dtype as ``w``/``m``."""
+    if w.shape != m.shape or w.shape != g.shape:
+        raise ValueError(f"sgd shapes w={w.shape} m={m.shape} g={g.shape}")
+    shape = w.shape
+    wf, mf, gf = (a.reshape(-1) for a in (w, m, g))
+    n = wf.shape[0]
+    c = min(chunk, n)
+    rem = n % c
+    if rem:
+        pad = c - rem
+        wf, mf, gf = (jnp.pad(a, (0, pad)) for a in (wf, mf, gf))
+    grid = (wf.shape[0] // c,)
+    lr1 = jnp.asarray(lr, jnp.float32).reshape(1)
+    w2, m2 = pl.pallas_call(
+        functools.partial(_sgd_kernel, mu=mu, wd=wd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(wf.shape, w.dtype),
+            jax.ShapeDtypeStruct(wf.shape, m.dtype),
+        ],
+        interpret=True,
+    )(wf, mf, gf, lr1)
+    return w2[:n].reshape(shape), m2[:n].reshape(shape)

@@ -1,0 +1,177 @@
+"""Layer-2: classifier models (fwd/bwd + optimizer step) in JAX.
+
+Stand-ins for the paper's three convnets (§VI-A). The distributed rehearsal
+buffer is model-agnostic ("stores generic tensors", §VII), so the reproduction
+uses MLP classifiers over 32×32×3 synthetic images whose *relative* step costs
+mirror ResNet-50 > ResNet-18 ≈ GhostNet-50 (see DESIGN.md §1):
+
+=================  =========================  ==========
+variant            hidden widths              role
+=================  =========================  ==========
+``resnet50_sim``   1024, 1024, 512            the heavy default model
+``resnet18_sim``   512, 256                   ~½ the parameters, faster step
+``ghostnet50_sim`` 384, 384, 384              narrow-deep, cheapest step
+=================  =========================  ==========
+
+Every dense layer runs on the L1 Pallas ``dense`` kernel; the loss is the
+fused ``softmax_xent`` kernel; the optimizer step is the fused
+``sgd_momentum`` kernel; augmented batches are assembled by ``concat_rows``.
+These functions are lowered once by :mod:`compile.aot` to HLO text executed
+from Rust — Python never runs at training time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import concat_rows, dense, sgd_momentum, softmax_xent
+
+# Input dimensionality: 32x32x3 images, flattened by the data pipeline.
+INPUT_DIM = 32 * 32 * 3
+
+# Paper §VI-A hyperparameters (lr schedules live in the Rust coordinator;
+# base lr / weight decay / momentum are recorded here and in the manifest).
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    label: str
+    hidden: Tuple[int, ...]
+    base_lr: float
+    weight_decay: float
+    momentum: float = 0.9
+
+
+VARIANTS: Dict[str, Variant] = {
+    "resnet50_sim": Variant(
+        "resnet50_sim", "ResNet-50 (sim)", (1024, 1024, 512),
+        base_lr=0.0125, weight_decay=1e-5),
+    "resnet18_sim": Variant(
+        "resnet18_sim", "ResNet-18 (sim)", (512, 256),
+        base_lr=0.0125, weight_decay=1e-5),
+    "ghostnet50_sim": Variant(
+        "ghostnet50_sim", "GhostNet-50 (sim)", (384, 384, 384),
+        base_lr=0.01, weight_decay=1.5e-5),
+}
+
+
+def layer_dims(variant: Variant, num_classes: int) -> List[Tuple[int, int]]:
+    """(fan_in, fan_out) per dense layer, input → hidden* → logits."""
+    widths = (INPUT_DIM,) + variant.hidden + (num_classes,)
+    return list(zip(widths[:-1], widths[1:]))
+
+
+def param_spec(variant: Variant, num_classes: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat, ordered (name, shape) list — the param layout contract shared
+    with the Rust runtime via the artifact manifest."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for idx, (fin, fout) in enumerate(layer_dims(variant, num_classes)):
+        spec.append((f"w{idx}", (fin, fout)))
+        spec.append((f"b{idx}", (fout,)))
+    return spec
+
+
+def init_params(variant: Variant, num_classes: int, seed: int) -> List[jax.Array]:
+    """He-normal weights, zero biases, in `param_spec` order."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jax.Array] = []
+    for name, shape in param_spec(variant, num_classes):
+        if name.startswith("w"):
+            key, sub = jax.random.split(key)
+            fan_in = shape[0]
+            params.append(jax.random.normal(sub, shape, jnp.float32)
+                          * jnp.sqrt(2.0 / fan_in))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def num_params(variant: Variant, num_classes: int) -> int:
+    total = 0
+    for _, shape in param_spec(variant, num_classes):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def forward(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """MLP forward pass on the Pallas dense kernel → logits (B, K)."""
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = dense(h, w, b)
+        if i < n_layers - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def _topk_counts(logits: jax.Array, y: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(top-1 correct count, top-5 correct count), both f32 scalars.
+
+    Computed as the rank of the true-label logit (count of strictly larger
+    logits) rather than ``jax.lax.top_k``: the ``topk`` HLO carries a
+    ``largest=`` attribute that xla_extension 0.5.1's text parser rejects,
+    while compare+reduce lowers to ops every XLA accepts. Exact ties are
+    counted optimistically — measure-zero for continuous logits.
+    """
+    picked = jnp.take_along_axis(logits, y[:, None], axis=1)
+    rank = jnp.sum((logits > picked).astype(jnp.int32), axis=1)
+    hit1 = rank < 1
+    hit5 = rank < 5
+    return hit1.sum().astype(jnp.float32), hit5.sum().astype(jnp.float32)
+
+
+def loss_fn(params: Sequence[jax.Array], x: jax.Array, y: jax.Array):
+    logits = forward(params, x)
+    loss = softmax_xent(logits, y).mean()
+    return loss, logits
+
+
+def train_step(params: Sequence[jax.Array], x: jax.Array, y: jax.Array):
+    """(loss, top1, top5, *grads) over one (possibly augmented) batch."""
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        list(params), x, y)
+    top1, top5 = _topk_counts(logits, y)
+    return (loss, top1, top5, *grads)
+
+
+def train_step_aug(params: Sequence[jax.Array], xb: jax.Array, yb: jax.Array,
+                   xr: jax.Array, yr: jax.Array):
+    """Rehearsal train step: assemble the augmented batch on-accelerator
+    (Pallas concat) from the incoming mini-batch (b rows) and the
+    representatives fetched from the distributed buffer (r rows)."""
+    x = concat_rows(xb, xr)
+    y = jnp.concatenate([yb, yr], axis=0)
+    return train_step(params, x, y)
+
+
+def apply_update(params: Sequence[jax.Array], moms: Sequence[jax.Array],
+                 grads: Sequence[jax.Array], lr: jax.Array, *,
+                 momentum: float, weight_decay: float):
+    """Fused SGD update for every tensor → (*new_params, *new_moms).
+
+    Biases are excluded from weight decay (standard practice; the paper uses
+    framework defaults which likewise decay only weights).
+    """
+    new_p: List[jax.Array] = []
+    new_m: List[jax.Array] = []
+    for i, (p, m, g) in enumerate(zip(params, moms, grads)):
+        wd = weight_decay if p.ndim > 1 else 0.0
+        p2, m2 = sgd_momentum(p, m, g, lr, mu=momentum, wd=wd)
+        new_p.append(p2)
+        new_m.append(m2)
+    return (*new_p, *new_m)
+
+
+def eval_step(params: Sequence[jax.Array], x: jax.Array, y: jax.Array):
+    """(loss_sum, top1_count, top5_count) over one evaluation batch."""
+    logits = forward(params, x)
+    loss_sum = softmax_xent(logits, y).sum()
+    top1, top5 = _topk_counts(logits, y)
+    return (loss_sum, top1, top5)

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Make `compile.*` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep case counts modest and disable the
+# per-example deadline (first-call tracing can take seconds).
+settings.register_profile("dcl", max_examples=20, deadline=None)
+settings.load_profile("dcl")

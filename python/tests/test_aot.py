@@ -1,0 +1,75 @@
+"""AOT pipeline: manifest consistency + HLO text well-formedness."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def out(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    aot.main(["--out-dir", str(d), "--classes", "8", "--batch", "6",
+              "--reps-list", "2", "--eval-batch", "4",
+              "--variants", "resnet18_sim"])
+    return str(d)
+
+
+def _manifest(out):
+    with open(os.path.join(out, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_fields(out):
+    m = _manifest(out)
+    assert m["version"] == 1
+    assert m["num_classes"] == 8
+    assert m["batch"] == 6
+    assert m["reps_list"] == [2]
+    v = m["variants"]["resnet18_sim"]
+    assert v["num_params"] == M.num_params(M.VARIANTS["resnet18_sim"], 8)
+    assert [tuple(p["shape"]) for p in v["params"]] == \
+        [s for _, s in M.param_spec(M.VARIANTS["resnet18_sim"], 8)]
+
+
+def test_all_artifacts_exist(out):
+    v = _manifest(out)["variants"]["resnet18_sim"]
+    files = [v["artifacts"]["train"], v["artifacts"]["update"],
+             v["artifacts"]["eval"], v["init_file"]]
+    files += list(v["artifacts"]["train_aug"].values())
+    for f in files:
+        assert os.path.exists(os.path.join(out, f)), f
+
+
+def test_hlo_text_wellformed(out):
+    v = _manifest(out)["variants"]["resnet18_sim"]
+    for key in ("train", "update", "eval"):
+        with open(os.path.join(out, v["artifacts"][key])) as f:
+            text = f.read()
+        assert "ENTRY" in text and "HloModule" in text, key
+
+
+def test_init_bin_size_matches_manifest(out):
+    m = _manifest(out)
+    v = m["variants"]["resnet18_sim"]
+    size = os.path.getsize(os.path.join(out, v["init_file"]))
+    assert size == 4 * v["num_params"]
+
+
+def test_train_hlo_param_count(out):
+    """Entry computation must accept P params + x + y."""
+    m = _manifest(out)
+    v = m["variants"]["resnet18_sim"]
+    with open(os.path.join(out, v["artifacts"]["train"])) as f:
+        text = f.read()
+    entry = text[text.index("ENTRY"):]
+    count = entry.count(" parameter(")
+    assert count == len(v["params"]) + 2, count
+
+
+def test_flops_positive(out):
+    v = _manifest(out)["variants"]["resnet18_sim"]
+    assert v["flops_per_step_b1"] > 0

@@ -1,0 +1,47 @@
+"""Augmentation-assembly kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import concat_rows
+from compile.kernels import ref
+
+
+@given(b=st.integers(1, 100), r=st.integers(1, 40), d=st.integers(1, 128),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16, jnp.int32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matches_ref(b, r, d, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kr = jax.random.split(key)
+    if dtype == jnp.int32:
+        x = jax.random.randint(kx, (b, d), -100, 100, dtype)
+        reps = jax.random.randint(kr, (r, d), -100, 100, dtype)
+    else:
+        x = jax.random.normal(kx, (b, d), jnp.float32).astype(dtype)
+        reps = jax.random.normal(kr, (r, d), jnp.float32).astype(dtype)
+    got = concat_rows(x, reps)
+    want = ref.concat_rows_ref(x, reps)
+    assert got.shape == (b + r, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paper_shape_56_7():
+    x = jnp.arange(56 * 3072, dtype=jnp.float32).reshape(56, 3072)
+    reps = -jnp.arange(7 * 3072, dtype=jnp.float32).reshape(7, 3072)
+    out = concat_rows(x, reps)
+    np.testing.assert_array_equal(out[:56], x)
+    np.testing.assert_array_equal(out[56:], reps)
+
+
+def test_rejects_mismatched_width():
+    with pytest.raises(ValueError):
+        concat_rows(jnp.zeros((4, 3)), jnp.zeros((2, 5)))
+
+
+def test_rejects_mismatched_dtype():
+    with pytest.raises(ValueError):
+        concat_rows(jnp.zeros((4, 3), jnp.float32),
+                    jnp.zeros((2, 3), jnp.bfloat16))

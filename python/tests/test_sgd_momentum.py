@@ -1,0 +1,67 @@
+"""Fused SGD-momentum kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import sgd_momentum
+from compile.kernels import ref
+
+SHAPES = st.sampled_from([(7,), (64,), (100,), (3, 5), (56, 40), (3072, 64),
+                          (1, 1), (65537,)])
+
+
+@given(shape=SHAPES, mu=st.floats(0.0, 0.99), wd=st.floats(0.0, 1e-2),
+       lr=st.floats(1e-4, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref(shape, mu, wd, lr, seed):
+    key = jax.random.PRNGKey(seed)
+    kw, km, kg = jax.random.split(key, 3)
+    w = jax.random.normal(kw, shape)
+    m = jax.random.normal(km, shape)
+    g = jax.random.normal(kg, shape)
+    w2, m2 = sgd_momentum(w, m, g, lr, mu=mu, wd=wd)
+    we, me = ref.sgd_momentum_ref(w, m, g, lr, mu=mu, wd=wd)
+    np.testing.assert_allclose(w2, we, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m2, me, rtol=1e-5, atol=1e-6)
+
+
+def test_zero_lr_keeps_weights():
+    w = jnp.ones((128,))
+    m = jnp.zeros((128,))
+    g = jnp.full((128,), 3.0)
+    w2, m2 = sgd_momentum(w, m, g, 0.0, mu=0.9, wd=0.0)
+    np.testing.assert_allclose(w2, w)
+    np.testing.assert_allclose(m2, g)
+
+
+def test_momentum_accumulates():
+    # two steps with constant gradient: m = g, then m = mu*g + g
+    w = jnp.zeros((16,))
+    m = jnp.zeros((16,))
+    g = jnp.ones((16,))
+    w1, m1 = sgd_momentum(w, m, g, 0.1, mu=0.9, wd=0.0)
+    w2, m2 = sgd_momentum(w1, m1, g, 0.1, mu=0.9, wd=0.0)
+    np.testing.assert_allclose(m2, np.full(16, 1.9, np.float32), rtol=1e-6)
+    np.testing.assert_allclose(w2, np.full(16, -0.1 - 0.19, np.float32), rtol=1e-5)
+
+
+def test_weight_decay_pulls_to_zero():
+    w = jnp.full((8,), 10.0)
+    m = jnp.zeros((8,))
+    g = jnp.zeros((8,))
+    w2, _ = sgd_momentum(w, m, g, 1.0, mu=0.0, wd=0.1)
+    np.testing.assert_allclose(w2, np.full(8, 9.0, np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 63, 64, 65, 4096, 65536 + 3])
+def test_padding_edges(n):
+    key = jax.random.PRNGKey(n)
+    w = jax.random.normal(key, (n,))
+    m = jnp.zeros((n,))
+    g = jax.random.normal(key, (n,))
+    w2, m2 = sgd_momentum(w, m, g, 0.05, mu=0.9, wd=1e-4)
+    we, me = ref.sgd_momentum_ref(w, m, g, 0.05, mu=0.9, wd=1e-4)
+    np.testing.assert_allclose(w2, we, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m2, me, rtol=1e-5, atol=1e-6)

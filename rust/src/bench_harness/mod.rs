@@ -1,0 +1,196 @@
+//! Micro-benchmark harness — the criterion stand-in (offline registry ships
+//! no criterion; DESIGN.md §2).
+//!
+//! `cargo bench` runs each `benches/*.rs` with `harness = false`; those
+//! binaries drive this module: warmup, timed sampling, and a summary with
+//! mean / p50 / p95 / p99 and optional throughput. Output is plain text plus
+//! an optional CSV row sink so bench results can be diffed run-to-run.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Re-export for benches: prevent the optimizer from deleting the work.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub samples: usize,
+    /// Iterations batched per sample (amortises timer overhead for ns-scale
+    /// operations).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            samples: 30,
+            iters_per_sample: 1,
+        }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration timing summary, seconds.
+    pub summary: Summary,
+    /// Optional items/second (set via `Bencher::throughput`).
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let scale = |v: f64| {
+            if v >= 1.0 {
+                format!("{v:.3} s")
+            } else if v >= 1e-3 {
+                format!("{:.3} ms", v * 1e3)
+            } else if v >= 1e-6 {
+                format!("{:.3} µs", v * 1e6)
+            } else {
+                format!("{:.1} ns", v * 1e9)
+            }
+        };
+        let mut line = format!(
+            "{:<44} mean {:>11}  p50 {:>11}  p95 {:>11}  p99 {:>11}",
+            self.name, scale(s.mean), scale(s.p50), scale(s.p95), scale(s.p99)
+        );
+        if let Some(tp) = self.throughput {
+            line.push_str(&format!("  ({tp:.0} items/s)"));
+        }
+        line
+    }
+}
+
+/// Collects benchmarks, runs them, prints a table.
+pub struct Runner {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Runner {
+    /// Honors the standard `cargo bench -- <filter>` convention.
+    pub fn from_args() -> Runner {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-') && a != "--bench");
+        Runner { cfg: BenchConfig::default(), results: Vec::new(), filter }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> Runner {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Benchmark `f`, timing `iters_per_sample` calls per sample.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items processed per call).
+    pub fn bench_items<F: FnMut()>(&mut self, name: &str, items: usize, mut f: F) {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items(&mut self, name: &str, items: Option<usize>,
+                        f: &mut dyn FnMut()) {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return;
+            }
+        }
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.cfg.warmup {
+            f();
+        }
+        // Sample.
+        let mut samples = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t = Instant::now();
+            for _ in 0..self.cfg.iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64()
+                / self.cfg.iters_per_sample as f64);
+        }
+        let summary = Summary::from_samples(&samples);
+        let throughput = items.map(|n| n as f64 / summary.mean);
+        let result = BenchResult { name: name.to_string(), summary, throughput };
+        println!("{}", result.report());
+        self.results.push(result);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write a `target/bench_results/<file>.csv` for run-to-run diffing.
+    pub fn write_csv(&self, file: &str) {
+        let dir = std::path::Path::new("target/bench_results");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let mut text = String::from("name,mean_s,p50_s,p95_s,p99_s,throughput\n");
+        for r in &self.results {
+            text.push_str(&format!(
+                "{},{:.9},{:.9},{:.9},{:.9},{}\n",
+                r.name, r.summary.mean, r.summary.p50, r.summary.p95,
+                r.summary.p99,
+                r.throughput.map_or(String::new(), |t| format!("{t:.1}"))));
+        }
+        let _ = std::fs::write(dir.join(file), text);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut r = Runner {
+            cfg: BenchConfig {
+                warmup: Duration::from_millis(1),
+                samples: 5,
+                iters_per_sample: 10,
+            },
+            results: Vec::new(),
+            filter: None,
+        };
+        let mut counter = 0u64;
+        r.bench_items("count", 1, || {
+            counter = black_box(counter + 1);
+        });
+        assert_eq!(r.results().len(), 1);
+        assert!(counter > 0);
+        assert!(r.results()[0].summary.mean > 0.0);
+        assert!(r.results()[0].throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut r = Runner {
+            cfg: BenchConfig {
+                warmup: Duration::from_millis(1),
+                samples: 2,
+                iters_per_sample: 1,
+            },
+            results: Vec::new(),
+            filter: Some("match-me".into()),
+        };
+        r.bench("other", || {});
+        assert!(r.results().is_empty());
+        r.bench("match-me-please", || {});
+        assert_eq!(r.results().len(), 1);
+    }
+}

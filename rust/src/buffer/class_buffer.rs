@@ -1,0 +1,236 @@
+//! A single per-class sub-buffer `R_n^i` (paper §IV-B, Fig. 2).
+//!
+//! Bounded pool of representatives of one class. When full, an incoming
+//! candidate *competes with residents of the same class only*; the winner is
+//! decided by the eviction policy — uniform-random replacement in the paper,
+//! FIFO and reservoir-sampling as ablations (DESIGN.md abl-policy).
+
+use crate::config::EvictionPolicy;
+use crate::tensor::Sample;
+use crate::util::rng::Rng;
+
+/// What happened to an offered candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertOutcome {
+    /// Buffer had room; candidate appended.
+    Appended,
+    /// Buffer full; candidate replaced the resident at this slot.
+    Replaced(usize),
+    /// Buffer full; policy rejected the candidate (reservoir only).
+    Rejected,
+}
+
+#[derive(Debug)]
+pub struct ClassBuffer {
+    samples: Vec<Sample>,
+    capacity: usize,
+    policy: EvictionPolicy,
+    /// Candidates ever offered (reservoir denominator).
+    seen: u64,
+    /// Next slot to overwrite under FIFO.
+    fifo_next: usize,
+}
+
+impl ClassBuffer {
+    pub fn new(capacity: usize, policy: EvictionPolicy) -> ClassBuffer {
+        ClassBuffer {
+            samples: Vec::new(),
+            capacity,
+            policy,
+            seen: 0,
+            fifo_next: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
+    /// Total candidates ever offered to this buffer.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Offer one candidate (one accepted draw of Algorithm 1 line 4).
+    pub fn insert(&mut self, sample: Sample, rng: &mut Rng) -> InsertOutcome {
+        self.seen += 1;
+        if self.capacity == 0 {
+            return InsertOutcome::Rejected;
+        }
+        if self.samples.len() < self.capacity {
+            self.samples.push(sample);
+            return InsertOutcome::Appended;
+        }
+        match self.policy {
+            EvictionPolicy::Random => {
+                let slot = rng.below(self.samples.len());
+                self.samples[slot] = sample;
+                InsertOutcome::Replaced(slot)
+            }
+            EvictionPolicy::Fifo => {
+                let slot = self.fifo_next;
+                self.fifo_next = (self.fifo_next + 1) % self.capacity;
+                self.samples[slot] = sample;
+                InsertOutcome::Replaced(slot)
+            }
+            EvictionPolicy::Reservoir => {
+                // classic reservoir: keep with prob capacity/seen
+                let j = rng.below(self.seen as usize);
+                if j < self.capacity {
+                    self.samples[j] = sample;
+                    InsertOutcome::Replaced(j)
+                } else {
+                    InsertOutcome::Rejected
+                }
+            }
+        }
+    }
+
+    /// Borrow the representative at `idx`.
+    pub fn get(&self, idx: usize) -> &Sample {
+        &self.samples[idx]
+    }
+
+    /// Shrink to a new (smaller) capacity by evicting random residents —
+    /// used when a new class arrives and S_max/K drops (paper §IV-A).
+    pub fn shrink_to(&mut self, new_capacity: usize, rng: &mut Rng) {
+        self.capacity = new_capacity;
+        while self.samples.len() > new_capacity {
+            let slot = rng.below(self.samples.len());
+            self.samples.swap_remove(slot);
+        }
+        if self.fifo_next >= new_capacity.max(1) {
+            self.fifo_next = 0;
+        }
+    }
+
+    /// Grow capacity (no eviction needed).
+    pub fn grow_to(&mut self, new_capacity: usize) {
+        debug_assert!(new_capacity >= self.capacity);
+        self.capacity = new_capacity;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: f32) -> Sample {
+        Sample::new(0, vec![v])
+    }
+
+    #[test]
+    fn fills_then_replaces_random() {
+        let mut rng = Rng::new(1);
+        let mut b = ClassBuffer::new(3, EvictionPolicy::Random);
+        assert_eq!(b.insert(s(1.0), &mut rng), InsertOutcome::Appended);
+        assert_eq!(b.insert(s(2.0), &mut rng), InsertOutcome::Appended);
+        assert_eq!(b.insert(s(3.0), &mut rng), InsertOutcome::Appended);
+        assert_eq!(b.len(), 3);
+        match b.insert(s(4.0), &mut rng) {
+            InsertOutcome::Replaced(i) => assert!(i < 3),
+            o => panic!("{o:?}"),
+        }
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut rng = Rng::new(2);
+        let mut b = ClassBuffer::new(5, EvictionPolicy::Random);
+        for i in 0..1000 {
+            b.insert(s(i as f32), &mut rng);
+            assert!(b.len() <= 5);
+        }
+        assert_eq!(b.seen(), 1000);
+    }
+
+    #[test]
+    fn random_policy_mixes_old_and_new() {
+        // After many insertions, survivors should span a wide range of
+        // insertion times (geometric survival) — i.e. not all recent.
+        let mut rng = Rng::new(3);
+        let mut b = ClassBuffer::new(50, EvictionPolicy::Random);
+        for i in 0..2000 {
+            b.insert(s(i as f32), &mut rng);
+        }
+        // Random replacement keeps each resident with prob (1-1/cap) per
+        // subsequent eviction, so survivors span a geometric age range:
+        // with cap=50, P(resident older than 100 inserts) ≈ 0.13 per slot.
+        let min = (0..b.len()).map(|i| b.get(i).features[0] as u32).min().unwrap();
+        assert!(min < 1900, "oldest survivor {min} — no old samples kept");
+    }
+
+    #[test]
+    fn fifo_replaces_in_order() {
+        let mut rng = Rng::new(4);
+        let mut b = ClassBuffer::new(2, EvictionPolicy::Fifo);
+        b.insert(s(1.0), &mut rng);
+        b.insert(s(2.0), &mut rng);
+        assert_eq!(b.insert(s(3.0), &mut rng), InsertOutcome::Replaced(0));
+        assert_eq!(b.insert(s(4.0), &mut rng), InsertOutcome::Replaced(1));
+        assert_eq!(b.insert(s(5.0), &mut rng), InsertOutcome::Replaced(0));
+        assert_eq!(b.get(0).features[0], 5.0);
+        assert_eq!(b.get(1).features[0], 4.0);
+    }
+
+    #[test]
+    fn reservoir_keeps_uniform_history() {
+        // Each of T offered items should survive with prob cap/T.
+        let trials = 300;
+        let cap = 10;
+        let total = 100;
+        let mut hist = vec![0u32; total];
+        let mut rng = Rng::new(5);
+        for _ in 0..trials {
+            let mut b = ClassBuffer::new(cap, EvictionPolicy::Reservoir);
+            for i in 0..total {
+                b.insert(s(i as f32), &mut rng);
+            }
+            for i in 0..b.len() {
+                hist[b.get(i).features[0] as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * cap as f64 / total as f64; // 30
+        for (i, &h) in hist.iter().enumerate() {
+            assert!((h as f64 - expect).abs() < expect * 0.75,
+                    "item {i} survived {h} times (expect ~{expect})");
+        }
+    }
+
+    #[test]
+    fn zero_capacity_rejects() {
+        let mut rng = Rng::new(6);
+        let mut b = ClassBuffer::new(0, EvictionPolicy::Random);
+        assert_eq!(b.insert(s(1.0), &mut rng), InsertOutcome::Rejected);
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn shrink_evicts_to_new_capacity() {
+        let mut rng = Rng::new(7);
+        let mut b = ClassBuffer::new(10, EvictionPolicy::Random);
+        for i in 0..10 {
+            b.insert(s(i as f32), &mut rng);
+        }
+        b.shrink_to(4, &mut rng);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.capacity(), 4);
+        // survivors are a subset of the originals
+        for i in 0..4 {
+            assert!(b.get(i).features[0] < 10.0);
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! One worker's local rehearsal buffer `B_n` (paper §IV-A/B, Algorithm 1).
+//!
+//! Concurrency model mirrors the paper's: the training-side background task
+//! *updates* the buffer (candidate insertion) while local and *remote*
+//! augmentations *read* rows — all under fine-grain per-class locking so an
+//! update to class `i` never blocks a read of class `j`. The outer map only
+//! takes a write lock when a brand-new class arrives (rare), at which point
+//! per-class capacities are rebalanced to `S_max / K_seen` (the paper's
+//! even split that avoids selection bias).
+//!
+//! `fetch_rows` is the RDMA-read analogue: any thread holding an
+//! `Arc<LocalBuffer>` can read rows directly, without involving the owning
+//! worker's compute thread; the wire cost is accounted by the
+//! [`crate::net::Fabric`] wrapper.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use crate::config::EvictionPolicy;
+use crate::tensor::Sample;
+use crate::util::rng::Rng;
+
+use super::class_buffer::{ClassBuffer, InsertOutcome};
+
+/// (class id, resident count) — the metadata unit the sampling planner uses.
+pub type ClassCount = (u32, usize);
+
+#[derive(Debug, Default)]
+pub struct BufferCounters {
+    /// Candidates offered via Algorithm 1 (accepted coin flips).
+    pub candidates_offered: AtomicU64,
+    /// Candidates that evicted a resident.
+    pub evictions: AtomicU64,
+    /// Rows served to augmentations (local + remote).
+    pub rows_served: AtomicU64,
+}
+
+pub struct LocalBuffer {
+    /// Total sample capacity S_max for this worker.
+    s_max: usize,
+    policy: EvictionPolicy,
+    /// class id → its sub-buffer. Outer lock: rare class-arrival writes.
+    classes: RwLock<HashMap<u32, Mutex<ClassBuffer>>>,
+    /// Eviction randomness (its own stream so reads stay lock-cheap).
+    rng: Mutex<Rng>,
+    pub counters: BufferCounters,
+}
+
+impl LocalBuffer {
+    pub fn new(s_max: usize, policy: EvictionPolicy, seed: u64) -> LocalBuffer {
+        LocalBuffer {
+            s_max,
+            policy,
+            classes: RwLock::new(HashMap::new()),
+            rng: Mutex::new(Rng::new(seed ^ 0xB0FF)),
+            counters: BufferCounters::default(),
+        }
+    }
+
+    pub fn s_max(&self) -> usize {
+        self.s_max
+    }
+
+    /// Number of distinct classes currently tracked.
+    pub fn num_classes(&self) -> usize {
+        self.classes.read().unwrap().len()
+    }
+
+    /// Total residents across classes.
+    pub fn len(&self) -> usize {
+        self.classes
+            .read()
+            .unwrap()
+            .values()
+            .map(|c| c.lock().unwrap().len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-class capacity for `k` known classes: floor(S_max / k). The
+    /// paper's even split (§IV-A); S_max is a *hard* bound, so when more
+    /// classes than slots exist the buffer degenerates to empty rather
+    /// than exceeding its memory budget (callers should size S_max ≥ K,
+    /// which `ExperimentConfig::validate` enforces for experiment runs).
+    fn per_class_cap(&self, k: usize) -> usize {
+        if k == 0 {
+            return 0;
+        }
+        self.s_max / k
+    }
+
+    /// Ensure `class` exists; on first arrival rebalance all capacities to
+    /// the new even split. Returns without holding any lock.
+    fn ensure_class(&self, class: u32) {
+        {
+            let map = self.classes.read().unwrap();
+            if map.contains_key(&class) {
+                return;
+            }
+        }
+        let mut map = self.classes.write().unwrap();
+        if map.contains_key(&class) {
+            return; // raced with another writer
+        }
+        let k_new = map.len() + 1;
+        let cap = self.per_class_cap(k_new);
+        let mut rng = self.rng.lock().unwrap();
+        for cb in map.values() {
+            let mut cb = cb.lock().unwrap();
+            if cb.capacity() > cap {
+                cb.shrink_to(cap, &mut rng);
+            } else {
+                let new_cap = cap.max(cb.capacity());
+                cb.grow_to(new_cap);
+            }
+        }
+        map.insert(class, Mutex::new(ClassBuffer::new(cap, self.policy)));
+    }
+
+    /// Algorithm 1: offer each sample of the mini-batch with probability
+    /// `c/b`; full sub-buffers evict per policy. Returns candidates offered.
+    pub fn update_with_batch(&self, batch: &[Sample], c: usize, b: usize,
+                             rng: &mut Rng) -> usize {
+        debug_assert!(c <= b, "candidate rate c={c} > batch b={b}");
+        let p = c as f64 / b as f64;
+        let mut offered = 0;
+        for sample in batch {
+            if !rng.chance(p) {
+                continue;
+            }
+            offered += 1;
+            self.insert(sample.clone());
+        }
+        offered
+    }
+
+    /// Insert one candidate into its class buffer (creating/rebalancing the
+    /// class map as needed).
+    pub fn insert(&self, sample: Sample) {
+        let class = sample.label;
+        self.ensure_class(class);
+        let map = self.classes.read().unwrap();
+        let cb = map.get(&class).expect("ensure_class");
+        let mut cb = cb.lock().unwrap();
+        let mut rng = self.rng.lock().unwrap();
+        let outcome = cb.insert(sample, &mut rng);
+        drop(rng);
+        self.counters.candidates_offered.fetch_add(1, Ordering::Relaxed);
+        if matches!(outcome, InsertOutcome::Replaced(_)) {
+            self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Metadata snapshot for the global sampling planner: (class, count)
+    /// sorted by class id for determinism.
+    pub fn snapshot_counts(&self) -> Vec<ClassCount> {
+        let map = self.classes.read().unwrap();
+        let mut v: Vec<ClassCount> = map
+            .iter()
+            .map(|(&c, cb)| (c, cb.lock().unwrap().len()))
+            .collect();
+        v.sort_unstable_by_key(|&(c, _)| c);
+        v
+    }
+
+    /// Wire size of the metadata snapshot (for the fabric cost model).
+    pub fn snapshot_wire_bytes(&self) -> usize {
+        self.num_classes() * 12
+    }
+
+    /// Serve rows `(class, idx)` — the RDMA-read path. Indices may be
+    /// slightly stale (the planner snapshot races with inserts); since
+    /// sub-buffers only grow or get replaced in place, a stale index is
+    /// clamped into the current length, which still returns a valid
+    /// representative of the same class (same guarantee the paper gets from
+    /// its fine-grain read locks).
+    pub fn fetch_rows(&self, picks: &[(u32, usize)]) -> Vec<Sample> {
+        let map = self.classes.read().unwrap();
+        let mut out = Vec::with_capacity(picks.len());
+        for &(class, idx) in picks {
+            let cb = map
+                .get(&class)
+                .unwrap_or_else(|| panic!("fetch of unknown class {class}"));
+            let cb = cb.lock().unwrap();
+            debug_assert!(!cb.is_empty(), "fetch from empty class {class}");
+            let i = idx.min(cb.len() - 1);
+            out.push(cb.get(i).clone());
+        }
+        self.counters
+            .rows_served
+            .fetch_add(picks.len() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Draw `r` representatives uniformly from this buffer only (the
+    /// local-only ablation / the degenerate N=1 case). Without replacement;
+    /// returns fewer if the buffer holds fewer than `r`.
+    pub fn sample_local(&self, r: usize, rng: &mut Rng) -> Vec<Sample> {
+        let counts = self.snapshot_counts();
+        let total: usize = counts.iter().map(|&(_, n)| n).sum();
+        let take = r.min(total);
+        if take == 0 {
+            return Vec::new();
+        }
+        let flat = rng.sample_without_replacement(total, take);
+        let picks = flat_to_picks(&counts, &flat);
+        self.fetch_rows(&picks)
+    }
+}
+
+/// Map flat indices over concatenated class ranges to (class, idx) picks.
+pub fn flat_to_picks(counts: &[ClassCount], flat: &[usize]) -> Vec<(u32, usize)> {
+    let mut picks = Vec::with_capacity(flat.len());
+    for &f in flat {
+        let mut rem = f;
+        let mut found = None;
+        for &(class, n) in counts {
+            if rem < n {
+                found = Some((class, rem));
+                break;
+            }
+            rem -= n;
+        }
+        picks.push(found.expect("flat index out of range"));
+    }
+    picks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn s(label: u32, v: f32) -> Sample {
+        Sample::new(label, vec![v])
+    }
+
+    fn filled(s_max: usize, classes: u32, per_class: usize) -> LocalBuffer {
+        let buf = LocalBuffer::new(s_max, EvictionPolicy::Random, 1);
+        for c in 0..classes {
+            for i in 0..per_class {
+                buf.insert(s(c, i as f32));
+            }
+        }
+        buf
+    }
+
+    #[test]
+    fn capacity_split_evenly_and_bounded() {
+        let buf = filled(100, 10, 50);
+        // 10 classes → cap 10 each → 100 total
+        assert_eq!(buf.num_classes(), 10);
+        assert_eq!(buf.len(), 100);
+        for (_, n) in buf.snapshot_counts() {
+            assert_eq!(n, 10);
+        }
+    }
+
+    #[test]
+    fn rebalances_when_new_class_arrives() {
+        let buf = LocalBuffer::new(12, EvictionPolicy::Random, 2);
+        for i in 0..30 {
+            buf.insert(s(0, i as f32));
+        }
+        assert_eq!(buf.len(), 12); // one class owns everything
+        buf.insert(s(1, 0.0));
+        // now cap = 6 per class: class 0 shrunk to 6, class 1 has 1
+        let counts = buf.snapshot_counts();
+        assert_eq!(counts, vec![(0, 6), (1, 1)]);
+        assert!(buf.len() <= 12);
+    }
+
+    #[test]
+    fn algorithm1_offers_about_c_per_batch() {
+        let buf = LocalBuffer::new(10_000, EvictionPolicy::Random, 3);
+        let batch: Vec<Sample> = (0..56).map(|i| s(i % 4, i as f32)).collect();
+        let mut rng = Rng::new(9);
+        let mut total = 0;
+        let iters = 2000;
+        for _ in 0..iters {
+            total += buf.update_with_batch(&batch, 14, 56, &mut rng);
+        }
+        let mean = total as f64 / iters as f64;
+        assert!((mean - 14.0).abs() < 0.5, "mean offers {mean}");
+    }
+
+    #[test]
+    fn fetch_rows_returns_right_classes() {
+        let buf = filled(100, 4, 30);
+        let rows = buf.fetch_rows(&[(0, 0), (3, 5), (1, 24)]);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].label, 0);
+        assert_eq!(rows[1].label, 3);
+        assert_eq!(rows[2].label, 1);
+        assert_eq!(buf.counters.rows_served.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn fetch_rows_clamps_stale_indices() {
+        let buf = filled(100, 2, 5);
+        let rows = buf.fetch_rows(&[(0, 999)]);
+        assert_eq!(rows[0].label, 0);
+    }
+
+    #[test]
+    fn sample_local_without_replacement() {
+        let buf = filled(64, 4, 16);
+        let mut rng = Rng::new(5);
+        let got = buf.sample_local(10, &mut rng);
+        assert_eq!(got.len(), 10);
+        // short buffer: ask for more than present
+        let small = filled(4, 2, 2);
+        let got = small.sample_local(10, &mut rng);
+        assert_eq!(got.len(), 4);
+        let empty = LocalBuffer::new(10, EvictionPolicy::Random, 1);
+        assert!(empty.sample_local(3, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn flat_to_picks_maps_ranges() {
+        let counts = vec![(2u32, 3usize), (5, 2), (9, 4)];
+        let picks = flat_to_picks(&counts, &[0, 2, 3, 4, 5, 8]);
+        assert_eq!(picks, vec![(2, 0), (2, 2), (5, 0), (5, 1), (9, 0), (9, 3)]);
+    }
+
+    #[test]
+    fn concurrent_updates_and_reads() {
+        let buf = Arc::new(LocalBuffer::new(400, EvictionPolicy::Random, 7));
+        for c in 0..4 {
+            buf.insert(s(c, -1.0));
+        }
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let b = Arc::clone(&buf);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for i in 0..2000 {
+                    if i % 3 == 0 {
+                        b.insert(s((i % 4) as u32, i as f32));
+                    } else {
+                        let _ = b.sample_local(4, &mut rng);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(buf.len() <= 400);
+        assert_eq!(buf.num_classes(), 4);
+        // disjoint-union invariant: sum of class counts == len
+        let total: usize = buf.snapshot_counts().iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, buf.len());
+    }
+}

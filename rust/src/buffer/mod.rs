@@ -1,0 +1,18 @@
+//! The rehearsal buffer (paper §IV-A/§IV-B).
+//!
+//! - [`class_buffer`] — one `R_n^i`: a bounded pool of representatives of a
+//!   single class with a pluggable eviction policy.
+//! - [`local`] — one worker's `B_n`: the per-class map with fine-grain
+//!   locking, capacity rebalancing as new classes arrive, Algorithm 1
+//!   updates, and the row-fetch API the RPC fabric serves remote reads from.
+//!
+//! The *distributed* buffer `B = ⊔ B_n` has no materialised object: it is
+//! the set of `Arc<LocalBuffer>` handles registered with the
+//! [`crate::net::Fabric`], exactly like the paper's RDMA-exposed pinned
+//! regions.
+
+pub mod class_buffer;
+pub mod local;
+
+pub use class_buffer::{ClassBuffer, InsertOutcome};
+pub use local::{ClassCount, LocalBuffer};

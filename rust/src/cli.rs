@@ -1,0 +1,211 @@
+//! Command-line interface (hand-rolled: the offline registry has no clap).
+//!
+//! ```text
+//! dcl train    [--preset P] [--config FILE] [--strategy S] [--variant V]
+//!              [--workers N] [--buffer-pct X] [--epochs-per-task E]
+//! dcl fig5a    [--epochs-per-task E] [--workers N]
+//! dcl fig5b    [--epochs-per-task E] [--workers N]
+//! dcl fig6     [--epochs-per-task E]
+//! dcl fig7     [--epochs-per-task E]
+//! dcl ablation --what policy|locality|sync|c|r|all [--epochs-per-task E]
+//! dcl calibrate [--variant V]
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{preset, ExperimentConfig, Strategy};
+use crate::experiments;
+use crate::train::trainer::run_experiment;
+
+/// Minimal flag parser: `--key value` pairs after a subcommand.
+pub struct Args {
+    pairs: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(rest: &[String]) -> Result<Args> {
+        let mut pairs = Vec::new();
+        let mut it = rest.iter();
+        while let Some(flag) = it.next() {
+            let key = flag
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{flag}`"))?;
+            let value = it
+                .next()
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            pairs.push((key.to_string(), value.clone()));
+        }
+        Ok(Args { pairs })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} wants a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn train_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml_file(std::path::Path::new(path))?,
+        None => preset(args.get("preset").unwrap_or("default"))?,
+    };
+    if let Some(s) = args.get("strategy") {
+        cfg.training.strategy = Strategy::parse(s)?;
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.training.variant = v.to_string();
+    }
+    cfg.cluster.workers = args.usize_or("workers", cfg.cluster.workers)?;
+    cfg.buffer.percent_of_dataset =
+        args.f64_or("buffer-pct", cfg.buffer.percent_of_dataset)?;
+    cfg.training.epochs_per_task =
+        args.usize_or("epochs-per-task", cfg.training.epochs_per_task)?;
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    } else if let Some(dir) = crate::testkit::artifacts_dir() {
+        cfg.artifacts_dir = dir;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    println!("running {} / {} on N={} (|B|={}%, {} epochs/task)",
+             cfg.training.strategy.name(), cfg.training.variant,
+             cfg.cluster.workers, cfg.buffer.percent_of_dataset,
+             cfg.training.epochs_per_task);
+    let report = run_experiment(&cfg)?;
+    println!("{}", experiments::common::summarize(&report));
+    for e in &report.epochs {
+        if let Some(ev) = &e.eval {
+            println!("  epoch {:>3} (task {}): top5 acc_T={:.4} top1={:.4} loss={:.4} lr={:.4} [{:.1}s]",
+                     e.epoch, e.task, ev.accuracy_t, ev.top1_accuracy_t,
+                     e.train_loss, e.lr, e.wall.as_secs_f64());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = crate::testkit::artifacts_dir()
+        .ok_or_else(|| anyhow!("artifacts/ missing; run `make artifacts`"))?;
+    let manifest = crate::runtime::Manifest::load(&dir)?;
+    let variants: Vec<String> = match args.get("variant") {
+        Some(v) => vec![v.to_string()],
+        None => manifest.variants.keys().cloned().collect(),
+    };
+    let mut rng = crate::util::rng::Rng::new(7);
+    let mk = |rng: &mut crate::util::rng::Rng, rows: usize, dim: usize, k: usize| {
+        crate::tensor::Batch::new(
+            (0..rows)
+                .map(|_| crate::tensor::Sample::new(
+                    rng.below(k) as u32,
+                    (0..dim).map(|_| rng.normal() as f32).collect()))
+                .collect())
+    };
+    for v in variants {
+        let r = *manifest.reps_list.first().unwrap_or(&7);
+        let exec = crate::runtime::ModelExecutor::new(&manifest, &v, &[r])?;
+        let (params, moms) = exec.init_state()?;
+        let b = mk(&mut rng, manifest.batch, manifest.input_dim, manifest.num_classes);
+        let reps = mk(&mut rng, r, manifest.input_dim, manifest.num_classes);
+        let eval = mk(&mut rng, manifest.eval_batch, manifest.input_dim,
+                      manifest.num_classes);
+        let warm = exec.train_step_aug(&params, &b, &reps)?;
+        let t0 = std::time::Instant::now();
+        let mut grads = warm.grads;
+        let iters = 10;
+        for _ in 0..iters {
+            grads = exec.train_step_aug(&params, &b, &reps)?.grads;
+        }
+        let train_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        let t1 = std::time::Instant::now();
+        let (p2, _m2) = exec.apply_update(params, moms, &grads, 0.01)?;
+        let update_ms = t1.elapsed().as_secs_f64() * 1e3;
+        let t2 = std::time::Instant::now();
+        exec.eval_step(&p2, &eval)?;
+        let eval_ms = t2.elapsed().as_secs_f64() * 1e3;
+        println!("{v}: train_aug(b{}+r{r})={train_ms:.1}ms update={update_ms:.1}ms eval(b{})={eval_ms:.1}ms",
+                 manifest.batch, manifest.eval_batch);
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: dcl <train|fig5a|fig5b|fig6|fig7|ablation|calibrate> [--flag value ...]
+  (see rust/src/cli.rs for per-command flags; figures write results/*.csv)";
+
+pub fn run(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "fig5a" => experiments::fig5a::run(
+            args.usize_or("epochs-per-task", 6)?,
+            args.usize_or("workers", 4)?),
+        "fig5b" => experiments::fig5b::run(
+            args.usize_or("epochs-per-task", 8)?,
+            args.usize_or("workers", 4)?),
+        "fig6" => experiments::fig6::run(args.usize_or("epochs-per-task", 1)?),
+        "fig7" => experiments::fig7::run(args.usize_or("epochs-per-task", 3)?),
+        "ablation" => experiments::ablations::run(
+            args.get("what").unwrap_or("all"),
+            args.usize_or("epochs-per-task", 4)?,
+            args.usize_or("workers", 4)?),
+        "calibrate" => cmd_calibrate(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_pairs() {
+        let a = Args::parse(&["--workers".into(), "8".into(),
+                              "--what".into(), "policy".into()]).unwrap();
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 8);
+        assert_eq!(a.get("what"), Some("policy"));
+        assert_eq!(a.usize_or("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn args_reject_bad_input() {
+        assert!(Args::parse(&["positional".into()]).is_err());
+        assert!(Args::parse(&["--dangling".into()]).is_err());
+        let a = Args::parse(&["--n".into(), "x".into()]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = Args::parse(&["--n".into(), "1".into(),
+                              "--n".into(), "2".into()]).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,156 @@
+//! Exact gradient averaging + ring-all-reduce cost model.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::net::CostModel;
+use crate::runtime::executor::{literal_to_vec, make_literal};
+
+/// Wire time of one bandwidth-optimal ring all-reduce over `n` workers for
+/// `bytes` of payload: 2(n−1) steps, each moving `bytes/n` and paying α.
+pub fn ring_allreduce_cost(cost: &CostModel, n: usize, bytes: usize) -> Duration {
+    if n <= 1 {
+        return Duration::ZERO;
+    }
+    let steps = 2 * (n - 1);
+    let per_step_bytes = bytes as f64 / n as f64;
+    let secs = steps as f64
+        * (cost.latency_us * 1e-6
+            + per_step_bytes / (cost.bandwidth_gibps * 1024.0 * 1024.0 * 1024.0));
+    Duration::from_secs_f64(secs)
+}
+
+/// Accumulates per-replica gradients and produces their exact mean.
+///
+/// Gradients arrive as `Vec<Literal>` (manifest tensor order) from each
+/// replica's train step; the accumulator keeps f64 partial sums to avoid
+/// order-dependent f32 drift, then emits mean literals with the original
+/// shapes.
+pub struct GradAccumulator {
+    shapes: Vec<Vec<usize>>,
+    sums: Vec<Vec<f64>>,
+    replicas: usize,
+    bytes: usize,
+}
+
+impl GradAccumulator {
+    pub fn new(shapes: Vec<Vec<usize>>) -> GradAccumulator {
+        let sums = shapes
+            .iter()
+            .map(|s| vec![0.0f64; s.iter().product()])
+            .collect();
+        let bytes = shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>() * 4)
+            .sum();
+        GradAccumulator { shapes, sums, replicas: 0, bytes }
+    }
+
+    /// Payload bytes one replica contributes (the all-reduce message size).
+    pub fn payload_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Add one replica's gradients.
+    pub fn add(&mut self, grads: &[Literal]) -> Result<()> {
+        if grads.len() != self.sums.len() {
+            bail!("accumulator got {} tensors, want {}", grads.len(), self.sums.len());
+        }
+        for (sum, g) in self.sums.iter_mut().zip(grads) {
+            let v = literal_to_vec(g)?;
+            if v.len() != sum.len() {
+                bail!("gradient tensor size {} != {}", v.len(), sum.len());
+            }
+            for (s, x) in sum.iter_mut().zip(v) {
+                *s += x as f64;
+            }
+        }
+        self.replicas += 1;
+        Ok(())
+    }
+
+    /// Emit the mean gradients and reset for the next iteration. Returns
+    /// the literals plus the modeled ring-all-reduce wire time.
+    pub fn reduce(&mut self, cost: &CostModel) -> Result<(Vec<Literal>, Duration)> {
+        if self.replicas == 0 {
+            bail!("reduce with no replicas accumulated");
+        }
+        let inv = 1.0 / self.replicas as f64;
+        let mut out = Vec::with_capacity(self.sums.len());
+        for (sum, shape) in self.sums.iter_mut().zip(&self.shapes) {
+            let mean: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
+            out.push(make_literal(&mean, shape)?);
+            sum.iter_mut().for_each(|s| *s = 0.0);
+        }
+        let wire = ring_allreduce_cost(cost, self.replicas, self.bytes);
+        self.replicas = 0;
+        Ok((out, wire))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_cost_zero_for_single_worker() {
+        let c = CostModel::default();
+        assert_eq!(ring_allreduce_cost(&c, 1, 1 << 20), Duration::ZERO);
+    }
+
+    #[test]
+    fn ring_cost_scales_with_workers_and_bytes() {
+        let c = CostModel::new(2.0, 12.0);
+        let small = ring_allreduce_cost(&c, 4, 1 << 20);
+        let big = ring_allreduce_cost(&c, 4, 1 << 24);
+        assert!(big > small);
+        // latency term dominates tiny payloads: 2(n-1) alpha
+        let tiny = ring_allreduce_cost(&c, 8, 0);
+        assert!((tiny.as_secs_f64() - 14.0 * 2e-6).abs() < 1e-12);
+        // bandwidth term approaches 2*bytes/bw as n grows
+        let c2 = CostModel::new(0.0, 1.0);
+        let n128 = ring_allreduce_cost(&c2, 128, 1 << 30);
+        assert!((n128.as_secs_f64() - 2.0 * 127.0 / 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulator_means_exactly() {
+        let shapes = vec![vec![2, 2], vec![3]];
+        let mut acc = GradAccumulator::new(shapes);
+        assert_eq!(acc.payload_bytes(), (4 + 3) * 4);
+        let g1 = vec![
+            make_literal(&[1., 2., 3., 4.], &[2, 2]).unwrap(),
+            make_literal(&[0., 0., 3.], &[3]).unwrap(),
+        ];
+        let g2 = vec![
+            make_literal(&[3., 2., 1., 0.], &[2, 2]).unwrap(),
+            make_literal(&[1., 1., 1.], &[3]).unwrap(),
+        ];
+        acc.add(&g1).unwrap();
+        acc.add(&g2).unwrap();
+        assert_eq!(acc.replicas(), 2);
+        let (mean, wire) = acc.reduce(&CostModel::default()).unwrap();
+        assert_eq!(literal_to_vec(&mean[0]).unwrap(), vec![2., 2., 2., 2.]);
+        assert_eq!(literal_to_vec(&mean[1]).unwrap(), vec![0.5, 0.5, 2.]);
+        assert!(wire > Duration::ZERO);
+        // accumulator reset
+        assert_eq!(acc.replicas(), 0);
+        acc.add(&g1).unwrap();
+        let (mean, _) = acc.reduce(&CostModel::default()).unwrap();
+        assert_eq!(literal_to_vec(&mean[0]).unwrap(), vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let mut acc = GradAccumulator::new(vec![vec![2]]);
+        let wrong = vec![make_literal(&[1., 2., 3.], &[3]).unwrap()];
+        assert!(acc.add(&wrong).is_err());
+        assert!(acc.reduce(&CostModel::default()).is_err());
+    }
+}

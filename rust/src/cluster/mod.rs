@@ -1,0 +1,14 @@
+//! Data-parallel cluster semantics: gradient all-reduce (paper §II).
+//!
+//! Replicas execute in-process (sequentially on this testbed), so the
+//! all-reduce produces the *exact* average — bitwise data-parallel
+//! semantics — while the ring-all-reduce wire cost is charged by the same
+//! alpha-beta model the fabric uses (bandwidth-optimal ring:
+//! `2·(N−1)/N · bytes / bw + 2·(N−1) · α`). Because replicas stay in exact
+//! sync after every all-reduce, a single parameter copy is maintained
+//! (documented optimisation, DESIGN.md §5); per-replica gradients are still
+//! computed from each worker's own shard.
+
+pub mod allreduce;
+
+pub use allreduce::{ring_allreduce_cost, GradAccumulator};

@@ -1,0 +1,117 @@
+//! Named configuration presets.
+//!
+//! - `tiny`    — seconds-scale smoke runs (unit/integration tests).
+//! - `default` — the scaled-down reproduction profile used by the figure
+//!               harnesses (K=40 classes, 4 tasks, 250 train/class).
+//! - `paper`   — the paper's own geometry (K=1000, ~1300/class, 30
+//!               epochs/task, 16 workers). Provided for completeness; on
+//!               this single-core CPU testbed it is days of compute, so the
+//!               harnesses default to `default` and the perfmodel projects
+//!               to the paper's scale.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::{BufferConfig, ClusterConfig, DataConfig, ExperimentConfig,
+            Strategy, TrainingConfig};
+
+pub fn preset(name: &str) -> Result<ExperimentConfig> {
+    let cfg = match name {
+        "tiny" => ExperimentConfig {
+            name: "tiny".into(),
+            data: DataConfig {
+                num_classes: 8,
+                num_tasks: 4,
+                train_per_class: 30,
+                val_per_class: 5,
+                noise_std: 0.35,
+                ..DataConfig::default()
+            },
+            training: TrainingConfig {
+                variant: "resnet18_sim".into(),
+                batch: 8,
+                reps: 2,
+                candidates: 4,
+                epochs_per_task: 2,
+                warmup_epochs: 1,
+                decay_points: vec![],
+                eval_batch: 10,
+                ..TrainingConfig::default()
+            },
+            buffer: BufferConfig::default(),
+            cluster: ClusterConfig { workers: 2, ..ClusterConfig::default() },
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+        },
+        "default" => ExperimentConfig {
+            name: "default".into(),
+            data: DataConfig::default(),
+            training: TrainingConfig::default(),
+            buffer: BufferConfig::default(),
+            cluster: ClusterConfig::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+        },
+        "paper" => ExperimentConfig {
+            name: "paper".into(),
+            data: DataConfig {
+                num_classes: 1000,
+                num_tasks: 4,
+                train_per_class: 1300,
+                val_per_class: 50,
+                ..DataConfig::default()
+            },
+            training: TrainingConfig {
+                variant: "resnet50_sim".into(),
+                batch: 56,
+                reps: 7,
+                candidates: 14,
+                epochs_per_task: 30,
+                strategy: Strategy::Rehearsal,
+                warmup_epochs: 5,
+                decay_points: vec![(21, 0.5), (26, 0.05), (28, 0.01)],
+                eval_batch: 50,
+                ..TrainingConfig::default()
+            },
+            buffer: BufferConfig::default(),
+            cluster: ClusterConfig { workers: 16, ..ClusterConfig::default() },
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+        },
+        other => bail!("unknown preset `{other}` (tiny | default | paper)"),
+    };
+    // Keep eval batches dividing the per-task validation sets.
+    let per_task_val = cfg.data.val_per_class * cfg.classes_per_task();
+    debug_assert_eq!(per_task_val % cfg.training.eval_batch, 0,
+                     "preset {name} eval geometry");
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_valid() {
+        for name in ["tiny", "default", "paper"] {
+            let cfg = preset(name).unwrap();
+            cfg.validate().unwrap();
+            assert_eq!(cfg.name, name);
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn paper_preset_matches_paper_numbers() {
+        let cfg = preset("paper").unwrap();
+        assert_eq!(cfg.data.num_classes, 1000);
+        assert_eq!(cfg.training.batch, 56);
+        assert_eq!(cfg.training.reps, 7);
+        assert_eq!(cfg.training.candidates, 14);
+        assert_eq!(cfg.training.epochs_per_task, 30);
+        assert_eq!(cfg.classes_per_task(), 250);
+        assert_eq!(cfg.cluster.workers, 16);
+    }
+}

@@ -1,0 +1,130 @@
+//! Loader-side data augmentation (paper §VI-A: "random horizontal flips and
+//! crops"), operating on the flattened (h, w, channel) layout of the
+//! synthetic 32×32×3 images. Applied by the prefetch thread so it overlaps
+//! training, exactly like DALI does on the paper's testbed.
+
+use crate::data::synthetic::{CHANNELS, HEIGHT, WIDTH};
+use crate::util::rng::Rng;
+
+/// Maximum shift (pixels) for the random-crop emulation.
+pub const MAX_SHIFT: usize = 2;
+
+#[inline]
+fn at(h: usize, w: usize, c: usize) -> usize {
+    (h * WIDTH + w) * CHANNELS + c
+}
+
+/// Horizontal mirror.
+pub fn hflip(features: &mut [f32]) {
+    debug_assert_eq!(features.len(), HEIGHT * WIDTH * CHANNELS);
+    for h in 0..HEIGHT {
+        for w in 0..WIDTH / 2 {
+            for c in 0..CHANNELS {
+                features.swap(at(h, w, c), at(h, WIDTH - 1 - w, c));
+            }
+        }
+    }
+}
+
+/// Shift by (dy, dx) with zero padding — the cheap stand-in for
+/// RandomResizedCrop at this resolution.
+pub fn shift(features: &[f32], dy: isize, dx: isize) -> Vec<f32> {
+    debug_assert_eq!(features.len(), HEIGHT * WIDTH * CHANNELS);
+    let mut out = vec![0.0f32; features.len()];
+    for h in 0..HEIGHT {
+        let sh = h as isize - dy;
+        if sh < 0 || sh >= HEIGHT as isize {
+            continue;
+        }
+        for w in 0..WIDTH {
+            let sw = w as isize - dx;
+            if sw < 0 || sw >= WIDTH as isize {
+                continue;
+            }
+            for c in 0..CHANNELS {
+                out[at(h, w, c)] = features[at(sh as usize, sw as usize, c)];
+            }
+        }
+    }
+    out
+}
+
+/// Apply the training-time augmentation pipeline in place.
+pub fn augment_sample(features: &mut Vec<f32>, rng: &mut Rng) {
+    if rng.chance(0.5) {
+        hflip(features);
+    }
+    let dy = rng.below(2 * MAX_SHIFT + 1) as isize - MAX_SHIFT as isize;
+    let dx = rng.below(2 * MAX_SHIFT + 1) as isize - MAX_SHIFT as isize;
+    if dy != 0 || dx != 0 {
+        *features = shift(features, dy, dx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> Vec<f32> {
+        (0..HEIGHT * WIDTH * CHANNELS).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn hflip_is_involution() {
+        let orig = ramp();
+        let mut x = orig.clone();
+        hflip(&mut x);
+        assert_ne!(x, orig);
+        hflip(&mut x);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn hflip_mirrors_pixels() {
+        let mut x = ramp();
+        hflip(&mut x);
+        for h in 0..HEIGHT {
+            for w in 0..WIDTH {
+                for c in 0..CHANNELS {
+                    assert_eq!(x[at(h, w, c)], ramp()[at(h, WIDTH - 1 - w, c)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_shift_is_identity() {
+        let x = ramp();
+        assert_eq!(shift(&x, 0, 0), x);
+    }
+
+    #[test]
+    fn shift_moves_and_pads() {
+        let x = ramp();
+        let s = shift(&x, 1, 0);
+        // first row zero-padded
+        for w in 0..WIDTH {
+            for c in 0..CHANNELS {
+                assert_eq!(s[at(0, w, c)], 0.0);
+            }
+        }
+        // second row is old first row
+        for w in 0..WIDTH {
+            for c in 0..CHANNELS {
+                assert_eq!(s[at(1, w, c)], x[at(0, w, c)]);
+            }
+        }
+    }
+
+    #[test]
+    fn augment_preserves_length_and_determinism() {
+        let mut rng1 = Rng::new(5);
+        let mut rng2 = Rng::new(5);
+        let mut a = ramp();
+        let mut b = ramp();
+        augment_sample(&mut a, &mut rng1);
+        augment_sample(&mut b, &mut rng2);
+        assert_eq!(a.len(), HEIGHT * WIDTH * CHANNELS);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,14 @@
+//! Training data: synthetic class-incremental dataset, task sequencing,
+//! sharding, loader-side augmentation, and the background prefetching
+//! loader (the NVIDIA-DALI stand-in of the paper's pipeline).
+
+pub mod augment;
+pub mod loader;
+pub mod shard;
+pub mod synthetic;
+pub mod tasks;
+
+pub use loader::{Loader, LoaderStats};
+pub use shard::ShardPlan;
+pub use synthetic::Dataset;
+pub use tasks::TaskSequence;

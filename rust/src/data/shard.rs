@@ -1,0 +1,113 @@
+//! Per-epoch data sharding for data-parallel training (paper §II).
+//!
+//! Every epoch the task's sample indices are reshuffled (seeded by
+//! `(base_seed, task, epoch)`), split into `N` equal shards — one per
+//! worker — and cut into fixed-size mini-batches, dropping the ragged tail
+//! (standard `drop_last` semantics, which the paper's global-batch accounting
+//! also assumes). All workers derive the same plan independently, which is
+//! how Horovod-style training keeps loaders in lockstep without
+//! communication.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// `batches[n]` = list of mini-batches for worker `n`; each mini-batch
+    /// is a list of dataset indices of length exactly `batch`.
+    batches: Vec<Vec<Vec<usize>>>,
+}
+
+impl ShardPlan {
+    pub fn new(mut indices: Vec<usize>, workers: usize, batch: usize,
+               base_seed: u64, task: usize, epoch: usize) -> ShardPlan {
+        assert!(workers > 0 && batch > 0);
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((task as u64) << 32)
+            .wrapping_add(epoch as u64);
+        Rng::new(seed).shuffle(&mut indices);
+        // equal shards: truncate to a multiple of workers*batch so every
+        // worker sees the same number of full batches (keeps all-reduce in
+        // lockstep).
+        let per_worker = indices.len() / workers;
+        let batches_per_worker = per_worker / batch;
+        let mut batches = vec![Vec::with_capacity(batches_per_worker); workers];
+        for (n, w) in batches.iter_mut().enumerate() {
+            let shard = &indices[n * per_worker..(n + 1) * per_worker];
+            for b in 0..batches_per_worker {
+                w.push(shard[b * batch..(b + 1) * batch].to_vec());
+            }
+        }
+        ShardPlan { batches }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Number of iterations this epoch (identical for every worker).
+    pub fn iterations(&self) -> usize {
+        self.batches.first().map_or(0, |w| w.len())
+    }
+
+    /// Mini-batch `i` for worker `n`.
+    pub fn batch(&self, worker: usize, iter: usize) -> &[usize] {
+        &self.batches[worker][iter]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_full_batches() {
+        let plan = ShardPlan::new((0..103).collect(), 4, 8, 7, 0, 0);
+        assert_eq!(plan.workers(), 4);
+        // 103/4 = 25 per worker; 25/8 = 3 full batches
+        assert_eq!(plan.iterations(), 3);
+        for n in 0..4 {
+            for i in 0..3 {
+                assert_eq!(plan.batch(n, i).len(), 8);
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicate_indices_within_epoch() {
+        let plan = ShardPlan::new((0..128).collect(), 4, 8, 7, 1, 2);
+        let mut seen = std::collections::HashSet::new();
+        for n in 0..4 {
+            for i in 0..plan.iterations() {
+                for &idx in plan.batch(n, i) {
+                    assert!(seen.insert(idx), "index {idx} appears twice");
+                }
+            }
+        }
+        assert_eq!(seen.len(), 128);
+    }
+
+    #[test]
+    fn reshuffles_across_epochs_deterministically() {
+        let a = ShardPlan::new((0..64).collect(), 2, 8, 7, 0, 0);
+        let b = ShardPlan::new((0..64).collect(), 2, 8, 7, 0, 1);
+        let a2 = ShardPlan::new((0..64).collect(), 2, 8, 7, 0, 0);
+        assert_ne!(a.batch(0, 0), b.batch(0, 0));
+        assert_eq!(a.batch(0, 0), a2.batch(0, 0));
+    }
+
+    #[test]
+    fn shards_disjoint_across_workers() {
+        let plan = ShardPlan::new((0..80).collect(), 4, 5, 3, 0, 0);
+        let collect = |n: usize| -> std::collections::HashSet<usize> {
+            (0..plan.iterations())
+                .flat_map(|i| plan.batch(n, i).to_vec())
+                .collect()
+        };
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                assert!(collect(a).is_disjoint(&collect(b)));
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Class-incremental task sequence (paper §II, §VI-A).
+//!
+//! T disjoint tasks, each owning `K/T` classes; the model visits tasks in
+//! order and can never revisit earlier tasks' training data (except through
+//! the rehearsal buffer). The class→task assignment is a seeded shuffle so
+//! task difficulty is exchangeable across seeds.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TaskSequence {
+    /// `classes[t]` = class ids belonging to task `t`.
+    classes: Vec<Vec<usize>>,
+    /// class id → task id.
+    task_of: Vec<usize>,
+}
+
+impl TaskSequence {
+    pub fn new(num_classes: usize, num_tasks: usize, seed: u64) -> TaskSequence {
+        assert!(num_tasks > 0 && num_classes % num_tasks == 0,
+                "classes {num_classes} not divisible into {num_tasks} tasks");
+        let mut ids: Vec<usize> = (0..num_classes).collect();
+        Rng::new(seed ^ 0x7A5C5).shuffle(&mut ids);
+        let per = num_classes / num_tasks;
+        let mut classes = Vec::with_capacity(num_tasks);
+        let mut task_of = vec![0usize; num_classes];
+        for t in 0..num_tasks {
+            let group: Vec<usize> = ids[t * per..(t + 1) * per].to_vec();
+            for &c in &group {
+                task_of[c] = t;
+            }
+            classes.push(group);
+        }
+        TaskSequence { classes, task_of }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Class ids of task `t`.
+    pub fn classes(&self, t: usize) -> &[usize] {
+        &self.classes[t]
+    }
+
+    /// All classes seen up to and including task `t`.
+    pub fn classes_up_to(&self, t: usize) -> Vec<usize> {
+        self.classes[..=t].iter().flatten().copied().collect()
+    }
+
+    pub fn task_of_class(&self, class: usize) -> usize {
+        self.task_of[class]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_and_complete() {
+        let ts = TaskSequence::new(12, 4, 3);
+        assert_eq!(ts.num_tasks(), 4);
+        let mut all: Vec<usize> = (0..4).flat_map(|t| ts.classes(t).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+        for t in 0..4 {
+            assert_eq!(ts.classes(t).len(), 3);
+            for &c in ts.classes(t) {
+                assert_eq!(ts.task_of_class(c), t);
+            }
+        }
+    }
+
+    #[test]
+    fn up_to_accumulates() {
+        let ts = TaskSequence::new(8, 4, 1);
+        assert_eq!(ts.classes_up_to(0).len(), 2);
+        assert_eq!(ts.classes_up_to(3).len(), 8);
+    }
+
+    #[test]
+    fn seeded_shuffle_changes_assignment() {
+        let a = TaskSequence::new(100, 4, 1);
+        let b = TaskSequence::new(100, 4, 2);
+        assert_ne!(a.classes(0), b.classes(0));
+        let c = TaskSequence::new(100, 4, 1);
+        assert_eq!(a.classes(0), c.classes(0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_indivisible() {
+        TaskSequence::new(10, 4, 0);
+    }
+}

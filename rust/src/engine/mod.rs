@@ -1,0 +1,379 @@
+//! The asynchronous rehearsal engine (paper §IV-D, Fig. 4, Listing 1).
+//!
+//! Per worker, one background thread (the Argobots-pool stand-in) runs the
+//! buffer-management half of every iteration:
+//!
+//! 1. **Populate** — Algorithm 1 update of the local buffer `B_n` with
+//!    candidates from the *current* mini-batch;
+//! 2. **Sample** — build the global sampling plan for the *next* iteration's
+//!    `r` representatives and execute it over the fabric (consolidated bulk
+//!    fetches from remote buffers).
+//!
+//! The training loop calls [`RehearsalEngine::update`] once per iteration
+//! (Listing 1): it *waits* for the representatives requested during the
+//! previous iteration (wait ≈ 0 when the background keeps up — that is the
+//! paper's overlap claim, measured in Fig. 6), hands the current batch to
+//! the background, and returns the reps to concatenate. The first iteration
+//! of a task returns no reps (buffer still empty / nothing in flight) and
+//! the trainer falls back to the plain, un-augmented step.
+//!
+//! With `async_updates = false` the same work runs inline (the blocking
+//! ablation, DESIGN.md abl-async).
+
+pub mod timings;
+
+pub use timings::EngineTimings;
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::buffer::LocalBuffer;
+use crate::config::SamplingScope;
+use crate::net::Fabric;
+use crate::sampling::GlobalSampler;
+use crate::tensor::{Batch, Sample};
+use crate::util::rng::Rng;
+
+/// Engine parameters (a view over the experiment config).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineParams {
+    pub batch: usize,
+    pub reps: usize,
+    pub candidates: usize,
+    pub scope: SamplingScope,
+    pub async_updates: bool,
+}
+
+enum Job {
+    /// Populate with this batch, then sample reps for the next iteration.
+    Update(Vec<Sample>),
+    /// Drain without sampling (end of stream).
+    Flush,
+}
+
+struct FetchResult {
+    reps: Vec<Sample>,
+}
+
+/// One worker's handle on the distributed rehearsal buffer.
+pub struct RehearsalEngine {
+    worker: usize,
+    params: EngineParams,
+    fabric: Arc<Fabric>,
+    sampler: GlobalSampler,
+    /// Foreground RNG (used only in blocking mode).
+    rng: Rng,
+    pub timings: Arc<EngineTimings>,
+    // async machinery
+    job_tx: Option<Sender<Job>>,
+    res_rx: Option<Receiver<FetchResult>>,
+    bg: Option<JoinHandle<()>>,
+    pending: bool,
+}
+
+impl RehearsalEngine {
+    /// `fabric.buffer(worker)` is this worker's local buffer `B_n`.
+    pub fn new(worker: usize, fabric: Arc<Fabric>, params: EngineParams,
+               seed: u64) -> RehearsalEngine {
+        let timings = Arc::new(EngineTimings::default());
+        let sampler = GlobalSampler::new(worker, params.scope);
+        let mut engine = RehearsalEngine {
+            worker,
+            params,
+            fabric,
+            sampler,
+            rng: Rng::new(seed ^ 0xE791E),
+            timings,
+            job_tx: None,
+            res_rx: None,
+            bg: None,
+            pending: false,
+        };
+        if params.async_updates {
+            engine.spawn_background(seed);
+        }
+        engine
+    }
+
+    fn spawn_background(&mut self, seed: u64) {
+        let (job_tx, job_rx) = channel::<Job>();
+        let (res_tx, res_rx) = channel::<FetchResult>();
+        let fabric = Arc::clone(&self.fabric);
+        let timings = Arc::clone(&self.timings);
+        let params = self.params;
+        let worker = self.worker;
+        let sampler = GlobalSampler::new(worker, params.scope);
+        let mut rng = Rng::new(seed ^ 0xBA0C6);
+        let handle = std::thread::Builder::new()
+            .name(format!("dcl-engine-{worker}"))
+            .spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    match job {
+                        Job::Update(batch) => {
+                            let reps = background_round(
+                                worker, &fabric, &sampler, &params, &batch,
+                                &timings, &mut rng);
+                            if res_tx.send(FetchResult { reps }).is_err() {
+                                return;
+                            }
+                        }
+                        Job::Flush => return,
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        self.job_tx = Some(job_tx);
+        self.res_rx = Some(res_rx);
+        self.bg = Some(handle);
+    }
+
+    /// The Listing-1 primitive. Returns the representatives to concatenate
+    /// with `batch` for this iteration (possibly empty on warm-up).
+    pub fn update(&mut self, batch: &Batch) -> Result<Vec<Sample>> {
+        self.timings.iterations.fetch_add(1, Ordering::Relaxed);
+        if self.params.async_updates {
+            // 1. wait for the reps requested during the previous iteration
+            let reps = if self.pending {
+                let t0 = Instant::now();
+                let res = self
+                    .res_rx
+                    .as_ref()
+                    .expect("async engine has res_rx")
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("engine thread died"))?;
+                self.timings
+                    .wait_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                res.reps
+            } else {
+                Vec::new()
+            };
+            // 2. kick off the background update + next global sampling
+            self.job_tx
+                .as_ref()
+                .expect("async engine has job_tx")
+                .send(Job::Update(batch.samples.clone()))
+                .map_err(|_| anyhow::anyhow!("engine thread died"))?;
+            self.pending = true;
+            Ok(reps)
+        } else {
+            // Blocking ablation: same round inline; reps are for *this*
+            // iteration, so sample first, then populate with the batch
+            // (keeps "reps never drawn from the batch being trained on").
+            let reps = blocking_round(
+                self.worker, &self.fabric, &self.sampler, &self.params,
+                &batch.samples, &self.timings, &mut self.rng);
+            Ok(reps)
+        }
+    }
+
+    /// Drain the in-flight round (end of training); the last requested reps
+    /// are discarded, matching the paper's per-task teardown.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.pending {
+            let _ = self
+                .res_rx
+                .as_ref()
+                .expect("async engine has res_rx")
+                .recv();
+            self.pending = false;
+        }
+        Ok(())
+    }
+
+    pub fn local_buffer(&self) -> &Arc<LocalBuffer> {
+        self.fabric.buffer(self.worker)
+    }
+}
+
+impl Drop for RehearsalEngine {
+    fn drop(&mut self) {
+        let _ = self.finish();
+        if let Some(tx) = self.job_tx.take() {
+            let _ = tx.send(Job::Flush);
+        }
+        if let Some(h) = self.bg.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Background half of one iteration: populate B_n, then sample the next r.
+fn background_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
+                    params: &EngineParams, batch: &[Sample],
+                    timings: &EngineTimings, rng: &mut Rng) -> Vec<Sample> {
+    // Populate (Algorithm 1).
+    let t0 = Instant::now();
+    fabric.buffer(worker).update_with_batch(
+        batch, params.candidates, params.batch, rng);
+    timings
+        .populate_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+    // Global sampling for the next iteration.
+    let t1 = Instant::now();
+    let counts = fabric.gather_counts(worker);
+    let plan = sampler.plan(&counts, params.reps, rng);
+    let (reps, wire) = sampler
+        .execute(fabric, &plan)
+        .expect("fabric fetch within registered workers");
+    timings
+        .augment_ns
+        .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    timings
+        .wire_ns
+        .fetch_add(wire.as_nanos() as u64, Ordering::Relaxed);
+    timings
+        .reps_fetched
+        .fetch_add(reps.len() as u64, Ordering::Relaxed);
+    reps
+}
+
+/// Blocking variant: sample for this iteration, then populate.
+fn blocking_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
+                  params: &EngineParams, batch: &[Sample],
+                  timings: &EngineTimings, rng: &mut Rng) -> Vec<Sample> {
+    let t1 = Instant::now();
+    let counts = fabric.gather_counts(worker);
+    let plan = sampler.plan(&counts, params.reps, rng);
+    let (reps, wire) = sampler
+        .execute(fabric, &plan)
+        .expect("fabric fetch within registered workers");
+    timings
+        .augment_ns
+        .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    timings
+        .wire_ns
+        .fetch_add(wire.as_nanos() as u64, Ordering::Relaxed);
+    timings
+        .wait_ns
+        .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    timings
+        .reps_fetched
+        .fetch_add(reps.len() as u64, Ordering::Relaxed);
+
+    let t0 = Instant::now();
+    fabric.buffer(worker).update_with_batch(
+        batch, params.candidates, params.batch, rng);
+    timings
+        .populate_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    reps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EvictionPolicy, SamplingScope};
+    use crate::net::CostModel;
+
+    fn make_fabric(n: usize, s_max: usize) -> Arc<Fabric> {
+        let buffers = (0..n)
+            .map(|w| Arc::new(LocalBuffer::new(s_max, EvictionPolicy::Random, w as u64)))
+            .collect();
+        Arc::new(Fabric::new(buffers, CostModel::default(), false))
+    }
+
+    fn batch_of(class: u32, n: usize) -> Batch {
+        Batch::new((0..n).map(|i| Sample::new(class, vec![i as f32])).collect())
+    }
+
+    fn params(async_updates: bool) -> EngineParams {
+        EngineParams {
+            batch: 8,
+            reps: 4,
+            candidates: 8, // every sample becomes a candidate → fast fill
+            scope: SamplingScope::Global,
+            async_updates,
+        }
+    }
+
+    #[test]
+    fn async_first_iteration_returns_empty_then_reps() {
+        let fabric = make_fabric(2, 100);
+        let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(true), 1);
+        let reps0 = e.update(&batch_of(0, 8)).unwrap();
+        assert!(reps0.is_empty(), "warm-up iteration must not augment");
+        let reps1 = e.update(&batch_of(1, 8)).unwrap();
+        // background populated with batch 0 (8 candidates) then sampled 4
+        assert_eq!(reps1.len(), 4);
+        assert!(reps1.iter().all(|s| s.label == 0));
+        e.finish().unwrap();
+    }
+
+    #[test]
+    fn blocking_mode_returns_reps_immediately_after_fill() {
+        let fabric = make_fabric(1, 100);
+        let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(false), 2);
+        let reps0 = e.update(&batch_of(0, 8)).unwrap();
+        assert!(reps0.is_empty(), "buffer empty before first populate");
+        let reps1 = e.update(&batch_of(1, 8)).unwrap();
+        assert_eq!(reps1.len(), 4);
+    }
+
+    #[test]
+    fn reps_come_from_all_workers_eventually() {
+        // two engines sharing the fabric; each worker's buffer holds a
+        // distinct class, so cross-worker reps prove global sampling.
+        let fabric = make_fabric(2, 100);
+        let mut e0 = RehearsalEngine::new(0, Arc::clone(&fabric), params(true), 3);
+        let mut e1 = RehearsalEngine::new(1, Arc::clone(&fabric), params(true), 4);
+        let mut seen0 = std::collections::HashSet::new();
+        for i in 0..30 {
+            let r0 = e0.update(&batch_of(0, 8)).unwrap();
+            let r1 = e1.update(&batch_of(1, 8)).unwrap();
+            let _ = r1;
+            if i > 1 {
+                for s in &r0 {
+                    seen0.insert(s.label);
+                }
+            }
+        }
+        e0.finish().unwrap();
+        e1.finish().unwrap();
+        assert!(seen0.contains(&0) && seen0.contains(&1),
+                "worker 0 only saw labels {seen0:?}");
+        // consolidated remote RPCs were issued
+        assert!(fabric.counters.rpcs.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn timings_are_recorded() {
+        let fabric = make_fabric(2, 50);
+        let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(true), 5);
+        for _ in 0..5 {
+            e.update(&batch_of(0, 8)).unwrap();
+        }
+        e.finish().unwrap();
+        let t = &e.timings;
+        assert_eq!(t.iterations.load(Ordering::Relaxed), 5);
+        assert!(t.populate_ns.load(Ordering::Relaxed) > 0);
+        assert!(t.augment_ns.load(Ordering::Relaxed) > 0);
+        assert!(t.reps_fetched.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn never_more_than_r_reps() {
+        let fabric = make_fabric(3, 30);
+        let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(true), 6);
+        for i in 0..20 {
+            let reps = e.update(&batch_of(i % 3, 8)).unwrap();
+            assert!(reps.len() <= 4);
+        }
+        e.finish().unwrap();
+    }
+
+    #[test]
+    fn finish_then_drop_is_clean() {
+        let fabric = make_fabric(2, 30);
+        let mut e = RehearsalEngine::new(0, fabric, params(true), 7);
+        e.update(&batch_of(0, 8)).unwrap();
+        e.finish().unwrap();
+        drop(e); // no deadlock, no panic
+    }
+}

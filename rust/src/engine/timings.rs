@@ -1,0 +1,67 @@
+//! Per-worker engine timing counters (the Fig. 6 breakdown inputs).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// All counters are nanoseconds (or counts) accumulated across iterations;
+/// atomics because foreground and background threads both write.
+#[derive(Debug, Default)]
+pub struct EngineTimings {
+    /// Foreground wait for the previous iteration's reps ("Augment wait" —
+    /// ≈0 means full overlap, the paper's Fig. 6 claim).
+    pub wait_ns: AtomicU64,
+    /// Background: Algorithm 1 buffer update ("Populate buffer").
+    pub populate_ns: AtomicU64,
+    /// Background: plan + fetch + assemble ("Augment batch").
+    pub augment_ns: AtomicU64,
+    /// Virtual wire time charged by the fabric for this worker's fetches.
+    pub wire_ns: AtomicU64,
+    /// Iterations processed (update() calls).
+    pub iterations: AtomicU64,
+    /// Representatives fetched in total.
+    pub reps_fetched: AtomicU64,
+}
+
+impl EngineTimings {
+    fn ms(ns: &AtomicU64, iters: u64) -> f64 {
+        if iters == 0 {
+            return 0.0;
+        }
+        ns.load(Ordering::Relaxed) as f64 / 1e6 / iters as f64
+    }
+
+    /// Per-iteration means, in milliseconds:
+    /// (wait, populate, augment, wire).
+    pub fn per_iteration_ms(&self) -> (f64, f64, f64, f64) {
+        let it = self.iterations.load(Ordering::Relaxed);
+        (
+            Self::ms(&self.wait_ns, it),
+            Self::ms(&self.populate_ns, it),
+            Self::ms(&self.augment_ns, it),
+            Self::ms(&self.wire_ns, it),
+        )
+    }
+
+    pub fn total_wait(&self) -> Duration {
+        Duration::from_nanos(self.wait_ns.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_iteration_means() {
+        let t = EngineTimings::default();
+        assert_eq!(t.per_iteration_ms(), (0.0, 0.0, 0.0, 0.0));
+        t.iterations.store(4, Ordering::Relaxed);
+        t.wait_ns.store(8_000_000, Ordering::Relaxed);
+        t.populate_ns.store(4_000_000, Ordering::Relaxed);
+        let (w, p, a, wi) = t.per_iteration_ms();
+        assert_eq!(w, 2.0);
+        assert_eq!(p, 1.0);
+        assert_eq!(a, 0.0);
+        assert_eq!(wi, 0.0);
+    }
+}

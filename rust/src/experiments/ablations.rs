@@ -1,0 +1,135 @@
+//! Design-choice ablations (DESIGN.md §4, abl-*): quantify each mechanism
+//! the paper motivates but does not sweep directly.
+//!
+//! - `policy`   — eviction policy: random (paper) vs FIFO vs reservoir.
+//! - `locality` — global sampling (paper) vs local-only (the biased
+//!   "embarrassingly parallel" strawman of §IV-C).
+//! - `sync`     — async engine (paper) vs blocking buffer management
+//!   (§IV-D motivation), compared on accuracy and iteration wait time.
+//! - `c`        — candidate rate c ∈ {7, 14, 28} (§VI-C).
+//! - `r`        — representative count r ∈ {3, 7, 14} (§VI-C
+//!   plasticity/stability trade-off; needs matching AOT artifacts).
+//!
+//! All ablations run resnet18_sim (the fast variant) on the default
+//! geometry so the full set completes in minutes.
+
+use anyhow::Result;
+
+use crate::config::{EvictionPolicy, SamplingScope, Strategy};
+use crate::metrics::csv::{f, CsvWriter};
+
+use super::common::{harness_config, results_dir, summarize, Session};
+
+const VARIANT: &str = "resnet18_sim";
+
+fn csv(name: &str) -> Result<CsvWriter> {
+    CsvWriter::new(
+        &results_dir().join(name),
+        &["setting", "top5_accuracy_T", "top1_accuracy_T", "wall_s",
+          "mean_wait_ms"],
+    )
+}
+
+fn push(w: &mut CsvWriter, setting: &str,
+        report: &crate::metrics::report::RunReport) -> Result<()> {
+    println!("{}", summarize(report));
+    w.row(&[
+        setting.into(),
+        f(report.final_accuracy_t),
+        f(report.final_top1_accuracy_t),
+        f(report.total_wall.as_secs_f64()),
+        f(report.breakdown_ms.2),
+    ])
+}
+
+pub fn run_policy(session: &Session, epochs: usize, workers: usize) -> Result<()> {
+    println!("== ablation: eviction policy ==");
+    let mut w = csv("abl_policy.csv")?;
+    let mut cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+    let exec = session.executor(VARIANT, cfg.training.reps)?;
+    for policy in [EvictionPolicy::Random, EvictionPolicy::Fifo,
+                   EvictionPolicy::Reservoir] {
+        cfg.buffer.policy = policy;
+        let report = session.run(&cfg, &exec)?;
+        push(&mut w, policy.name(), &report)?;
+    }
+    println!("wrote {}", w.finish()?.display());
+    Ok(())
+}
+
+pub fn run_locality(session: &Session, epochs: usize, workers: usize) -> Result<()> {
+    println!("== ablation: global vs local-only sampling ==");
+    let mut w = csv("abl_locality.csv")?;
+    let mut cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+    let exec = session.executor(VARIANT, cfg.training.reps)?;
+    for (scope, name) in [(SamplingScope::Global, "global"),
+                          (SamplingScope::LocalOnly, "local_only")] {
+        cfg.buffer.scope = scope;
+        let report = session.run(&cfg, &exec)?;
+        push(&mut w, name, &report)?;
+    }
+    println!("wrote {}", w.finish()?.display());
+    Ok(())
+}
+
+pub fn run_sync(session: &Session, epochs: usize, workers: usize) -> Result<()> {
+    println!("== ablation: async vs blocking buffer management ==");
+    let mut w = csv("abl_sync.csv")?;
+    let mut cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+    let exec = session.executor(VARIANT, cfg.training.reps)?;
+    for (async_updates, name) in [(true, "async"), (false, "blocking")] {
+        cfg.buffer.async_updates = async_updates;
+        let report = session.run(&cfg, &exec)?;
+        push(&mut w, name, &report)?;
+    }
+    println!("wrote {}", w.finish()?.display());
+    Ok(())
+}
+
+pub fn run_c(session: &Session, epochs: usize, workers: usize) -> Result<()> {
+    println!("== ablation: candidate rate c ==");
+    let mut w = csv("abl_c.csv")?;
+    let mut cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+    let exec = session.executor(VARIANT, cfg.training.reps)?;
+    for c in [7usize, 14, 28] {
+        cfg.training.candidates = c;
+        let report = session.run(&cfg, &exec)?;
+        push(&mut w, &format!("c={c}"), &report)?;
+    }
+    println!("wrote {}", w.finish()?.display());
+    Ok(())
+}
+
+pub fn run_r(session: &Session, epochs: usize, workers: usize) -> Result<()> {
+    println!("== ablation: representative count r ==");
+    let mut w = csv("abl_r.csv")?;
+    for r in [3usize, 7, 14] {
+        let mut cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+        cfg.training.reps = r;
+        let exec = session.executor(VARIANT, r)?;
+        let report = session.run(&cfg, &exec)?;
+        push(&mut w, &format!("r={r}"), &report)?;
+    }
+    println!("wrote {}", w.finish()?.display());
+    Ok(())
+}
+
+pub fn run(what: &str, epochs: usize, workers: usize) -> Result<()> {
+    let session = Session::open()?;
+    match what {
+        "policy" => run_policy(&session, epochs, workers),
+        "locality" => run_locality(&session, epochs, workers),
+        "sync" => run_sync(&session, epochs, workers),
+        "c" => run_c(&session, epochs, workers),
+        "r" => run_r(&session, epochs, workers),
+        "all" => {
+            run_policy(&session, epochs, workers)?;
+            run_locality(&session, epochs, workers)?;
+            run_sync(&session, epochs, workers)?;
+            run_c(&session, epochs, workers)?;
+            run_r(&session, epochs, workers)
+        }
+        other => anyhow::bail!("unknown ablation `{other}` \
+                                (policy|locality|sync|c|r|all)"),
+    }
+}

@@ -1,0 +1,107 @@
+//! Shared harness plumbing: tuned run geometries, executor reuse, report
+//! printing.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::config::{preset, ExperimentConfig, Strategy};
+use crate::data::{Dataset, TaskSequence};
+use crate::metrics::report::RunReport;
+use crate::runtime::{Manifest, ModelExecutor};
+use crate::train::Trainer;
+
+/// The scaled-down experiment profile used by all figure harnesses
+/// (`default` preset, shortened to `epochs_per_task` with a matching decay
+/// schedule so the LR cycle still completes within each task).
+pub fn harness_config(variant: &str, strategy: Strategy,
+                      epochs_per_task: usize, workers: usize)
+                      -> ExperimentConfig {
+    let mut cfg = preset("default").expect("default preset");
+    cfg.training.variant = variant.to_string();
+    cfg.training.strategy = strategy;
+    cfg.training.epochs_per_task = epochs_per_task;
+    cfg.cluster.workers = workers;
+    // Warmup + step decay compressed into the task length (paper shape:
+    // warmup, plateau, two decays late in the task).
+    cfg.training.warmup_epochs = (epochs_per_task / 4).max(1);
+    let d1 = (epochs_per_task * 5) / 8;
+    let d2 = (epochs_per_task * 7) / 8;
+    cfg.training.decay_points = if d2 > d1 {
+        vec![(d1, 0.5), (d2, 0.1)]
+    } else {
+        vec![(d1.max(1), 0.5)]
+    };
+    cfg
+}
+
+/// Compiled-executor cache: harnesses sweep many configs over the same
+/// (variant, r) pair; compiling once saves minutes.
+pub struct Session {
+    manifest: Manifest,
+    dataset: Mutex<Option<(u64, Dataset)>>,
+}
+
+impl Session {
+    pub fn open() -> Result<Session> {
+        let dir = crate::testkit::artifacts_dir()
+            .ok_or_else(|| anyhow::anyhow!("artifacts/ missing; run `make artifacts`"))?;
+        Ok(Session { manifest: Manifest::load(&dir)?, dataset: Mutex::new(None) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executor(&self, variant: &str, reps: usize) -> Result<ModelExecutor> {
+        ModelExecutor::new(&self.manifest, variant, &[reps])
+    }
+
+    /// Dataset shared across runs with the same data seed.
+    pub fn dataset(&self, cfg: &ExperimentConfig) -> Dataset {
+        let mut guard = self.dataset.lock().unwrap();
+        if let Some((seed, ds)) = guard.as_ref() {
+            if *seed == cfg.data.seed && ds.num_classes == cfg.data.num_classes {
+                return ds.clone();
+            }
+        }
+        let ds = Dataset::generate(&cfg.data);
+        *guard = Some((cfg.data.seed, ds.clone()));
+        ds
+    }
+
+    /// Run one config (validating against the artifacts), reusing a
+    /// provided executor.
+    pub fn run(&self, cfg: &ExperimentConfig, exec: &ModelExecutor) -> Result<RunReport> {
+        cfg.validate()?;
+        if self.manifest.num_classes != cfg.data.num_classes
+            || self.manifest.batch != cfg.training.batch
+        {
+            bail!("artifact geometry (K={}, b={}) != config (K={}, b={})",
+                  self.manifest.num_classes, self.manifest.batch,
+                  cfg.data.num_classes, cfg.training.batch);
+        }
+        let dataset = self.dataset(cfg);
+        let tasks = TaskSequence::new(cfg.data.num_classes, cfg.data.num_tasks,
+                                      cfg.data.seed);
+        Trainer::new(cfg, exec, &dataset, &tasks).run()
+    }
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("results")
+}
+
+/// One-line human summary of a run, printed as harnesses go.
+pub fn summarize(report: &RunReport) -> String {
+    format!(
+        "{:<11} {:<15} N={:<3} |B|={:>5.1}%  top5 acc_T={:.4}  top1={:.4}  wall={:.1}s  it={} (train {:.1} ms, wait {:.2} ms | bg pop {:.2} + aug {:.2} ms)",
+        report.strategy, report.variant, report.workers, report.buffer_percent,
+        report.final_accuracy_t, report.final_top1_accuracy_t,
+        report.total_wall.as_secs_f64(), report.iterations,
+        report.breakdown_ms.1, report.breakdown_ms.2,
+        report.background_ms.0, report.background_ms.1,
+    )
+}

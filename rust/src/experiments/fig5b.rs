@@ -1,0 +1,67 @@
+//! Fig. 5b — accuracy and cumulative training time vs epoch, for the three
+//! strategies (rehearsal |B|=30 % r=7 vs incremental vs from-scratch).
+//!
+//! Paper: rehearsal reaches 80.55 % top-5 (incremental 23.3 %, scratch
+//! ~91 %); from-scratch time grows quadratically with tasks while the other
+//! two stay linear.
+
+use anyhow::Result;
+
+use crate::config::Strategy;
+use crate::metrics::csv::{f, CsvWriter};
+
+use super::common::{harness_config, results_dir, summarize, Session};
+
+pub fn run(epochs_per_task: usize, workers: usize) -> Result<()> {
+    let session = Session::open()?;
+    let variant = "resnet50_sim";
+
+    let mut acc_csv = CsvWriter::new(
+        &results_dir().join("fig5b_accuracy.csv"),
+        &["strategy", "epoch", "task", "top5_accuracy_T", "top1_accuracy_T",
+          "train_loss"],
+    )?;
+    let mut time_csv = CsvWriter::new(
+        &results_dir().join("fig5b_time.csv"),
+        &["strategy", "epoch", "task", "epoch_wall_s", "cumulative_wall_s"],
+    )?;
+
+    println!("== fig5b: 3 strategies ({variant}, N={workers}, {epochs_per_task} ep/task) ==");
+    let mut finals = Vec::new();
+    for strategy in [Strategy::Rehearsal, Strategy::Incremental,
+                     Strategy::FromScratch] {
+        let cfg = harness_config(variant, strategy, epochs_per_task, workers);
+        let exec = session.executor(variant, cfg.training.reps)?;
+        let report = session.run(&cfg, &exec)?;
+        println!("{}", summarize(&report));
+        let mut cum = 0.0;
+        for e in &report.epochs {
+            if let Some(ev) = &e.eval {
+                acc_csv.row(&[
+                    strategy.name().into(),
+                    e.epoch.to_string(),
+                    e.task.to_string(),
+                    f(ev.accuracy_t),
+                    f(ev.top1_accuracy_t),
+                    f(e.train_loss),
+                ])?;
+            }
+            cum += e.wall.as_secs_f64();
+            time_csv.row(&[
+                strategy.name().into(),
+                e.epoch.to_string(),
+                e.task.to_string(),
+                f(e.wall.as_secs_f64()),
+                f(cum),
+            ])?;
+        }
+        finals.push((strategy, report.final_accuracy_t, cum));
+    }
+    let p1 = acc_csv.finish()?;
+    let p2 = time_csv.finish()?;
+    println!("wrote {} and {}", p1.display(), p2.display());
+    println!("final top-5 accuracy_T: {:?}",
+             finals.iter().map(|(s, a, _)| format!("{}={a:.4}", s.name()))
+                   .collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Fig. 6 — per-iteration time breakdown: foreground (Load, Train) vs
+//! background (Populate buffer, Augment batch), for the three models across
+//! scales.
+//!
+//! Paper: the right (background) stack stays below the left (foreground)
+//! stack for every model and every GPU count — full overlap — and Train
+//! *increases* for cheap models at scale because the all-reduce starts to
+//! stall compute.
+//!
+//! Two row kinds:
+//! - `measured` — short rehearsal runs on this testbed (N ∈ measured set),
+//!   real wall-clock per-iteration means (≈ the paper's 35-batch averages);
+//! - `a100_proj` — the perfmodel projection at the paper's scales
+//!   (8..128 GPUs) with A100/ConnectX-6 constants.
+
+use anyhow::Result;
+
+use crate::config::Strategy;
+use crate::metrics::csv::{f, CsvWriter};
+use crate::net::CostModel;
+use crate::perfmodel::{ModelClass, PerfConstants, PerfModel};
+
+use super::common::{harness_config, results_dir, summarize, Session};
+
+pub const VARIANTS: [&str; 3] = ["resnet50_sim", "resnet18_sim", "ghostnet50_sim"];
+pub const MEASURED_N: [usize; 2] = [2, 4];
+pub const PROJECTED_N: [usize; 5] = [8, 16, 32, 64, 128];
+
+pub fn run(epochs_per_task: usize) -> Result<()> {
+    let session = Session::open()?;
+    let mut csv = CsvWriter::new(
+        &results_dir().join("fig6.csv"),
+        &["model", "workers", "kind", "load_ms", "train_ms", "wait_ms",
+          "populate_ms", "augment_ms", "foreground_ms", "background_ms",
+          "fully_overlapped"],
+    )?;
+
+    println!("== fig6: breakdown (measured N={MEASURED_N:?}; projected N={PROJECTED_N:?}) ==");
+    for variant in VARIANTS {
+        for n in MEASURED_N {
+            let mut cfg = harness_config(variant, Strategy::Rehearsal,
+                                         epochs_per_task, n);
+            // One task is enough for a stable per-iteration mean (paper
+            // averages 35 mini-batches); keep the full pipeline though.
+            cfg.data.num_tasks = 4;
+            let exec = session.executor(variant, cfg.training.reps)?;
+            let report = session.run(&cfg, &exec)?;
+            println!("{}", summarize(&report));
+            let (load, train, wait) = report.breakdown_ms;
+            let (pop, aug, _wire) = report.background_ms;
+            let fg = load + train + wait;
+            let bg = pop + aug;
+            csv.row(&[
+                variant.into(), n.to_string(), "measured".into(),
+                f(load), f(train), f(wait), f(pop), f(aug),
+                f(fg), f(bg), (bg <= fg).to_string(),
+            ])?;
+        }
+
+        let class = ModelClass::from_variant(variant)?;
+        let pm = PerfModel::new(CostModel::default(), PerfConstants::default());
+        for n in PROJECTED_N {
+            let it = pm.iteration(class, n, 56, 7, 14);
+            csv.row(&[
+                variant.into(), n.to_string(), "a100_proj".into(),
+                f(it.load_ms), f(it.train_ms), f(0.0),
+                f(it.populate_ms), f(it.augment_ms),
+                f(it.foreground_ms), f(it.background_ms),
+                it.fully_overlapped().to_string(),
+            ])?;
+        }
+    }
+    let path = csv.finish()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

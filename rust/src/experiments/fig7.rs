@@ -1,0 +1,79 @@
+//! Fig. 7 — scalability: (a) final accuracy and (b) total runtime vs the
+//! number of data-parallel workers, for all three strategies.
+//!
+//! Paper: accuracy is flat in N for every strategy (global sampling stays
+//! unbiased at scale); runtime drops with N and the rehearsal↔incremental
+//! gap does not grow.
+//!
+//! - `fig7a.csv` — measured accuracy on this testbed for N ∈ measured set
+//!   (training math is exact data-parallelism, so accuracy-vs-N is real).
+//! - `fig7b.csv` — measured wall time (testbed; total compute is constant
+//!   in N on one core, recorded for completeness) plus the A100-cluster
+//!   projection at the paper's scales, all three models × strategies.
+
+use anyhow::Result;
+
+use crate::config::Strategy;
+use crate::metrics::csv::{f, CsvWriter};
+use crate::net::CostModel;
+use crate::perfmodel::{ModelClass, PerfConstants, PerfModel};
+
+use super::common::{harness_config, results_dir, summarize, Session};
+
+pub const MEASURED_N: [usize; 4] = [1, 2, 4, 8];
+pub const PROJECTED_N: [usize; 5] = [8, 16, 32, 64, 128];
+const STRATEGIES: [Strategy; 3] =
+    [Strategy::Rehearsal, Strategy::Incremental, Strategy::FromScratch];
+
+pub fn run(epochs_per_task: usize) -> Result<()> {
+    let session = Session::open()?;
+    // Accuracy-vs-N is strategy/sampling behaviour, not model capacity;
+    // the fast variant keeps 12 full runs inside the testbed budget.
+    let variant = "resnet18_sim";
+
+    // ---- 7a: measured accuracy vs N -----------------------------------
+    let mut a = CsvWriter::new(
+        &results_dir().join("fig7a.csv"),
+        &["strategy", "workers", "top5_accuracy_T", "top1_accuracy_T"],
+    )?;
+    println!("== fig7a: accuracy vs N ({variant}, {epochs_per_task} ep/task) ==");
+    for strategy in STRATEGIES {
+        for n in MEASURED_N {
+            let cfg = harness_config(variant, strategy, epochs_per_task, n);
+            let exec = session.executor(variant, cfg.training.reps)?;
+            let report = session.run(&cfg, &exec)?;
+            println!("{}", summarize(&report));
+            a.row(&[
+                strategy.name().into(), n.to_string(),
+                f(report.final_accuracy_t), f(report.final_top1_accuracy_t),
+            ])?;
+        }
+    }
+    let pa = a.finish()?;
+    println!("wrote {}", pa.display());
+
+    // ---- 7b: projected runtime vs N (paper geometry) -------------------
+    let mut b = CsvWriter::new(
+        &results_dir().join("fig7b.csv"),
+        &["model", "strategy", "workers", "total_runtime_s_proj"],
+    )?;
+    let pm = PerfModel::new(CostModel::default(), PerfConstants::default());
+    // Paper geometry: 4 tasks x 250 classes x ~1300 imgs, 30 epochs/task.
+    let samples_per_task = 312_000;
+    for variant in super::fig6::VARIANTS {
+        let class = ModelClass::from_variant(variant)?;
+        for strategy in STRATEGIES {
+            for n in PROJECTED_N {
+                let proj = pm.run(class, strategy, n, 56, 7, 14, 4, 30,
+                                  samples_per_task, true);
+                b.row(&[
+                    variant.into(), strategy.name().into(), n.to_string(),
+                    f(proj.total.as_secs_f64()),
+                ])?;
+            }
+        }
+    }
+    let pb = b.finish()?;
+    println!("wrote {}", pb.display());
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Experiment harnesses — one per paper figure, plus ablations.
+//!
+//! Each harness regenerates the paper artifact as CSV rows in `results/`
+//! (DESIGN.md §4 maps figure → harness → CSV). Columns ending in `_proj`
+//! come from the analytic [`crate::perfmodel`]; everything else is measured
+//! on this testbed.
+
+pub mod ablations;
+pub mod common;
+pub mod fig5a;
+pub mod fig5b;
+pub mod fig6;
+pub mod fig7;

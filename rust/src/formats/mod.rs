@@ -1,0 +1,9 @@
+//! In-repo data formats: a JSON parser (artifact manifest) and a TOML-subset
+//! parser (experiment config files). The offline crate registry ships no
+//! serde, so these are first-class substrates with their own test suites.
+
+pub mod json;
+pub mod toml;
+
+pub use json::Json;
+pub use toml::TomlTable;

@@ -1,0 +1,288 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supported grammar (everything the `configs/` presets need):
+//! `[table]` and `[table.subtable]` headers, `key = value` with string,
+//! integer, float, boolean and homogeneous-array values, `#` comments.
+//! Unsupported TOML (multi-line strings, dates, inline tables, array-of-
+//! tables) is a hard parse error rather than silent misreading.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("not an integer: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_i64()?;
+        if v < 0 {
+            bail!("negative where usize expected: {v}");
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f64),
+            TomlValue::Float(f) => Ok(*f),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Ok(v),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+}
+
+/// A parsed TOML document: dotted table paths map to flat key/value tables.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlTable {
+    /// `tables["training"]["epochs"]`; root keys live under `""`.
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlTable {
+    pub fn parse(text: &str) -> Result<TomlTable> {
+        let mut doc = TomlTable::default();
+        let mut current = String::new();
+        doc.tables.entry(current.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    bail!("line {}: bad table name `{name}`", lineno + 1);
+                }
+                current = name.to_string();
+                doc.tables.entry(current.clone()).or_default();
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    bail!("line {}: empty key", lineno + 1);
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+                let table = doc.tables.get_mut(&current).unwrap();
+                if table.insert(key.to_string(), val).is_some() {
+                    bail!("line {}: duplicate key `{key}`", lineno + 1);
+                }
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlTable> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        TomlTable::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+    }
+
+    pub fn table(&self, name: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.tables.get(name)
+    }
+
+    /// Typed lookup `table.key`; error message includes the full path.
+    pub fn get(&self, table: &str, key: &str) -> Result<&TomlValue> {
+        self.tables
+            .get(table)
+            .and_then(|t| t.get(key))
+            .ok_or_else(|| anyhow!("missing config `{table}.{key}`"))
+    }
+
+    pub fn get_or<T>(&self, table: &str, key: &str, default: T,
+                     conv: impl Fn(&TomlValue) -> Result<T>) -> Result<T> {
+        match self.tables.get(table).and_then(|t| t.get(key)) {
+            Some(v) => conv(v),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            bail!("trailing characters after string");
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if text.contains('.') || text.contains('e') || text.contains('E') {
+        if let Ok(f) = text.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = text.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    bail!("cannot parse value `{text}`")
+}
+
+/// Split an array body on commas that are not nested inside `[...]` or `"..."`.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if !s[start..].trim().is_empty() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlTable::parse(
+            r#"
+            # experiment preset
+            name = "fig5a"
+
+            [training]
+            epochs_per_task = 30
+            lr = 0.0125          # base learning rate
+            amp = true
+
+            [buffer]
+            percents = [2.5, 5.0, 10.0]
+            policy = "random"
+
+            [cluster.net]
+            latency_us = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "fig5a");
+        assert_eq!(doc.get("training", "epochs_per_task").unwrap().as_usize().unwrap(), 30);
+        assert!((doc.get("training", "lr").unwrap().as_f64().unwrap() - 0.0125).abs() < 1e-12);
+        assert!(doc.get("training", "amp").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("buffer", "percents").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(doc.get("cluster.net", "latency_us").unwrap().as_i64().unwrap(), 2);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = TomlTable::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(TomlTable::parse("[unterminated").is_err());
+        assert!(TomlTable::parse("novalue").is_err());
+        assert!(TomlTable::parse("k = ").is_err());
+        assert!(TomlTable::parse("k = \"x\" y").is_err());
+        assert!(TomlTable::parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn arrays_nested() {
+        let doc = TomlTable::parse("a = [[1, 2], [3]]").unwrap();
+        let outer = doc.get("", "a").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_i64().unwrap(), 2);
+    }
+
+    #[test]
+    fn get_or_default() {
+        let doc = TomlTable::parse("[t]\nx = 5").unwrap();
+        let v = doc.get_or("t", "missing", 9usize, |v| v.as_usize()).unwrap();
+        assert_eq!(v, 9);
+        let v = doc.get_or("t", "x", 9usize, |v| v.as_usize()).unwrap();
+        assert_eq!(v, 5);
+    }
+
+    #[test]
+    fn underscore_integers() {
+        let doc = TomlTable::parse("n = 1_200_000").unwrap();
+        assert_eq!(doc.get("", "n").unwrap().as_i64().unwrap(), 1_200_000);
+    }
+}

@@ -1,0 +1,61 @@
+//! # dcl — Distributed rehearsal buffers for data-parallel continual learning
+//!
+//! Reproduction of Bouvier et al., *"Efficient Data-Parallel Continual
+//! Learning with Asynchronous Distributed Rehearsal Buffers"* (CCGrid 2024).
+//!
+//! Layer-3 of the three-layer stack (see `DESIGN.md`): this crate owns the
+//! event loop, the simulated multi-worker cluster, the distributed rehearsal
+//! buffer with asynchronous updates and RDMA-style global sampling, the data
+//! pipeline, baselines, the performance model, and every experiment harness.
+//! The compute (model fwd/bwd, optimizer, augmentation assembly) is AOT-
+//! compiled JAX/Pallas loaded from `artifacts/*.hlo.txt` and executed via
+//! PJRT (`runtime`). Python never runs on the training path.
+//!
+//! Module map (bottom-up):
+//!
+//! - [`util`] — deterministic RNG (xoshiro256**), stats, timing.
+//! - [`formats`] — in-repo JSON & TOML parsers (offline build: no serde).
+//! - [`tensor`] — host-side shape-checked f32 tensors and sample records.
+//! - [`config`] — typed experiment configuration + presets.
+//! - [`data`] — synthetic class-incremental dataset, task sequence,
+//!   sharding, and the background prefetching loader (DALI stand-in).
+//! - [`buffer`] — the rehearsal buffer: per-class sub-buffers, eviction
+//!   policies, Algorithm 1 updates, fine-grain locking.
+//! - [`net`] — the simulated RDMA/RPC fabric (Mochi/Thallium stand-in).
+//! - [`sampling`] — unbiased global sampling plans + RPC consolidation.
+//! - [`engine`] — the asynchronous update/augment pipeline of Fig. 4 and
+//!   the `update()` primitive of Listing 1.
+//! - [`cluster`] — worker topology and ring all-reduce.
+//! - [`runtime`] — PJRT executor for AOT artifacts.
+//! - [`optim`] — learning-rate schedules (linear scaling, warmup, decay).
+//! - [`train`] — the rehearsal trainer, baselines, evaluation.
+//! - [`perfmodel`] — discrete-event cluster performance model (A100 +
+//!   ConnectX-6 constants) used for scalability projections.
+//! - [`metrics`] — per-iteration breakdown recording and CSV reports.
+//! - [`bench_harness`] — micro-benchmark harness (criterion stand-in).
+//! - [`testkit`] — property-testing helpers.
+//! - [`experiments`] — one harness per paper figure (5a, 5b, 6, 7a, 7b)
+//!   plus ablations.
+
+pub mod bench_harness;
+pub mod buffer;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod formats;
+pub mod metrics;
+pub mod net;
+pub mod optim;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sampling;
+pub mod tensor;
+pub mod testkit;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,119 @@
+//! Per-worker iteration breakdown (paper Fig. 6).
+//!
+//! Foreground categories (the training-iteration critical path):
+//! - **Load**  — wait for the prefetching loader;
+//! - **Train** — PJRT execution of the (augmented) train step;
+//! - **Wait**  — blocked on the engine's in-flight representatives
+//!   ("Augment wait"; ≈0 ⇔ full overlap).
+//!
+//! Background categories (the engine's async work, from
+//! [`crate::engine::EngineTimings`]):
+//! - **Populate buffer** — Algorithm 1 updates;
+//! - **Augment batch** — plan + remote fetch + assembly.
+//!
+//! The Fig.-6 claim is `populate + augment < load + train` at every scale.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+#[derive(Debug, Default)]
+pub struct WorkerBreakdown {
+    pub load_ns: AtomicU64,
+    pub train_ns: AtomicU64,
+    pub wait_ns: AtomicU64,
+    pub iterations: AtomicU64,
+}
+
+impl WorkerBreakdown {
+    pub fn add_load(&self, d: Duration) {
+        self.load_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_train(&self, d: Duration) {
+        self.train_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_wait(&self, d: Duration) {
+        self.wait_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn bump(&self) {
+        self.iterations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-iteration means in ms: (load, train, wait).
+    pub fn per_iteration_ms(&self) -> (f64, f64, f64) {
+        let it = self.iterations.load(Ordering::Relaxed);
+        if it == 0 {
+            return (0.0, 0.0, 0.0);
+        }
+        let ms = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64 / 1e6 / it as f64;
+        (ms(&self.load_ns), ms(&self.train_ns), ms(&self.wait_ns))
+    }
+}
+
+/// One row of the Fig.-6 table: foreground vs background per-iteration ms.
+#[derive(Clone, Debug)]
+pub struct BreakdownRow {
+    pub model: String,
+    pub workers: usize,
+    pub load_ms: f64,
+    pub train_ms: f64,
+    pub wait_ms: f64,
+    pub populate_ms: f64,
+    pub augment_ms: f64,
+    pub wire_ms: f64,
+}
+
+impl BreakdownRow {
+    /// Foreground critical path per iteration.
+    pub fn foreground_ms(&self) -> f64 {
+        self.load_ms + self.train_ms + self.wait_ms
+    }
+
+    /// Background buffer management per iteration.
+    pub fn background_ms(&self) -> f64 {
+        self.populate_ms + self.augment_ms
+    }
+
+    /// The paper's overlap condition (background bars below foreground).
+    pub fn fully_overlapped(&self) -> bool {
+        self.background_ms() <= self.foreground_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_means() {
+        let b = WorkerBreakdown::default();
+        for _ in 0..4 {
+            b.add_load(Duration::from_millis(1));
+            b.add_train(Duration::from_millis(10));
+            b.bump();
+        }
+        let (l, t, w) = b.per_iteration_ms();
+        assert!((l - 1.0).abs() < 0.01);
+        assert!((t - 10.0).abs() < 0.01);
+        assert_eq!(w, 0.0);
+    }
+
+    #[test]
+    fn overlap_condition() {
+        let row = BreakdownRow {
+            model: "m".into(),
+            workers: 8,
+            load_ms: 1.0,
+            train_ms: 20.0,
+            wait_ms: 0.1,
+            populate_ms: 0.5,
+            augment_ms: 2.0,
+            wire_ms: 0.3,
+        };
+        assert!(row.fully_overlapped());
+        assert!((row.foreground_ms() - 21.1).abs() < 1e-9);
+        assert!((row.background_ms() - 2.5).abs() < 1e-9);
+    }
+}

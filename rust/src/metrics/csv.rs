@@ -1,0 +1,85 @@
+//! Tiny CSV writer for the figure harnesses (`results/*.csv`).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub struct CsvWriter {
+    path: PathBuf,
+    columns: usize,
+    buf: String,
+}
+
+impl CsvWriter {
+    pub fn new(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if header.is_empty() {
+            bail!("CSV needs at least one column");
+        }
+        let mut buf = String::new();
+        writeln!(buf, "{}", header.join(",")).unwrap();
+        Ok(CsvWriter { path: path.to_path_buf(), columns: header.len(), buf })
+    }
+
+    /// Append one row (values are Display-formatted; strings containing
+    /// commas are quoted).
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        if values.len() != self.columns {
+            bail!("row has {} values, header has {}", values.len(), self.columns);
+        }
+        let cells: Vec<String> = values
+            .iter()
+            .map(|v| {
+                if v.contains(',') || v.contains('"') {
+                    format!("\"{}\"", v.replace('"', "\"\""))
+                } else {
+                    v.clone()
+                }
+            })
+            .collect();
+        writeln!(self.buf, "{}", cells.join(",")).unwrap();
+        Ok(())
+    }
+
+    /// Write the accumulated rows to disk (creating parent dirs).
+    pub fn finish(self) -> Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        fs::write(&self.path, &self.buf)
+            .with_context(|| format!("writing {}", self.path.display()))?;
+        Ok(self.path)
+    }
+}
+
+/// Convenience: format f64 with fixed precision for stable CSV diffs.
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("dcl_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row(&["2".into(), "plain".into()]).unwrap();
+        let p = w.finish().unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2,plain\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let path = std::env::temp_dir().join("dcl_csv_test2/t.csv");
+        let mut w = CsvWriter::new(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Run metrics: the Fig.-6 per-iteration breakdown, epoch records, and CSV
+//! emission for the figure harnesses.
+
+pub mod breakdown;
+pub mod csv;
+pub mod report;
+
+pub use breakdown::WorkerBreakdown;
+pub use csv::CsvWriter;
+pub use report::{EpochRecord, EvalRecord, RunReport};

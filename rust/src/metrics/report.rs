@@ -1,0 +1,132 @@
+//! Run-level records produced by the trainer and consumed by the figure
+//! harnesses and EXPERIMENTS.md.
+
+use std::time::Duration;
+
+/// Accuracy measured on the validation data of all tasks seen so far
+/// (paper Eq. 1: `accuracy_T = (1/T) Σ_j a_{T,j}`).
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    /// Top-5 accuracy per previous task `j` (a_{T,j}).
+    pub per_task_top5: Vec<f64>,
+    /// Top-1 accuracy per previous task `j`.
+    pub per_task_top1: Vec<f64>,
+    /// Eq. 1 mean over tasks seen so far.
+    pub accuracy_t: f64,
+    /// Same for top-1.
+    pub top1_accuracy_t: f64,
+    /// Mean validation loss over the seen tasks.
+    pub val_loss: f64,
+}
+
+/// One training epoch.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    /// Global epoch index (0-based across tasks).
+    pub epoch: usize,
+    pub task: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    /// Top-5 accuracy over the epoch's (augmented) training batches.
+    pub train_top5: f64,
+    /// Wall-clock time of the epoch on this testbed.
+    pub wall: Duration,
+    /// Modeled cluster time of the epoch (perfmodel; None until projected).
+    pub virtual_time: Option<Duration>,
+    /// Evaluation at epoch end (per-task boundaries at minimum).
+    pub eval: Option<EvalRecord>,
+}
+
+/// A complete run (one strategy, one config).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub strategy: String,
+    pub variant: String,
+    pub workers: usize,
+    pub buffer_percent: f64,
+    pub epochs: Vec<EpochRecord>,
+    /// Eq. 1 at the end of the final task.
+    pub final_accuracy_t: f64,
+    pub final_top1_accuracy_t: f64,
+    /// Total train wall time.
+    pub total_wall: Duration,
+    /// Mean per-iteration foreground breakdown (load, train, wait) in ms.
+    pub breakdown_ms: (f64, f64, f64),
+    /// Mean per-iteration background breakdown (populate, augment, wire) ms.
+    pub background_ms: (f64, f64, f64),
+    /// Mean PJRT train-step ms (perfmodel calibration input).
+    pub train_step_ms: f64,
+    /// Bytes of gradient payload per all-reduce.
+    pub allreduce_bytes: usize,
+    /// Total iterations executed (per worker).
+    pub iterations: usize,
+}
+
+impl RunReport {
+    /// Accuracy trajectory (global epoch, accuracy_T at evals).
+    pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
+        self.epochs
+            .iter()
+            .filter_map(|e| e.eval.as_ref().map(|ev| (e.epoch, ev.accuracy_t)))
+            .collect()
+    }
+
+    /// Cumulative wall-time curve (global epoch, seconds since start).
+    pub fn time_curve(&self) -> Vec<(usize, f64)> {
+        let mut acc = 0.0;
+        self.epochs
+            .iter()
+            .map(|e| {
+                acc += e.wall.as_secs_f64();
+                (e.epoch, acc)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize, wall_s: f64, acc: Option<f64>) -> EpochRecord {
+        EpochRecord {
+            epoch,
+            task: 0,
+            lr: 0.1,
+            train_loss: 1.0,
+            train_top5: 0.5,
+            wall: Duration::from_secs_f64(wall_s),
+            virtual_time: None,
+            eval: acc.map(|a| EvalRecord {
+                per_task_top5: vec![a],
+                per_task_top1: vec![a / 2.0],
+                accuracy_t: a,
+                top1_accuracy_t: a / 2.0,
+                val_loss: 1.0,
+            }),
+        }
+    }
+
+    #[test]
+    fn curves() {
+        let report = RunReport {
+            strategy: "rehearsal".into(),
+            variant: "v".into(),
+            workers: 2,
+            buffer_percent: 30.0,
+            epochs: vec![rec(0, 1.0, None), rec(1, 2.0, Some(0.8))],
+            final_accuracy_t: 0.8,
+            final_top1_accuracy_t: 0.4,
+            total_wall: Duration::from_secs(3),
+            breakdown_ms: (0.1, 5.0, 0.0),
+            background_ms: (0.05, 0.2, 0.01),
+            train_step_ms: 5.0,
+            allreduce_bytes: 1024,
+            iterations: 10,
+        };
+        assert_eq!(report.accuracy_curve(), vec![(1, 0.8)]);
+        let tc = report.time_curve();
+        assert_eq!(tc.len(), 2);
+        assert!((tc[1].1 - 3.0).abs() < 1e-9);
+    }
+}

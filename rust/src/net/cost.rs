@@ -1,0 +1,77 @@
+//! Wire-cost model for the simulated fabric.
+//!
+//! `cost(bytes) = latency + bytes / bandwidth` — the standard alpha-beta
+//! (Hockney) model. Defaults approximate the paper's testbed NICs (NVIDIA
+//! ConnectX-6, ~2 µs one-way RPC latency through Mercury, ~12 GiB/s
+//! per-process share of a 200 Gb/s HDR link). The same model prices the
+//! all-reduce ring in [`crate::cluster`] and the perfmodel projections.
+
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// One-way small-RPC latency (alpha), microseconds.
+    pub latency_us: f64,
+    /// Bulk bandwidth (1/beta), GiB/s.
+    pub bandwidth_gibps: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { latency_us: 2.0, bandwidth_gibps: 12.0 }
+    }
+}
+
+impl CostModel {
+    pub fn new(latency_us: f64, bandwidth_gibps: f64) -> CostModel {
+        CostModel { latency_us, bandwidth_gibps }
+    }
+
+    /// Wire time for one message of `bytes` payload.
+    pub fn cost(&self, bytes: usize) -> Duration {
+        let secs = self.latency_us * 1e-6
+            + bytes as f64 / (self.bandwidth_gibps * 1024.0 * 1024.0 * 1024.0);
+        Duration::from_secs_f64(secs)
+    }
+
+    /// Cost of `k` *separate* messages with the same total payload — what
+    /// the consolidation optimisation (paper §IV-C) saves versus one bulk
+    /// RPC: (k-1) extra latency terms.
+    pub fn cost_unconsolidated(&self, bytes: usize, k: usize) -> Duration {
+        if k == 0 {
+            return Duration::ZERO;
+        }
+        let secs = self.latency_us * 1e-6 * k as f64
+            + bytes as f64 / (self.bandwidth_gibps * 1024.0 * 1024.0 * 1024.0);
+        Duration::from_secs_f64(secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_floor() {
+        let m = CostModel::new(2.0, 12.0);
+        let c = m.cost(0);
+        assert!((c.as_secs_f64() - 2e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bandwidth_term_scales() {
+        let m = CostModel::new(0.0, 1.0); // 1 GiB/s
+        let c = m.cost(1024 * 1024 * 1024);
+        assert!((c.as_secs_f64() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consolidation_saves_latency() {
+        let m = CostModel::default();
+        let bulk = m.cost(7 * 12 * 1024);
+        let split = m.cost_unconsolidated(7 * 12 * 1024, 7);
+        assert!(split > bulk);
+        let saved = split.as_secs_f64() - bulk.as_secs_f64();
+        assert!((saved - 6.0 * 2e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! The fabric: registered peer buffers + priced bulk-fetch operations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::buffer::LocalBuffer;
+use crate::tensor::Sample;
+
+use super::cost::CostModel;
+
+/// Fabric-wide traffic counters (all workers).
+#[derive(Debug, Default)]
+pub struct FabricCounters {
+    /// Bulk fetch RPCs issued (after consolidation: one per (src,dst) pair
+    /// per sampling round).
+    pub rpcs: AtomicU64,
+    /// Payload bytes moved over the simulated wire.
+    pub bytes: AtomicU64,
+    /// Metadata (snapshot) exchanges.
+    pub meta_rpcs: AtomicU64,
+    /// Virtual wire time accumulated, nanoseconds.
+    pub wire_ns: AtomicU64,
+}
+
+impl FabricCounters {
+    pub fn snapshot(&self) -> (u64, u64, u64, Duration) {
+        (
+            self.rpcs.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.meta_rpcs.load(Ordering::Relaxed),
+            Duration::from_nanos(self.wire_ns.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+/// The distributed rehearsal buffer's communication substrate: N registered
+/// local buffers plus the wire-cost model.
+pub struct Fabric {
+    buffers: Vec<Arc<LocalBuffer>>,
+    cost: CostModel,
+    /// Sleep for the modeled wire time (wall-clock emulation mode).
+    emulate_delays: bool,
+    pub counters: FabricCounters,
+}
+
+impl Fabric {
+    pub fn new(buffers: Vec<Arc<LocalBuffer>>, cost: CostModel,
+               emulate_delays: bool) -> Fabric {
+        Fabric { buffers, cost, emulate_delays, counters: FabricCounters::default() }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        self.cost
+    }
+
+    pub fn buffer(&self, worker: usize) -> &Arc<LocalBuffer> {
+        &self.buffers[worker]
+    }
+
+    /// Collect (worker, class, count) metadata from every peer — the
+    /// planner's view of the global buffer. Charged as one small RPC per
+    /// remote peer (the paper piggybacks this on its RPC layer).
+    pub fn gather_counts(&self, requester: usize) -> Vec<Vec<(u32, usize)>> {
+        let mut all = Vec::with_capacity(self.buffers.len());
+        let mut wire = Duration::ZERO;
+        for (n, buf) in self.buffers.iter().enumerate() {
+            let counts = buf.snapshot_counts();
+            if n != requester {
+                self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
+                wire += self.cost.cost(buf.snapshot_wire_bytes());
+            }
+            all.push(counts);
+        }
+        self.charge(wire);
+        all
+    }
+
+    /// One consolidated bulk fetch of rows `(class, idx)` from `target`'s
+    /// buffer on behalf of `requester`. Local fetches are free on the wire.
+    /// Returns the rows and the virtual wire cost charged.
+    pub fn fetch_bulk(&self, requester: usize, target: usize,
+                      picks: &[(u32, usize)]) -> Result<(Vec<Sample>, Duration)> {
+        if target >= self.buffers.len() {
+            bail!("fetch from unknown worker {target}");
+        }
+        let rows = self.buffers[target].fetch_rows(picks);
+        let mut wire = Duration::ZERO;
+        if target != requester && !rows.is_empty() {
+            let bytes: usize = rows.iter().map(Sample::wire_bytes).sum();
+            self.counters.rpcs.fetch_add(1, Ordering::Relaxed);
+            self.counters.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+            wire = self.cost.cost(bytes);
+            self.charge(wire);
+        }
+        Ok((rows, wire))
+    }
+
+    fn charge(&self, wire: Duration) {
+        if wire.is_zero() {
+            return;
+        }
+        self.counters
+            .wire_ns
+            .fetch_add(wire.as_nanos() as u64, Ordering::Relaxed);
+        if self.emulate_delays {
+            std::thread::sleep(wire);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EvictionPolicy;
+
+    fn fabric(n: usize, per_class: usize) -> Fabric {
+        let buffers: Vec<Arc<LocalBuffer>> = (0..n)
+            .map(|w| {
+                let b = LocalBuffer::new(100, EvictionPolicy::Random, w as u64);
+                for class in 0..4u32 {
+                    for i in 0..per_class {
+                        b.insert(Sample::new(class, vec![w as f32, i as f32]));
+                    }
+                }
+                Arc::new(b)
+            })
+            .collect();
+        Fabric::new(buffers, CostModel::default(), false)
+    }
+
+    #[test]
+    fn local_fetch_is_free_remote_is_priced() {
+        let f = fabric(3, 5);
+        let (rows, wire) = f.fetch_bulk(0, 0, &[(1, 0), (2, 3)]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(wire.is_zero());
+        assert_eq!(f.counters.rpcs.load(Ordering::Relaxed), 0);
+
+        let (rows, wire) = f.fetch_bulk(0, 2, &[(1, 0), (2, 3)]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|s| s.features[0] == 2.0), "rows from worker 2");
+        assert!(wire > Duration::ZERO);
+        assert_eq!(f.counters.rpcs.load(Ordering::Relaxed), 1);
+        assert_eq!(f.counters.bytes.load(Ordering::Relaxed),
+                   rows.iter().map(Sample::wire_bytes).sum::<usize>() as u64);
+    }
+
+    #[test]
+    fn gather_counts_sees_every_peer() {
+        let f = fabric(4, 3);
+        let all = f.gather_counts(1);
+        assert_eq!(all.len(), 4);
+        for counts in &all {
+            assert_eq!(counts.len(), 4); // 4 classes each
+            assert!(counts.iter().all(|&(_, n)| n == 3));
+        }
+        // 3 remote metadata RPCs charged
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn unknown_worker_errors() {
+        let f = fabric(2, 1);
+        assert!(f.fetch_bulk(0, 7, &[(0, 0)]).is_err());
+    }
+
+    #[test]
+    fn wire_time_accumulates() {
+        let f = fabric(2, 4);
+        let before = f.counters.wire_ns.load(Ordering::Relaxed);
+        f.fetch_bulk(0, 1, &[(0, 0), (1, 1), (2, 2)]).unwrap();
+        assert!(f.counters.wire_ns.load(Ordering::Relaxed) > before);
+    }
+}

@@ -1,0 +1,17 @@
+//! Simulated RDMA/RPC fabric — the Mochi/Thallium stand-in (DESIGN.md §1).
+//!
+//! The paper pins each local rehearsal buffer and exposes it for RDMA so any
+//! process can read any other process's representatives with low-overhead
+//! one-sided operations. The in-process analogue: every worker's
+//! `Arc<LocalBuffer>` is registered with the [`Fabric`]; a *bulk fetch* is a
+//! direct memory read of the peer buffer (one-sided, no peer CPU involved —
+//! the RDMA semantics) plus a calibrated wire-cost charge from the
+//! [`CostModel`] (ConnectX-6-like latency + bandwidth). Costs are always
+//! *accounted* (virtual time for the perfmodel and Fig. 6/7 harnesses) and
+//! optionally *emulated* by sleeping, for wall-clock overlap experiments.
+
+pub mod cost;
+pub mod fabric;
+
+pub use cost::CostModel;
+pub use fabric::{Fabric, FabricCounters};

@@ -1,0 +1,8 @@
+//! Optimizer-side logic that lives in the coordinator: learning-rate
+//! schedules (paper §VI-A). The SGD-momentum update itself is the fused L1
+//! Pallas kernel inside the `update` artifact; the coordinator only decides
+//! the scalar LR each iteration.
+
+pub mod schedule;
+
+pub use schedule::LrSchedule;

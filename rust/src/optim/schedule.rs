@@ -1,0 +1,108 @@
+//! Learning-rate schedule (paper §VI-A):
+//!
+//! - **Linear scaling rule** (Goyal et al.): peak LR = base·N for N
+//!   data-parallel workers…
+//! - …capped at `max_lr_scale`·base — the paper's mitigation for >8K global
+//!   batches ("maximum rate independent of the mini-batch size equal to
+//!   64", citing Bottou & Nocedal);
+//! - **per-task warmup**: LR ramps linearly from base to peak over the first
+//!   `warmup_epochs` of each task;
+//! - **step decay**: multiplicative factors at fixed epochs within the task
+//!   (ResNet: ×0.5 @21, ×0.05 @26, ×0.01 @28 — factors are absolute
+//!   multipliers of the peak, as in the paper's description).
+
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    base_lr: f64,
+    peak_lr: f64,
+    warmup_epochs: usize,
+    /// (epoch-within-task, absolute multiplier of peak).
+    decay_points: Vec<(usize, f64)>,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f64, workers: usize, max_lr_scale: f64,
+               warmup_epochs: usize, decay_points: Vec<(usize, f64)>) -> LrSchedule {
+        let scale = (workers as f64).min(max_lr_scale);
+        let mut pts = decay_points;
+        pts.sort_by_key(|&(e, _)| e);
+        LrSchedule {
+            base_lr,
+            peak_lr: base_lr * scale,
+            warmup_epochs,
+            decay_points: pts,
+        }
+    }
+
+    pub fn peak_lr(&self) -> f64 {
+        self.peak_lr
+    }
+
+    /// LR for `epoch` within the current task (every task restarts the
+    /// warmup + decay cycle, as the paper's per-task warmup prescribes).
+    pub fn lr_at(&self, epoch_in_task: usize) -> f64 {
+        if epoch_in_task < self.warmup_epochs {
+            // linear ramp base → peak, reaching peak at warmup_epochs
+            let frac = (epoch_in_task + 1) as f64 / self.warmup_epochs as f64;
+            return self.base_lr + (self.peak_lr - self.base_lr) * frac;
+        }
+        let mut mult = 1.0;
+        for &(e, m) in &self.decay_points {
+            if epoch_in_task >= e {
+                mult = m;
+            }
+        }
+        self.peak_lr * mult
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_scaling_with_cap() {
+        let s = LrSchedule::new(0.0125, 16, 64.0, 0, vec![]);
+        assert!((s.peak_lr() - 0.2).abs() < 1e-12);
+        let s = LrSchedule::new(0.0125, 128, 64.0, 0, vec![]);
+        assert!((s.peak_lr() - 0.8).abs() < 1e-12, "capped at 64x");
+    }
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let s = LrSchedule::new(0.1, 4, 64.0, 5, vec![]);
+        let lr0 = s.lr_at(0);
+        let lr4 = s.lr_at(4);
+        assert!(lr0 > 0.1 && lr0 < s.peak_lr());
+        assert!((lr4 - s.peak_lr()).abs() < 1e-12);
+        // monotone during warmup
+        for e in 1..5 {
+            assert!(s.lr_at(e) > s.lr_at(e - 1));
+        }
+    }
+
+    #[test]
+    fn paper_decay_schedule() {
+        let s = LrSchedule::new(0.0125, 16, 64.0, 5,
+                                vec![(21, 0.5), (26, 0.05), (28, 0.01)]);
+        let peak = s.peak_lr();
+        assert!((s.lr_at(10) - peak).abs() < 1e-12);
+        assert!((s.lr_at(21) - peak * 0.5).abs() < 1e-12);
+        assert!((s.lr_at(25) - peak * 0.5).abs() < 1e-12);
+        assert!((s.lr_at(26) - peak * 0.05).abs() < 1e-12);
+        assert!((s.lr_at(29) - peak * 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_decay_points_are_sorted() {
+        let s = LrSchedule::new(1.0, 1, 64.0, 0, vec![(8, 0.05), (6, 0.5)]);
+        assert!((s.lr_at(7) - 0.5).abs() < 1e-12);
+        assert!((s.lr_at(8) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_warmup_starts_at_peak() {
+        let s = LrSchedule::new(0.5, 2, 64.0, 0, vec![]);
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,267 @@
+//! Iteration / epoch / run projections.
+
+use std::time::Duration;
+
+use crate::cluster::ring_allreduce_cost;
+use crate::config::Strategy;
+use crate::net::CostModel;
+
+use super::constants::{ModelClass, PerfConstants};
+
+/// One projected training iteration at scale N (per-worker view, ms).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationProjection {
+    pub load_ms: f64,
+    pub train_ms: f64,
+    /// Exposed (non-overlapped) all-reduce time, included in `train_ms`
+    /// (the paper's Train bar includes Horovod's reduction stalls).
+    pub allreduce_exposed_ms: f64,
+    pub populate_ms: f64,
+    pub augment_ms: f64,
+    /// Foreground critical path (what the training loop experiences).
+    pub foreground_ms: f64,
+    /// Background buffer management (hidden when < foreground).
+    pub background_ms: f64,
+}
+
+impl IterationProjection {
+    pub fn fully_overlapped(&self) -> bool {
+        self.background_ms <= self.foreground_ms
+    }
+
+    /// Effective iteration wall time under the async engine: background
+    /// spills into the critical path only when it exceeds the foreground.
+    pub fn iter_ms_async(&self) -> f64 {
+        self.foreground_ms.max(self.background_ms)
+    }
+
+    /// Blocking ablation: everything serialises.
+    pub fn iter_ms_blocking(&self) -> f64 {
+        self.foreground_ms + self.background_ms
+    }
+}
+
+/// Whole-run projection.
+#[derive(Clone, Copy, Debug)]
+pub struct RunProjection {
+    pub total: Duration,
+    pub per_epoch_first_task: Duration,
+    pub iterations: usize,
+}
+
+pub struct PerfModel {
+    pub cost: CostModel,
+    pub consts: PerfConstants,
+}
+
+impl PerfModel {
+    pub fn new(cost: CostModel, consts: PerfConstants) -> PerfModel {
+        PerfModel { cost, consts }
+    }
+
+    /// Project one rehearsal iteration for `model` at scale `n`:
+    /// mini-batch `b`, `r` representatives, `c` candidates.
+    pub fn iteration(&self, model: ModelClass, n: usize, b: usize, r: usize,
+                     c: usize) -> IterationProjection {
+        let k = &self.consts;
+        let rows = b + r;
+
+        // Foreground: prefetched load + compute + exposed all-reduce.
+        let load_ms = b as f64 * k.load_us_per_image / 1e3;
+        let compute_ms = rows as f64 / model.a100_img_per_sec() * 1e3;
+        let ar = ring_allreduce_cost(&self.cost, n, model.grad_bytes());
+        let allreduce_exposed_ms =
+            ar.as_secs_f64() * 1e3 * (1.0 - k.allreduce_overlap);
+        let train_ms = compute_ms + allreduce_exposed_ms;
+        let foreground_ms = load_ms + train_ms;
+
+        // Background populate: c candidate copies into B_n.
+        let copy_ms_per_sample = k.sample_bytes as f64
+            / (k.host_memcpy_gibps * 1024.0 * 1024.0 * 1024.0)
+            * 1e3;
+        let populate_ms =
+            c as f64 * (copy_ms_per_sample + k.op_overhead_us / 1e3);
+
+        // Background augment: metadata gather (N-1 small RPCs, pipelined →
+        // one latency + per-peer service), then consolidated bulk fetches.
+        // Expected remote picks: r * (N-1)/N, spread over at most
+        // min(r, N-1) peers.
+        let meta_ms = if n > 1 {
+            (self.cost.latency_us * 1e-3)
+                + (n - 1) as f64 * k.op_overhead_us / 1e3
+        } else {
+            0.0
+        };
+        let remote_frac = if n > 1 { (n - 1) as f64 / n as f64 } else { 0.0 };
+        let remote_picks = r as f64 * remote_frac;
+        let peers = (r.min(n.saturating_sub(1))).max(1) as f64;
+        let bulk_bytes = remote_picks * k.sample_bytes as f64;
+        // Concurrent asynchronous RPCs (paper: progressive assembly): the
+        // peers' transfers overlap; cost ≈ one latency per peer batch issued
+        // serially on the NIC + payload serialisation.
+        let fetch_ms = if n > 1 && remote_picks > 0.0 {
+            peers * self.cost.latency_us * 1e-3
+                + bulk_bytes
+                    / (self.cost.bandwidth_gibps * 1024.0 * 1024.0 * 1024.0)
+                    * 1e3
+        } else {
+            0.0
+        };
+        let assemble_ms = r as f64 * (copy_ms_per_sample + k.op_overhead_us / 1e3);
+        let augment_ms = meta_ms + fetch_ms + assemble_ms;
+
+        IterationProjection {
+            load_ms,
+            train_ms,
+            allreduce_exposed_ms,
+            populate_ms,
+            augment_ms,
+            foreground_ms,
+            background_ms: populate_ms + augment_ms,
+        }
+    }
+
+    /// Project a full CL run. `samples_per_task` is the training-pool size
+    /// of ONE task; from-scratch accumulates tasks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(&self, model: ModelClass, strategy: Strategy, n: usize,
+               b: usize, r: usize, c: usize, tasks: usize,
+               epochs_per_task: usize, samples_per_task: usize,
+               async_updates: bool) -> RunProjection {
+        let it = self.iteration(model, n, b, r, c);
+        let iter_ms = match strategy {
+            Strategy::Rehearsal => {
+                if async_updates {
+                    it.iter_ms_async()
+                } else {
+                    it.iter_ms_blocking()
+                }
+            }
+            // Baselines train on plain b-row batches, no buffer work.
+            _ => {
+                let plain = self.iteration(model, n, b, 0, 0);
+                plain.load_ms + plain.train_ms
+                    - (b + 0) as f64 * 0.0 // explicit: foreground only
+            }
+        };
+
+        let mut total_ms = 0.0;
+        let mut first_epoch_ms = 0.0;
+        let mut iterations = 0usize;
+        for t in 0..tasks {
+            let pool = match strategy {
+                Strategy::FromScratch => samples_per_task * (t + 1),
+                _ => samples_per_task,
+            };
+            let iters_per_epoch = pool / (b * n);
+            let epoch_ms = iters_per_epoch as f64 * iter_ms;
+            if t == 0 {
+                first_epoch_ms = epoch_ms;
+            }
+            total_ms += epoch_ms * epochs_per_task as f64;
+            iterations += iters_per_epoch * epochs_per_task;
+        }
+        RunProjection {
+            total: Duration::from_secs_f64(total_ms / 1e3),
+            per_epoch_first_task: Duration::from_secs_f64(first_epoch_ms / 1e3),
+            iterations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PerfModel {
+        PerfModel::new(CostModel::default(), PerfConstants::default())
+    }
+
+    #[test]
+    fn paper_configuration_fully_overlaps() {
+        // The Fig. 6 claim: background < foreground for every model at every
+        // scale the paper ran (8..128 GPUs), b=56, r=7, c=14.
+        let pm = model();
+        for mc in [ModelClass::ResNet50, ModelClass::ResNet18, ModelClass::GhostNet50] {
+            for n in [8, 16, 32, 64, 128] {
+                let it = pm.iteration(mc, n, 56, 7, 14);
+                assert!(it.fully_overlapped(),
+                        "{mc:?} at N={n}: bg {} vs fg {}",
+                        it.background_ms, it.foreground_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn train_time_grows_with_scale_for_cheap_models() {
+        // §VI-E observation: ResNet-18's Train grows with N because the
+        // all-reduce starts to stall the cheap compute.
+        let pm = model();
+        let t8 = pm.iteration(ModelClass::ResNet18, 8, 56, 7, 14).train_ms;
+        let t128 = pm.iteration(ModelClass::ResNet18, 128, 56, 7, 14).train_ms;
+        assert!(t128 > t8, "{t8} !< {t128}");
+    }
+
+    #[test]
+    fn rehearsal_overhead_is_r_over_b() {
+        // §IV-D: with full overlap the only slowdown vs incremental is the
+        // r/b larger batch.
+        let pm = model();
+        let reh = pm.run(ModelClass::ResNet50, Strategy::Rehearsal, 16,
+                         56, 7, 14, 4, 30, 312_000, true);
+        let inc = pm.run(ModelClass::ResNet50, Strategy::Incremental, 16,
+                         56, 7, 14, 4, 30, 312_000, true);
+        let ratio = reh.total.as_secs_f64() / inc.total.as_secs_f64();
+        // compute grows by 7/56 = 12.5%; load stays: ratio in (1.0, 1.125]
+        assert!(ratio > 1.0 && ratio < 1.13, "ratio {ratio}");
+    }
+
+    #[test]
+    fn from_scratch_grows_quadratically() {
+        let pm = model();
+        let s = pm.run(ModelClass::ResNet50, Strategy::FromScratch, 16,
+                       56, 7, 14, 4, 30, 312_000, true);
+        let i = pm.run(ModelClass::ResNet50, Strategy::Incremental, 16,
+                       56, 7, 14, 4, 30, 312_000, true);
+        // Σ(t+1) for 4 tasks = 10 epochs-worth vs 4 → ratio = 2.5
+        let ratio = s.total.as_secs_f64() / i.total.as_secs_f64();
+        assert!((ratio - 2.5).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn runtime_decreases_with_workers() {
+        let pm = model();
+        let mut prev = f64::INFINITY;
+        for n in [8, 16, 32, 64] {
+            let p = pm.run(ModelClass::ResNet50, Strategy::Rehearsal, n,
+                           56, 7, 14, 4, 30, 312_000, true);
+            let t = p.total.as_secs_f64();
+            assert!(t < prev, "N={n}: {t} !< {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn gap_to_incremental_does_not_grow_with_scale() {
+        // Fig. 7b observation: rehearsal/incremental gap shrinks (or stays
+        // flat) with N.
+        let pm = model();
+        let gap = |n: usize| {
+            let reh = pm.run(ModelClass::ResNet50, Strategy::Rehearsal, n,
+                             56, 7, 14, 4, 30, 312_000, true);
+            let inc = pm.run(ModelClass::ResNet50, Strategy::Incremental, n,
+                             56, 7, 14, 4, 30, 312_000, true);
+            reh.total.as_secs_f64() - inc.total.as_secs_f64()
+        };
+        assert!(gap(128) <= gap(8) + 1e-9);
+    }
+
+    #[test]
+    fn async_never_slower_than_blocking() {
+        let pm = model();
+        for n in [1, 8, 64] {
+            let it = pm.iteration(ModelClass::GhostNet50, n, 56, 7, 14);
+            assert!(it.iter_ms_async() <= it.iter_ms_blocking());
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Artifact manifest — the contract emitted by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::json::Json;
+
+/// One parameter tensor's name and shape (manifest order = wire order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-variant metadata.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub label: String,
+    pub hidden: Vec<usize>,
+    pub base_lr: f64,
+    pub weight_decay: f64,
+    pub momentum: f64,
+    pub num_params: usize,
+    pub flops_per_step_b1: u64,
+    pub params: Vec<ParamSpec>,
+    pub init_file: String,
+    pub train_file: String,
+    /// r → augmented-train artifact file.
+    pub train_aug_files: BTreeMap<usize, String>,
+    pub update_file: String,
+    pub eval_file: String,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub reps_list: Vec<usize>,
+    pub eval_batch: usize,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)
+            .with_context(|| "did you run `make artifacts`?")?;
+        let version = j.get("version")?.as_i64()?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.get("variants")?.as_object()? {
+            variants.insert(name.clone(), parse_variant(name, v)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            input_dim: j.get("input_dim")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            reps_list: j
+                .get("reps_list")?
+                .as_array()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant `{name}` not in manifest (have: {:?})",
+                                   self.variants.keys().collect::<Vec<_>>()))
+    }
+
+    /// Read a variant's initial parameters from its flat f32 init file.
+    pub fn read_init_params(&self, v: &VariantMeta) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&v.init_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() != v.num_params * 4 {
+            bail!("init file {} has {} bytes, manifest wants {}",
+                  v.init_file, bytes.len(), v.num_params * 4);
+        }
+        let mut out = Vec::with_capacity(v.params.len());
+        let mut off = 0usize;
+        for p in &v.params {
+            let n = p.numel();
+            let mut t = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(t);
+        }
+        debug_assert_eq!(off, v.num_params);
+        Ok(out)
+    }
+}
+
+fn parse_variant(name: &str, v: &Json) -> Result<VariantMeta> {
+    let arts = v.get("artifacts")?;
+    let mut train_aug_files = BTreeMap::new();
+    for (r, f) in arts.get("train_aug")?.as_object()? {
+        train_aug_files.insert(r.parse::<usize>()?, f.as_str()?.to_string());
+    }
+    Ok(VariantMeta {
+        name: name.to_string(),
+        label: v.get("label")?.as_str()?.to_string(),
+        hidden: v
+            .get("hidden")?
+            .as_array()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<_>>()?,
+        base_lr: v.get("base_lr")?.as_f64()?,
+        weight_decay: v.get("weight_decay")?.as_f64()?,
+        momentum: v.get("momentum")?.as_f64()?,
+        num_params: v.get("num_params")?.as_usize()?,
+        flops_per_step_b1: v.get("flops_per_step_b1")?.as_i64()? as u64,
+        params: v
+            .get("params")?
+            .as_array()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_array()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?,
+        init_file: v.get("init_file")?.as_str()?.to_string(),
+        train_file: arts.get("train")?.as_str()?.to_string(),
+        train_aug_files,
+        update_file: arts.get("update")?.as_str()?.to_string(),
+        eval_file: arts.get("eval")?.as_str()?.to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manifest tests run against the real artifacts when present (CI runs
+    /// `make artifacts` first); otherwise they are skipped.
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::testkit::artifacts_dir()?;
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.input_dim, 3072);
+        assert!(m.batch > 0 && m.eval_batch > 0);
+        assert!(!m.variants.is_empty());
+        for v in m.variants.values() {
+            assert_eq!(v.num_params,
+                       v.params.iter().map(ParamSpec::numel).sum::<usize>());
+            assert!(!v.train_aug_files.is_empty());
+        }
+    }
+
+    #[test]
+    fn init_params_match_shapes() {
+        let Some(m) = manifest() else { return };
+        let v = m.variants.values().next().unwrap();
+        let params = m.read_init_params(v).unwrap();
+        assert_eq!(params.len(), v.params.len());
+        for (t, spec) in params.iter().zip(&v.params) {
+            assert_eq!(t.len(), spec.numel());
+        }
+        // weights are He-init (non-zero), biases zero
+        assert!(params[0].iter().any(|&x| x != 0.0));
+        assert!(params[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let Some(m) = manifest() else { return };
+        assert!(m.variant("nope").is_err());
+    }
+}

@@ -1,0 +1,277 @@
+//! The PJRT executor: compiled train/eval/update steps for one model
+//! variant, plus parameter-state plumbing.
+//!
+//! One `ModelExecutor` holds one compiled executable per artifact (compile
+//! happens once at startup; the request path only executes). Parameters and
+//! momenta live as XLA `Literal`s in manifest order; gradients come back the
+//! same way, are ring-averaged by [`crate::cluster`], and flow into the
+//! compiled fused-SGD update.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::tensor::Batch;
+
+use super::artifact::{Manifest, VariantMeta};
+
+/// Result of one train step (before all-reduce).
+pub struct StepOutput {
+    pub loss: f32,
+    pub top1: f32,
+    pub top5: f32,
+    pub grads: Vec<Literal>,
+}
+
+/// Execution counters (nanoseconds / counts) for the Fig. 6 "Train" bar and
+/// the perfmodel calibration.
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    pub train_steps: AtomicU64,
+    pub train_ns: AtomicU64,
+    pub update_steps: AtomicU64,
+    pub update_ns: AtomicU64,
+    pub eval_steps: AtomicU64,
+    pub eval_ns: AtomicU64,
+}
+
+impl ExecStats {
+    /// Mean train-step time in milliseconds.
+    pub fn train_step_ms(&self) -> f64 {
+        let n = self.train_steps.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.train_ns.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+
+    /// Mean optimizer-step time in milliseconds.
+    pub fn update_step_ms(&self) -> f64 {
+        let n = self.update_steps.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.update_ns.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+        }
+    }
+}
+
+pub struct ModelExecutor {
+    client: PjRtClient,
+    pub meta: VariantMeta,
+    pub input_dim: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    train: PjRtLoadedExecutable,
+    train_aug: BTreeMap<usize, PjRtLoadedExecutable>,
+    update: PjRtLoadedExecutable,
+    eval: PjRtLoadedExecutable,
+    init_params: Vec<Vec<f32>>,
+    pub stats: ExecStats,
+}
+
+fn compile(client: &PjRtClient, dir: &Path, file: &str) -> Result<PjRtLoadedExecutable> {
+    let path = dir.join(file);
+    let proto = HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)?;
+    let comp = XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+impl ModelExecutor {
+    /// Compile all artifacts of `variant`. `reps` lists the r values whose
+    /// augmented step will be used (must be lowered in the manifest).
+    pub fn new(manifest: &Manifest, variant: &str, reps: &[usize]) -> Result<ModelExecutor> {
+        let meta = manifest.variant(variant)?.clone();
+        let client = PjRtClient::cpu()?;
+        let dir = &manifest.dir;
+        let train = compile(&client, dir, &meta.train_file)?;
+        let mut train_aug = BTreeMap::new();
+        for &r in reps {
+            let file = meta.train_aug_files.get(&r).ok_or_else(|| {
+                anyhow!("no train_aug artifact for r={r} (have {:?}); \
+                         re-run aot.py with --reps-list",
+                        meta.train_aug_files.keys().collect::<Vec<_>>())
+            })?;
+            train_aug.insert(r, compile(&client, dir, file)?);
+        }
+        let update = compile(&client, dir, &meta.update_file)?;
+        let eval = compile(&client, dir, &meta.eval_file)?;
+        let init_params = manifest.read_init_params(&meta)?;
+        Ok(ModelExecutor {
+            client,
+            meta,
+            input_dim: manifest.input_dim,
+            batch: manifest.batch,
+            eval_batch: manifest.eval_batch,
+            train,
+            train_aug,
+            update,
+            eval,
+            init_params,
+            stats: ExecStats::default(),
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Fresh (params, momenta) state in manifest order.
+    pub fn init_state(&self) -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let mut params = Vec::with_capacity(self.meta.params.len());
+        let mut moms = Vec::with_capacity(self.meta.params.len());
+        for (values, spec) in self.init_params.iter().zip(&self.meta.params) {
+            params.push(make_literal(values, &spec.shape)?);
+            moms.push(make_literal(&vec![0.0; spec.numel()], &spec.shape)?);
+        }
+        Ok((params, moms))
+    }
+
+    fn batch_literals(&self, batch: &Batch, rows: usize) -> Result<(Literal, Literal)> {
+        if batch.len() != rows {
+            bail!("batch has {} rows, artifact wants {rows}", batch.len());
+        }
+        let (xs, ys) = batch.flatten();
+        if xs.len() != rows * self.input_dim {
+            bail!("batch features {} != {rows}x{}", xs.len(), self.input_dim);
+        }
+        let x = Literal::vec1(&xs).reshape(&[rows as i64, self.input_dim as i64])?;
+        let y = Literal::vec1(&ys);
+        Ok((x, y))
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&Literal]) -> Result<Vec<Literal>> {
+        // NOT `exe.execute(...)`: the crate's C++ glue for `execute` leaks
+        // every input device buffer (`buffer.release()` with no matching
+        // free), ~70 MB per resnet50_sim train step — found via the RSS
+        // regression test below. Uploading through `buffer_from_host_literal`
+        // gives us owned `PjRtBuffer`s whose Drop frees them, and `execute_b`
+        // borrows without taking ownership.
+        let mut input_buffers = Vec::with_capacity(args.len());
+        for lit in args {
+            input_buffers.push(self.client.buffer_from_host_literal(None, lit)?);
+        }
+        let result = exe.execute_b::<&xla::PjRtBuffer>(
+            &input_buffers.iter().collect::<Vec<_>>())?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    fn step_output(&self, mut out: Vec<Literal>) -> Result<StepOutput> {
+        if out.len() != 3 + self.meta.params.len() {
+            bail!("train step returned {} outputs, want {}",
+                  out.len(), 3 + self.meta.params.len());
+        }
+        let grads = out.split_off(3);
+        Ok(StepOutput {
+            loss: out[0].get_first_element::<f32>()?,
+            top1: out[1].get_first_element::<f32>()?,
+            top5: out[2].get_first_element::<f32>()?,
+            grads,
+        })
+    }
+
+    /// Plain step over a size-b batch (baselines / warm-up iterations).
+    pub fn train_step(&self, params: &[Literal], batch: &Batch) -> Result<StepOutput> {
+        let (x, y) = self.batch_literals(batch, self.batch)?;
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&x);
+        args.push(&y);
+        let t0 = Instant::now();
+        let out = self.run(&self.train, &args)?;
+        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        self.step_output(out)
+    }
+
+    /// Rehearsal step: b-batch + r representatives, assembled on-device by
+    /// the Pallas concat kernel inside the artifact.
+    pub fn train_step_aug(&self, params: &[Literal], batch: &Batch,
+                          reps: &Batch) -> Result<StepOutput> {
+        let r = reps.len();
+        let exe = self.train_aug.get(&r).ok_or_else(|| {
+            anyhow!("no compiled augmented step for r={r}")
+        })?;
+        let (xb, yb) = self.batch_literals(batch, self.batch)?;
+        let (xr_v, yr_v) = reps.flatten();
+        let xr = Literal::vec1(&xr_v).reshape(&[r as i64, self.input_dim as i64])?;
+        let yr = Literal::vec1(&yr_v);
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&xb);
+        args.push(&yb);
+        args.push(&xr);
+        args.push(&yr);
+        let t0 = Instant::now();
+        let out = self.run(exe, &args)?;
+        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        self.step_output(out)
+    }
+
+    /// Fused SGD update: consumes (params, moms, averaged grads, lr) and
+    /// returns the new (params, moms).
+    pub fn apply_update(&self, params: Vec<Literal>, moms: Vec<Literal>,
+                        grads: &[Literal], lr: f64)
+                        -> Result<(Vec<Literal>, Vec<Literal>)> {
+        let p = self.meta.params.len();
+        if grads.len() != p {
+            bail!("update got {} grads, want {p}", grads.len());
+        }
+        let lr_lit = Literal::vec1(&[lr as f32]);
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * p + 1);
+        args.extend(params.iter());
+        args.extend(moms.iter());
+        args.extend(grads.iter());
+        args.push(&lr_lit);
+        let t0 = Instant::now();
+        let mut out = self.run(&self.update, &args)?;
+        self.stats.update_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.update_steps.fetch_add(1, Ordering::Relaxed);
+        if out.len() != 2 * p {
+            bail!("update returned {} outputs, want {}", out.len(), 2 * p);
+        }
+        let new_moms = out.split_off(p);
+        Ok((out, new_moms))
+    }
+
+    /// Eval over one eval-batch: (loss_sum, top1_count, top5_count).
+    pub fn eval_step(&self, params: &[Literal], batch: &Batch) -> Result<(f32, f32, f32)> {
+        let (x, y) = self.batch_literals(batch, self.eval_batch)?;
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&x);
+        args.push(&y);
+        let t0 = Instant::now();
+        let out = self.run(&self.eval, &args)?;
+        self.stats.eval_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.eval_steps.fetch_add(1, Ordering::Relaxed);
+        if out.len() != 3 {
+            bail!("eval returned {} outputs, want 3", out.len());
+        }
+        Ok((
+            out[0].get_first_element::<f32>()?,
+            out[1].get_first_element::<f32>()?,
+            out[2].get_first_element::<f32>()?,
+        ))
+    }
+}
+
+/// Build a Literal of `shape` from f32 values.
+pub fn make_literal(values: &[f32], shape: &[usize]) -> Result<Literal> {
+    let lit = Literal::vec1(values);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Flatten a Literal back to f32 (all-reduce path, tests).
+pub fn literal_to_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

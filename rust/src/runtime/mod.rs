@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! them on the CPU PJRT client — the only place compute happens at training
+//! time. Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → compile → execute.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Manifest, VariantMeta};
+pub use executor::{ModelExecutor, StepOutput};

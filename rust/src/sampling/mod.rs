@@ -1,0 +1,13 @@
+//! Unbiased global sampling of representatives (paper §IV-C).
+//!
+//! Every worker must draw `r` representatives *uniformly over the whole
+//! distributed buffer* `B = ⊔ B_n` — not just its local shard — or the
+//! augmentations inherit the same bias data-parallel sharding has. The
+//! planner turns a metadata snapshot (per-node per-class resident counts)
+//! into a [`SamplingPlan`]: `r` distinct global picks, grouped (consolidated)
+//! into at most one bulk request per peer. Consolidation is the paper's RPC
+//! optimisation: `r` row reads cost ≤ N−1 wire round-trips, not `r`.
+
+pub mod plan;
+
+pub use plan::{GlobalSampler, SamplingPlan};

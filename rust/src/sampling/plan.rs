@@ -1,0 +1,252 @@
+//! Sampling-plan construction and execution.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::buffer::local::flat_to_picks;
+use crate::config::SamplingScope;
+use crate::net::Fabric;
+use crate::tensor::Sample;
+use crate::util::rng::Rng;
+
+/// A consolidated plan: for each target worker, the rows to bulk-fetch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SamplingPlan {
+    /// `requests[k] = (target_worker, picks)`; at most one entry per worker.
+    pub requests: Vec<(usize, Vec<(u32, usize)>)>,
+    /// Total picks across requests (= r unless the buffer is still small).
+    pub total: usize,
+}
+
+impl SamplingPlan {
+    /// Number of *remote* bulk RPCs this plan will issue for `requester`.
+    pub fn remote_rpcs(&self, requester: usize) -> usize {
+        self.requests.iter().filter(|(t, _)| *t != requester).count()
+    }
+}
+
+/// Plans and executes global draws for one worker.
+pub struct GlobalSampler {
+    pub worker: usize,
+    pub scope: SamplingScope,
+}
+
+impl GlobalSampler {
+    pub fn new(worker: usize, scope: SamplingScope) -> GlobalSampler {
+        GlobalSampler { worker, scope }
+    }
+
+    /// Build a plan drawing `r` representatives without replacement,
+    /// uniformly over all residents visible in `counts` (indexed by worker).
+    /// Draws fewer when the global buffer holds fewer than `r`.
+    pub fn plan(&self, counts: &[Vec<(u32, usize)>], r: usize,
+                rng: &mut Rng) -> SamplingPlan {
+        // Restrict to the local node under the local-only ablation.
+        let visible: Vec<(usize, &[(u32, usize)])> = match self.scope {
+            SamplingScope::Global => counts
+                .iter()
+                .enumerate()
+                .map(|(w, c)| (w, c.as_slice()))
+                .collect(),
+            SamplingScope::LocalOnly => {
+                vec![(self.worker, counts[self.worker].as_slice())]
+            }
+        };
+
+        // Node boundaries over the flattened global index space.
+        let mut node_totals = Vec::with_capacity(visible.len());
+        let mut total = 0usize;
+        for (_, c) in &visible {
+            let n: usize = c.iter().map(|&(_, k)| k).sum();
+            node_totals.push(n);
+            total += n;
+        }
+        let take = r.min(total);
+        if take == 0 {
+            return SamplingPlan::default();
+        }
+
+        // r distinct flat indices over [0, total): a single uniform draw
+        // whose per-node counts are exactly multivariate-hypergeometric —
+        // i.e. every resident representative is equally likely regardless
+        // of location (the paper's fairness requirement).
+        let flat = rng.sample_without_replacement(total, take);
+
+        // Split per node, then map to (class, idx) picks within the node.
+        let mut per_node: Vec<Vec<usize>> = vec![Vec::new(); visible.len()];
+        for f in flat {
+            let mut rem = f;
+            for (ni, &nt) in node_totals.iter().enumerate() {
+                if rem < nt {
+                    per_node[ni].push(rem);
+                    break;
+                }
+                rem -= nt;
+            }
+        }
+
+        let mut requests = Vec::new();
+        for (ni, flats) in per_node.into_iter().enumerate() {
+            if flats.is_empty() {
+                continue;
+            }
+            let (worker, counts) = visible[ni];
+            let picks = flat_to_picks(counts, &flats);
+            requests.push((worker, picks));
+        }
+        SamplingPlan { requests, total: take }
+    }
+
+    /// Execute a plan over the fabric: one bulk fetch per target (remote
+    /// fetches priced by the cost model). Returns the assembled
+    /// representatives and the accumulated virtual wire time.
+    pub fn execute(&self, fabric: &Fabric, plan: &SamplingPlan)
+                   -> Result<(Vec<Sample>, Duration)> {
+        let mut reps = Vec::with_capacity(plan.total);
+        let mut wire = Duration::ZERO;
+        for (target, picks) in &plan.requests {
+            let (rows, w) = fabric.fetch_bulk(self.worker, *target, picks)?;
+            reps.extend(rows);
+            wire += w;
+        }
+        Ok((reps, wire))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::LocalBuffer;
+    use crate::config::EvictionPolicy;
+    use crate::net::CostModel;
+    use crate::util::stats::chi_square_uniform;
+    use std::sync::Arc;
+
+    fn counts3() -> Vec<Vec<(u32, usize)>> {
+        vec![
+            vec![(0, 5), (1, 5)],  // worker 0: 10
+            vec![(0, 10)],         // worker 1: 10
+            vec![(2, 20)],         // worker 2: 20
+        ]
+    }
+
+    #[test]
+    fn plan_draws_exactly_r_distinct() {
+        let gs = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let plan = gs.plan(&counts3(), 7, &mut rng);
+            assert_eq!(plan.total, 7);
+            let n: usize = plan.requests.iter().map(|(_, p)| p.len()).sum();
+            assert_eq!(n, 7);
+            // picks within a request are distinct
+            for (_, picks) in &plan.requests {
+                let mut d = picks.clone();
+                d.sort_unstable();
+                d.dedup();
+                assert_eq!(d.len(), picks.len());
+            }
+            // at most one request per worker (consolidation)
+            let mut targets: Vec<usize> =
+                plan.requests.iter().map(|(t, _)| *t).collect();
+            targets.sort_unstable();
+            targets.dedup();
+            assert_eq!(targets.len(), plan.requests.len());
+        }
+    }
+
+    #[test]
+    fn plan_caps_at_buffer_population() {
+        let gs = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(2);
+        let tiny = vec![vec![(0u32, 2usize)], vec![]];
+        let plan = gs.plan(&tiny, 7, &mut rng);
+        assert_eq!(plan.total, 2);
+        let empty = gs.plan(&vec![vec![], vec![]], 7, &mut rng);
+        assert_eq!(empty.total, 0);
+        assert!(empty.requests.is_empty());
+    }
+
+    #[test]
+    fn local_scope_never_leaves_node() {
+        let gs = GlobalSampler::new(2, SamplingScope::LocalOnly);
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let plan = gs.plan(&counts3(), 7, &mut rng);
+            assert!(plan.requests.iter().all(|(t, _)| *t == 2));
+            assert_eq!(plan.remote_rpcs(2), 0);
+        }
+    }
+
+    #[test]
+    fn global_sampling_is_location_uniform() {
+        // Worker 2 holds half the residents → should receive ~half the picks.
+        let gs = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(4);
+        let mut per_worker = [0u64; 3];
+        let rounds = 4000;
+        for _ in 0..rounds {
+            let plan = gs.plan(&counts3(), 4, &mut rng);
+            for (t, picks) in &plan.requests {
+                per_worker[*t] += picks.len() as u64;
+            }
+        }
+        let total: u64 = per_worker.iter().sum();
+        assert_eq!(total, 4 * rounds);
+        let f2 = per_worker[2] as f64 / total as f64;
+        assert!((f2 - 0.5).abs() < 0.03, "worker2 fraction {f2}");
+        let f0 = per_worker[0] as f64 / total as f64;
+        assert!((f0 - 0.25).abs() < 0.03, "worker0 fraction {f0}");
+    }
+
+    #[test]
+    fn per_representative_uniformity_chi_square() {
+        // Flatten the global space to 16 residents; each should be picked
+        // equally often across many r=4 draws.
+        let counts = vec![vec![(0u32, 8usize)], vec![(1u32, 8usize)]];
+        let gs = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(5);
+        let mut hits = vec![0u64; 16];
+        let rounds = 8000;
+        for _ in 0..rounds {
+            let plan = gs.plan(&counts, 4, &mut rng);
+            for (t, picks) in &plan.requests {
+                for &(_, idx) in picks {
+                    hits[*t * 8 + idx] += 1;
+                }
+            }
+        }
+        // 15 dof; chi2 < 37 is far beyond the 0.999 quantile
+        let chi2 = chi_square_uniform(&hits);
+        assert!(chi2 < 60.0, "chi2 {chi2}, hits {hits:?}");
+    }
+
+    #[test]
+    fn execute_assembles_rows_and_counts_rpcs() {
+        let buffers: Vec<Arc<LocalBuffer>> = (0..3)
+            .map(|w| {
+                let b = LocalBuffer::new(50, EvictionPolicy::Random, w as u64);
+                for class in 0..2u32 {
+                    for i in 0..10 {
+                        b.insert(Sample::new(class, vec![w as f32, i as f32]));
+                    }
+                }
+                Arc::new(b)
+            })
+            .collect();
+        let fabric = Fabric::new(buffers, CostModel::default(), false);
+        let gs = GlobalSampler::new(0, SamplingScope::Global);
+        let mut rng = Rng::new(6);
+        let counts = fabric.gather_counts(0);
+        let plan = gs.plan(&counts, 7, &mut rng);
+        let (reps, wire) = gs.execute(&fabric, &plan).unwrap();
+        assert_eq!(reps.len(), 7);
+        let remote = plan.remote_rpcs(0);
+        assert_eq!(fabric.counters.rpcs.load(std::sync::atomic::Ordering::Relaxed),
+                   remote as u64);
+        if remote > 0 {
+            assert!(wire > Duration::ZERO);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Host-side tensors and training-sample records.
+//!
+//! The rehearsal buffer stores raw samples ("generic tensors", paper §VII) in
+//! host memory — pinned for RDMA in the original system, plain `Vec<f32>`
+//! slabs here. `Tensor` is deliberately minimal: shape-checked storage with
+//! the handful of ops the coordinator needs (the heavy math lives in the AOT
+//! artifacts executed by `runtime`).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2, "row() on rank-{} tensor", self.shape.len());
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Elementwise in-place: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// L2 norm (used by tests and gradient diagnostics).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+/// One training sample: a flattened image (or generic feature vector) plus
+/// its integer class label. This is the unit stored in rehearsal buffers and
+/// moved by the RPC fabric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub label: u32,
+    pub features: Vec<f32>,
+}
+
+impl Sample {
+    pub fn new(label: u32, features: Vec<f32>) -> Sample {
+        Sample { label, features }
+    }
+
+    /// Wire size in bytes when transferred by the RPC fabric (features +
+    /// label + length header) — used by the network cost model.
+    pub fn wire_bytes(&self) -> usize {
+        self.features.len() * 4 + 8
+    }
+}
+
+/// A mini-batch of samples with a fixed feature width; convertible to the
+/// flat buffers the PJRT executor feeds the AOT train step.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub samples: Vec<Sample>,
+}
+
+impl Batch {
+    pub fn new(samples: Vec<Sample>) -> Batch {
+        Batch { samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// (features row-major [n, d], labels [n]) — the executor input layout.
+    pub fn flatten(&self) -> (Vec<f32>, Vec<i32>) {
+        let d = self.samples.first().map_or(0, |s| s.features.len());
+        let mut xs = Vec::with_capacity(self.samples.len() * d);
+        let mut ys = Vec::with_capacity(self.samples.len());
+        for s in &self.samples {
+            debug_assert_eq!(s.features.len(), d, "ragged batch");
+            xs.extend_from_slice(&s.features);
+            ys.push(s.label as i32);
+        }
+        (xs, ys)
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        self.samples.iter().map(Sample::wire_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn from_vec_checks_length() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1., 2., 3.]).unwrap();
+        let b = Tensor::from_vec(&[3], vec![10., 10., 10.]).unwrap();
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[6., 7., 8.]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12., 14., 16.]);
+        let c = Tensor::zeros(&[4]);
+        assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn batch_flatten_layout() {
+        let b = Batch::new(vec![
+            Sample::new(3, vec![1., 2.]),
+            Sample::new(5, vec![3., 4.]),
+        ]);
+        let (xs, ys) = b.flatten();
+        assert_eq!(xs, vec![1., 2., 3., 4.]);
+        assert_eq!(ys, vec![3, 5]);
+        assert_eq!(b.wire_bytes(), 2 * (8 + 8));
+    }
+}

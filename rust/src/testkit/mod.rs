@@ -1,0 +1,38 @@
+//! Test support: artifact discovery and a small property-testing harness
+//! (the offline registry has no proptest; see DESIGN.md §2).
+
+pub mod prop;
+
+use std::path::PathBuf;
+
+/// Locate the AOT artifacts directory (tests are skipped when absent so
+/// `cargo test` works before `make artifacts`; CI runs artifacts first).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("DCL_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from("../artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    candidates.into_iter().find(|p| p.join("manifest.json").exists())
+}
+
+/// The tiny-geometry artifacts (K=8, b=8, r=2) used by fast integration
+/// tests; produced by `make artifacts` alongside the default set.
+pub fn tiny_artifacts_dir() -> Option<PathBuf> {
+    artifacts_dir().map(|p| p.join("tiny")).filter(|p| p.join("manifest.json").exists())
+}
+
+/// The `tiny` experiment preset wired to the tiny artifacts (None when
+/// `make artifacts` has not run).
+pub fn tiny_config() -> Option<crate::config::ExperimentConfig> {
+    let dir = tiny_artifacts_dir()?;
+    let mut cfg = crate::config::preset("tiny").expect("tiny preset");
+    cfg.artifacts_dir = dir;
+    Some(cfg)
+}

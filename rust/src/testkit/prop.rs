@@ -1,0 +1,87 @@
+//! Minimal property-testing harness.
+//!
+//! `forall(cases, |rng| { ... })` runs the closure `cases` times with
+//! independent seeded RNGs; a panic or `Err` is reported with the failing
+//! case's seed so it can be replayed exactly with
+//! `DCL_PROP_SEED=<seed> cargo test <name>`. No shrinking — cases are kept
+//! small instead.
+
+use crate::util::rng::Rng;
+
+/// Base seed: `DCL_PROP_SEED` env var or a fixed default (deterministic CI).
+pub fn base_seed() -> u64 {
+    std::env::var("DCL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDC1_2024)
+}
+
+/// Run `f` for `cases` independent random cases.
+pub fn forall<F>(cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property failed on case {case} (DCL_PROP_SEED={seed}): {msg}"
+            ),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property panicked on case {case} (DCL_PROP_SEED={seed}): {msg}");
+            }
+        }
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(50, |rng| {
+            let n = usize_in(rng, 1, 100);
+            if n >= 1 && n <= 100 { Ok(()) } else { Err(format!("{n}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_seed() {
+        forall(10, |rng| {
+            if rng.below(3) == 2 { Err("boom".into()) } else { Ok(()) }
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut seq1 = Vec::new();
+        forall(5, |rng| {
+            seq1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut seq2 = Vec::new();
+        forall(5, |rng| {
+            seq2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seq1, seq2);
+    }
+}

@@ -1,0 +1,61 @@
+//! Validation evaluation (paper Eq. 1).
+//!
+//! `a_{T,j}` — top-5 accuracy on task `j`'s validation classes using the
+//! current model — is measured per task, then averaged over all tasks seen
+//! so far: `accuracy_T = (1/T) Σ_j a_{T,j}`.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::data::{Dataset, TaskSequence};
+use crate::metrics::report::EvalRecord;
+use crate::runtime::ModelExecutor;
+use crate::tensor::Batch;
+
+pub struct Evaluator<'a> {
+    exec: &'a ModelExecutor,
+    dataset: &'a Dataset,
+    tasks: &'a TaskSequence,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(exec: &'a ModelExecutor, dataset: &'a Dataset,
+               tasks: &'a TaskSequence) -> Evaluator<'a> {
+        Evaluator { exec, dataset, tasks }
+    }
+
+    /// Evaluate the model on the validation sets of tasks `0..=upto_task`.
+    pub fn eval_upto(&self, params: &[Literal], upto_task: usize) -> Result<EvalRecord> {
+        let eb = self.exec.eval_batch;
+        let mut per_task_top5 = Vec::with_capacity(upto_task + 1);
+        let mut per_task_top1 = Vec::with_capacity(upto_task + 1);
+        let mut loss_total = 0.0f64;
+        let mut n_total = 0usize;
+        for j in 0..=upto_task {
+            let samples = self.dataset.val_of_classes(self.tasks.classes(j));
+            if samples.is_empty() || samples.len() % eb != 0 {
+                bail!("task {j} val set of {} not a multiple of eval batch {eb}",
+                      samples.len());
+            }
+            let (mut t1, mut t5) = (0.0f64, 0.0f64);
+            for chunk in samples.chunks(eb) {
+                let batch = Batch::new(chunk.to_vec());
+                let (loss_sum, top1, top5) = self.exec.eval_step(params, &batch)?;
+                loss_total += loss_sum as f64;
+                t1 += top1 as f64;
+                t5 += top5 as f64;
+            }
+            n_total += samples.len();
+            per_task_top1.push(t1 / samples.len() as f64);
+            per_task_top5.push(t5 / samples.len() as f64);
+        }
+        let t = per_task_top5.len() as f64;
+        Ok(EvalRecord {
+            accuracy_t: per_task_top5.iter().sum::<f64>() / t,
+            top1_accuracy_t: per_task_top1.iter().sum::<f64>() / t,
+            per_task_top5,
+            per_task_top1,
+            val_loss: loss_total / n_total as f64,
+        })
+    }
+}

@@ -1,0 +1,9 @@
+//! Training drivers: the rehearsal CL trainer (the paper's Listing-1 loop
+//! wired to the async engine), the two baselines (§VI-D), and evaluation
+//! (Eq. 1).
+
+pub mod eval;
+pub mod trainer;
+
+pub use eval::Evaluator;
+pub use trainer::Trainer;

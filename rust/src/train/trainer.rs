@@ -1,0 +1,327 @@
+//! The continual-learning trainer: one entry point for all three strategies
+//! of the paper's evaluation (§VI-D).
+//!
+//! - **Rehearsal** — the contribution: per-worker async engines over the
+//!   distributed buffer; each iteration trains on `b + r` samples
+//!   (Listing 1), with buffer management overlapped per Fig. 4.
+//! - **Incremental** — plain data-parallel training on the current task
+//!   only (runtime lower bound, accuracy lower bound).
+//! - **FromScratch** — at each task boundary, re-initialise and train on
+//!   all accumulated tasks (accuracy upper bound, quadratic runtime).
+//!
+//! Data-parallel semantics: the N simulated workers run their shard's train
+//! step per global iteration (sequentially on this 1-core testbed — see
+//! DESIGN.md §1), gradients are averaged exactly by [`GradAccumulator`], a
+//! single parameter copy is updated via the compiled fused-SGD artifact, and
+//! the ring-all-reduce wire time is charged to the virtual clock.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::buffer::LocalBuffer;
+use crate::cluster::GradAccumulator;
+use crate::config::{ExperimentConfig, Strategy};
+use crate::data::{Dataset, Loader, ShardPlan, TaskSequence};
+use crate::engine::{EngineParams, RehearsalEngine};
+use crate::metrics::breakdown::WorkerBreakdown;
+use crate::metrics::report::{EpochRecord, RunReport};
+use crate::net::{CostModel, Fabric};
+use crate::optim::LrSchedule;
+use crate::runtime::ModelExecutor;
+
+use super::eval::Evaluator;
+
+pub struct Trainer<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub exec: &'a ModelExecutor,
+    pub dataset: &'a Dataset,
+    pub tasks: &'a TaskSequence,
+    /// Evaluate every `eval_every` epochs (always at task boundaries).
+    pub eval_every: usize,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(cfg: &'a ExperimentConfig, exec: &'a ModelExecutor,
+               dataset: &'a Dataset, tasks: &'a TaskSequence) -> Trainer<'a> {
+        Trainer { cfg, exec, dataset, tasks, eval_every: 1 }
+    }
+
+    fn schedule(&self) -> LrSchedule {
+        let base = self.cfg.training.base_lr.unwrap_or(self.exec.meta.base_lr);
+        LrSchedule::new(
+            base,
+            self.cfg.cluster.workers,
+            self.cfg.training.max_lr_scale,
+            self.cfg.training.warmup_epochs,
+            self.cfg.training.decay_points.clone(),
+        )
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::new(self.cfg.cluster.rpc_latency_us,
+                       self.cfg.cluster.bandwidth_gibps)
+    }
+
+    /// Run the configured strategy to completion.
+    pub fn run(&self) -> Result<RunReport> {
+        match self.cfg.training.strategy {
+            Strategy::Rehearsal => self.run_rehearsal(),
+            Strategy::Incremental => self.run_incremental(),
+            Strategy::FromScratch => self.run_from_scratch(),
+        }
+    }
+
+    // ---------------------------------------------------------------- rehearsal
+
+    fn run_rehearsal(&self) -> Result<RunReport> {
+        let cfg = self.cfg;
+        let n = cfg.cluster.workers;
+        let s_max = cfg.per_worker_capacity();
+        let buffers: Vec<Arc<LocalBuffer>> = (0..n)
+            .map(|w| Arc::new(LocalBuffer::new(
+                s_max, cfg.buffer.policy, cfg.training.seed ^ (w as u64) << 8)))
+            .collect();
+        let fabric = Arc::new(Fabric::new(
+            buffers, self.cost_model(), cfg.cluster.emulate_delays));
+        let params = EngineParams {
+            batch: cfg.training.batch,
+            reps: cfg.training.reps,
+            candidates: cfg.training.candidates,
+            scope: cfg.buffer.scope,
+            async_updates: cfg.buffer.async_updates,
+        };
+        let mut engines: Vec<RehearsalEngine> = (0..n)
+            .map(|w| RehearsalEngine::new(
+                w, Arc::clone(&fabric), params, cfg.training.seed ^ (w as u64) << 16))
+            .collect();
+
+        let report = self.drive(Some(&mut engines), |task| {
+            // rehearsal trains on the current task's data only; old tasks
+            // come back through the buffer.
+            self.dataset.train_indices_of_classes(self.tasks.classes(task))
+        }, false)?;
+
+        for e in &mut engines {
+            e.finish()?;
+        }
+        Ok(report)
+    }
+
+    // ---------------------------------------------------------------- baselines
+
+    fn run_incremental(&self) -> Result<RunReport> {
+        self.drive(None, |task| {
+            self.dataset.train_indices_of_classes(self.tasks.classes(task))
+        }, false)
+    }
+
+    fn run_from_scratch(&self) -> Result<RunReport> {
+        self.drive(None, |task| {
+            self.dataset
+                .train_indices_of_classes(&self.tasks.classes_up_to(task))
+        }, true)
+    }
+
+    // ---------------------------------------------------------------- core loop
+
+    /// Shared driver. `indices_for_task` picks the training pool per task;
+    /// `reset_each_task` re-initialises parameters at task boundaries
+    /// (from-scratch). `engines` enables rehearsal augmentation.
+    fn drive(&self,
+             mut engines: Option<&mut Vec<RehearsalEngine>>,
+             indices_for_task: impl Fn(usize) -> Vec<usize>,
+             reset_each_task: bool) -> Result<RunReport> {
+        let cfg = self.cfg;
+        let n = cfg.cluster.workers;
+        let b = cfg.training.batch;
+        let r = cfg.training.reps;
+        let schedule = self.schedule();
+        let cost = self.cost_model();
+        let evaluator = Evaluator::new(self.exec, self.dataset, self.tasks);
+
+        let (mut params, mut moms) = self.exec.init_state()?;
+        let shapes: Vec<Vec<usize>> =
+            self.exec.meta.params.iter().map(|p| p.shape.clone()).collect();
+        let mut acc = GradAccumulator::new(shapes.clone());
+        let allreduce_bytes = acc.payload_bytes();
+
+        let breakdown: Vec<WorkerBreakdown> =
+            (0..n).map(|_| WorkerBreakdown::default()).collect();
+        let mut epochs: Vec<EpochRecord> = Vec::new();
+        let mut global_epoch = 0usize;
+        let mut total_iterations = 0usize;
+        let run_t0 = Instant::now();
+
+        for task in 0..self.tasks.num_tasks() {
+            if reset_each_task {
+                let (p, m) = self.exec.init_state()?;
+                params = p;
+                moms = m;
+            }
+            let pool = indices_for_task(task);
+            if pool.len() < n * b {
+                bail!("task {task} pool of {} too small for {n} workers x batch {b}",
+                      pool.len());
+            }
+            for epoch_in_task in 0..cfg.training.epochs_per_task {
+                let lr = schedule.lr_at(epoch_in_task);
+                let epoch_t0 = Instant::now();
+                let plan = ShardPlan::new(
+                    pool.clone(), n, b,
+                    cfg.training.seed, task, global_epoch);
+                let mut loaders: Vec<Loader> = (0..n)
+                    .map(|w| {
+                        let batches: Vec<Vec<usize>> = (0..plan.iterations())
+                            .map(|i| plan.batch(w, i).to_vec())
+                            .collect();
+                        Loader::new(self.dataset.clone(), batches,
+                                    cfg.data.augment,
+                                    cfg.training.seed
+                                        ^ ((global_epoch as u64) << 20)
+                                        ^ (w as u64))
+                    })
+                    .collect();
+
+                let mut loss_sum = 0.0f64;
+                let mut top5_sum = 0.0f64;
+                let mut sample_count = 0.0f64;
+                for _iter in 0..plan.iterations() {
+                    for w in 0..n {
+                        // Load (prefetched; wait only).
+                        let t0 = Instant::now();
+                        let batch = loaders[w]
+                            .next_batch()
+                            .ok_or_else(|| anyhow::anyhow!("loader underrun"))?;
+                        breakdown[w].add_load(t0.elapsed());
+
+                        // Rehearsal: the Listing-1 update() primitive.
+                        let reps = match engines.as_mut() {
+                            Some(engs) => engs[w].update(&batch)?,
+                            None => Vec::new(),
+                        };
+
+                        // Train (PJRT).
+                        let augmented = reps.len() == r && engines.is_some();
+                        let t1 = Instant::now();
+                        let out = if augmented {
+                            let reps_batch = crate::tensor::Batch::new(reps);
+                            self.exec.train_step_aug(&params, &batch, &reps_batch)?
+                        } else {
+                            self.exec.train_step(&params, &batch)?
+                        };
+                        breakdown[w].add_train(t1.elapsed());
+                        breakdown[w].bump();
+
+                        let rows = if augmented { b + r } else { b } as f64;
+                        loss_sum += out.loss as f64 * rows;
+                        top5_sum += out.top5 as f64;
+                        sample_count += rows;
+                        acc.add(&out.grads)?;
+                    }
+                    // Synchronous data parallelism: average + fused update.
+                    let (mean_grads, _wire) = acc.reduce(&cost)?;
+                    let (p2, m2) = self.exec.apply_update(
+                        std::mem::take(&mut params),
+                        std::mem::take(&mut moms),
+                        &mean_grads, lr)?;
+                    params = p2;
+                    moms = m2;
+                    total_iterations += 1;
+                }
+                drop(loaders);
+
+                let is_task_end =
+                    epoch_in_task + 1 == cfg.training.epochs_per_task;
+                let eval = if is_task_end
+                    || (global_epoch + 1) % self.eval_every.max(1) == 0
+                {
+                    Some(evaluator.eval_upto(&params, task)?)
+                } else {
+                    None
+                };
+                epochs.push(EpochRecord {
+                    epoch: global_epoch,
+                    task,
+                    lr,
+                    train_loss: loss_sum / sample_count.max(1.0),
+                    train_top5: top5_sum / sample_count.max(1.0),
+                    wall: epoch_t0.elapsed(),
+                    virtual_time: None,
+                    eval,
+                });
+                global_epoch += 1;
+            }
+        }
+
+        // Aggregate breakdown across workers.
+        let mut fg = (0.0, 0.0, 0.0);
+        for wb in &breakdown {
+            let (l, t, _w) = wb.per_iteration_ms();
+            fg.0 += l;
+            fg.1 += t;
+        }
+        fg.0 /= n as f64;
+        fg.1 /= n as f64;
+        let mut bg = (0.0, 0.0, 0.0);
+        let mut wait_ms = 0.0;
+        if let Some(engs) = engines.as_ref() {
+            for e in engs.iter() {
+                let (w, p, a, wi) = e.timings.per_iteration_ms();
+                wait_ms += w;
+                bg.0 += p;
+                bg.1 += a;
+                bg.2 += wi;
+            }
+            wait_ms /= n as f64;
+            bg.0 /= n as f64;
+            bg.1 /= n as f64;
+            bg.2 /= n as f64;
+        }
+
+        let final_eval = epochs
+            .iter()
+            .rev()
+            .find_map(|e| e.eval.clone())
+            .ok_or_else(|| anyhow::anyhow!("no evaluation recorded"))?;
+
+        Ok(RunReport {
+            strategy: cfg.training.strategy.name().to_string(),
+            variant: cfg.training.variant.clone(),
+            workers: n,
+            buffer_percent: cfg.buffer.percent_of_dataset,
+            epochs,
+            final_accuracy_t: final_eval.accuracy_t,
+            final_top1_accuracy_t: final_eval.top1_accuracy_t,
+            total_wall: run_t0.elapsed(),
+            breakdown_ms: (fg.0, fg.1, wait_ms),
+            background_ms: bg,
+            train_step_ms: self.exec.stats.train_step_ms(),
+            allreduce_bytes,
+            iterations: total_iterations,
+        })
+    }
+}
+
+/// Convenience: build everything a run needs from a config, returning the
+/// report (used by the CLI, examples and integration tests).
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunReport> {
+    let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    if manifest.num_classes != cfg.data.num_classes {
+        bail!("artifacts lowered for K={} but config wants K={}; \
+               re-run `make artifacts` with --classes",
+              manifest.num_classes, cfg.data.num_classes);
+    }
+    if manifest.batch != cfg.training.batch {
+        bail!("artifacts lowered for b={} but config wants b={}",
+              manifest.batch, cfg.training.batch);
+    }
+    let exec = ModelExecutor::new(&manifest, &cfg.training.variant,
+                                  &[cfg.training.reps])?;
+    let dataset = Dataset::generate(&cfg.data);
+    let tasks = TaskSequence::new(cfg.data.num_classes, cfg.data.num_tasks,
+                                  cfg.data.seed);
+    let trainer = Trainer::new(cfg, &exec, &dataset, &tasks);
+    trainer.run()
+}

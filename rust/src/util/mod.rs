@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG, statistics, timers.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::{OnlineStats, Summary};
+pub use timer::ScopedTimer;

@@ -1,0 +1,69 @@
+//! Lightweight timing helpers for the breakdown metrics and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Measures wall time from construction until `stop()` (or drop) and adds it
+/// to an accumulator slot. Used by the engine to attribute time to the
+/// Load / Train / Populate / Augment categories of Fig. 6.
+pub struct ScopedTimer<'a> {
+    start: Instant,
+    sink: Option<&'a mut Duration>,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub fn new(sink: &'a mut Duration) -> Self {
+        ScopedTimer { start: Instant::now(), sink: Some(sink) }
+    }
+
+    /// Stop explicitly and return the elapsed duration.
+    pub fn stop(mut self) -> Duration {
+        let el = self.start.elapsed();
+        if let Some(s) = self.sink.take() {
+            *s += el;
+        }
+        el
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.sink.take() {
+            *s += self.start.elapsed();
+        }
+    }
+}
+
+/// Time a closure, returning (result, elapsed).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_timer_accumulates() {
+        let mut acc = Duration::ZERO;
+        {
+            let _t = ScopedTimer::new(&mut acc);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(acc >= Duration::from_millis(2));
+        let before = acc;
+        {
+            let _t = ScopedTimer::new(&mut acc);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(acc > before);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, el) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(el < Duration::from_secs(1));
+    }
+}

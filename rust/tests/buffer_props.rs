@@ -1,0 +1,178 @@
+//! Property tests on rehearsal-buffer invariants (DESIGN.md §5), via the
+//! in-repo `testkit::prop` harness.
+
+use dcl::buffer::{ClassBuffer, InsertOutcome, LocalBuffer};
+use dcl::config::EvictionPolicy;
+use dcl::tensor::Sample;
+use dcl::testkit::prop::{forall, usize_in};
+use dcl::util::rng::Rng;
+
+fn sample(class: u32, tag: f32) -> Sample {
+    Sample::new(class, vec![tag])
+}
+
+fn any_policy(rng: &mut Rng) -> EvictionPolicy {
+    match rng.below(3) {
+        0 => EvictionPolicy::Random,
+        1 => EvictionPolicy::Fifo,
+        _ => EvictionPolicy::Reservoir,
+    }
+}
+
+#[test]
+fn class_buffer_never_exceeds_capacity() {
+    forall(60, |rng| {
+        let cap = usize_in(rng, 0, 40);
+        let policy = any_policy(rng);
+        let inserts = usize_in(rng, 0, 300);
+        let mut cb = ClassBuffer::new(cap, policy);
+        let mut evict_rng = Rng::new(rng.next_u64());
+        for i in 0..inserts {
+            cb.insert(sample(0, i as f32), &mut evict_rng);
+            if cb.len() > cap {
+                return Err(format!("len {} > cap {cap} ({policy:?})", cb.len()));
+            }
+        }
+        if cb.seen() != inserts as u64 {
+            return Err("seen counter drift".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn class_buffer_fills_before_evicting() {
+    forall(40, |rng| {
+        let cap = usize_in(rng, 1, 30);
+        let policy = any_policy(rng);
+        let mut cb = ClassBuffer::new(cap, policy);
+        let mut evict_rng = Rng::new(rng.next_u64());
+        for i in 0..cap {
+            match cb.insert(sample(0, i as f32), &mut evict_rng) {
+                InsertOutcome::Appended => {}
+                o => return Err(format!("unexpected {o:?} before full")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn disjoint_union_invariant() {
+    // Σ_i |R_n^i| == |B_n| under arbitrary interleavings of inserts.
+    forall(40, |rng| {
+        let s_max = usize_in(rng, 1, 200);
+        let classes = usize_in(rng, 1, 12) as u32;
+        let buf = LocalBuffer::new(s_max, any_policy(rng), rng.next_u64());
+        let inserts = usize_in(rng, 0, 400);
+        for i in 0..inserts {
+            buf.insert(sample(rng.below(classes as usize) as u32, i as f32));
+        }
+        let total: usize = buf.snapshot_counts().iter().map(|&(_, n)| n).sum();
+        if total != buf.len() {
+            return Err(format!("Σ counts {total} != len {}", buf.len()));
+        }
+        if buf.len() > s_max {
+            return Err(format!("len {} > S_max {s_max}", buf.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_class_capacity_is_even_split() {
+    forall(40, |rng| {
+        let s_max = usize_in(rng, 1, 300);
+        let classes = usize_in(rng, 1, 20) as u32;
+        let buf = LocalBuffer::new(s_max, EvictionPolicy::Random, rng.next_u64());
+        // saturate every class
+        for round in 0..(s_max + 50) {
+            for c in 0..classes {
+                buf.insert(sample(c, round as f32));
+            }
+        }
+        let cap = (s_max / classes as usize).max(1);
+        for (c, n) in buf.snapshot_counts() {
+            if n > cap {
+                return Err(format!(
+                    "class {c} holds {n} > even-split cap {cap} \
+                     (S_max={s_max}, K={classes})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_competes_within_class_only() {
+    // Filling class B never reduces class A's count below its cap share.
+    forall(30, |rng| {
+        let buf = LocalBuffer::new(100, EvictionPolicy::Random, rng.next_u64());
+        for i in 0..50 {
+            buf.insert(sample(0, i as f32));
+        }
+        let a_before = buf.snapshot_counts()[0].1;
+        for i in 0..500 {
+            buf.insert(sample(1, i as f32));
+        }
+        let counts = buf.snapshot_counts();
+        let a_after = counts.iter().find(|&&(c, _)| c == 0).unwrap().1;
+        // class 0 may shrink once (rebalance to 50) but never below cap
+        if a_after < 100 / 2 && a_after < a_before {
+            return Err(format!("class 0 shrank {a_before} -> {a_after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fetch_rows_returns_requested_classes() {
+    forall(40, |rng| {
+        let classes = usize_in(rng, 1, 8) as u32;
+        let buf = LocalBuffer::new(400, EvictionPolicy::Random, rng.next_u64());
+        for c in 0..classes {
+            for i in 0..usize_in(rng, 1, 20) {
+                buf.insert(sample(c, i as f32));
+            }
+        }
+        let counts = buf.snapshot_counts();
+        let picks: Vec<(u32, usize)> = (0..usize_in(rng, 1, 10))
+            .map(|_| {
+                let (c, n) = counts[rng.below(counts.len())];
+                (c, rng.below(n))
+            })
+            .collect();
+        let rows = buf.fetch_rows(&picks);
+        for (row, &(c, _)) in rows.iter().zip(&picks) {
+            if row.label != c {
+                return Err(format!("asked class {c}, got {}", row.label));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn algorithm1_offer_rate_is_c_over_b() {
+    forall(10, |rng| {
+        let b = usize_in(rng, 8, 64);
+        let c = usize_in(rng, 0, b);
+        let buf = LocalBuffer::new(100_000, EvictionPolicy::Random, 1);
+        let batch: Vec<Sample> =
+            (0..b).map(|i| sample((i % 4) as u32, i as f32)).collect();
+        let mut urng = Rng::new(rng.next_u64());
+        let rounds = 800;
+        let mut offered = 0usize;
+        for _ in 0..rounds {
+            offered += buf.update_with_batch(&batch, c, b, &mut urng);
+        }
+        let mean = offered as f64 / rounds as f64;
+        // binomial(b, c/b): mean c, sd sqrt(c(1-c/b)) < sqrt(b);
+        // 800 rounds → se < sqrt(b)/28; allow 5 se + slack
+        let tol = (b as f64).sqrt() / 28.0 * 5.0 + 0.2;
+        if (mean - c as f64).abs() > tol {
+            return Err(format!("offer rate {mean} vs c={c} (b={b})"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,153 @@
+//! Engine semantics under concurrency: the Fig.-4 pipeline contract
+//! (reps lag one iteration; wait ≈ 0 when compute dominates; blocking mode
+//! serialises), plus failure injection (dropped engines, saturated
+//! buffers, many-worker interleavings).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::engine::{EngineParams, RehearsalEngine};
+use dcl::net::{CostModel, Fabric};
+use dcl::tensor::{Batch, Sample};
+use dcl::testkit::prop::{forall, usize_in};
+use dcl::util::rng::Rng;
+
+fn make_fabric(n: usize, s_max: usize) -> Arc<Fabric> {
+    let buffers = (0..n)
+        .map(|w| Arc::new(LocalBuffer::new(s_max, EvictionPolicy::Random, w as u64)))
+        .collect();
+    Arc::new(Fabric::new(buffers, CostModel::default(), false))
+}
+
+fn batch(class: u32, n: usize) -> Batch {
+    Batch::new((0..n).map(|i| Sample::new(class, vec![i as f32; 8])).collect())
+}
+
+fn params(b: usize, r: usize, c: usize, async_updates: bool) -> EngineParams {
+    EngineParams { batch: b, reps: r, candidates: c,
+                   scope: SamplingScope::Global, async_updates }
+}
+
+#[test]
+fn reps_lag_exactly_one_iteration() {
+    // With async updates, the reps returned at iteration i can only contain
+    // classes from batches 0..i (not the current batch) — Fig. 4 semantics.
+    let fabric = make_fabric(1, 1000);
+    let mut e = RehearsalEngine::new(0, fabric, params(8, 4, 8, true), 1);
+    for i in 0..10u32 {
+        let reps = e.update(&batch(i, 8)).unwrap();
+        for s in &reps {
+            assert!(s.label < i, "iteration {i} returned label {}", s.label);
+        }
+    }
+    e.finish().unwrap();
+}
+
+#[test]
+fn overlap_hides_buffer_work_behind_slow_training() {
+    // If the caller simulates a 5 ms train step between updates, the
+    // background round (≪1 ms here) must produce ~zero foreground wait.
+    let fabric = make_fabric(2, 500);
+    let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(8, 4, 8, true), 2);
+    let mut e2 = RehearsalEngine::new(1, fabric, params(8, 4, 8, true), 3);
+    for i in 0..20 {
+        let _ = e.update(&batch(i % 4, 8)).unwrap();
+        let _ = e2.update(&batch(4 + i % 4, 8)).unwrap();
+        std::thread::sleep(Duration::from_millis(5)); // the "train step"
+    }
+    e.finish().unwrap();
+    e2.finish().unwrap();
+    let wait_ms = e.timings.wait_ns.load(Ordering::Relaxed) as f64 / 1e6;
+    let iters = e.timings.iterations.load(Ordering::Relaxed) as f64;
+    assert!(wait_ms / iters < 1.0,
+            "mean augment-wait {:.3} ms — overlap broken", wait_ms / iters);
+}
+
+#[test]
+fn blocking_mode_reports_wait() {
+    let fabric = make_fabric(2, 500);
+    let mut e = RehearsalEngine::new(0, fabric, params(8, 4, 8, false), 4);
+    for i in 0..10 {
+        let _ = e.update(&batch(i % 4, 8)).unwrap();
+    }
+    // blocking mode accounts the whole round as wait
+    assert!(e.timings.wait_ns.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn many_workers_interleaved_never_deadlock_or_overflow() {
+    forall(8, |rng| {
+        let n = usize_in(rng, 1, 6);
+        let s_max = usize_in(rng, 4, 60);
+        let b = usize_in(rng, 4, 16);
+        let r = usize_in(rng, 1, b.min(8));
+        let c = usize_in(rng, 0, b);
+        let fabric = make_fabric(n, s_max);
+        let mut handles = Vec::new();
+        for w in 0..n {
+            let f = Arc::clone(&fabric);
+            let p = params(b, r, c, true);
+            let seed = rng.next_u64();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                let mut e = RehearsalEngine::new(w, f, p, seed);
+                for i in 0..30 {
+                    let cls = (w * 7 + i) as u32 % 10;
+                    let reps = e.update(&batch(cls, b)).unwrap();
+                    assert!(reps.len() <= r);
+                    if i % 5 == 0 {
+                        let _ = rng.next_u64();
+                    }
+                }
+                e.finish().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| "worker panicked".to_string())?;
+        }
+        // buffers never exceed their capacity, union invariant holds
+        for w in 0..n {
+            let buf = fabric.buffer(w);
+            if buf.len() > s_max {
+                return Err(format!("worker {w}: {} > S_max {s_max}", buf.len()));
+            }
+            let sum: usize = buf.snapshot_counts().iter().map(|&(_, k)| k).sum();
+            if sum != buf.len() {
+                return Err("disjoint-union violated".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_drop_mid_flight_is_clean() {
+    // Dropping with a round in flight must not hang or poison the fabric.
+    let fabric = make_fabric(2, 100);
+    {
+        let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(8, 4, 8, true), 9);
+        let _ = e.update(&batch(0, 8)).unwrap();
+        // drop without finish()
+    }
+    // fabric still serviceable
+    let mut e2 = RehearsalEngine::new(1, fabric, params(8, 4, 8, true), 10);
+    let _ = e2.update(&batch(1, 8)).unwrap();
+    let reps = e2.update(&batch(2, 8)).unwrap();
+    assert!(reps.len() <= 4);
+    e2.finish().unwrap();
+}
+
+#[test]
+fn candidates_zero_means_buffer_stays_empty() {
+    let fabric = make_fabric(1, 100);
+    let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(8, 4, 0, true), 11);
+    for i in 0..10 {
+        let reps = e.update(&batch(i, 8)).unwrap();
+        assert!(reps.is_empty(), "no candidates → no reps ever");
+    }
+    e.finish().unwrap();
+    assert_eq!(fabric.buffer(0).len(), 0);
+}

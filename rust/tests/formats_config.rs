@@ -1,0 +1,130 @@
+//! Cross-module integration of the in-repo substrates: config files parsed
+//! by the TOML subset drive real `ExperimentConfig`s; the JSON parser
+//! round-trips the actual artifact manifest; property tests fuzz both
+//! parsers against crashes.
+
+use dcl::config::{ExperimentConfig, Strategy};
+use dcl::formats::json::Json;
+use dcl::formats::toml::TomlTable;
+use dcl::testkit::prop::{forall, usize_in};
+
+#[test]
+fn example_config_file_round_trip() {
+    let text = r#"
+preset = "default"
+name = "my-experiment"
+
+[data]
+num_classes = 20
+num_tasks = 4
+train_per_class = 100
+val_per_class = 10
+
+[training]
+variant = "resnet18_sim"
+strategy = "scratch"
+epochs_per_task = 5
+eval_batch = 50
+
+[buffer]
+percent_of_dataset = 10.0
+policy = "reservoir"
+
+[cluster]
+workers = 8
+rpc_latency_us = 1.5
+"#;
+    let doc = TomlTable::parse(text).unwrap();
+    let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+    assert_eq!(cfg.name, "my-experiment");
+    assert_eq!(cfg.data.num_classes, 20);
+    assert_eq!(cfg.training.strategy, Strategy::FromScratch);
+    assert_eq!(cfg.cluster.workers, 8);
+    assert!((cfg.cluster.rpc_latency_us - 1.5).abs() < 1e-12);
+    assert_eq!(cfg.global_buffer_capacity(), 200); // 10% of 20*100
+}
+
+#[test]
+fn bad_config_values_fail_validation() {
+    for (snippet, why) in [
+        ("[data]\nnum_classes = 41", "not divisible by tasks"),
+        ("[training]\ncandidates = 200", "c > b"),
+        ("[buffer]\npercent_of_dataset = 0.0", "zero buffer"),
+        ("[cluster]\nworkers = 0", "no workers"),
+        ("[training]\nstrategy = \"sgd\"", "unknown strategy"),
+    ] {
+        let text = format!("preset = \"default\"\n{snippet}");
+        let doc = TomlTable::parse(&text).unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err(), "{why}");
+    }
+}
+
+#[test]
+fn manifest_json_parses_if_artifacts_exist() {
+    let Some(dir) = dcl::testkit::artifacts_dir() else { return };
+    let j = Json::parse_file(&dir.join("manifest.json")).unwrap();
+    // round-trip through our writer and parser
+    let text = j.to_string();
+    let j2 = Json::parse(&text).unwrap();
+    assert_eq!(j, j2);
+    assert!(j.get("variants").unwrap().as_object().unwrap().len() >= 1);
+}
+
+#[test]
+fn json_parser_never_panics_on_noise() {
+    forall(300, |rng| {
+        let len = usize_in(rng, 0, 60);
+        let charset: Vec<char> =
+            "{}[]\",:truefalsnl0123456789.eE+- \\x".chars().collect();
+        let s: String = (0..len)
+            .map(|_| charset[rng.below(charset.len())])
+            .collect();
+        let _ = Json::parse(&s); // Err is fine; panic is not
+        Ok(())
+    });
+}
+
+#[test]
+fn toml_parser_never_panics_on_noise() {
+    forall(300, |rng| {
+        let len = usize_in(rng, 0, 60);
+        let charset: Vec<char> =
+            "[]=\"#\n abcdefgh0123456789._-,".chars().collect();
+        let s: String = (0..len)
+            .map(|_| charset[rng.below(charset.len())])
+            .collect();
+        let _ = TomlTable::parse(&s);
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    // generate random JSON values, serialize, reparse, compare
+    fn gen(rng: &mut dcl::util::rng::Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Int(rng.next_u64() as i64 / 1000),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Array((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Object(m)
+            }
+        }
+    }
+    forall(200, |rng| {
+        let doc = gen(rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text)
+            .map_err(|e| format!("reparse failed: {e} on `{text}`"))?;
+        if back != doc {
+            return Err(format!("round-trip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,167 @@
+//! Property tests on global-sampling invariants (paper §IV-C / DESIGN.md
+//! §5): without-replacement, consolidation, location-uniformity, and
+//! local-scope containment — over randomized cluster geometries.
+
+use dcl::config::SamplingScope;
+use dcl::sampling::GlobalSampler;
+use dcl::testkit::prop::{forall, usize_in};
+use dcl::util::rng::Rng;
+use dcl::util::stats::chi_square_uniform;
+
+/// Random per-node per-class counts; some nodes may be empty.
+fn random_counts(rng: &mut Rng) -> Vec<Vec<(u32, usize)>> {
+    let workers = usize_in(rng, 1, 8);
+    (0..workers)
+        .map(|_| {
+            let classes = usize_in(rng, 0, 6);
+            (0..classes)
+                .map(|c| (c as u32, usize_in(rng, 1, 15)))
+                .collect()
+        })
+        .collect()
+}
+
+fn total(counts: &[Vec<(u32, usize)>]) -> usize {
+    counts.iter().flatten().map(|&(_, n)| n).sum()
+}
+
+#[test]
+fn plan_size_is_min_r_total() {
+    forall(80, |rng| {
+        let counts = random_counts(rng);
+        let r = usize_in(rng, 0, 20);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut prng = Rng::new(rng.next_u64());
+        let plan = sampler.plan(&counts, r, &mut prng);
+        let expect = r.min(total(&counts));
+        if plan.total != expect {
+            return Err(format!("plan.total {} != {expect}", plan.total));
+        }
+        let n: usize = plan.requests.iter().map(|(_, p)| p.len()).sum();
+        if n != expect {
+            return Err(format!("picks {n} != {expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_replacement_within_plan() {
+    forall(80, |rng| {
+        let counts = random_counts(rng);
+        let r = usize_in(rng, 0, 25);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut prng = Rng::new(rng.next_u64());
+        let plan = sampler.plan(&counts, r, &mut prng);
+        for (w, picks) in &plan.requests {
+            let mut seen = std::collections::HashSet::new();
+            for &(c, i) in picks {
+                if !seen.insert((c, i)) {
+                    return Err(format!("duplicate pick ({c},{i}) at node {w}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn consolidation_one_request_per_node() {
+    forall(80, |rng| {
+        let counts = random_counts(rng);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut prng = Rng::new(rng.next_u64());
+        let plan = sampler.plan(&counts, usize_in(rng, 1, 20), &mut prng);
+        let mut nodes: Vec<usize> = plan.requests.iter().map(|(w, _)| *w).collect();
+        let len = nodes.len();
+        nodes.sort_unstable();
+        nodes.dedup();
+        if nodes.len() != len {
+            return Err("multiple requests for one node".into());
+        }
+        if nodes.iter().any(|&w| w >= counts.len()) {
+            return Err("request to unknown node".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn picks_respect_class_counts() {
+    forall(80, |rng| {
+        let counts = random_counts(rng);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut prng = Rng::new(rng.next_u64());
+        let plan = sampler.plan(&counts, usize_in(rng, 1, 20), &mut prng);
+        for (w, picks) in &plan.requests {
+            for &(c, i) in picks {
+                let n = counts[*w]
+                    .iter()
+                    .find(|&&(cc, _)| cc == c)
+                    .map(|&(_, n)| n)
+                    .unwrap_or(0);
+                if i >= n {
+                    return Err(format!("pick ({c},{i}) beyond count {n} on node {w}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn local_scope_stays_local() {
+    forall(60, |rng| {
+        let counts = random_counts(rng);
+        let me = rng.below(counts.len());
+        let sampler = GlobalSampler::new(me, SamplingScope::LocalOnly);
+        let mut prng = Rng::new(rng.next_u64());
+        let plan = sampler.plan(&counts, usize_in(rng, 1, 10), &mut prng);
+        if plan.requests.iter().any(|(w, _)| *w != me) {
+            return Err("local-only plan touched a remote node".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_resident_equally_likely() {
+    // χ² uniformity across ALL residents of a fixed random geometry.
+    forall(4, |rng| {
+        let counts = vec![
+            vec![(0u32, usize_in(rng, 2, 6)), (1, usize_in(rng, 2, 6))],
+            vec![(0u32, usize_in(rng, 2, 6))],
+            vec![(2u32, usize_in(rng, 2, 6))],
+        ];
+        let tot = total(&counts);
+        // flat index per (node, class, idx)
+        let mut index = std::collections::HashMap::new();
+        let mut next = 0usize;
+        for (w, node) in counts.iter().enumerate() {
+            for &(c, n) in node {
+                for i in 0..n {
+                    index.insert((w, c, i), next);
+                    next += 1;
+                }
+            }
+        }
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let mut prng = Rng::new(rng.next_u64());
+        let mut hits = vec![0u64; tot];
+        let rounds = 6000;
+        for _ in 0..rounds {
+            let plan = sampler.plan(&counts, 3, &mut prng);
+            for (w, picks) in &plan.requests {
+                for &(c, i) in picks {
+                    hits[index[&(*w, c, i)]] += 1;
+                }
+            }
+        }
+        let chi2 = chi_square_uniform(&hits);
+        // dof = tot-1 ≤ 29; the 0.9999 quantile of χ²(29) ≈ 58 — allow 2x.
+        if chi2 > 120.0 {
+            return Err(format!("χ²={chi2} over {tot} residents: {hits:?}"));
+        }
+        Ok(())
+    });
+}

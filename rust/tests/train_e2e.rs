@@ -1,0 +1,90 @@
+//! End-to-end integration: all three strategies run to completion on the
+//! tiny geometry, and the paper's qualitative ordering holds —
+//! incremental training forgets earlier tasks; rehearsal recovers much of
+//! the gap. (Top-*1* is asserted here: with K=8 classes top-5 chance level
+//! is 62.5 %, too coarse for a tiny smoke test.)
+//!
+//! Skipped when `make artifacts` has not produced artifacts/tiny.
+
+use dcl::config::Strategy;
+use dcl::train::trainer::run_experiment;
+
+#[test]
+fn rehearsal_beats_incremental_and_runs_clean() {
+    let Some(mut cfg) = dcl::testkit::tiny_config() else { return };
+    cfg.training.epochs_per_task = 3;
+    cfg.buffer.percent_of_dataset = 30.0;
+    cfg.validate().unwrap();
+
+    cfg.training.strategy = Strategy::Incremental;
+    let inc = run_experiment(&cfg).expect("incremental run");
+
+    cfg.training.strategy = Strategy::Rehearsal;
+    let reh = run_experiment(&cfg).expect("rehearsal run");
+
+    // Every epoch recorded, evals present at task boundaries.
+    let total_epochs = cfg.data.num_tasks * cfg.training.epochs_per_task;
+    assert_eq!(inc.epochs.len(), total_epochs);
+    assert_eq!(reh.epochs.len(), total_epochs);
+    assert!(inc.epochs.last().unwrap().eval.is_some());
+
+    // Catastrophic forgetting: incremental's final per-task accuracy on the
+    // FIRST task should be far below its accuracy on the LAST task.
+    let inc_eval = inc.epochs.last().unwrap().eval.clone().unwrap();
+    let first_task = inc_eval.per_task_top1.first().copied().unwrap();
+    let last_task = inc_eval.per_task_top1.last().copied().unwrap();
+    assert!(last_task > first_task + 0.05,
+            "no forgetting signal: first {first_task}, last {last_task}");
+
+    // Rehearsal recovers accuracy over incremental (top-1, Eq. 1).
+    assert!(reh.final_top1_accuracy_t > inc.final_top1_accuracy_t,
+            "rehearsal {} <= incremental {}",
+            reh.final_top1_accuracy_t, inc.final_top1_accuracy_t);
+
+    // Rehearsal metadata is recorded.
+    assert!(reh.background_ms.0 > 0.0 || reh.background_ms.1 > 0.0,
+            "engine timings empty");
+    assert!(reh.train_step_ms > 0.0);
+    assert!(reh.allreduce_bytes > 0);
+}
+
+#[test]
+fn from_scratch_is_upper_bound_and_slowest() {
+    let Some(mut cfg) = dcl::testkit::tiny_config() else { return };
+    cfg.training.epochs_per_task = 2;
+
+    cfg.training.strategy = Strategy::FromScratch;
+    let scratch = run_experiment(&cfg).expect("scratch run");
+    cfg.training.strategy = Strategy::Incremental;
+    let inc = run_experiment(&cfg).expect("incremental run");
+
+    // From-scratch sees all accumulated data: per-epoch wall time of the
+    // last task must exceed the first task's (quadratic growth signal).
+    let first_epoch = scratch.epochs.first().unwrap().wall.as_secs_f64();
+    let last_epoch = scratch.epochs.last().unwrap().wall.as_secs_f64();
+    assert!(last_epoch > 1.5 * first_epoch,
+            "no quadratic-growth signal: {first_epoch} vs {last_epoch}");
+
+    // And beats incremental on accuracy over all tasks.
+    assert!(scratch.final_top1_accuracy_t > inc.final_top1_accuracy_t,
+            "scratch {} <= incremental {}",
+            scratch.final_top1_accuracy_t, inc.final_top1_accuracy_t);
+}
+
+#[test]
+fn blocking_engine_matches_async_quality() {
+    // The async pipeline is a performance optimisation; accuracy must be
+    // unaffected (same sampling distribution, one-iteration-stale reps).
+    let Some(mut cfg) = dcl::testkit::tiny_config() else { return };
+    cfg.training.epochs_per_task = 2;
+    cfg.training.strategy = Strategy::Rehearsal;
+
+    cfg.buffer.async_updates = true;
+    let async_run = run_experiment(&cfg).expect("async");
+    cfg.buffer.async_updates = false;
+    let blocking = run_experiment(&cfg).expect("blocking");
+
+    let diff = (async_run.final_top1_accuracy_t - blocking.final_top1_accuracy_t).abs();
+    assert!(diff < 0.25, "async {} vs blocking {}",
+            async_run.final_top1_accuracy_t, blocking.final_top1_accuracy_t);
+}
