@@ -1,11 +1,12 @@
 //! Gradient all-reduce benchmarks: exact-mean accumulation over replica
-//! gradients (the data-parallel sync on the training critical path) and the
-//! ring cost model across scales.
+//! gradients (the data-parallel sync on the training critical path), the
+//! sharded submit path the threaded worker runtime uses, and the ring cost
+//! model across scales.
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::cluster::{ring_allreduce_cost, GradAccumulator};
 use dcl::net::CostModel;
-use dcl::runtime::executor::make_literal;
+use dcl::runtime::{make_literal, Literal};
 use dcl::util::rng::Rng;
 
 fn main() {
@@ -18,7 +19,7 @@ fn main() {
         vec![3072, 512], vec![512], vec![512, 256], vec![256],
         vec![256, 40], vec![40],
     ];
-    let grads: Vec<Vec<xla::Literal>> = (0..4)
+    let grads: Vec<Vec<Literal>> = (0..4)
         .map(|_| {
             shapes
                 .iter()
@@ -31,7 +32,7 @@ fn main() {
         })
         .collect();
 
-    let mut acc = GradAccumulator::new(shapes.clone());
+    let acc = GradAccumulator::new(shapes.clone());
     let bytes = acc.payload_bytes();
     r.bench_items("accumulate_4replicas_1.8Mparam", bytes * 4, || {
         for g in &grads {
@@ -41,12 +42,22 @@ fn main() {
     });
 
     // add() alone (per replica on the critical path).
-    let mut acc2 = GradAccumulator::new(shapes.clone());
+    let acc2 = GradAccumulator::new(shapes.clone());
     r.bench_items("add_one_replica", bytes, || {
         acc2.add(&grads[0]).unwrap();
         if acc2.replicas() >= 64 {
             black_box(acc2.reduce(&CostModel::default()).unwrap());
         }
+    });
+
+    // Sharded submit + in-order fold (the contention-free path each worker
+    // thread of the trainer runtime takes).
+    let acc3 = GradAccumulator::with_workers(shapes.clone(), 4);
+    r.bench_items("submit_4shards_reduce", bytes * 4, || {
+        for (w, g) in grads.iter().enumerate() {
+            acc3.submit(w, g).unwrap();
+        }
+        black_box(acc3.reduce(&CostModel::default()).unwrap());
     });
 
     // Ring cost model across scales (pure arithmetic).

@@ -1,7 +1,11 @@
 //! Engine pipeline benchmark (the abl-async microscale view): cost of the
 //! Listing-1 `update()` primitive in async vs blocking mode, at several
-//! cluster sizes. In async mode the foreground cost is ~channel traffic;
-//! in blocking mode the full populate+sample round sits on the caller.
+//! cluster sizes, plus the raw representative-fetch path. In async mode the
+//! foreground cost is ~channel traffic; in blocking mode the full
+//! populate+sample round sits on the caller. Samples carry `Arc<[f32]>`
+//! features, so every hop here (batch hand-off, bulk fetch, rep return)
+//! moves refcounts — the `rep_fetch_*` series times exactly the path the
+//! zero-copy refactor took the per-row deep copies out of.
 
 use std::sync::Arc;
 
@@ -59,6 +63,17 @@ fn main() {
             });
             engine.finish().unwrap();
         }
+    }
+
+    // The consolidated bulk fetch on its own: r=7 rows of 3072 features
+    // pulled from a peer buffer. With Arc-shared samples each row is a
+    // refcount bump; before the refactor it was a 12 KiB memcpy per row.
+    for n in [2usize, 8] {
+        let fabric = make_fabric(n);
+        let picks: Vec<(u32, usize)> = (0..7).map(|i| (i as u32 * 5, i)).collect();
+        r.bench_items(&format!("rep_fetch_remote_r7_n{n}"), 7, || {
+            black_box(fabric.fetch_bulk(0, 1, &picks).unwrap());
+        });
     }
 
     r.write_csv("engine_pipeline.csv");

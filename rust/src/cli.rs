@@ -105,9 +105,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
-    let dir = crate::testkit::artifacts_dir()
-        .ok_or_else(|| anyhow!("artifacts/ missing; run `make artifacts`"))?;
-    let manifest = crate::runtime::Manifest::load(&dir)?;
+    let manifest = match crate::testkit::artifacts_dir() {
+        Some(dir) => crate::runtime::Manifest::load(&dir)?,
+        // No AOT artifacts: calibrate the native executor on the default
+        // geometry instead.
+        None => crate::runtime::Manifest::synthetic(3072, 40, 56, vec![7], 50),
+    };
     let variants: Vec<String> = match args.get("variant") {
         Some(v) => vec![v.to_string()],
         None => manifest.variants.keys().cloned().collect(),

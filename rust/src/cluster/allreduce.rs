@@ -1,12 +1,12 @@
 //! Exact gradient averaging + ring-all-reduce cost model.
 
+use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
 use crate::net::CostModel;
-use crate::runtime::executor::{literal_to_vec, make_literal};
+use crate::runtime::{make_literal, Literal};
 
 /// Wire time of one bandwidth-optimal ring all-reduce over `n` workers for
 /// `bytes` of payload: 2(n−1) steps, each moving `bytes/n` and paying α.
@@ -22,30 +22,51 @@ pub fn ring_allreduce_cost(cost: &CostModel, n: usize, bytes: usize) -> Duration
     Duration::from_secs_f64(secs)
 }
 
+/// One worker's private partial sums (f64 to avoid order-dependent f32
+/// drift) plus how many replicas it accumulated.
+struct Slot {
+    sums: Vec<Vec<f64>>,
+    count: usize,
+}
+
+impl Slot {
+    fn new(shapes: &[Vec<usize>]) -> Slot {
+        Slot {
+            sums: shapes.iter().map(|s| vec![0.0f64; s.iter().product()]).collect(),
+            count: 0,
+        }
+    }
+}
+
 /// Accumulates per-replica gradients and produces their exact mean.
 ///
-/// Gradients arrive as `Vec<Literal>` (manifest tensor order) from each
-/// replica's train step; the accumulator keeps f64 partial sums to avoid
-/// order-dependent f32 drift, then emits mean literals with the original
-/// shapes.
+/// The accumulator is **sharded**: each concurrent worker submits into its
+/// own mutex-guarded slot (`submit(worker, ..)`), and [`reduce`] folds the
+/// slots together *in slot order*. That makes the reduction result
+/// independent of worker arrival order — bit-identical across runs for a
+/// fixed seed — while workers on different threads never contend on one
+/// central lock during the hot add. `add()` is the single-slot convenience
+/// used by sequential callers and keeps the pre-threading call shape.
+///
+/// [`reduce`]: GradAccumulator::reduce
 pub struct GradAccumulator {
     shapes: Vec<Vec<usize>>,
-    sums: Vec<Vec<f64>>,
-    replicas: usize,
+    slots: Vec<Mutex<Slot>>,
     bytes: usize,
 }
 
 impl GradAccumulator {
+    /// Single-slot accumulator (sequential use, tests, benches).
     pub fn new(shapes: Vec<Vec<usize>>) -> GradAccumulator {
-        let sums = shapes
-            .iter()
-            .map(|s| vec![0.0f64; s.iter().product()])
-            .collect();
-        let bytes = shapes
-            .iter()
-            .map(|s| s.iter().product::<usize>() * 4)
-            .sum();
-        GradAccumulator { shapes, sums, replicas: 0, bytes }
+        GradAccumulator::with_workers(shapes, 1)
+    }
+
+    /// One slot per concurrent worker.
+    pub fn with_workers(shapes: Vec<Vec<usize>>, workers: usize) -> GradAccumulator {
+        assert!(workers > 0, "accumulator needs at least one slot");
+        let slots = (0..workers).map(|_| Mutex::new(Slot::new(&shapes))).collect();
+        let bytes = shapes.iter().map(|s| s.iter().product::<usize>() * 4).sum();
+        GradAccumulator { shapes, slots, bytes }
     }
 
     /// Payload bytes one replica contributes (the all-reduce message size).
@@ -53,43 +74,78 @@ impl GradAccumulator {
         self.bytes
     }
 
-    pub fn replicas(&self) -> usize {
-        self.replicas
+    pub fn workers(&self) -> usize {
+        self.slots.len()
     }
 
-    /// Add one replica's gradients.
-    pub fn add(&mut self, grads: &[Literal]) -> Result<()> {
-        if grads.len() != self.sums.len() {
-            bail!("accumulator got {} tensors, want {}", grads.len(), self.sums.len());
+    /// Replicas accumulated since the last reduce, across all slots.
+    pub fn replicas(&self) -> usize {
+        self.slots.iter().map(|s| s.lock().unwrap().count).sum()
+    }
+
+    /// Add one replica's gradients into slot 0 (sequential callers).
+    pub fn add(&self, grads: &[Literal]) -> Result<()> {
+        self.submit(0, grads)
+    }
+
+    /// Add one replica's gradients into `worker`'s slot. Thread-safe; only
+    /// the owning slot's mutex is taken.
+    pub fn submit(&self, worker: usize, grads: &[Literal]) -> Result<()> {
+        if worker >= self.slots.len() {
+            bail!("submit to slot {worker} of {}", self.slots.len());
         }
-        for (sum, g) in self.sums.iter_mut().zip(grads) {
-            let v = literal_to_vec(g)?;
+        if grads.len() != self.shapes.len() {
+            bail!("accumulator got {} tensors, want {}", grads.len(), self.shapes.len());
+        }
+        let mut slot = self.slots[worker].lock().unwrap();
+        for (sum, g) in slot.sums.iter_mut().zip(grads) {
+            let v = g.data();
             if v.len() != sum.len() {
                 bail!("gradient tensor size {} != {}", v.len(), sum.len());
             }
-            for (s, x) in sum.iter_mut().zip(v) {
+            for (s, &x) in sum.iter_mut().zip(v) {
                 *s += x as f64;
             }
         }
-        self.replicas += 1;
+        slot.count += 1;
         Ok(())
     }
 
     /// Emit the mean gradients and reset for the next iteration. Returns
-    /// the literals plus the modeled ring-all-reduce wire time.
-    pub fn reduce(&mut self, cost: &CostModel) -> Result<(Vec<Literal>, Duration)> {
-        if self.replicas == 0 {
+    /// the literals plus the modeled ring-all-reduce wire time. Slots are
+    /// folded in index order, so the result does not depend on which worker
+    /// finished first.
+    pub fn reduce(&self, cost: &CostModel) -> Result<(Vec<Literal>, Duration)> {
+        let mut guards: Vec<_> = self.slots.iter()
+            .map(|s| s.lock().unwrap())
+            .collect();
+        let replicas: usize = guards.iter().map(|g| g.count).sum();
+        if replicas == 0 {
             bail!("reduce with no replicas accumulated");
         }
-        let inv = 1.0 / self.replicas as f64;
-        let mut out = Vec::with_capacity(self.sums.len());
-        for (sum, shape) in self.sums.iter_mut().zip(&self.shapes) {
-            let mean: Vec<f32> = sum.iter().map(|&s| (s * inv) as f32).collect();
+        let inv = 1.0 / replicas as f64;
+        let mut out = Vec::with_capacity(self.shapes.len());
+        for (t, shape) in self.shapes.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let mut total = vec![0.0f64; n];
+            for g in guards.iter() {
+                if g.count == 0 {
+                    continue;
+                }
+                for (acc, &s) in total.iter_mut().zip(&g.sums[t]) {
+                    *acc += s;
+                }
+            }
+            let mean: Vec<f32> = total.iter().map(|&s| (s * inv) as f32).collect();
             out.push(make_literal(&mean, shape)?);
-            sum.iter_mut().for_each(|s| *s = 0.0);
         }
-        let wire = ring_allreduce_cost(cost, self.replicas, self.bytes);
-        self.replicas = 0;
+        for g in guards.iter_mut() {
+            g.count = 0;
+            for sum in g.sums.iter_mut() {
+                sum.iter_mut().for_each(|s| *s = 0.0);
+            }
+        }
+        let wire = ring_allreduce_cost(cost, replicas, self.bytes);
         Ok((out, wire))
     }
 }
@@ -97,6 +153,7 @@ impl GradAccumulator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::literal_to_vec;
 
     #[test]
     fn ring_cost_zero_for_single_worker() {
@@ -122,7 +179,7 @@ mod tests {
     #[test]
     fn accumulator_means_exactly() {
         let shapes = vec![vec![2, 2], vec![3]];
-        let mut acc = GradAccumulator::new(shapes);
+        let acc = GradAccumulator::new(shapes);
         assert_eq!(acc.payload_bytes(), (4 + 3) * 4);
         let g1 = vec![
             make_literal(&[1., 2., 3., 4.], &[2, 2]).unwrap(),
@@ -147,10 +204,55 @@ mod tests {
     }
 
     #[test]
+    fn sharded_submit_matches_sequential_add() {
+        let shapes = vec![vec![4]];
+        let g = |v: [f32; 4]| vec![make_literal(&v, &[4]).unwrap()];
+        let seq = GradAccumulator::new(shapes.clone());
+        seq.add(&g([1., 2., 3., 4.])).unwrap();
+        seq.add(&g([5., 6., 7., 8.])).unwrap();
+        seq.add(&g([0., 0., 0., 12.])).unwrap();
+        let (want, _) = seq.reduce(&CostModel::default()).unwrap();
+
+        let sharded = GradAccumulator::with_workers(shapes, 3);
+        // arrival order deliberately scrambled across slots
+        sharded.submit(2, &g([0., 0., 0., 12.])).unwrap();
+        sharded.submit(0, &g([1., 2., 3., 4.])).unwrap();
+        sharded.submit(1, &g([5., 6., 7., 8.])).unwrap();
+        assert_eq!(sharded.replicas(), 3);
+        let (got, _) = sharded.reduce(&CostModel::default()).unwrap();
+        assert_eq!(literal_to_vec(&got[0]).unwrap(),
+                   literal_to_vec(&want[0]).unwrap());
+    }
+
+    #[test]
+    fn concurrent_submits_are_safe() {
+        use std::sync::Arc;
+        let acc = Arc::new(GradAccumulator::with_workers(vec![vec![8]], 4));
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let a = Arc::clone(&acc);
+            handles.push(std::thread::spawn(move || {
+                let g = vec![make_literal(&[w as f32 + 1.0; 8], &[8]).unwrap()];
+                for _ in 0..50 {
+                    a.submit(w, &g).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(acc.replicas(), 200);
+        let (mean, _) = acc.reduce(&CostModel::default()).unwrap();
+        // mean of 50x1 + 50x2 + 50x3 + 50x4 over 200 = 2.5
+        assert_eq!(literal_to_vec(&mean[0]).unwrap(), vec![2.5; 8]);
+    }
+
+    #[test]
     fn shape_mismatch_errors() {
-        let mut acc = GradAccumulator::new(vec![vec![2]]);
+        let acc = GradAccumulator::new(vec![vec![2]]);
         let wrong = vec![make_literal(&[1., 2., 3.], &[3]).unwrap()];
         assert!(acc.add(&wrong).is_err());
         assert!(acc.reduce(&CostModel::default()).is_err());
+        assert!(acc.submit(5, &wrong).is_err());
     }
 }

@@ -56,11 +56,15 @@ impl Loader {
                     let mut samples = Vec::with_capacity(batch_idx.len());
                     for idx in batch_idx {
                         let base: &Sample = &train[idx];
-                        let mut features = base.features.clone();
                         if augment {
+                            // augmentation writes, so materialise a copy
+                            let mut features = base.features.to_vec();
                             augment_sample(&mut features, &mut rng);
+                            samples.push(Sample::new(base.label, features));
+                        } else {
+                            // zero-copy: share the dataset's feature slab
+                            samples.push(base.clone());
                         }
-                        samples.push(Sample::new(base.label, features));
                     }
                     pstats
                         .produce_ns

@@ -196,7 +196,7 @@ mod tests {
         let mut counts = vec![0usize; k];
         for s in ds.train.iter() {
             counts[s.label as usize] += 1;
-            for (m, &x) in means[s.label as usize].iter_mut().zip(&s.features) {
+            for (m, &x) in means[s.label as usize].iter_mut().zip(s.features.iter()) {
                 *m += x as f64;
             }
         }
@@ -211,7 +211,7 @@ mod tests {
             for (ci, m) in means.iter().enumerate() {
                 let dist: f64 = m
                     .iter()
-                    .zip(&s.features)
+                    .zip(s.features.iter())
                     .map(|(a, &b)| (a - b as f64).powi(2))
                     .sum();
                 if dist < best.0 {

@@ -17,6 +17,20 @@
 //! of a task returns no reps (buffer still empty / nothing in flight) and
 //! the trainer falls back to the plain, un-augmented step.
 //!
+//! # Concurrency & ownership
+//!
+//! Each engine is owned by one of the trainer's N persistent worker
+//! threads, so at `workers = N` there are `2N` engine-related threads live
+//! (N foreground workers + N background engines) all reading and writing
+//! the shared `Arc<LocalBuffer>` fabric concurrently — the configuration
+//! the paper's overlap measurements assume. Batches and representatives
+//! cross the job/result channels as [`Sample`]s whose features are
+//! refcounted `Arc<[f32]>` slabs, so an `update()` hand-off and a remote
+//! `fetch_bulk` move refcounts, never feature copies. Teardown is
+//! deterministic: `finish()` drains the in-flight round and `Drop` joins
+//! the background thread, so no engine thread outlives `Trainer::drive`
+//! (pinned by the `engine_teardown` integration test).
+//!
 //! With `async_updates = false` the same work runs inline (the blocking
 //! ablation, DESIGN.md abl-async).
 
@@ -189,17 +203,31 @@ impl RehearsalEngine {
     pub fn local_buffer(&self) -> &Arc<LocalBuffer> {
         self.fabric.buffer(self.worker)
     }
-}
 
-impl Drop for RehearsalEngine {
-    fn drop(&mut self) {
-        let _ = self.finish();
+    /// Explicit teardown: drain the in-flight round, stop the background
+    /// thread and join its handle. Idempotent; `Drop` runs the same path,
+    /// so an engine can never leak its thread past its owner's lifetime.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.finish()?;
         if let Some(tx) = self.job_tx.take() {
             let _ = tx.send(Job::Flush);
         }
         if let Some(h) = self.bg.take() {
-            let _ = h.join();
+            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?;
         }
+        Ok(())
+    }
+
+    /// True once the background thread has been joined (or never existed,
+    /// as in blocking mode) — the teardown invariant tests assert on.
+    pub fn is_shut_down(&self) -> bool {
+        self.bg.is_none()
+    }
+}
+
+impl Drop for RehearsalEngine {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
     }
 }
 
@@ -375,5 +403,20 @@ mod tests {
         e.update(&batch_of(0, 8)).unwrap();
         e.finish().unwrap();
         drop(e); // no deadlock, no panic
+    }
+
+    #[test]
+    fn shutdown_joins_background_thread() {
+        let fabric = make_fabric(2, 30);
+        let mut e = RehearsalEngine::new(0, fabric, params(true), 8);
+        assert!(!e.is_shut_down(), "async engine starts with a live thread");
+        e.update(&batch_of(0, 8)).unwrap();
+        e.shutdown().unwrap();
+        assert!(e.is_shut_down());
+        e.shutdown().unwrap(); // idempotent
+        // a blocking engine never has a thread to join
+        let fabric = make_fabric(1, 30);
+        let e2 = RehearsalEngine::new(0, fabric, params(false), 9);
+        assert!(e2.is_shut_down());
     }
 }

@@ -44,10 +44,16 @@ pub struct Session {
 }
 
 impl Session {
+    /// Open against the AOT artifacts when they exist; otherwise derive the
+    /// synthetic manifest for the harnesses' `default`-preset geometry
+    /// (K=40, b=56, eval 50) so every figure harness runs out of the box on
+    /// the native executor. The generous reps list covers the r-ablation.
     pub fn open() -> Result<Session> {
-        let dir = crate::testkit::artifacts_dir()
-            .ok_or_else(|| anyhow::anyhow!("artifacts/ missing; run `make artifacts`"))?;
-        Ok(Session { manifest: Manifest::load(&dir)?, dataset: Mutex::new(None) })
+        let manifest = match crate::testkit::artifacts_dir() {
+            Some(dir) => Manifest::load(&dir)?,
+            None => Manifest::synthetic(3072, 40, 56, (1..=56).collect(), 50),
+        };
+        Ok(Session { manifest, dataset: Mutex::new(None) })
     }
 
     pub fn manifest(&self) -> &Manifest {

@@ -4,12 +4,14 @@
 //! Learning with Asynchronous Distributed Rehearsal Buffers"* (CCGrid 2024).
 //!
 //! Layer-3 of the three-layer stack (see `DESIGN.md`): this crate owns the
-//! event loop, the simulated multi-worker cluster, the distributed rehearsal
-//! buffer with asynchronous updates and RDMA-style global sampling, the data
-//! pipeline, baselines, the performance model, and every experiment harness.
-//! The compute (model fwd/bwd, optimizer, augmentation assembly) is AOT-
-//! compiled JAX/Pallas loaded from `artifacts/*.hlo.txt` and executed via
-//! PJRT (`runtime`). Python never runs on the training path.
+//! threaded worker runtime, the simulated multi-worker cluster, the
+//! distributed rehearsal buffer with asynchronous updates and RDMA-style
+//! global sampling, the data pipeline, baselines, the performance model,
+//! and every experiment harness. The compute (model fwd/bwd, optimizer,
+//! augmentation assembly) follows the JAX/Pallas reference in
+//! `python/compile/` and is executed by the native Rust executor in
+//! `runtime` (AOT artifacts, when present, supply the shape/init contract).
+//! Python never runs on the training path.
 //!
 //! Module map (bottom-up):
 //!
@@ -25,8 +27,8 @@
 //! - [`sampling`] — unbiased global sampling plans + RPC consolidation.
 //! - [`engine`] — the asynchronous update/augment pipeline of Fig. 4 and
 //!   the `update()` primitive of Listing 1.
-//! - [`cluster`] — worker topology and ring all-reduce.
-//! - [`runtime`] — PJRT executor for AOT artifacts.
+//! - [`cluster`] — worker topology and the sharded exact-mean all-reduce.
+//! - [`runtime`] — native executor (manifest-driven model semantics).
 //! - [`optim`] — learning-rate schedules (linear scaling, warmup, decay).
 //! - [`train`] — the rehearsal trainer, baselines, evaluation.
 //! - [`perfmodel`] — discrete-event cluster performance model (A100 +

@@ -52,6 +52,54 @@ impl WorkerBreakdown {
     }
 }
 
+/// Epoch-level training-metric accumulator with explicit units, shared by
+/// all worker threads' per-epoch partial sums.
+///
+/// The executor's step output mixes units: `loss` is a MEAN over the step's
+/// rows while `top5` is a COUNT of rows correct-in-top-5. Aggregating them
+/// consistently across iterations of different sizes (plain `b` vs
+/// augmented `b + r`) therefore requires weighting the loss by its row
+/// count before dividing by total rows, and dividing the raw top-5 count by
+/// total rows — mixing those two recipes up silently mis-scales whichever
+/// metric gets the wrong one, so the math lives here once and is pinned by
+/// a unit test.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrainMetrics {
+    /// Σ (step mean loss × step rows).
+    pub loss_weighted: f64,
+    /// Σ step top-5 correct counts.
+    pub top5_count: f64,
+    /// Σ step rows.
+    pub rows: f64,
+}
+
+impl TrainMetrics {
+    /// Record one train step: `loss_mean` (mean over `rows`), `top5_count`
+    /// (correct count out of `rows`).
+    pub fn add_step(&mut self, loss_mean: f64, top5_count: f64, rows: f64) {
+        self.loss_weighted += loss_mean * rows;
+        self.top5_count += top5_count;
+        self.rows += rows;
+    }
+
+    /// Fold another worker's partial sums in.
+    pub fn merge(&mut self, other: &TrainMetrics) {
+        self.loss_weighted += other.loss_weighted;
+        self.top5_count += other.top5_count;
+        self.rows += other.rows;
+    }
+
+    /// Row-weighted mean loss over everything recorded.
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_weighted / self.rows.max(1.0)
+    }
+
+    /// Top-5 accuracy (fraction of rows correct) over everything recorded.
+    pub fn top5_accuracy(&self) -> f64 {
+        self.top5_count / self.rows.max(1.0)
+    }
+}
+
 /// One row of the Fig.-6 table: foreground vs background per-iteration ms.
 #[derive(Clone, Debug)]
 pub struct BreakdownRow {
@@ -98,6 +146,35 @@ mod tests {
         assert!((l - 1.0).abs() < 0.01);
         assert!((t - 10.0).abs() < 0.01);
         assert_eq!(w, 0.0);
+    }
+
+    #[test]
+    fn train_metrics_weighting_pinned() {
+        // Two plain b=8 steps and one augmented b+r=10 step with distinct
+        // per-step stats; the aggregate must weight loss by rows and treat
+        // top5 as a count — exact values computed by hand.
+        let mut m = TrainMetrics::default();
+        m.add_step(2.0, 4.0, 8.0); // plain: mean loss 2.0, 4/8 in top-5
+        m.add_step(1.0, 6.0, 8.0); // plain: mean loss 1.0, 6/8 in top-5
+        m.add_step(0.5, 9.0, 10.0); // augmented: mean loss 0.5, 9/10
+        // loss: (2*8 + 1*8 + 0.5*10) / 26 = 29/26
+        assert!((m.mean_loss() - 29.0 / 26.0).abs() < 1e-12);
+        // top5: (4 + 6 + 9) / 26
+        assert!((m.top5_accuracy() - 19.0 / 26.0).abs() < 1e-12);
+
+        // merge of per-worker partials equals one stream
+        let mut a = TrainMetrics::default();
+        a.add_step(2.0, 4.0, 8.0);
+        let mut b = TrainMetrics::default();
+        b.add_step(1.0, 6.0, 8.0);
+        b.add_step(0.5, 9.0, 10.0);
+        a.merge(&b);
+        assert_eq!(a, m);
+
+        // empty accumulator divides by the 1.0 guard, not zero
+        let empty = TrainMetrics::default();
+        assert_eq!(empty.mean_loss(), 0.0);
+        assert_eq!(empty.top5_accuracy(), 0.0);
     }
 
     #[test]

@@ -5,6 +5,6 @@ pub mod breakdown;
 pub mod csv;
 pub mod report;
 
-pub use breakdown::WorkerBreakdown;
+pub use breakdown::{TrainMetrics, WorkerBreakdown};
 pub use csv::CsvWriter;
 pub use report::{EpochRecord, EvalRecord, RunReport};

@@ -1,4 +1,10 @@
 //! Artifact manifest — the contract emitted by `python/compile/aot.py`.
+//!
+//! When no `manifest.json` is on disk (the common case in offline builds:
+//! the Python lowering step never ran), [`Manifest::synthetic`] derives an
+//! equivalent manifest from the variant table that `python/compile/model.py`
+//! defines, and initial parameters are He-generated deterministically
+//! instead of being read from `*_init.bin`.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -6,6 +12,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::formats::json::Json;
+use crate::util::rng::Rng;
 
 /// One parameter tensor's name and shape (manifest order = wire order).
 #[derive(Clone, Debug, PartialEq)]
@@ -86,6 +93,91 @@ impl Manifest {
             .get(name)
             .ok_or_else(|| anyhow!("variant `{name}` not in manifest (have: {:?})",
                                    self.variants.keys().collect::<Vec<_>>()))
+    }
+
+    /// Whether `dir` holds a loadable manifest.
+    pub fn exists_in(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// Build a manifest from the built-in variant table (mirrors
+    /// `python/compile/model.py::VARIANTS`) — no files involved.
+    pub fn synthetic(input_dim: usize, num_classes: usize, batch: usize,
+                     mut reps_list: Vec<usize>, eval_batch: usize) -> Manifest {
+        reps_list.sort_unstable();
+        reps_list.dedup();
+        let table: [(&str, &str, &[usize], f64, f64); 3] = [
+            ("resnet50_sim", "ResNet-50 (sim)", &[1024, 1024, 512], 0.0125, 1e-5),
+            ("resnet18_sim", "ResNet-18 (sim)", &[512, 256], 0.0125, 1e-5),
+            ("ghostnet50_sim", "GhostNet-50 (sim)", &[384, 384, 384], 0.01, 1.5e-5),
+        ];
+        let mut variants = BTreeMap::new();
+        for (name, label, hidden, base_lr, weight_decay) in table {
+            let mut widths = Vec::with_capacity(hidden.len() + 2);
+            widths.push(input_dim);
+            widths.extend_from_slice(hidden);
+            widths.push(num_classes);
+            let mut params = Vec::new();
+            for (idx, pair) in widths.windows(2).enumerate() {
+                params.push(ParamSpec { name: format!("w{idx}"),
+                                        shape: vec![pair[0], pair[1]] });
+                params.push(ParamSpec { name: format!("b{idx}"),
+                                        shape: vec![pair[1]] });
+            }
+            let num_params: usize = params.iter().map(ParamSpec::numel).sum();
+            let train_aug_files: BTreeMap<usize, String> = reps_list
+                .iter()
+                .map(|&r| (r, format!("<native:{name}:train_aug_r{r}>")))
+                .collect();
+            variants.insert(name.to_string(), VariantMeta {
+                name: name.to_string(),
+                label: label.to_string(),
+                hidden: hidden.to_vec(),
+                base_lr,
+                weight_decay,
+                momentum: 0.9,
+                num_params,
+                flops_per_step_b1: 2 * num_params as u64,
+                params,
+                init_file: String::new(),
+                train_file: format!("<native:{name}:train>"),
+                train_aug_files,
+                update_file: format!("<native:{name}:update>"),
+                eval_file: format!("<native:{name}:eval>"),
+            });
+        }
+        Manifest {
+            dir: PathBuf::from("<synthetic>"),
+            input_dim,
+            num_classes,
+            batch,
+            reps_list,
+            eval_batch,
+            variants,
+        }
+    }
+
+    /// A variant's initial parameters: read from its flat f32 init file
+    /// when one exists, else deterministic He-normal weights + zero biases
+    /// (the same scheme `model.py::init_params` lowers into the artifacts).
+    pub fn init_params(&self, v: &VariantMeta) -> Result<Vec<Vec<f32>>> {
+        if !v.init_file.is_empty() && self.dir.join(&v.init_file).exists() {
+            return self.read_init_params(v);
+        }
+        let seed = v.name.bytes()
+            .fold(0xC0FFEEu64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(v.params.len());
+        for spec in &v.params {
+            let n = spec.numel();
+            if spec.shape.len() > 1 {
+                let scale = (2.0 / spec.shape[0] as f64).sqrt();
+                out.push((0..n).map(|_| (rng.normal() * scale) as f32).collect());
+            } else {
+                out.push(vec![0.0f32; n]);
+            }
+        }
+        Ok(out)
     }
 
     /// Read a variant's initial parameters from its flat f32 init file.
@@ -200,5 +292,47 @@ mod tests {
     fn unknown_variant_errors() {
         let Some(m) = manifest() else { return };
         assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_matches_model_py_geometry() {
+        let m = Manifest::synthetic(3072, 40, 56, vec![7, 3, 7], 50);
+        assert_eq!(m.input_dim, 3072);
+        assert_eq!(m.reps_list, vec![3, 7]); // sorted, deduped
+        assert_eq!(m.variants.len(), 3);
+        let v = m.variant("resnet50_sim").unwrap();
+        assert_eq!(v.hidden, vec![1024, 1024, 512]);
+        // widths 3072 -> 1024 -> 1024 -> 512 -> 40
+        assert_eq!(v.params.len(), 8);
+        assert_eq!(v.params[0].shape, vec![3072, 1024]);
+        assert_eq!(v.params[7].shape, vec![40]);
+        assert_eq!(v.num_params,
+                   v.params.iter().map(ParamSpec::numel).sum::<usize>());
+        assert!(v.train_aug_files.contains_key(&7));
+        assert!(!v.train_aug_files.contains_key(&5));
+    }
+
+    #[test]
+    fn generated_init_params_are_he_and_deterministic() {
+        let m = Manifest::synthetic(3072, 8, 8, vec![2], 10);
+        let v = m.variant("resnet18_sim").unwrap();
+        let a = m.init_params(v).unwrap();
+        let b = m.init_params(v).unwrap();
+        assert_eq!(a, b, "init must be deterministic");
+        assert_eq!(a.len(), v.params.len());
+        for (t, spec) in a.iter().zip(&v.params) {
+            assert_eq!(t.len(), spec.numel());
+            if spec.shape.len() > 1 {
+                assert!(t.iter().any(|&x| x != 0.0));
+                // He-normal: sample variance ~ 2/fan_in
+                let var = t.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+                    / t.len() as f64;
+                let expect = 2.0 / spec.shape[0] as f64;
+                assert!((var / expect - 1.0).abs() < 0.25,
+                        "{}: var {var} vs {expect}", spec.name);
+            } else {
+                assert!(t.iter().all(|&x| x == 0.0));
+            }
+        }
     }
 }

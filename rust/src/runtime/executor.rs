@@ -1,28 +1,35 @@
-//! The PJRT executor: compiled train/eval/update steps for one model
-//! variant, plus parameter-state plumbing.
+//! The native executor: train/eval/update steps for one model variant.
 //!
-//! One `ModelExecutor` holds one compiled executable per artifact (compile
-//! happens once at startup; the request path only executes). Parameters and
-//! momenta live as XLA `Literal`s in manifest order; gradients come back the
-//! same way, are ring-averaged by [`crate::cluster`], and flow into the
-//! compiled fused-SGD update.
+//! Earlier revisions executed AOT-compiled HLO through the `xla` PJRT
+//! bindings; offline build environments have neither the crate nor the
+//! `xla_extension` C++ runtime, so the executor now implements the same
+//! model semantics natively in Rust (see `python/compile/model.py`, the
+//! still-authoritative reference): an MLP over the Pallas `dense` kernel's
+//! math, fused softmax-xent loss, rank-based top-1/top-5 counts, and the
+//! fused SGD-momentum + weight-decay update. Parameters and momenta live as
+//! [`Literal`]s in manifest order; gradients come back the same way, are
+//! ring-averaged by [`crate::cluster`], and flow into the fused update.
+//!
+//! Every method takes `&self` and the struct is plain data + atomic
+//! counters, so one executor is shared by all concurrent worker threads of
+//! the trainer runtime.
 
-use std::collections::BTreeMap;
-use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::tensor::Batch;
 
 use super::artifact::{Manifest, VariantMeta};
+pub use super::literal::{literal_to_vec, make_literal, Literal};
 
 /// Result of one train step (before all-reduce).
 pub struct StepOutput {
     pub loss: f32,
+    /// Top-1 correct COUNT over the step's rows (not a rate).
     pub top1: f32,
+    /// Top-5 correct COUNT over the step's rows (not a rate).
     pub top5: f32,
     pub grads: Vec<Literal>,
 }
@@ -62,64 +69,57 @@ impl ExecStats {
 }
 
 pub struct ModelExecutor {
-    client: PjRtClient,
     pub meta: VariantMeta,
     pub input_dim: usize,
     pub batch: usize,
     pub eval_batch: usize,
-    train: PjRtLoadedExecutable,
-    train_aug: BTreeMap<usize, PjRtLoadedExecutable>,
-    update: PjRtLoadedExecutable,
-    eval: PjRtLoadedExecutable,
+    /// (fan_in, fan_out) per dense layer, input → hidden* → logits.
+    layers: Vec<(usize, usize)>,
     init_params: Vec<Vec<f32>>,
     pub stats: ExecStats,
 }
 
-fn compile(client: &PjRtClient, dir: &Path, file: &str) -> Result<PjRtLoadedExecutable> {
-    let path = dir.join(file);
-    let proto = HloModuleProto::from_text_file(
-        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)?;
-    let comp = XlaComputation::from_proto(&proto);
-    Ok(client.compile(&comp)?)
-}
-
 impl ModelExecutor {
-    /// Compile all artifacts of `variant`. `reps` lists the r values whose
-    /// augmented step will be used (must be lowered in the manifest).
+    /// Build the executor for `variant`. `reps` lists the r values whose
+    /// augmented step will be used (must be declared in the manifest, the
+    /// same contract the AOT artifacts enforced).
     pub fn new(manifest: &Manifest, variant: &str, reps: &[usize]) -> Result<ModelExecutor> {
         let meta = manifest.variant(variant)?.clone();
-        let client = PjRtClient::cpu()?;
-        let dir = &manifest.dir;
-        let train = compile(&client, dir, &meta.train_file)?;
-        let mut train_aug = BTreeMap::new();
         for &r in reps {
-            let file = meta.train_aug_files.get(&r).ok_or_else(|| {
-                anyhow!("no train_aug artifact for r={r} (have {:?}); \
-                         re-run aot.py with --reps-list",
-                        meta.train_aug_files.keys().collect::<Vec<_>>())
-            })?;
-            train_aug.insert(r, compile(&client, dir, file)?);
+            if !meta.train_aug_files.contains_key(&r) {
+                bail!("no train_aug artifact for r={r} (have {:?}); \
+                       re-run aot.py with --reps-list",
+                      meta.train_aug_files.keys().collect::<Vec<_>>());
+            }
         }
-        let update = compile(&client, dir, &meta.update_file)?;
-        let eval = compile(&client, dir, &meta.eval_file)?;
-        let init_params = manifest.read_init_params(&meta)?;
+        if meta.params.len() < 2 || meta.params.len() % 2 != 0 {
+            bail!("variant `{variant}` parameter list is not (w, b) pairs");
+        }
+        let mut layers = Vec::with_capacity(meta.params.len() / 2);
+        let mut expect_in = manifest.input_dim;
+        for pair in meta.params.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            if w.shape.len() != 2 || b.shape.len() != 1 || w.shape[1] != b.shape[0] {
+                bail!("variant `{variant}`: bad layer shapes {:?} / {:?}",
+                      w.shape, b.shape);
+            }
+            if w.shape[0] != expect_in {
+                bail!("variant `{variant}`: layer fan-in {} != expected {expect_in}",
+                      w.shape[0]);
+            }
+            expect_in = w.shape[1];
+            layers.push((w.shape[0], w.shape[1]));
+        }
+        let init_params = manifest.init_params(&meta)?;
         Ok(ModelExecutor {
-            client,
             meta,
             input_dim: manifest.input_dim,
             batch: manifest.batch,
             eval_batch: manifest.eval_batch,
-            train,
-            train_aug,
-            update,
-            eval,
+            layers,
             init_params,
             stats: ExecStats::default(),
         })
-    }
-
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
     }
 
     /// Fresh (params, momenta) state in manifest order.
@@ -128,94 +128,181 @@ impl ModelExecutor {
         let mut moms = Vec::with_capacity(self.meta.params.len());
         for (values, spec) in self.init_params.iter().zip(&self.meta.params) {
             params.push(make_literal(values, &spec.shape)?);
-            moms.push(make_literal(&vec![0.0; spec.numel()], &spec.shape)?);
+            moms.push(Literal::zeros(&spec.shape));
         }
         Ok((params, moms))
     }
 
-    fn batch_literals(&self, batch: &Batch, rows: usize) -> Result<(Literal, Literal)> {
+    fn check_batch(&self, batch: &Batch, rows: usize) -> Result<(Vec<f32>, Vec<i32>)> {
         if batch.len() != rows {
-            bail!("batch has {} rows, artifact wants {rows}", batch.len());
+            bail!("batch has {} rows, executor wants {rows}", batch.len());
         }
         let (xs, ys) = batch.flatten();
         if xs.len() != rows * self.input_dim {
             bail!("batch features {} != {rows}x{}", xs.len(), self.input_dim);
         }
-        let x = Literal::vec1(&xs).reshape(&[rows as i64, self.input_dim as i64])?;
-        let y = Literal::vec1(&ys);
-        Ok((x, y))
+        Ok((xs, ys))
     }
 
-    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&Literal]) -> Result<Vec<Literal>> {
-        // NOT `exe.execute(...)`: the crate's C++ glue for `execute` leaks
-        // every input device buffer (`buffer.release()` with no matching
-        // free), ~70 MB per resnet50_sim train step — found via the RSS
-        // regression test below. Uploading through `buffer_from_host_literal`
-        // gives us owned `PjRtBuffer`s whose Drop frees them, and `execute_b`
-        // borrows without taking ownership.
-        let mut input_buffers = Vec::with_capacity(args.len());
-        for lit in args {
-            input_buffers.push(self.client.buffer_from_host_literal(None, lit)?);
+    /// Forward pass: returns the activations per layer — `acts[0]` is the
+    /// input, `acts[L]` the logits; hidden activations are post-ReLU (ReLU
+    /// gradients are recovered from the sign of the stored activation).
+    fn forward(&self, params: &[Literal], xs: Vec<f32>, rows: usize) -> Vec<Vec<f32>> {
+        let num_layers = self.layers.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(num_layers + 1);
+        acts.push(xs);
+        for (l, &(fan_in, fan_out)) in self.layers.iter().enumerate() {
+            let w = params[2 * l].data();
+            let b = params[2 * l + 1].data();
+            let mut z = vec![0.0f32; rows * fan_out];
+            for row in z.chunks_mut(fan_out) {
+                row.copy_from_slice(b);
+            }
+            matmul_acc(&acts[l], rows, fan_in, w, fan_out, &mut z);
+            if l + 1 < num_layers {
+                for v in &mut z {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
         }
-        let result = exe.execute_b::<&xla::PjRtBuffer>(
-            &input_buffers.iter().collect::<Vec<_>>())?;
-        let tuple = result[0][0].to_literal_sync()?;
-        Ok(tuple.to_tuple()?)
+        acts
     }
 
-    fn step_output(&self, mut out: Vec<Literal>) -> Result<StepOutput> {
-        if out.len() != 3 + self.meta.params.len() {
-            bail!("train step returned {} outputs, want {}",
-                  out.len(), 3 + self.meta.params.len());
+    /// Softmax-xent losses, rank-based hit counts and (optionally) the
+    /// scaled logit gradients for one batch of logits.
+    fn loss_and_counts(&self, logits: &[f32], ys: &[i32], rows: usize,
+                       grad_scale: Option<f32>)
+                       -> (f64, f64, f64, Option<Vec<f32>>) {
+        let k = self.layers.last().expect("at least one layer").1;
+        let mut loss_sum = 0.0f64;
+        let mut top1 = 0.0f64;
+        let mut top5 = 0.0f64;
+        let mut dlogits = grad_scale.map(|_| vec![0.0f32; rows * k]);
+        for i in 0..rows {
+            let row = &logits[i * k..(i + 1) * k];
+            let label = ys[i] as usize;
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f64;
+            for &x in row {
+                denom += ((x - m) as f64).exp();
+            }
+            let lse = denom.ln() + m as f64;
+            loss_sum += lse - row[label] as f64;
+            // rank = strictly-greater logits; exact ties count optimistically
+            // (measure-zero for continuous logits), matching the reference.
+            let picked = row[label];
+            let rank = row.iter().filter(|&&x| x > picked).count();
+            if rank < 1 {
+                top1 += 1.0;
+            }
+            if rank < 5 {
+                top5 += 1.0;
+            }
+            if let (Some(d), Some(g)) = (dlogits.as_mut(), grad_scale) {
+                let drow = &mut d[i * k..(i + 1) * k];
+                for (j, (&x, dv)) in row.iter().zip(drow.iter_mut()).enumerate() {
+                    let p = (((x - m) as f64).exp() / denom) as f32;
+                    let onehot = if j == label { 1.0 } else { 0.0 };
+                    *dv = (p - onehot) * g;
+                }
+            }
         }
-        let grads = out.split_off(3);
+        (loss_sum, top1, top5, dlogits)
+    }
+
+    /// Backward pass: gradients in manifest order (w0, b0, w1, b1, ...).
+    fn backward(&self, params: &[Literal], acts: &[Vec<f32>], rows: usize,
+                dlogits: Vec<f32>) -> Result<Vec<Literal>> {
+        let num_layers = self.layers.len();
+        let mut grads: Vec<Option<Literal>> = (0..2 * num_layers).map(|_| None).collect();
+        let mut dz = dlogits;
+        for l in (0..num_layers).rev() {
+            let (fan_in, fan_out) = self.layers[l];
+            let a = &acts[l];
+            // dW = aᵀ·dz
+            let mut dw = vec![0.0f32; fan_in * fan_out];
+            matmul_at_b(a, rows, fan_in, &dz, fan_out, &mut dw);
+            // db = column sums of dz
+            let mut db = vec![0.0f32; fan_out];
+            for row in dz.chunks(fan_out) {
+                for (d, &v) in db.iter_mut().zip(row) {
+                    *d += v;
+                }
+            }
+            grads[2 * l] = Some(Literal::new(vec![fan_in, fan_out], dw)?);
+            grads[2 * l + 1] = Some(Literal::new(vec![fan_out], db)?);
+            if l > 0 {
+                // dh = dz·Wᵀ, masked by the ReLU of the previous layer.
+                let w = params[2 * l].data();
+                let mut dh = vec![0.0f32; rows * fan_in];
+                matmul_a_bt(&dz, rows, fan_out, w, fan_in, &mut dh);
+                for (d, &h) in dh.iter_mut().zip(a.iter()) {
+                    if h <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                dz = dh;
+            }
+        }
+        Ok(grads.into_iter().map(|g| g.expect("all layers visited")).collect())
+    }
+
+    fn step(&self, params: &[Literal], xs: Vec<f32>, ys: Vec<i32>,
+            rows: usize) -> Result<StepOutput> {
+        let acts = self.forward(params, xs, rows);
+        let logits = acts.last().expect("forward produced logits");
+        let scale = 1.0 / rows as f32;
+        let (loss_sum, top1, top5, dlogits) =
+            self.loss_and_counts(logits, &ys, rows, Some(scale));
+        let grads = self.backward(params, &acts, rows,
+                                  dlogits.expect("grad requested"))?;
         Ok(StepOutput {
-            loss: out[0].get_first_element::<f32>()?,
-            top1: out[1].get_first_element::<f32>()?,
-            top5: out[2].get_first_element::<f32>()?,
+            loss: (loss_sum / rows as f64) as f32,
+            top1: top1 as f32,
+            top5: top5 as f32,
             grads,
         })
     }
 
     /// Plain step over a size-b batch (baselines / warm-up iterations).
     pub fn train_step(&self, params: &[Literal], batch: &Batch) -> Result<StepOutput> {
-        let (x, y) = self.batch_literals(batch, self.batch)?;
-        let mut args: Vec<&Literal> = params.iter().collect();
-        args.push(&x);
-        args.push(&y);
+        let (xs, ys) = self.check_batch(batch, self.batch)?;
         let t0 = Instant::now();
-        let out = self.run(&self.train, &args)?;
+        let out = self.step(params, xs, ys, self.batch)?;
         self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
-        self.step_output(out)
+        Ok(out)
     }
 
-    /// Rehearsal step: b-batch + r representatives, assembled on-device by
-    /// the Pallas concat kernel inside the artifact.
+    /// Rehearsal step: b-batch + r representatives, concatenated row-wise
+    /// (the concat_rows kernel of the AOT reference).
     pub fn train_step_aug(&self, params: &[Literal], batch: &Batch,
                           reps: &Batch) -> Result<StepOutput> {
         let r = reps.len();
-        let exe = self.train_aug.get(&r).ok_or_else(|| {
-            anyhow!("no compiled augmented step for r={r}")
-        })?;
-        let (xb, yb) = self.batch_literals(batch, self.batch)?;
-        let (xr_v, yr_v) = reps.flatten();
-        let xr = Literal::vec1(&xr_v).reshape(&[r as i64, self.input_dim as i64])?;
-        let yr = Literal::vec1(&yr_v);
-        let mut args: Vec<&Literal> = params.iter().collect();
-        args.push(&xb);
-        args.push(&yb);
-        args.push(&xr);
-        args.push(&yr);
+        if !self.meta.train_aug_files.contains_key(&r) {
+            return Err(anyhow!("no compiled augmented step for r={r}"));
+        }
+        let (mut xs, mut ys) = self.check_batch(batch, self.batch)?;
+        let (xr, yr) = reps.flatten();
+        if xr.len() != r * self.input_dim {
+            bail!("reps features {} != {r}x{}", xr.len(), self.input_dim);
+        }
+        xs.extend_from_slice(&xr);
+        ys.extend_from_slice(&yr);
+        let rows = self.batch + r;
         let t0 = Instant::now();
-        let out = self.run(exe, &args)?;
+        let out = self.step(params, xs, ys, rows)?;
         self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
-        self.step_output(out)
+        Ok(out)
     }
 
     /// Fused SGD update: consumes (params, moms, averaged grads, lr) and
-    /// returns the new (params, moms).
+    /// returns the new (params, moms):
+    /// `m' = mu·m + g + wd·w ; w' = w − lr·m'` (biases skip weight decay).
     pub fn apply_update(&self, params: Vec<Literal>, moms: Vec<Literal>,
                         grads: &[Literal], lr: f64)
                         -> Result<(Vec<Literal>, Vec<Literal>)> {
@@ -223,55 +310,228 @@ impl ModelExecutor {
         if grads.len() != p {
             bail!("update got {} grads, want {p}", grads.len());
         }
-        let lr_lit = Literal::vec1(&[lr as f32]);
-        let mut args: Vec<&Literal> = Vec::with_capacity(3 * p + 1);
-        args.extend(params.iter());
-        args.extend(moms.iter());
-        args.extend(grads.iter());
-        args.push(&lr_lit);
         let t0 = Instant::now();
-        let mut out = self.run(&self.update, &args)?;
+        let mu = self.meta.momentum as f32;
+        let lr = lr as f32;
+        let mut new_params = Vec::with_capacity(p);
+        let mut new_moms = Vec::with_capacity(p);
+        for ((mut w, mut m), g) in params.into_iter().zip(moms).zip(grads) {
+            if w.numel() != g.numel() || m.numel() != g.numel() {
+                bail!("update tensor size mismatch: w={} m={} g={}",
+                      w.numel(), m.numel(), g.numel());
+            }
+            let wd = if w.shape().len() > 1 { self.meta.weight_decay as f32 } else { 0.0 };
+            {
+                let (wv, mv) = (w.data_mut(), m.data_mut());
+                for ((wx, mx), &gx) in wv.iter_mut().zip(mv.iter_mut()).zip(g.data()) {
+                    let m2 = mu * *mx + gx + wd * *wx;
+                    *mx = m2;
+                    *wx -= lr * m2;
+                }
+            }
+            new_params.push(w);
+            new_moms.push(m);
+        }
         self.stats.update_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.update_steps.fetch_add(1, Ordering::Relaxed);
-        if out.len() != 2 * p {
-            bail!("update returned {} outputs, want {}", out.len(), 2 * p);
-        }
-        let new_moms = out.split_off(p);
-        Ok((out, new_moms))
+        Ok((new_params, new_moms))
     }
 
     /// Eval over one eval-batch: (loss_sum, top1_count, top5_count).
     pub fn eval_step(&self, params: &[Literal], batch: &Batch) -> Result<(f32, f32, f32)> {
-        let (x, y) = self.batch_literals(batch, self.eval_batch)?;
-        let mut args: Vec<&Literal> = params.iter().collect();
-        args.push(&x);
-        args.push(&y);
+        let (xs, ys) = self.check_batch(batch, self.eval_batch)?;
         let t0 = Instant::now();
-        let out = self.run(&self.eval, &args)?;
+        let acts = self.forward(params, xs, self.eval_batch);
+        let logits = acts.last().expect("forward produced logits");
+        let (loss_sum, top1, top5, _) =
+            self.loss_and_counts(logits, &ys, self.eval_batch, None);
         self.stats.eval_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.eval_steps.fetch_add(1, Ordering::Relaxed);
-        if out.len() != 3 {
-            bail!("eval returned {} outputs, want 3", out.len());
+        Ok((loss_sum as f32, top1 as f32, top5 as f32))
+    }
+}
+
+/// `out (m×n) += a (m×k) · w (k×n)`, row-major, cache-friendly i-k-j order.
+fn matmul_acc(a: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // ReLU sparsity
+            }
+            let wrow = &w[l * n..(l + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv;
+            }
         }
-        Ok((
-            out[0].get_first_element::<f32>()?,
-            out[1].get_first_element::<f32>()?,
-            out[2].get_first_element::<f32>()?,
-        ))
     }
 }
 
-/// Build a Literal of `shape` from f32 values.
-pub fn make_literal(values: &[f32], shape: &[usize]) -> Result<Literal> {
-    let lit = Literal::vec1(values);
-    if shape.len() == 1 {
-        return Ok(lit);
+/// `out (k×n) += aᵀ (k×m) · d (m×n)` where `a` is stored (m×k) row-major.
+fn matmul_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let drow = &d[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[l * n..(l + 1) * n];
+            for (o, &dv) in orow.iter_mut().zip(drow) {
+                *o += av * dv;
+            }
+        }
     }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
 }
 
-/// Flatten a Literal back to f32 (all-reduce path, tests).
-pub fn literal_to_vec(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+/// `out (m×k) = d (m×n) · wᵀ (n×k)` where `w` is stored (k×n) row-major.
+fn matmul_a_bt(d: &[f32], m: usize, n: usize, w: &[f32], k: usize, out: &mut [f32]) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let drow = &d[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (l, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[l * n..(l + 1) * n];
+            let mut s = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                s += dv * wv;
+            }
+            *o = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Sample;
+    use crate::util::rng::Rng;
+
+    fn tiny_exec() -> ModelExecutor {
+        // K=8, b=8, r∈{2}, eval 10 — the tiny geometry, resnet18_sim.
+        let m = Manifest::synthetic(3072, 8, 8, vec![2], 10);
+        ModelExecutor::new(&m, "resnet18_sim", &[2]).unwrap()
+    }
+
+    fn batch(exec: &ModelExecutor, rows: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        Batch::new((0..rows).map(|_| {
+            Sample::new(rng.below(8) as u32,
+                        (0..exec.input_dim).map(|_| rng.normal() as f32 * 0.5).collect())
+        }).collect())
+    }
+
+    #[test]
+    fn initial_loss_is_ln_k() {
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 1);
+        let out = exec.train_step(&params, &b).unwrap();
+        let lnk = (8.0f32).ln();
+        assert!((out.loss - lnk).abs() < 0.8, "loss {} vs lnK {lnk}", out.loss);
+        assert!(out.top1 <= out.top5 && out.top5 <= 8.0);
+        assert_eq!(out.grads.len(), exec.meta.params.len());
+    }
+
+    #[test]
+    fn unknown_variant_or_reps_rejected() {
+        let m = Manifest::synthetic(3072, 8, 8, vec![2], 10);
+        assert!(ModelExecutor::new(&m, "nope", &[2]).is_err());
+        assert!(ModelExecutor::new(&m, "resnet18_sim", &[3]).is_err());
+    }
+
+    #[test]
+    fn fused_update_is_sgd_with_momentum() {
+        let exec = tiny_exec();
+        let (params, moms) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 2);
+        let out = exec.train_step(&params, &b).unwrap();
+        let p0 = literal_to_vec(&params[0]).unwrap();
+        let g0 = literal_to_vec(&out.grads[0]).unwrap();
+        let lr = 0.05f32;
+        let (p2, m2) = exec.apply_update(params, moms, &out.grads, lr as f64).unwrap();
+        let p1 = literal_to_vec(&p2[0]).unwrap();
+        let m1 = literal_to_vec(&m2[0]).unwrap();
+        let wd = exec.meta.weight_decay as f32;
+        for i in (0..p0.len()).step_by(997) {
+            let expect_m = g0[i] + wd * p0[i];
+            let expect_p = p0[i] - lr * expect_m;
+            assert!((m1[i] - expect_m).abs() < 1e-5, "mom[{i}]");
+            assert!((p1[i] - expect_p).abs() < 1e-5, "param[{i}]");
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Spot-check backprop against central differences on a few weights.
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 3);
+        let out = exec.train_step(&params, &b).unwrap();
+        let eps = 1e-2f32;
+        for &(tensor, idx) in &[(0usize, 5usize), (1, 3), (2, 77), (5, 1)] {
+            let mut plus = params.clone();
+            plus[tensor].data_mut()[idx] += eps;
+            let lp = exec.train_step(&plus, &b).unwrap().loss;
+            let mut minus = params.clone();
+            minus[tensor].data_mut()[idx] -= eps;
+            let lm = exec.train_step(&minus, &b).unwrap().loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = out.grads[tensor].data()[idx];
+            assert!((fd - an).abs() < 2e-2_f32.max(0.2 * an.abs()),
+                    "tensor {tensor}[{idx}]: fd {fd} vs analytic {an}");
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_batch() {
+        let exec = tiny_exec();
+        let (mut params, mut moms) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 4);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..12 {
+            let out = exec.train_step(&params, &b).unwrap();
+            first.get_or_insert(out.loss);
+            last = out.loss;
+            let (p, m) = exec.apply_update(params, moms, &out.grads, 0.05).unwrap();
+            params = p;
+            moms = m;
+        }
+        let first = first.unwrap();
+        assert!(last < first * 0.8, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn augmented_step_equals_concat_semantics() {
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 5);
+        let reps = batch(&exec, 2, 6);
+        let aug = exec.train_step_aug(&params, &b, &reps).unwrap();
+        assert!(aug.loss.is_finite());
+        assert!(aug.top5 <= 10.0);
+        let plain = exec.train_step(&params, &b).unwrap();
+        assert_ne!(literal_to_vec(&aug.grads[0]).unwrap(),
+                   literal_to_vec(&plain.grads[0]).unwrap());
+    }
+
+    #[test]
+    fn eval_counts_are_bounded() {
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b = batch(&exec, 10, 7);
+        let (loss_sum, top1, top5) = exec.eval_step(&params, &b).unwrap();
+        assert!(loss_sum.is_finite() && loss_sum > 0.0);
+        assert!(top1 >= 0.0 && top1 <= top5 && top5 <= 10.0);
+    }
 }

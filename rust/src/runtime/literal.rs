@@ -1,0 +1,82 @@
+//! Host tensors exchanged with the executor backend.
+//!
+//! `Literal` used to be `xla::Literal` (a PJRT device-transferable buffer);
+//! the native backend keeps the same shape-checked, manifest-ordered value
+//! semantics in plain host memory so the trainer, all-reduce and tests are
+//! backend-agnostic. Everything is `Send + Sync` plain data, which is what
+//! lets the threaded worker runtime share parameter sets behind an `RwLock`
+//! without copies.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor with an explicit shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Literal> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("literal shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Literal { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Literal {
+        let n = shape.iter().product();
+        Literal { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+/// Build a Literal of `shape` from f32 values (manifest order).
+pub fn make_literal(values: &[f32], shape: &[usize]) -> Result<Literal> {
+    Literal::new(shape.to_vec(), values.to_vec())
+}
+
+/// Flatten a Literal back to f32 (all-reduce path, tests).
+pub fn literal_to_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.data().to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Literal::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let l = Literal::new(vec![2, 3], vec![1.0; 6]).unwrap();
+        assert_eq!(l.shape(), &[2, 3]);
+        assert_eq!(l.numel(), 6);
+    }
+
+    #[test]
+    fn round_trips() {
+        let l = make_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(literal_to_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(Literal::zeros(&[3]).data(), &[0.0; 3]);
+    }
+}

@@ -1,10 +1,14 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
-//! them on the CPU PJRT client — the only place compute happens at training
-//! time. Pattern follows /opt/xla-example/load_hlo: HLO *text* →
-//! `HloModuleProto::from_text_file` → compile → execute.
+//! Model runtime: the artifact manifest (on-disk from `python/compile/aot.py`
+//! when present, synthesized from the built-in variant table otherwise) and
+//! the native executor that implements the reference model semantics —
+//! MLP forward/backward, fused softmax-xent, fused SGD-momentum — in plain
+//! Rust. All executor state is `Sync`, so the trainer's concurrent worker
+//! threads share one executor.
 
 pub mod artifact;
 pub mod executor;
+pub mod literal;
 
 pub use artifact::{Manifest, VariantMeta};
 pub use executor::{ModelExecutor, StepOutput};
+pub use literal::{literal_to_vec, make_literal, Literal};

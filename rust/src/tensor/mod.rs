@@ -1,12 +1,16 @@
 //! Host-side tensors and training-sample records.
 //!
 //! The rehearsal buffer stores raw samples ("generic tensors", paper §VII) in
-//! host memory — pinned for RDMA in the original system, plain `Vec<f32>`
-//! slabs here. `Tensor` is deliberately minimal: shape-checked storage with
-//! the handful of ops the coordinator needs (the heavy math lives in the AOT
-//! artifacts executed by `runtime`).
+//! host memory — pinned for RDMA in the original system, refcounted
+//! `Arc<[f32]>` slabs here so every hop of the rehearsal hot path
+//! (`LocalBuffer::fetch_rows`, `Fabric::fetch_bulk`, the engine's job/result
+//! channels, `Batch` assembly) moves an 8-byte refcount instead of deep-
+//! copying a 12 KiB feature vector. `Tensor` is deliberately minimal:
+//! shape-checked storage with the handful of ops the coordinator needs (the
+//! heavy math lives in `runtime`'s native executor).
 
 use std::fmt;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -94,15 +98,22 @@ impl fmt::Debug for Tensor {
 
 /// One training sample: a flattened image (or generic feature vector) plus
 /// its integer class label. This is the unit stored in rehearsal buffers and
-/// moved by the RPC fabric.
+/// moved by the RPC fabric. Features are shared (`Arc<[f32]>`): cloning a
+/// `Sample` bumps a refcount, so buffer fetches and channel sends are
+/// zero-copy; the payload is only materialised once, at construction.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Sample {
     pub label: u32,
-    pub features: Vec<f32>,
+    pub features: Arc<[f32]>,
 }
 
 impl Sample {
     pub fn new(label: u32, features: Vec<f32>) -> Sample {
+        Sample { label, features: features.into() }
+    }
+
+    /// Zero-copy construction from an already-shared feature slab.
+    pub fn shared(label: u32, features: Arc<[f32]>) -> Sample {
         Sample { label, features }
     }
 
@@ -186,6 +197,17 @@ mod tests {
         assert_eq!(a.data(), &[12., 14., 16.]);
         let c = Tensor::zeros(&[4]);
         assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn sample_clone_is_zero_copy() {
+        let s = Sample::new(3, vec![1.0, 2.0, 3.0]);
+        let c = s.clone();
+        assert!(Arc::ptr_eq(&s.features, &c.features),
+                "clone must share the feature slab, not copy it");
+        let shared = Sample::shared(4, Arc::clone(&s.features));
+        assert!(Arc::ptr_eq(&s.features, &shared.features));
+        assert_eq!(shared.wire_bytes(), 3 * 4 + 8);
     }
 
     #[test]

@@ -5,9 +5,9 @@
 //! so far: `accuracy_T = (1/T) Σ_j a_{T,j}`.
 
 use anyhow::{bail, Result};
-use xla::Literal;
 
 use crate::data::{Dataset, TaskSequence};
+use crate::runtime::Literal;
 use crate::metrics::report::EvalRecord;
 use crate::runtime::ModelExecutor;
 use crate::tensor::Batch;

@@ -9,27 +9,53 @@
 //! - **FromScratch** — at each task boundary, re-initialise and train on
 //!   all accumulated tasks (accuracy upper bound, quadratic runtime).
 //!
-//! Data-parallel semantics: the N simulated workers run their shard's train
-//! step per global iteration (sequentially on this 1-core testbed — see
-//! DESIGN.md §1), gradients are averaged exactly by [`GradAccumulator`], a
-//! single parameter copy is updated via the compiled fused-SGD artifact, and
-//! the ring-all-reduce wire time is charged to the virtual clock.
+//! # Worker runtime
+//!
+//! The N simulated workers run as N **persistent OS threads** spawned once
+//! per `drive()` and kept alive for the whole run. Each worker owns its
+//! prefetching [`Loader`] (one per epoch), its [`RehearsalEngine`] (so the
+//! N background engine threads genuinely contend with N foreground train
+//! loops — the paper's overlap claim is exercised under real concurrency),
+//! and its [`WorkerBreakdown`]. The per-iteration protocol is
+//! barrier-synchronised synchronous data parallelism:
+//!
+//! 1. every worker runs load → `engine.update()` → `train_step`
+//!    concurrently, then submits its gradients to its own shard of the
+//!    [`GradAccumulator`];
+//! 2. all workers rendezvous at a [`Barrier`]; the barrier's leader folds
+//!    the shards **in worker order** (arrival-order independent, so a
+//!    fixed seed at `workers = 1` reproduces the sequential
+//!    implementation's report exactly), applies the fused SGD update to
+//!    the single shared parameter copy behind an `RwLock`, and charges the
+//!    ring-all-reduce wire time to the virtual clock;
+//! 3. a second barrier releases everyone into the next iteration with the
+//!    new parameters.
+//!
+//! Concurrency invariants: parameters are only written between the two
+//! barriers (no reader can hold the lock there); gradient shards are
+//! per-worker (no contention on the hot add); worker errors poison the run
+//! instead of abandoning the barrier, so the remaining workers drain the
+//! epoch and the error is reported at the epoch boundary; every worker,
+//! loader and engine thread is joined before `drive()` returns.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::buffer::LocalBuffer;
 use crate::cluster::GradAccumulator;
 use crate::config::{ExperimentConfig, Strategy};
 use crate::data::{Dataset, Loader, ShardPlan, TaskSequence};
-use crate::engine::{EngineParams, RehearsalEngine};
-use crate::metrics::breakdown::WorkerBreakdown;
+use crate::engine::{EngineParams, EngineTimings, RehearsalEngine};
+use crate::metrics::breakdown::{TrainMetrics, WorkerBreakdown};
 use crate::metrics::report::{EpochRecord, RunReport};
 use crate::net::{CostModel, Fabric};
 use crate::optim::LrSchedule;
-use crate::runtime::ModelExecutor;
+use crate::runtime::{Literal, ModelExecutor};
+use crate::tensor::Batch;
 
 use super::eval::Evaluator;
 
@@ -40,6 +66,73 @@ pub struct Trainer<'a> {
     pub tasks: &'a TaskSequence,
     /// Evaluate every `eval_every` epochs (always at task boundaries).
     pub eval_every: usize,
+}
+
+/// The single shared parameter copy (exact data parallelism keeps replicas
+/// bitwise-identical after every all-reduce, so one copy suffices).
+struct ParamState {
+    params: Vec<Literal>,
+    moms: Vec<Literal>,
+}
+
+/// One epoch of work for one worker.
+enum WorkerCmd {
+    Epoch {
+        /// This worker's mini-batches (dataset indices) for the epoch.
+        batches: Vec<Vec<usize>>,
+        loader_seed: u64,
+        lr: f64,
+    },
+    Stop,
+}
+
+/// Everything a worker thread shares with its peers and the coordinator.
+struct Shared<'a> {
+    exec: &'a ModelExecutor,
+    state: &'a RwLock<ParamState>,
+    acc: &'a GradAccumulator,
+    barrier: &'a Barrier,
+    breakdown: &'a [WorkerBreakdown],
+    iterations_done: &'a AtomicUsize,
+    poisoned: &'a AtomicBool,
+    first_error: &'a Mutex<Option<anyhow::Error>>,
+    cost: CostModel,
+    batch: usize,
+    reps: usize,
+}
+
+impl Shared<'_> {
+    fn poison(&self, e: anyhow::Error) {
+        // Recover from std-lock poisoning: this path must never panic, or
+        // the barrier protocol loses a participant.
+        let mut slot = self
+            .first_error
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            *slot = Some(e);
+        }
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Run a fallible, possibly-panicking step and poison the run on failure —
+/// a panicking worker must still reach every barrier or the remaining
+/// workers deadlock (std's `Barrier` has no poisoning).
+fn poison_on_failure(shared: &Shared<'_>, what: &str,
+                     f: impl FnOnce() -> Result<()>) {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => shared.poison(e),
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            shared.poison(anyhow!("{what} panicked: {msg}"));
+        }
+    }
 }
 
 impl<'a> Trainer<'a> {
@@ -92,21 +185,16 @@ impl<'a> Trainer<'a> {
             scope: cfg.buffer.scope,
             async_updates: cfg.buffer.async_updates,
         };
-        let mut engines: Vec<RehearsalEngine> = (0..n)
+        let engines: Vec<RehearsalEngine> = (0..n)
             .map(|w| RehearsalEngine::new(
                 w, Arc::clone(&fabric), params, cfg.training.seed ^ (w as u64) << 16))
             .collect();
 
-        let report = self.drive(Some(&mut engines), |task| {
+        self.drive(Some(engines), |task| {
             // rehearsal trains on the current task's data only; old tasks
             // come back through the buffer.
             self.dataset.train_indices_of_classes(self.tasks.classes(task))
-        }, false)?;
-
-        for e in &mut engines {
-            e.finish()?;
-        }
-        Ok(report)
+        }, false)
     }
 
     // ---------------------------------------------------------------- baselines
@@ -128,132 +216,101 @@ impl<'a> Trainer<'a> {
 
     /// Shared driver. `indices_for_task` picks the training pool per task;
     /// `reset_each_task` re-initialises parameters at task boundaries
-    /// (from-scratch). `engines` enables rehearsal augmentation.
+    /// (from-scratch). `engines` enables rehearsal augmentation; they are
+    /// moved into the worker threads (one each) and torn down — background
+    /// threads joined — before this function returns.
     fn drive(&self,
-             mut engines: Option<&mut Vec<RehearsalEngine>>,
+             engines: Option<Vec<RehearsalEngine>>,
              indices_for_task: impl Fn(usize) -> Vec<usize>,
              reset_each_task: bool) -> Result<RunReport> {
         let cfg = self.cfg;
         let n = cfg.cluster.workers;
         let b = cfg.training.batch;
-        let r = cfg.training.reps;
         let schedule = self.schedule();
-        let cost = self.cost_model();
         let evaluator = Evaluator::new(self.exec, self.dataset, self.tasks);
 
-        let (mut params, mut moms) = self.exec.init_state()?;
+        let rehearsal = engines.is_some();
+        let engine_timings: Vec<Arc<EngineTimings>> = engines
+            .as_ref()
+            .map(|es| es.iter().map(|e| Arc::clone(&e.timings)).collect())
+            .unwrap_or_default();
+        let mut engine_slots: Vec<Option<RehearsalEngine>> = match engines {
+            Some(es) => es.into_iter().map(Some).collect(),
+            None => (0..n).map(|_| None).collect(),
+        };
+        if engine_slots.len() != n {
+            bail!("{} engines for {n} workers", engine_slots.len());
+        }
+
+        let (params0, moms0) = self.exec.init_state()?;
         let shapes: Vec<Vec<usize>> =
             self.exec.meta.params.iter().map(|p| p.shape.clone()).collect();
-        let mut acc = GradAccumulator::new(shapes.clone());
+        let acc = GradAccumulator::with_workers(shapes, n);
         let allreduce_bytes = acc.payload_bytes();
 
+        let state = RwLock::new(ParamState { params: params0, moms: moms0 });
+        let barrier = Barrier::new(n);
         let breakdown: Vec<WorkerBreakdown> =
             (0..n).map(|_| WorkerBreakdown::default()).collect();
-        let mut epochs: Vec<EpochRecord> = Vec::new();
-        let mut global_epoch = 0usize;
-        let mut total_iterations = 0usize;
-        let run_t0 = Instant::now();
+        let iterations_done = AtomicUsize::new(0);
+        let poisoned = AtomicBool::new(false);
+        let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let shared = Shared {
+            exec: self.exec,
+            state: &state,
+            acc: &acc,
+            barrier: &barrier,
+            breakdown: &breakdown,
+            iterations_done: &iterations_done,
+            poisoned: &poisoned,
+            first_error: &first_error,
+            cost: self.cost_model(),
+            batch: b,
+            reps: cfg.training.reps,
+        };
 
-        for task in 0..self.tasks.num_tasks() {
-            if reset_each_task {
-                let (p, m) = self.exec.init_state()?;
-                params = p;
-                moms = m;
-            }
-            let pool = indices_for_task(task);
-            if pool.len() < n * b {
-                bail!("task {task} pool of {} too small for {n} workers x batch {b}",
-                      pool.len());
-            }
-            for epoch_in_task in 0..cfg.training.epochs_per_task {
-                let lr = schedule.lr_at(epoch_in_task);
-                let epoch_t0 = Instant::now();
-                let plan = ShardPlan::new(
-                    pool.clone(), n, b,
-                    cfg.training.seed, task, global_epoch);
-                let mut loaders: Vec<Loader> = (0..n)
-                    .map(|w| {
-                        let batches: Vec<Vec<usize>> = (0..plan.iterations())
-                            .map(|i| plan.batch(w, i).to_vec())
-                            .collect();
-                        Loader::new(self.dataset.clone(), batches,
-                                    cfg.data.augment,
-                                    cfg.training.seed
-                                        ^ ((global_epoch as u64) << 20)
-                                        ^ (w as u64))
-                    })
-                    .collect();
-
-                let mut loss_sum = 0.0f64;
-                let mut top5_sum = 0.0f64;
-                let mut sample_count = 0.0f64;
-                for _iter in 0..plan.iterations() {
-                    for w in 0..n {
-                        // Load (prefetched; wait only).
-                        let t0 = Instant::now();
-                        let batch = loaders[w]
-                            .next_batch()
-                            .ok_or_else(|| anyhow::anyhow!("loader underrun"))?;
-                        breakdown[w].add_load(t0.elapsed());
-
-                        // Rehearsal: the Listing-1 update() primitive.
-                        let reps = match engines.as_mut() {
-                            Some(engs) => engs[w].update(&batch)?,
-                            None => Vec::new(),
-                        };
-
-                        // Train (PJRT).
-                        let augmented = reps.len() == r && engines.is_some();
-                        let t1 = Instant::now();
-                        let out = if augmented {
-                            let reps_batch = crate::tensor::Batch::new(reps);
-                            self.exec.train_step_aug(&params, &batch, &reps_batch)?
-                        } else {
-                            self.exec.train_step(&params, &batch)?
-                        };
-                        breakdown[w].add_train(t1.elapsed());
-                        breakdown[w].bump();
-
-                        let rows = if augmented { b + r } else { b } as f64;
-                        loss_sum += out.loss as f64 * rows;
-                        top5_sum += out.top5 as f64;
-                        sample_count += rows;
-                        acc.add(&out.grads)?;
-                    }
-                    // Synchronous data parallelism: average + fused update.
-                    let (mean_grads, _wire) = acc.reduce(&cost)?;
-                    let (p2, m2) = self.exec.apply_update(
-                        std::mem::take(&mut params),
-                        std::mem::take(&mut moms),
-                        &mean_grads, lr)?;
-                    params = p2;
-                    moms = m2;
-                    total_iterations += 1;
-                }
-                drop(loaders);
-
-                let is_task_end =
-                    epoch_in_task + 1 == cfg.training.epochs_per_task;
-                let eval = if is_task_end
-                    || (global_epoch + 1) % self.eval_every.max(1) == 0
-                {
-                    Some(evaluator.eval_upto(&params, task)?)
-                } else {
-                    None
-                };
-                epochs.push(EpochRecord {
-                    epoch: global_epoch,
-                    task,
-                    lr,
-                    train_loss: loss_sum / sample_count.max(1.0),
-                    train_top5: top5_sum / sample_count.max(1.0),
-                    wall: epoch_t0.elapsed(),
-                    virtual_time: None,
-                    eval,
-                });
-                global_epoch += 1;
-            }
+        let mut cmd_txs: Vec<Sender<WorkerCmd>> = Vec::with_capacity(n);
+        let mut cmd_rxs: Vec<Receiver<WorkerCmd>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            cmd_txs.push(tx);
+            cmd_rxs.push(rx);
         }
+        let (res_tx, res_rx) = channel::<(usize, TrainMetrics)>();
+
+        let run_t0 = Instant::now();
+        let epochs: Vec<EpochRecord> = std::thread::scope(|scope| {
+            // ---- N persistent worker threads --------------------------------
+            for (w, (cmd_rx, engine)) in cmd_rxs
+                .into_iter()
+                .zip(engine_slots.drain(..))
+                .enumerate()
+            {
+                let res_tx = res_tx.clone();
+                let shared = &shared;
+                let dataset = self.dataset.clone();
+                let augment = cfg.data.augment;
+                std::thread::Builder::new()
+                    .name(format!("dcl-worker-{w}"))
+                    .spawn_scoped(scope, move || {
+                        worker_loop(w, shared, dataset, augment, engine,
+                                    cmd_rx, res_tx);
+                    })
+                    .expect("spawn worker thread");
+            }
+            drop(res_tx); // only worker clones remain
+
+            // ---- coordinator ------------------------------------------------
+            let out = self.coordinate(&cmd_txs, &res_rx, &state, &shared,
+                                      &evaluator, &schedule,
+                                      &indices_for_task, reset_each_task);
+            // Always release the workers so the scope can join them, even
+            // when coordination failed.
+            for tx in &cmd_txs {
+                let _ = tx.send(WorkerCmd::Stop);
+            }
+            out
+        })?;
 
         // Aggregate breakdown across workers.
         let mut fg = (0.0, 0.0, 0.0);
@@ -266,9 +323,9 @@ impl<'a> Trainer<'a> {
         fg.1 /= n as f64;
         let mut bg = (0.0, 0.0, 0.0);
         let mut wait_ms = 0.0;
-        if let Some(engs) = engines.as_ref() {
-            for e in engs.iter() {
-                let (w, p, a, wi) = e.timings.per_iteration_ms();
+        if rehearsal {
+            for t in &engine_timings {
+                let (w, p, a, wi) = t.per_iteration_ms();
                 wait_ms += w;
                 bg.0 += p;
                 bg.1 += a;
@@ -284,7 +341,7 @@ impl<'a> Trainer<'a> {
             .iter()
             .rev()
             .find_map(|e| e.eval.clone())
-            .ok_or_else(|| anyhow::anyhow!("no evaluation recorded"))?;
+            .ok_or_else(|| anyhow!("no evaluation recorded"))?;
 
         Ok(RunReport {
             strategy: cfg.training.strategy.name().to_string(),
@@ -299,24 +356,228 @@ impl<'a> Trainer<'a> {
             background_ms: bg,
             train_step_ms: self.exec.stats.train_step_ms(),
             allreduce_bytes,
-            iterations: total_iterations,
+            iterations: iterations_done.load(Ordering::Relaxed),
         })
+    }
+
+    /// Main-thread side of the protocol: plans epochs, hands them to the
+    /// workers, collects per-worker metric shards, evaluates, and surfaces
+    /// the first worker error at the epoch boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn coordinate(&self,
+                  cmd_txs: &[Sender<WorkerCmd>],
+                  res_rx: &Receiver<(usize, TrainMetrics)>,
+                  state: &RwLock<ParamState>,
+                  shared: &Shared<'_>,
+                  evaluator: &Evaluator<'_>,
+                  schedule: &LrSchedule,
+                  indices_for_task: &impl Fn(usize) -> Vec<usize>,
+                  reset_each_task: bool) -> Result<Vec<EpochRecord>> {
+        let cfg = self.cfg;
+        let n = cfg.cluster.workers;
+        let b = cfg.training.batch;
+        let mut epochs: Vec<EpochRecord> = Vec::new();
+        let mut global_epoch = 0usize;
+
+        for task in 0..self.tasks.num_tasks() {
+            if reset_each_task {
+                let (p, m) = self.exec.init_state()?;
+                let mut st = state.write().unwrap();
+                st.params = p;
+                st.moms = m;
+            }
+            let pool = indices_for_task(task);
+            if pool.len() < n * b {
+                bail!("task {task} pool of {} too small for {n} workers x batch {b}",
+                      pool.len());
+            }
+            for epoch_in_task in 0..cfg.training.epochs_per_task {
+                let lr = schedule.lr_at(epoch_in_task);
+                let epoch_t0 = Instant::now();
+                let plan = ShardPlan::new(
+                    pool.clone(), n, b,
+                    cfg.training.seed, task, global_epoch);
+                for (w, tx) in cmd_txs.iter().enumerate() {
+                    let batches: Vec<Vec<usize>> = (0..plan.iterations())
+                        .map(|i| plan.batch(w, i).to_vec())
+                        .collect();
+                    let loader_seed = cfg.training.seed
+                        ^ ((global_epoch as u64) << 20)
+                        ^ (w as u64);
+                    tx.send(WorkerCmd::Epoch { batches, loader_seed, lr })
+                        .map_err(|_| anyhow!("worker {w} hung up"))?;
+                }
+
+                // Per-worker metric shards, merged in worker order so the
+                // aggregate is deterministic for a fixed seed.
+                let mut shards: Vec<TrainMetrics> = vec![TrainMetrics::default(); n];
+                for _ in 0..n {
+                    let (w, m) = res_rx.recv()
+                        .map_err(|_| anyhow!("all workers hung up"))?;
+                    shards[w] = m;
+                }
+                let mut metrics = TrainMetrics::default();
+                for shard in &shards {
+                    metrics.merge(shard);
+                }
+
+                if let Some(e) = shared.first_error.lock().unwrap().take() {
+                    return Err(e);
+                }
+
+                let is_task_end =
+                    epoch_in_task + 1 == cfg.training.epochs_per_task;
+                let eval = if is_task_end
+                    || (global_epoch + 1) % self.eval_every.max(1) == 0
+                {
+                    let st = state.read().unwrap();
+                    Some(evaluator.eval_upto(&st.params, task)?)
+                } else {
+                    None
+                };
+                epochs.push(EpochRecord {
+                    epoch: global_epoch,
+                    task,
+                    lr,
+                    train_loss: metrics.mean_loss(),
+                    train_top5: metrics.top5_accuracy(),
+                    wall: epoch_t0.elapsed(),
+                    virtual_time: None,
+                    eval,
+                });
+                global_epoch += 1;
+            }
+        }
+        Ok(epochs)
     }
 }
 
+/// Body of one persistent worker thread: epochs arrive over the command
+/// channel; iterations synchronise on the shared barrier; the per-epoch
+/// metric shard goes back over the result channel. The engine (and with it
+/// its background thread) is dropped — joined — when the loop exits.
+fn worker_loop(w: usize,
+               shared: &Shared<'_>,
+               dataset: Dataset,
+               augment: bool,
+               mut engine: Option<RehearsalEngine>,
+               cmd_rx: Receiver<WorkerCmd>,
+               res_tx: Sender<(usize, TrainMetrics)>) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        let (batches, loader_seed, lr) = match cmd {
+            WorkerCmd::Stop => break,
+            WorkerCmd::Epoch { batches, loader_seed, lr } => {
+                (batches, loader_seed, lr)
+            }
+        };
+        let iterations = batches.len();
+        let mut loader = Loader::new(dataset.clone(), batches, augment,
+                                     loader_seed);
+        let mut metrics = TrainMetrics::default();
+        for _ in 0..iterations {
+            if !shared.poisoned.load(Ordering::SeqCst) {
+                poison_on_failure(shared, "worker", || worker_iteration(
+                    w, shared, &mut loader, engine.as_mut(), &mut metrics));
+            }
+            // Rendezvous: all gradients submitted (or the run poisoned).
+            let leader = shared.barrier.wait().is_leader();
+            if leader && !shared.poisoned.load(Ordering::SeqCst) {
+                poison_on_failure(shared, "all-reduce leader",
+                                  || leader_update(shared, lr));
+            }
+            // Release everyone into the next iteration with new params.
+            shared.barrier.wait();
+        }
+        drop(loader);
+        if res_tx.send((w, metrics)).is_err() {
+            break; // coordinator gone
+        }
+    }
+    // `engine` drops here: in-flight round drained, background thread
+    // joined — nothing outlives the worker.
+}
+
+/// One worker's foreground half of an iteration: load, Listing-1 update,
+/// train step, gradient submit.
+fn worker_iteration(w: usize,
+                    shared: &Shared<'_>,
+                    loader: &mut Loader,
+                    engine: Option<&mut RehearsalEngine>,
+                    metrics: &mut TrainMetrics) -> Result<()> {
+    // Load (prefetched; wait only).
+    let t0 = Instant::now();
+    let batch = loader
+        .next_batch()
+        .ok_or_else(|| anyhow!("loader underrun"))?;
+    shared.breakdown[w].add_load(t0.elapsed());
+
+    // Rehearsal: the Listing-1 update() primitive.
+    let rehearsal = engine.is_some();
+    let reps = match engine {
+        Some(e) => e.update(&batch)?,
+        None => Vec::new(),
+    };
+
+    // Train (native executor; parameters shared read-only during compute).
+    let augmented = rehearsal && reps.len() == shared.reps;
+    let t1 = Instant::now();
+    let out = {
+        let st = shared.state.read().unwrap();
+        if augmented {
+            let reps_batch = Batch::new(reps);
+            shared.exec.train_step_aug(&st.params, &batch, &reps_batch)?
+        } else {
+            shared.exec.train_step(&st.params, &batch)?
+        }
+    };
+    shared.breakdown[w].add_train(t1.elapsed());
+    shared.breakdown[w].bump();
+
+    // loss is a per-row mean, top5 a correct-count: TrainMetrics weights
+    // them consistently (see metrics::breakdown).
+    let rows = if augmented { shared.batch + shared.reps } else { shared.batch };
+    metrics.add_step(out.loss as f64, out.top5 as f64, rows as f64);
+    shared.acc.submit(w, &out.grads)?;
+    Ok(())
+}
+
+/// Barrier leader's half: exact mean over the worker shards (worker order,
+/// deterministic) + fused SGD update of the single parameter copy.
+fn leader_update(shared: &Shared<'_>, lr: f64) -> Result<()> {
+    let (mean_grads, _wire) = shared.acc.reduce(&shared.cost)?;
+    let mut st = shared.state.write().unwrap();
+    let params = std::mem::take(&mut st.params);
+    let moms = std::mem::take(&mut st.moms);
+    let (p2, m2) = shared.exec.apply_update(params, moms, &mean_grads, lr)?;
+    st.params = p2;
+    st.moms = m2;
+    shared.iterations_done.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
 /// Convenience: build everything a run needs from a config, returning the
-/// report (used by the CLI, examples and integration tests).
+/// report (used by the CLI, examples and integration tests). When the
+/// configured artifacts directory has no `manifest.json`, an equivalent
+/// synthetic manifest is derived from the config (the executor is native,
+/// so no artifact files are required).
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunReport> {
-    let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
-    if manifest.num_classes != cfg.data.num_classes {
-        bail!("artifacts lowered for K={} but config wants K={}; \
-               re-run `make artifacts` with --classes",
-              manifest.num_classes, cfg.data.num_classes);
-    }
-    if manifest.batch != cfg.training.batch {
-        bail!("artifacts lowered for b={} but config wants b={}",
-              manifest.batch, cfg.training.batch);
-    }
+    let manifest = if crate::runtime::Manifest::exists_in(&cfg.artifacts_dir) {
+        let m = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+        if m.num_classes != cfg.data.num_classes {
+            bail!("artifacts lowered for K={} but config wants K={}; \
+                   re-run `make artifacts` with --classes",
+                  m.num_classes, cfg.data.num_classes);
+        }
+        if m.batch != cfg.training.batch {
+            bail!("artifacts lowered for b={} but config wants b={}",
+                  m.batch, cfg.training.batch);
+        }
+        m
+    } else {
+        crate::runtime::Manifest::synthetic(
+            cfg.data.input_dim, cfg.data.num_classes, cfg.training.batch,
+            vec![cfg.training.reps], cfg.training.eval_batch)
+    };
     let exec = ModelExecutor::new(&manifest, &cfg.training.variant,
                                   &[cfg.training.reps])?;
     let dataset = Dataset::generate(&cfg.data);
@@ -324,4 +585,53 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunReport> {
                                   cfg.data.seed);
     let trainer = Trainer::new(cfg, &exec, &dataset, &tasks);
     trainer.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::preset;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = preset("tiny").expect("tiny preset");
+        cfg.training.epochs_per_task = 1;
+        cfg.data.num_tasks = 2;
+        cfg.data.num_classes = 8;
+        cfg.artifacts_dir = std::path::PathBuf::from("<nonexistent>");
+        cfg.validate().unwrap();
+        cfg
+    }
+
+    #[test]
+    fn workers1_reproduces_itself_exactly() {
+        // The threaded runtime at N=1 must be fully deterministic: same
+        // seed, bit-identical report (losses, accuracies, iteration count).
+        let mut cfg = tiny_cfg();
+        cfg.cluster.workers = 1;
+        cfg.training.strategy = Strategy::Rehearsal;
+        let a = run_experiment(&cfg).expect("run a");
+        let b = run_experiment(&cfg).expect("run b");
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.final_accuracy_t, b.final_accuracy_t);
+        assert_eq!(a.final_top1_accuracy_t, b.final_top1_accuracy_t);
+        for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(ea.train_loss, eb.train_loss);
+            assert_eq!(ea.train_top5, eb.train_top5);
+        }
+    }
+
+    #[test]
+    fn multiworker_run_counts_iterations_once_per_global_step() {
+        let mut cfg = tiny_cfg();
+        cfg.cluster.workers = 2;
+        cfg.training.strategy = Strategy::Incremental;
+        let report = run_experiment(&cfg).expect("run");
+        // tiny, 2 tasks over 8 classes: 4 classes/task x 30/class ≈ 120-
+        // sample pools; 120/2 workers/8 batch = 7 iterations per epoch,
+        // 2 epochs total. Label noise can wobble the pool by a batch.
+        assert!(report.iterations >= 10 && report.iterations <= 16,
+                "iterations {}", report.iterations);
+        assert_eq!(report.epochs.len(), 2);
+        assert!(report.epochs.iter().all(|e| e.train_loss.is_finite()));
+    }
 }

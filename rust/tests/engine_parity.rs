@@ -1,0 +1,117 @@
+//! Async/blocking engine parity and zero-copy accounting invariants
+//! (DESIGN.md abl-async):
+//!
+//! - with a fixed seed, `emulate_delays = false` and a deterministic
+//!   candidate stream (c = b so Algorithm 1 offers every sample), the async
+//!   and blocking engines must leave **identical per-class buffer
+//!   occupancy** — the pipeline is a scheduling optimisation, not a
+//!   different sampling distribution;
+//! - the `Arc<[f32]>` zero-copy sample refactor must not change what the
+//!   fabric *accounts*: `fetch_bulk` wire bytes stay `4·d + 8` per row, and
+//!   fetched rows share storage with the buffer instead of copying it.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::engine::{EngineParams, RehearsalEngine};
+use dcl::net::{CostModel, Fabric};
+use dcl::tensor::{Batch, Sample};
+
+fn make_fabric(n: usize, s_max: usize) -> Arc<Fabric> {
+    let buffers = (0..n)
+        .map(|w| Arc::new(LocalBuffer::new(s_max, EvictionPolicy::Random, w as u64)))
+        .collect();
+    Arc::new(Fabric::new(buffers, CostModel::default(), false))
+}
+
+fn params(async_updates: bool, b: usize, r: usize) -> EngineParams {
+    EngineParams {
+        batch: b,
+        reps: r,
+        // c = b: every sample is offered, so occupancy is independent of
+        // the engines' candidate-draw RNG streams (which differ between
+        // the async and blocking code paths by design).
+        candidates: b,
+        scope: SamplingScope::Global,
+        async_updates,
+    }
+}
+
+/// Drive `iters` iterations of the same deterministic batch stream through
+/// a 2-worker cluster and return each worker's per-class occupancy.
+fn run_mode(async_updates: bool, iters: u32) -> Vec<Vec<(u32, usize)>> {
+    let (b, r) = (8usize, 4usize);
+    let fabric = make_fabric(2, 60);
+    let mut engines: Vec<RehearsalEngine> = (0..2)
+        .map(|w| RehearsalEngine::new(w, Arc::clone(&fabric),
+                                      params(async_updates, b, r), 1000 + w as u64))
+        .collect();
+    for i in 0..iters {
+        for (w, e) in engines.iter_mut().enumerate() {
+            // worker-distinct, iteration-varying classes; same stream in
+            // both modes.
+            let class = (w as u32 * 5 + i) % 7;
+            let batch = Batch::new(
+                (0..b).map(|j| Sample::new(class, vec![i as f32, j as f32])).collect());
+            e.update(&batch).unwrap();
+        }
+    }
+    for e in &mut engines {
+        e.finish().unwrap();
+    }
+    drop(engines); // join background threads before reading occupancy
+    (0..2).map(|w| fabric.buffer(w).snapshot_counts()).collect()
+}
+
+#[test]
+fn async_and_blocking_reach_identical_occupancy() {
+    let async_counts = run_mode(true, 40);
+    let blocking_counts = run_mode(false, 40);
+    assert_eq!(async_counts, blocking_counts,
+               "async pipeline changed buffer contents, not just timing");
+    // sanity: the run actually filled the buffers
+    let total: usize = async_counts.iter().flatten().map(|&(_, n)| n).sum();
+    assert!(total > 0, "buffers stayed empty");
+    for counts in &async_counts {
+        let sum: usize = counts.iter().map(|&(_, n)| n).sum();
+        assert!(sum <= 60, "S_max exceeded: {sum}");
+    }
+}
+
+#[test]
+fn fetch_bulk_wire_bytes_formula_is_unchanged() {
+    // d=8 features: every row must be charged 8*4 + 8 = 40 wire bytes.
+    let d = 8usize;
+    let fabric = make_fabric(2, 100);
+    for i in 0..10 {
+        fabric.buffer(1).insert(Sample::new(3, vec![i as f32; 8]));
+    }
+    let picks: Vec<(u32, usize)> = (0..6).map(|i| (3u32, i)).collect();
+    let (rows, wire) = fabric.fetch_bulk(0, 1, &picks).unwrap();
+    assert_eq!(rows.len(), 6);
+    assert_eq!(fabric.counters.bytes.load(Ordering::Relaxed),
+               (6 * (d * 4 + 8)) as u64);
+    assert_eq!(rows.iter().map(Sample::wire_bytes).sum::<usize>(), 6 * 40);
+    assert!(wire > std::time::Duration::ZERO);
+    assert_eq!(fabric.counters.rpcs.load(Ordering::Relaxed), 1);
+
+    // local fetch stays free on the wire
+    let before = fabric.counters.bytes.load(Ordering::Relaxed);
+    let (_rows, wire) = fabric.fetch_bulk(1, 1, &picks).unwrap();
+    assert!(wire.is_zero());
+    assert_eq!(fabric.counters.bytes.load(Ordering::Relaxed), before);
+}
+
+#[test]
+fn fetched_rows_share_storage_with_the_buffer() {
+    // Two fetches of the same resident must hand back the same Arc slab —
+    // the zero-copy property the refactor introduced.
+    let fabric = make_fabric(1, 100);
+    fabric.buffer(0).insert(Sample::new(0, vec![1.0, 2.0, 3.0]));
+    let a = fabric.fetch_bulk(0, 0, &[(0, 0)]).unwrap().0.remove(0);
+    let b = fabric.fetch_bulk(0, 0, &[(0, 0)]).unwrap().0.remove(0);
+    assert!(Arc::ptr_eq(&a.features, &b.features),
+            "fetch_rows deep-copied the features instead of sharing them");
+}

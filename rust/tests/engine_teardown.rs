@@ -1,0 +1,114 @@
+//! Thread-teardown regression (promoted from the old `examples/_leak2.rs`
+//! repro): every thread the runtime spawns — worker threads, loader
+//! prefetchers, engine background threads — must be joined by the time its
+//! owner returns. A leak here used to accumulate one engine thread per
+//! task across long experiment sweeps.
+//!
+//! The check reads `Threads:` from /proc/self/status, so it is a no-op on
+//! non-Linux hosts. It is the only test in this binary on purpose: a
+//! process-wide thread count cannot be asserted while sibling tests spawn
+//! workers concurrently.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope, Strategy};
+use dcl::engine::{EngineParams, RehearsalEngine};
+use dcl::net::{CostModel, Fabric};
+use dcl::tensor::{Batch, Sample};
+use dcl::train::trainer::run_experiment;
+
+fn thread_count() -> Option<usize> {
+    let s = std::fs::read_to_string("/proc/self/status").ok()?;
+    s.lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+/// Wait (bounded) for the count to drop back to `baseline`; exiting
+/// threads are reaped by join, but give the OS a moment to settle.
+fn settles_to(baseline: usize) -> bool {
+    let t0 = Instant::now();
+    loop {
+        match thread_count() {
+            None => return true, // not Linux — nothing to assert
+            Some(n) if n <= baseline => return true,
+            Some(_) if t0.elapsed() > Duration::from_secs(5) => return false,
+            Some(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+#[test]
+fn no_thread_outlives_its_owner() {
+    let Some(baseline) = thread_count() else { return };
+
+    // --- engines: spawn, drive, shutdown ---------------------------------
+    {
+        let buffers = (0..4)
+            .map(|w| Arc::new(LocalBuffer::new(100, EvictionPolicy::Random, w as u64)))
+            .collect();
+        let fabric = Arc::new(Fabric::new(buffers, CostModel::default(), false));
+        let params = EngineParams {
+            batch: 8,
+            reps: 4,
+            candidates: 8,
+            scope: SamplingScope::Global,
+            async_updates: true,
+        };
+        let mut engines: Vec<RehearsalEngine> = (0..4)
+            .map(|w| RehearsalEngine::new(w, Arc::clone(&fabric), params, w as u64))
+            .collect();
+        assert!(engines.iter().all(|e| !e.is_shut_down()),
+                "async engines must have live background threads");
+        for i in 0..6u32 {
+            for e in &mut engines {
+                let batch = Batch::new(
+                    (0..8).map(|j| Sample::new(i % 3, vec![j as f32; 8])).collect());
+                e.update(&batch).unwrap();
+            }
+        }
+        // explicit shutdown joins the handles...
+        for e in &mut engines {
+            e.shutdown().unwrap();
+            assert!(e.is_shut_down());
+        }
+        drop(engines);
+    }
+    assert!(settles_to(baseline),
+            "engine threads leaked: {:?} > baseline {baseline}", thread_count());
+
+    // --- full trainer run: workers + loaders + engines -------------------
+    let mut cfg = dcl::testkit::tiny_config().expect("tiny config");
+    cfg.training.epochs_per_task = 1;
+    cfg.training.strategy = Strategy::Rehearsal;
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg).expect("rehearsal run");
+    assert!(report.iterations > 0);
+    assert!(settles_to(baseline),
+            "trainer threads leaked: {:?} > baseline {baseline}", thread_count());
+
+    // dropping with a round in flight must also tear down cleanly
+    {
+        let buffers = (0..2)
+            .map(|w| Arc::new(LocalBuffer::new(50, EvictionPolicy::Random, w as u64)))
+            .collect();
+        let fabric = Arc::new(Fabric::new(buffers, CostModel::default(), false));
+        let params = EngineParams {
+            batch: 8,
+            reps: 2,
+            candidates: 8,
+            scope: SamplingScope::Global,
+            async_updates: true,
+        };
+        let mut e = RehearsalEngine::new(0, fabric, params, 9);
+        let batch = Batch::new((0..8).map(|j| Sample::new(0, vec![j as f32])).collect());
+        e.update(&batch).unwrap();
+        drop(e); // no explicit finish
+    }
+    assert!(settles_to(baseline),
+            "mid-flight drop leaked a thread: {:?} > baseline {baseline}",
+            thread_count());
+}

@@ -1,0 +1,193 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored in-tree.
+//!
+//! The build environments this repository targets have no crates.io access,
+//! so the one external dependency the crate grew up with is reimplemented
+//! here: an opaque [`Error`] holding a message and a best-effort cause
+//! chain, the [`anyhow!`] / [`bail!`] macros, the [`Context`] extension
+//! trait, and the `Result<T>` alias. Only the surface the `dcl` crate uses
+//! is provided; semantics follow upstream anyhow (Display shows the
+//! outermost message, Debug shows the chain).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a message plus the Display renderings of the causes it
+/// wrapped (outermost first is `msg`, older contexts follow in `chain`).
+pub struct Error {
+    inner: Box<ErrorImpl>,
+}
+
+struct ErrorImpl {
+    msg: String,
+    chain: Vec<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (what `anyhow!` emits).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(ErrorImpl {
+                msg: message.to_string(),
+                chain: Vec::new(),
+                source: None,
+            }),
+        }
+    }
+
+    /// Wrap this error in a new outermost context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let inner = *self.inner;
+        let mut chain = Vec::with_capacity(inner.chain.len() + 1);
+        chain.push(inner.msg);
+        chain.extend(inner.chain);
+        Error {
+            inner: Box::new(ErrorImpl {
+                msg: context.to_string(),
+                chain,
+                source: inner.source,
+            }),
+        }
+    }
+
+    /// The cause messages from outermost context to root cause.
+    pub fn chain_messages(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.inner.msg.as_str())
+            .chain(self.inner.chain.iter().map(String::as_str))
+    }
+
+    /// Root cause as a std error, when the error wrapped one.
+    pub fn source(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.inner.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.inner.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner.msg)?;
+        for (i, cause) in self.inner.chain.iter().enumerate() {
+            if i == 0 {
+                write!(f, "\n\nCaused by:")?;
+            }
+            write!(f, "\n    {i}: {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// The anyhow trick: `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket conversion from every std error does
+// not overlap `impl From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let msg = e.to_string();
+        Error {
+            inner: Box::new(ErrorImpl { msg, chain: Vec::new(), source: Some(Box::new(e)) }),
+        }
+    }
+}
+
+/// Extension adding `.context(..)` / `.with_context(..)` to results whose
+/// error converts into [`Error`] (std errors and `Error` itself, via the
+/// reflexive `From`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+        let e = e.context("opening config");
+        assert_eq!(e.to_string(), "opening config");
+        assert_eq!(e.chain_messages().collect::<Vec<_>>(), vec!["opening config", "gone"]);
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 7;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e = anyhow!("value {} bad", 9);
+        assert_eq!(e.to_string(), "value 9 bad");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<i32> {
+            let n: i32 = "12x".parse()?;
+            Ok(n)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("root");
+        }
+        let e = inner().with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+    }
+}
