@@ -54,7 +54,7 @@ fn main() {
     let buf = filled_buffer(EvictionPolicy::Random, 40, 18);
     let picks: Vec<(u32, usize)> = (0..7).map(|i| (i as u32 * 5, i)).collect();
     r.bench_items("fetch_rows_r7", 7, || {
-        black_box(buf.fetch_rows(&picks));
+        black_box(buf.fetch_rows(&picks).unwrap());
     });
 
     // Metadata snapshot (the planner's per-peer counts gather).
@@ -65,7 +65,7 @@ fn main() {
     // Local sampling (N=1 degenerate / local-only ablation).
     let mut srng = Rng::new(11);
     r.bench_items("sample_local_r7", 7, || {
-        black_box(buf.sample_local(7, &mut srng));
+        black_box(buf.sample_local(7, &mut srng).unwrap());
     });
 
     r.write_csv("buffer_ops.csv");

@@ -60,7 +60,7 @@ fn main() {
     let mut brng = Rng::new(11);
     r.bench("background_round_n4", || {
         fabric.buffer(0).update_with_batch(&batch, 14, 56, &mut brng);
-        let counts = fabric.gather_counts(0);
+        let counts = fabric.gather_counts(0).unwrap();
         let plan = sampler.plan(&counts, 7, &mut brng);
         black_box(sampler.execute(&fabric, &plan).unwrap());
     });

@@ -57,7 +57,7 @@ fn main() {
     for n in [2usize, 4, 8] {
         let f = fabric(n, 8);
         r.bench(&format!("gather_counts_n{n}"), || {
-            black_box(f.gather_counts(0));
+            black_box(f.gather_counts(0).unwrap());
         });
     }
 

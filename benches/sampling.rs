@@ -66,7 +66,7 @@ fn main() {
     let sampler = GlobalSampler::new(0, SamplingScope::Global);
     let mut rng = Rng::new(4);
     r.bench_items("gather_plan_execute_n4_r7", 7, || {
-        let cts = f.gather_counts(0);
+        let cts = f.gather_counts(0).unwrap();
         let plan = sampler.plan(&cts, 7, &mut rng);
         black_box(sampler.execute(&f, &plan).unwrap());
     });
@@ -74,7 +74,7 @@ fn main() {
     // Local-only ablation comparison.
     let local = GlobalSampler::new(0, SamplingScope::LocalOnly);
     r.bench_items("gather_plan_execute_local_only", 7, || {
-        let cts = f.gather_counts(0);
+        let cts = f.gather_counts(0).unwrap();
         let plan = local.plan(&cts, 7, &mut rng);
         black_box(local.execute(&f, &plan).unwrap());
     });

@@ -35,6 +35,23 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// Cheap CI settings: enough iterations to produce a number and catch
+    /// gross regressions, not enough for tight confidence intervals. Used
+    /// by the `bench-smoke` workflow job (`DCL_BENCH_SMOKE=1` or
+    /// `cargo bench -- --test`). 20 single-iteration samples keeps the
+    /// whole suite in seconds while giving the perf gate a p50 stable
+    /// enough to hold a 25% tolerance on shared runners (the baseline
+    /// gates time metrics on `p50_s`, not the jitter-sensitive mean).
+    pub fn smoke() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(10),
+            samples: 20,
+            iters_per_sample: 1,
+        }
+    }
+}
+
 /// One benchmark's result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -78,12 +95,18 @@ pub struct Runner {
 }
 
 impl Runner {
-    /// Honors the standard `cargo bench -- <filter>` convention.
+    /// Honors the standard `cargo bench -- <filter>` convention, plus
+    /// *smoke mode* (`--test` / `--smoke` argument, or `DCL_BENCH_SMOKE`
+    /// set to anything but `0`): cheap iteration counts for CI.
     pub fn from_args() -> Runner {
-        let filter = std::env::args()
-            .skip(1)
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let smoke = std::env::var("DCL_BENCH_SMOKE").is_ok_and(|v| v != "0")
+            || args.iter().any(|a| a == "--test" || a == "--smoke");
+        let filter = args
+            .into_iter()
             .find(|a| !a.starts_with('-') && a != "--bench");
-        Runner { cfg: BenchConfig::default(), results: Vec::new(), filter }
+        let cfg = if smoke { BenchConfig::smoke() } else { BenchConfig::default() };
+        Runner { cfg, results: Vec::new(), filter }
     }
 
     pub fn with_config(mut self, cfg: BenchConfig) -> Runner {

@@ -11,11 +11,16 @@
 //! `fetch_rows` is the RDMA-read analogue: any thread holding an
 //! `Arc<LocalBuffer>` can read rows directly, without involving the owning
 //! worker's compute thread; the wire cost is accounted by the
-//! [`crate::net::Fabric`] wrapper.
+//! [`crate::net::Fabric`] wrapper. On the `tcp` transport the same method
+//! backs the worker's listener thread: remote peers' `FETCH_BULK` requests
+//! are answered by `fetch_rows` under the identical fine-grain locking, so
+//! both backends serve concurrent reads during updates.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
+
+use anyhow::{bail, Result};
 
 use crate::config::EvictionPolicy;
 use crate::tensor::Sample;
@@ -25,6 +30,11 @@ use super::class_buffer::{ClassBuffer, InsertOutcome};
 
 /// (class id, resident count) — the metadata unit the sampling planner uses.
 pub type ClassCount = (u32, usize);
+
+/// Semantic wire size of one snapshot entry (class id + count + header
+/// share). The single source of truth for both `snapshot_wire_bytes` and
+/// the fabric's backend-independent metadata pricing.
+pub const SNAPSHOT_ENTRY_BYTES: usize = 12;
 
 #[derive(Debug, Default)]
 pub struct BufferCounters {
@@ -169,42 +179,48 @@ impl LocalBuffer {
 
     /// Wire size of the metadata snapshot (for the fabric cost model).
     pub fn snapshot_wire_bytes(&self) -> usize {
-        self.num_classes() * 12
+        self.num_classes() * SNAPSHOT_ENTRY_BYTES
     }
 
     /// Serve rows `(class, idx)` — the RDMA-read path. Indices may be
-    /// slightly stale (the planner snapshot races with inserts); since
-    /// sub-buffers only grow or get replaced in place, a stale index is
-    /// clamped into the current length, which still returns a valid
+    /// slightly stale (the planner snapshot races with inserts), so a stale
+    /// index is clamped into the current length, which still returns a valid
     /// representative of the same class (same guarantee the paper gets from
-    /// its fine-grain read locks).
-    pub fn fetch_rows(&self, picks: &[(u32, usize)]) -> Vec<Sample> {
+    /// its fine-grain read locks). Fallible rather than panicking: a pick
+    /// naming a class the buffer doesn't hold rows for — a hostile TCP
+    /// request, a plan-construction bug, or a class rebalanced down to
+    /// empty between snapshot and fetch — errors instead of taking down
+    /// the serving thread.
+    pub fn fetch_rows(&self, picks: &[(u32, usize)]) -> Result<Vec<Sample>> {
         let map = self.classes.read().unwrap();
         let mut out = Vec::with_capacity(picks.len());
         for &(class, idx) in picks {
-            let cb = map
-                .get(&class)
-                .unwrap_or_else(|| panic!("fetch of unknown class {class}"));
+            let Some(cb) = map.get(&class) else {
+                bail!("fetch of unknown class {class}");
+            };
             let cb = cb.lock().unwrap();
-            debug_assert!(!cb.is_empty(), "fetch from empty class {class}");
+            if cb.is_empty() {
+                bail!("fetch from empty class {class}");
+            }
             let i = idx.min(cb.len() - 1);
             out.push(cb.get(i).clone());
         }
         self.counters
             .rows_served
             .fetch_add(picks.len() as u64, Ordering::Relaxed);
-        out
+        Ok(out)
     }
 
     /// Draw `r` representatives uniformly from this buffer only (the
     /// local-only ablation / the degenerate N=1 case). Without replacement;
-    /// returns fewer if the buffer holds fewer than `r`.
-    pub fn sample_local(&self, r: usize, rng: &mut Rng) -> Vec<Sample> {
+    /// returns fewer if the buffer holds fewer than `r`. Errs only on the
+    /// rare snapshot/rebalance race `fetch_rows` reports.
+    pub fn sample_local(&self, r: usize, rng: &mut Rng) -> Result<Vec<Sample>> {
         let counts = self.snapshot_counts();
         let total: usize = counts.iter().map(|&(_, n)| n).sum();
         let take = r.min(total);
         if take == 0 {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let flat = rng.sample_without_replacement(total, take);
         let picks = flat_to_picks(&counts, &flat);
@@ -291,7 +307,7 @@ mod tests {
     #[test]
     fn fetch_rows_returns_right_classes() {
         let buf = filled(100, 4, 30);
-        let rows = buf.fetch_rows(&[(0, 0), (3, 5), (1, 24)]);
+        let rows = buf.fetch_rows(&[(0, 0), (3, 5), (1, 24)]).unwrap();
         assert_eq!(rows.len(), 3);
         assert_eq!(rows[0].label, 0);
         assert_eq!(rows[1].label, 3);
@@ -302,7 +318,8 @@ mod tests {
     #[test]
     fn fetch_rows_clamps_stale_indices() {
         let buf = filled(100, 2, 5);
-        let rows = buf.fetch_rows(&[(0, 999)]);
+        let rows = buf.fetch_rows(&[(0, 999)]).unwrap();
+        assert!(buf.fetch_rows(&[(42, 0)]).is_err(), "unknown class errs");
         assert_eq!(rows[0].label, 0);
     }
 
@@ -310,14 +327,14 @@ mod tests {
     fn sample_local_without_replacement() {
         let buf = filled(64, 4, 16);
         let mut rng = Rng::new(5);
-        let got = buf.sample_local(10, &mut rng);
+        let got = buf.sample_local(10, &mut rng).unwrap();
         assert_eq!(got.len(), 10);
         // short buffer: ask for more than present
         let small = filled(4, 2, 2);
-        let got = small.sample_local(10, &mut rng);
+        let got = small.sample_local(10, &mut rng).unwrap();
         assert_eq!(got.len(), 4);
         let empty = LocalBuffer::new(10, EvictionPolicy::Random, 1);
-        assert!(empty.sample_local(3, &mut rng).is_empty());
+        assert!(empty.sample_local(3, &mut rng).unwrap().is_empty());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! dcl train    [--preset P] [--config FILE] [--strategy S] [--variant V]
 //!              [--workers N] [--buffer-pct X] [--epochs-per-task E]
+//!              [--transport inproc|tcp]
 //! dcl fig5a    [--epochs-per-task E] [--workers N]
 //! dcl fig5b    [--epochs-per-task E] [--workers N]
 //! dcl fig6     [--epochs-per-task E]
@@ -13,7 +14,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{preset, ExperimentConfig, Strategy};
+use crate::config::{preset, ExperimentConfig, Strategy, TransportKind};
 use crate::experiments;
 use crate::train::trainer::run_experiment;
 
@@ -72,6 +73,9 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("variant") {
         cfg.training.variant = v.to_string();
     }
+    if let Some(t) = args.get("transport") {
+        cfg.cluster.transport = TransportKind::parse(t)?;
+    }
     cfg.cluster.workers = args.usize_or("workers", cfg.cluster.workers)?;
     cfg.buffer.percent_of_dataset =
         args.f64_or("buffer-pct", cfg.buffer.percent_of_dataset)?;
@@ -88,10 +92,10 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = train_config(args)?;
-    println!("running {} / {} on N={} (|B|={}%, {} epochs/task)",
+    println!("running {} / {} on N={} over {} (|B|={}%, {} epochs/task)",
              cfg.training.strategy.name(), cfg.training.variant,
-             cfg.cluster.workers, cfg.buffer.percent_of_dataset,
-             cfg.training.epochs_per_task);
+             cfg.cluster.workers, cfg.cluster.transport.name(),
+             cfg.buffer.percent_of_dataset, cfg.training.epochs_per_task);
     let report = run_experiment(&cfg)?;
     println!("{}", experiments::common::summarize(&report));
     for e in &report.epochs {

@@ -85,6 +85,34 @@ pub enum SamplingScope {
     LocalOnly,
 }
 
+/// Which fabric backend carries remote buffer traffic (the Mochi/Thallium
+/// slot of the paper's stack). `Inproc` is the zero-copy same-process
+/// default; `Tcp` runs the same RPCs over real loopback/LAN sockets with a
+/// length-prefixed binary protocol (see `net::wire`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    #[default]
+    Inproc,
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "inproc" | "in-process" => TransportKind::Inproc,
+            "tcp" => TransportKind::Tcp,
+            other => bail!("unknown transport `{other}` (want inproc|tcp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Synthetic class-incremental dataset geometry.
 #[derive(Clone, Debug)]
 pub struct DataConfig {
@@ -207,6 +235,8 @@ pub struct ClusterConfig {
     /// Actually sleep to emulate wire time (true for breakdown runs; false
     /// for unit tests where virtual costs are only accounted).
     pub emulate_delays: bool,
+    /// Fabric backend: in-process zero-copy (default) or real TCP sockets.
+    pub transport: TransportKind,
 }
 
 impl Default for ClusterConfig {
@@ -216,6 +246,7 @@ impl Default for ClusterConfig {
             rpc_latency_us: 2.0,
             bandwidth_gibps: 12.0,
             emulate_delays: false,
+            transport: TransportKind::Inproc,
         }
     }
 }
@@ -362,6 +393,9 @@ impl ExperimentConfig {
         c.bandwidth_gibps = doc.get_or("cluster", "bandwidth_gibps", c.bandwidth_gibps, f)?;
         c.emulate_delays = doc.get_or("cluster", "emulate_delays", c.emulate_delays,
                                       |v| v.as_bool())?;
+        if let Some(v) = doc.tables.get("cluster").and_then(|t| t.get("transport")) {
+            c.transport = TransportKind::parse(v.as_str()?)?;
+        }
 
         if let Some(v) = doc.tables.get("paths").and_then(|t| t.get("artifacts_dir")) {
             cfg.artifacts_dir = PathBuf::from(v.as_str()?);
@@ -425,6 +459,7 @@ mod tests {
             candidates = 4
             [cluster]
             workers = 2
+            transport = "tcp"
             [buffer]
             policy = "fifo"
             scope = "local"
@@ -436,6 +471,7 @@ mod tests {
         assert_eq!(cfg.training.strategy, Strategy::Incremental);
         assert_eq!(cfg.training.batch, 8);
         assert_eq!(cfg.cluster.workers, 2);
+        assert_eq!(cfg.cluster.transport, TransportKind::Tcp);
         assert_eq!(cfg.buffer.policy, EvictionPolicy::Fifo);
         assert_eq!(cfg.buffer.scope, SamplingScope::LocalOnly);
     }
@@ -446,5 +482,9 @@ mod tests {
         assert!(Strategy::parse("bogus").is_err());
         assert_eq!(EvictionPolicy::parse("reservoir").unwrap(), EvictionPolicy::Reservoir);
         assert!(EvictionPolicy::parse("lru").is_err());
+        assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
+        assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::Inproc);
+        assert!(TransportKind::parse("rdma").is_err());
+        assert_eq!(TransportKind::default().name(), "inproc");
     }
 }

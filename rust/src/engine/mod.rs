@@ -33,6 +33,13 @@
 //!
 //! With `async_updates = false` the same work runs inline (the blocking
 //! ablation, DESIGN.md abl-async).
+//!
+//! The engine is transport-agnostic: it speaks only to the [`Fabric`]
+//! facade, so the same populate/sample round runs unmodified over the
+//! in-process backend or real TCP sockets (`[cluster] transport`). A
+//! transport failure inside a background round surfaces as an error on the
+//! foreground worker's next `update()` call rather than killing the thread
+//! silently.
 
 pub mod timings;
 
@@ -71,7 +78,10 @@ enum Job {
 }
 
 struct FetchResult {
-    reps: Vec<Sample>,
+    /// The fetched representatives — or the transport error that interrupted
+    /// the round (a real backend can lose a peer mid-run; the error
+    /// surfaces on the foreground worker's next `update()`).
+    reps: Result<Vec<Sample>>,
 }
 
 /// One worker's handle on the distributed rehearsal buffer.
@@ -132,7 +142,8 @@ impl RehearsalEngine {
                             let reps = background_round(
                                 worker, &fabric, &sampler, &params, &batch,
                                 &timings, &mut rng);
-                            if res_tx.send(FetchResult { reps }).is_err() {
+                            let failed = reps.is_err();
+                            if res_tx.send(FetchResult { reps }).is_err() || failed {
                                 return;
                             }
                         }
@@ -160,10 +171,11 @@ impl RehearsalEngine {
                     .expect("async engine has res_rx")
                     .recv()
                     .map_err(|_| anyhow::anyhow!("engine thread died"))?;
+                self.pending = false;
                 self.timings
                     .wait_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                res.reps
+                res.reps? // a failed background round surfaces here
             } else {
                 Vec::new()
             };
@@ -179,23 +191,25 @@ impl RehearsalEngine {
             // Blocking ablation: same round inline; reps are for *this*
             // iteration, so sample first, then populate with the batch
             // (keeps "reps never drawn from the batch being trained on").
-            let reps = blocking_round(
+            blocking_round(
                 self.worker, &self.fabric, &self.sampler, &self.params,
-                &batch.samples, &self.timings, &mut self.rng);
-            Ok(reps)
+                &batch.samples, &self.timings, &mut self.rng)
         }
     }
 
     /// Drain the in-flight round (end of training); the last requested reps
-    /// are discarded, matching the paper's per-task teardown.
+    /// are discarded, matching the paper's per-task teardown — but a failed
+    /// background round still surfaces as an error (a transport failure in
+    /// the final round must not make the run look clean).
     pub fn finish(&mut self) -> Result<()> {
         if self.pending {
-            let _ = self
+            let res = self
                 .res_rx
                 .as_ref()
                 .expect("async engine has res_rx")
                 .recv();
             self.pending = false;
+            res.map_err(|_| anyhow::anyhow!("engine thread died"))?.reps?;
         }
         Ok(())
     }
@@ -208,14 +222,17 @@ impl RehearsalEngine {
     /// thread and join its handle. Idempotent; `Drop` runs the same path,
     /// so an engine can never leak its thread past its owner's lifetime.
     pub fn shutdown(&mut self) -> Result<()> {
-        self.finish()?;
+        // Drain first but don't early-return on its error: the background
+        // thread must be joined even when the final round failed, or the
+        // teardown invariant breaks exactly when transport errors occur.
+        let drained = self.finish();
         if let Some(tx) = self.job_tx.take() {
             let _ = tx.send(Job::Flush);
         }
         if let Some(h) = self.bg.take() {
             h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))?;
         }
-        Ok(())
+        drained
     }
 
     /// True once the background thread has been joined (or never existed,
@@ -232,9 +249,10 @@ impl Drop for RehearsalEngine {
 }
 
 /// Background half of one iteration: populate B_n, then sample the next r.
+/// Fallible: the fabric's transport can fail mid-run (e.g. a lost TCP peer).
 fn background_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
                     params: &EngineParams, batch: &[Sample],
-                    timings: &EngineTimings, rng: &mut Rng) -> Vec<Sample> {
+                    timings: &EngineTimings, rng: &mut Rng) -> Result<Vec<Sample>> {
     // Populate (Algorithm 1).
     let t0 = Instant::now();
     fabric.buffer(worker).update_with_batch(
@@ -245,11 +263,9 @@ fn background_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
 
     // Global sampling for the next iteration.
     let t1 = Instant::now();
-    let counts = fabric.gather_counts(worker);
+    let counts = fabric.gather_counts(worker)?;
     let plan = sampler.plan(&counts, params.reps, rng);
-    let (reps, wire) = sampler
-        .execute(fabric, &plan)
-        .expect("fabric fetch within registered workers");
+    let (reps, wire) = sampler.execute(fabric, &plan)?;
     timings
         .augment_ns
         .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -259,19 +275,17 @@ fn background_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
     timings
         .reps_fetched
         .fetch_add(reps.len() as u64, Ordering::Relaxed);
-    reps
+    Ok(reps)
 }
 
 /// Blocking variant: sample for this iteration, then populate.
 fn blocking_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
                   params: &EngineParams, batch: &[Sample],
-                  timings: &EngineTimings, rng: &mut Rng) -> Vec<Sample> {
+                  timings: &EngineTimings, rng: &mut Rng) -> Result<Vec<Sample>> {
     let t1 = Instant::now();
-    let counts = fabric.gather_counts(worker);
+    let counts = fabric.gather_counts(worker)?;
     let plan = sampler.plan(&counts, params.reps, rng);
-    let (reps, wire) = sampler
-        .execute(fabric, &plan)
-        .expect("fabric fetch within registered workers");
+    let (reps, wire) = sampler.execute(fabric, &plan)?;
     timings
         .augment_ns
         .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -291,7 +305,7 @@ fn blocking_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
     timings
         .populate_ns
         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-    reps
+    Ok(reps)
 }
 
 #[cfg(test)]
@@ -394,6 +408,24 @@ mod tests {
             assert!(reps.len() <= 4);
         }
         e.finish().unwrap();
+    }
+
+    #[test]
+    fn engine_runs_unmodified_over_tcp() {
+        let buffers = (0..2)
+            .map(|w| Arc::new(LocalBuffer::new(100, EvictionPolicy::Random, w as u64)))
+            .collect();
+        let fabric = Arc::new(
+            Fabric::over_tcp(buffers, CostModel::default(), false).unwrap());
+        let mut e = RehearsalEngine::new(0, Arc::clone(&fabric), params(true), 11);
+        let reps0 = e.update(&batch_of(0, 8)).unwrap();
+        assert!(reps0.is_empty());
+        let reps1 = e.update(&batch_of(1, 8)).unwrap();
+        assert_eq!(reps1.len(), 4);
+        assert!(reps1.iter().all(|s| s.label == 0));
+        e.shutdown().unwrap();
+        drop(e);
+        fabric.shutdown().unwrap();
     }
 
     #[test]

@@ -103,8 +103,9 @@ pub fn results_dir() -> PathBuf {
 /// One-line human summary of a run, printed as harnesses go.
 pub fn summarize(report: &RunReport) -> String {
     format!(
-        "{:<11} {:<15} N={:<3} |B|={:>5.1}%  top5 acc_T={:.4}  top1={:.4}  wall={:.1}s  it={} (train {:.1} ms, wait {:.2} ms | bg pop {:.2} + aug {:.2} ms)",
-        report.strategy, report.variant, report.workers, report.buffer_percent,
+        "{:<11} {:<15} N={:<3} {:<6} |B|={:>5.1}%  top5 acc_T={:.4}  top1={:.4}  wall={:.1}s  it={} (train {:.1} ms, wait {:.2} ms | bg pop {:.2} + aug {:.2} ms)",
+        report.strategy, report.variant, report.workers, report.transport,
+        report.buffer_percent,
         report.final_accuracy_t, report.final_top1_accuracy_t,
         report.total_wall.as_secs_f64(), report.iterations,
         report.breakdown_ms.1, report.breakdown_ms.2,

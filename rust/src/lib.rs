@@ -23,7 +23,9 @@
 //!   sharding, and the background prefetching loader (DALI stand-in).
 //! - [`buffer`] — the rehearsal buffer: per-class sub-buffers, eviction
 //!   policies, Algorithm 1 updates, fine-grain locking.
-//! - [`net`] — the simulated RDMA/RPC fabric (Mochi/Thallium stand-in).
+//! - [`net`] — the RDMA/RPC fabric (Mochi/Thallium stand-in) with
+//!   pluggable transports: zero-copy in-process (default) or real TCP
+//!   sockets with a length-prefixed wire protocol (`[cluster] transport`).
 //! - [`sampling`] — unbiased global sampling plans + RPC consolidation.
 //! - [`engine`] — the asynchronous update/augment pipeline of Fig. 4 and
 //!   the `update()` primitive of Listing 1.

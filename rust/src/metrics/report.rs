@@ -42,6 +42,8 @@ pub struct EpochRecord {
 pub struct RunReport {
     pub strategy: String,
     pub variant: String,
+    /// Fabric backend the run's remote traffic rode (`inproc` / `tcp`).
+    pub transport: String,
     pub workers: usize,
     pub buffer_percent: f64,
     pub epochs: Vec<EpochRecord>,
@@ -112,6 +114,7 @@ mod tests {
         let report = RunReport {
             strategy: "rehearsal".into(),
             variant: "v".into(),
+            transport: "inproc".into(),
             workers: 2,
             buffer_percent: 30.0,
             epochs: vec![rec(0, 1.0, None), rec(1, 2.0, Some(0.8))],

@@ -1,4 +1,5 @@
-//! The fabric: registered peer buffers + priced bulk-fetch operations.
+//! The fabric: registered peer buffers + priced bulk-fetch operations,
+//! generic over the [`Transport`] backend that physically carries them.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -6,40 +7,57 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
+use crate::buffer::local::{ClassCount, SNAPSHOT_ENTRY_BYTES};
 use crate::buffer::LocalBuffer;
+use crate::config::TransportKind;
 use crate::tensor::Sample;
 
 use super::cost::CostModel;
+use super::transport::{InprocTransport, TcpTransport, Transport};
 
 /// Fabric-wide traffic counters (all workers).
 #[derive(Debug, Default)]
 pub struct FabricCounters {
     /// Bulk fetch RPCs issued (after consolidation: one per (src,dst) pair
-    /// per sampling round).
+    /// per sampling round). Identical across backends for the same run.
     pub rpcs: AtomicU64,
-    /// Payload bytes moved over the simulated wire.
+    /// Payload bytes the backend actually moved for bulk fetches: semantic
+    /// row bytes (`4·d + 8` per row) on `inproc`, real frame bytes
+    /// (payload + length prefixes + request) on `tcp`.
     pub bytes: AtomicU64,
-    /// Metadata (snapshot) exchanges.
+    /// Metadata (snapshot) exchanges. Identical across backends.
     pub meta_rpcs: AtomicU64,
-    /// Virtual wire time accumulated, nanoseconds.
+    /// Bytes the backend actually moved for metadata snapshots: the
+    /// semantic entry size on `inproc`, real frame bytes on `tcp`.
+    pub meta_bytes: AtomicU64,
+    /// Virtual wire time accumulated, nanoseconds. Priced from the
+    /// *semantic* payload on every backend, so projections are
+    /// backend-independent.
     pub wire_ns: AtomicU64,
 }
 
 impl FabricCounters {
-    pub fn snapshot(&self) -> (u64, u64, u64, Duration) {
+    /// `(rpcs, bytes, meta_rpcs, meta_bytes, wire)`.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, Duration) {
         (
             self.rpcs.load(Ordering::Relaxed),
             self.bytes.load(Ordering::Relaxed),
             self.meta_rpcs.load(Ordering::Relaxed),
+            self.meta_bytes.load(Ordering::Relaxed),
             Duration::from_nanos(self.wire_ns.load(Ordering::Relaxed)),
         )
     }
 }
 
 /// The distributed rehearsal buffer's communication substrate: N registered
-/// local buffers plus the wire-cost model.
+/// local buffers behind a pluggable [`Transport`], plus the wire-cost model.
+///
+/// Policy lives here — RPC/byte accounting, virtual-time pricing, optional
+/// delay emulation — while the transport owns mechanism (how bytes reach a
+/// peer). Local fetches (`target == requester`) never touch the transport
+/// and stay free on the wire, whichever backend is active.
 pub struct Fabric {
-    buffers: Vec<Arc<LocalBuffer>>,
+    transport: Box<dyn Transport>,
     cost: CostModel,
     /// Sleep for the modeled wire time (wall-clock emulation mode).
     emulate_delays: bool,
@@ -47,13 +65,42 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// In-process fabric (the zero-copy default).
     pub fn new(buffers: Vec<Arc<LocalBuffer>>, cost: CostModel,
                emulate_delays: bool) -> Fabric {
-        Fabric { buffers, cost, emulate_delays, counters: FabricCounters::default() }
+        Fabric::with_transport(Box::new(InprocTransport::new(buffers)), cost,
+                              emulate_delays)
+    }
+
+    /// Fabric over an explicit backend.
+    pub fn with_transport(transport: Box<dyn Transport>, cost: CostModel,
+                          emulate_delays: bool) -> Fabric {
+        Fabric { transport, cost, emulate_delays, counters: FabricCounters::default() }
+    }
+
+    /// Fabric whose remote traffic rides real loopback TCP sockets (one
+    /// listener thread per worker; see [`TcpTransport`]).
+    pub fn over_tcp(buffers: Vec<Arc<LocalBuffer>>, cost: CostModel,
+                    emulate_delays: bool) -> Result<Fabric> {
+        Ok(Fabric::with_transport(Box::new(TcpTransport::new(buffers)?), cost,
+                                  emulate_delays))
+    }
+
+    /// Build the backend selected by `kind`.
+    pub fn for_kind(kind: TransportKind, buffers: Vec<Arc<LocalBuffer>>,
+                    cost: CostModel, emulate_delays: bool) -> Result<Fabric> {
+        match kind {
+            TransportKind::Inproc => Ok(Fabric::new(buffers, cost, emulate_delays)),
+            TransportKind::Tcp => Fabric::over_tcp(buffers, cost, emulate_delays),
+        }
+    }
+
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport.kind()
     }
 
     pub fn workers(&self) -> usize {
-        self.buffers.len()
+        self.transport.workers()
     }
 
     pub fn cost_model(&self) -> CostModel {
@@ -61,25 +108,40 @@ impl Fabric {
     }
 
     pub fn buffer(&self, worker: usize) -> &Arc<LocalBuffer> {
-        &self.buffers[worker]
+        self.transport.buffer(worker)
+    }
+
+    /// Tear down the transport's background machinery (listener and
+    /// connection threads on `tcp`; a no-op on `inproc`). Idempotent. The
+    /// trainer calls this after its workers are joined so no fabric thread
+    /// outlives the run; dropping a TCP-backed fabric runs the same path.
+    pub fn shutdown(&self) -> Result<()> {
+        self.transport.shutdown()
     }
 
     /// Collect (worker, class, count) metadata from every peer — the
     /// planner's view of the global buffer. Charged as one small RPC per
-    /// remote peer (the paper piggybacks this on its RPC layer).
-    pub fn gather_counts(&self, requester: usize) -> Vec<Vec<(u32, usize)>> {
-        let mut all = Vec::with_capacity(self.buffers.len());
+    /// remote peer (the paper piggybacks this on its RPC layer). Fallible:
+    /// a real backend can lose a peer mid-run.
+    pub fn gather_counts(&self, requester: usize) -> Result<Vec<Vec<ClassCount>>> {
+        let n = self.transport.workers();
+        let mut all = Vec::with_capacity(n);
         let mut wire = Duration::ZERO;
-        for (n, buf) in self.buffers.iter().enumerate() {
-            let counts = buf.snapshot_counts();
-            if n != requester {
+        for target in 0..n {
+            if target == requester {
+                all.push(self.transport.buffer(target).snapshot_counts());
+            } else {
+                let (counts, moved) =
+                    self.transport.remote_counts(requester, target)?;
                 self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
-                wire += self.cost.cost(buf.snapshot_wire_bytes());
+                self.counters.meta_bytes.fetch_add(moved as u64,
+                                                   Ordering::Relaxed);
+                wire += self.cost.cost(counts.len() * SNAPSHOT_ENTRY_BYTES);
+                all.push(counts);
             }
-            all.push(counts);
         }
         self.charge(wire);
-        all
+        Ok(all)
     }
 
     /// One consolidated bulk fetch of rows `(class, idx)` from `target`'s
@@ -87,18 +149,25 @@ impl Fabric {
     /// Returns the rows and the virtual wire cost charged.
     pub fn fetch_bulk(&self, requester: usize, target: usize,
                       picks: &[(u32, usize)]) -> Result<(Vec<Sample>, Duration)> {
-        if target >= self.buffers.len() {
-            bail!("fetch from unknown worker {target}");
+        let n = self.transport.workers();
+        if target >= n {
+            bail!("bulk fetch by worker {requester} from unknown worker \
+                   {target}: fabric has {n} workers");
         }
-        let rows = self.buffers[target].fetch_rows(picks);
-        let mut wire = Duration::ZERO;
-        if target != requester && !rows.is_empty() {
-            let bytes: usize = rows.iter().map(Sample::wire_bytes).sum();
-            self.counters.rpcs.fetch_add(1, Ordering::Relaxed);
-            self.counters.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-            wire = self.cost.cost(bytes);
-            self.charge(wire);
+        if target == requester {
+            // Local read: no RPC, no wire time, whichever backend.
+            return Ok((self.transport.buffer(target).fetch_rows(picks)?,
+                       Duration::ZERO));
         }
+        if picks.is_empty() {
+            return Ok((Vec::new(), Duration::ZERO));
+        }
+        let (rows, moved) = self.transport.remote_fetch(requester, target, picks)?;
+        let semantic: usize = rows.iter().map(Sample::wire_bytes).sum();
+        self.counters.rpcs.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes.fetch_add(moved as u64, Ordering::Relaxed);
+        let wire = self.cost.cost(semantic);
+        self.charge(wire);
         Ok((rows, wire))
     }
 
@@ -118,21 +187,13 @@ impl Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::EvictionPolicy;
+
+    fn buffers(n: usize, per_class: usize) -> Vec<Arc<LocalBuffer>> {
+        crate::testkit::filled_buffers(n, per_class, 2)
+    }
 
     fn fabric(n: usize, per_class: usize) -> Fabric {
-        let buffers: Vec<Arc<LocalBuffer>> = (0..n)
-            .map(|w| {
-                let b = LocalBuffer::new(100, EvictionPolicy::Random, w as u64);
-                for class in 0..4u32 {
-                    for i in 0..per_class {
-                        b.insert(Sample::new(class, vec![w as f32, i as f32]));
-                    }
-                }
-                Arc::new(b)
-            })
-            .collect();
-        Fabric::new(buffers, CostModel::default(), false)
+        Fabric::new(buffers(n, per_class), CostModel::default(), false)
     }
 
     #[test]
@@ -155,7 +216,7 @@ mod tests {
     #[test]
     fn gather_counts_sees_every_peer() {
         let f = fabric(4, 3);
-        let all = f.gather_counts(1);
+        let all = f.gather_counts(1).unwrap();
         assert_eq!(all.len(), 4);
         for counts in &all {
             assert_eq!(counts.len(), 4); // 4 classes each
@@ -166,9 +227,12 @@ mod tests {
     }
 
     #[test]
-    fn unknown_worker_errors() {
+    fn unknown_worker_error_reports_context() {
         let f = fabric(2, 1);
-        assert!(f.fetch_bulk(0, 7, &[(0, 0)]).is_err());
+        let err = f.fetch_bulk(0, 7, &[(0, 0)]).unwrap_err().to_string();
+        assert!(err.contains("worker 0"), "missing requester: {err}");
+        assert!(err.contains("unknown worker 7"), "missing target: {err}");
+        assert!(err.contains("2 workers"), "missing worker count: {err}");
     }
 
     #[test]
@@ -177,5 +241,25 @@ mod tests {
         let before = f.counters.wire_ns.load(Ordering::Relaxed);
         f.fetch_bulk(0, 1, &[(0, 0), (1, 1), (2, 2)]).unwrap();
         assert!(f.counters.wire_ns.load(Ordering::Relaxed) > before);
+    }
+
+    #[test]
+    fn tcp_backend_serves_the_same_rpcs() {
+        let f = Fabric::over_tcp(buffers(3, 5), CostModel::default(), false)
+            .unwrap();
+        assert_eq!(f.transport_kind(), TransportKind::Tcp);
+        let all = f.gather_counts(0).unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 2);
+
+        let (rows, wire) = f.fetch_bulk(0, 1, &[(1, 0), (2, 3)]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|s| s.features[0] == 1.0));
+        assert!(wire > Duration::ZERO);
+        assert_eq!(f.counters.rpcs.load(Ordering::Relaxed), 1);
+        // actual frame bytes exceed the semantic payload (framing overhead)
+        let semantic: u64 = rows.iter().map(Sample::wire_bytes).sum::<usize>() as u64;
+        assert!(f.counters.bytes.load(Ordering::Relaxed) > semantic);
+        f.shutdown().unwrap();
     }
 }

@@ -1,17 +1,41 @@
-//! Simulated RDMA/RPC fabric — the Mochi/Thallium stand-in (DESIGN.md §1).
+//! The RDMA/RPC fabric — the Mochi/Thallium slot of the paper's stack
+//! (DESIGN.md §1) — now with pluggable backends.
 //!
 //! The paper pins each local rehearsal buffer and exposes it for RDMA so any
 //! process can read any other process's representatives with low-overhead
-//! one-sided operations. The in-process analogue: every worker's
-//! `Arc<LocalBuffer>` is registered with the [`Fabric`]; a *bulk fetch* is a
-//! direct memory read of the peer buffer (one-sided, no peer CPU involved —
-//! the RDMA semantics) plus a calibrated wire-cost charge from the
-//! [`CostModel`] (ConnectX-6-like latency + bandwidth). Costs are always
-//! *accounted* (virtual time for the perfmodel and Fig. 6/7 harnesses) and
-//! optionally *emulated* by sleeping, for wall-clock overlap experiments.
+//! one-sided operations. Here the [`Fabric`] owns that *policy* layer —
+//! consolidation accounting, the calibrated [`CostModel`] (ConnectX-6-like
+//! latency + bandwidth), traffic counters, optional wall-clock delay
+//! emulation — and delegates the *mechanism* to a [`Transport`]:
+//!
+//! - **`inproc`** ([`InprocTransport`], default): every worker's
+//!   `Arc<LocalBuffer>` is read directly; a bulk fetch is a one-sided
+//!   memory read (no peer CPU involved — the RDMA semantics) and fetched
+//!   rows share their `Arc<[f32]>` feature slabs with the buffer.
+//! - **`tcp`** ([`TcpTransport`]): the same RPCs over real `std::net`
+//!   sockets — one listener thread per worker serving its buffer with the
+//!   length-prefixed binary protocol in [`wire`], one pooled connection per
+//!   (requester, target) pair. Rows arrive as decoded copies.
+//!
+//! # Which guarantees are universal, which per-backend
+//!
+//! Universal (any backend): fetched rows are value-identical to the stored
+//! samples (features travel as raw LE `f32` bits); `rpcs`/`meta_rpcs`
+//! counts depend only on the sampling plans; virtual wire time is priced
+//! from the semantic payload (`4·d + 8` per row, 12 bytes per snapshot
+//! entry), so Fig. 6/7 projections are backend-independent; local fetches
+//! are free on the wire; transport teardown joins every thread it spawned.
+//!
+//! `inproc` only: `Arc::ptr_eq` sharing between fetched rows and buffer
+//! residents (zero-copy), and `FabricCounters.bytes` equal to the semantic
+//! payload. On `tcp`, `bytes` reports the frames actually written
+//! (payload + length prefixes + request), which is strictly larger.
 
 pub mod cost;
 pub mod fabric;
+pub mod transport;
+pub mod wire;
 
 pub use cost::CostModel;
 pub use fabric::{Fabric, FabricCounters};
+pub use transport::{InprocTransport, TcpTransport, Transport};

@@ -1,0 +1,502 @@
+//! Pluggable fabric backends: how remote-buffer RPCs physically travel.
+//!
+//! The [`crate::net::Fabric`] owns *policy* — consolidation accounting,
+//! wire-cost pricing, traffic counters — and delegates *mechanism* to a
+//! [`Transport`]:
+//!
+//! - [`InprocTransport`] — the zero-copy same-process default. A remote
+//!   fetch is a direct read of the peer's `Arc<LocalBuffer>` (the RDMA
+//!   one-sided analogue); rows share their feature slabs with the buffer.
+//! - [`TcpTransport`] — a real socket backend over `std::net` only (the
+//!   offline-build invariant forbids registry deps). Each worker runs one
+//!   listener thread serving its `LocalBuffer` over the length-prefixed
+//!   binary protocol in [`super::wire`]; clients keep one pooled connection
+//!   per (requester, target) pair. Rows arrive as decoded copies — the
+//!   `Arc::ptr_eq` sharing guarantee is **inproc-only**.
+//!
+//! Both backends serve the same two RPCs (`remote_counts`,
+//! `remote_fetch`) and report the bytes they actually moved, so
+//! `FabricCounters.bytes` reflects real traffic per backend while the
+//! *virtual* wire-time pricing (computed by the fabric from the semantic
+//! payload) stays backend-independent.
+//!
+//! # Teardown
+//!
+//! `TcpTransport::shutdown` closes every pooled client stream (its serving
+//! thread sees EOF and exits), wakes each listener's blocking `accept` with
+//! a throwaway connection, and joins listener threads — which in turn join
+//! their per-connection serving threads. `Drop` runs the same path, so no
+//! fabric thread can outlive the transport's owner (pinned by the
+//! `engine_teardown` integration test).
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::buffer::local::{ClassCount, SNAPSHOT_ENTRY_BYTES};
+use crate::buffer::LocalBuffer;
+use crate::config::TransportKind;
+use crate::tensor::Sample;
+
+use super::wire;
+
+/// A fabric backend: moves metadata snapshots and bulk rows between
+/// workers. Implementations must be callable from any thread (foreground
+/// workers and background engines fetch concurrently).
+pub trait Transport: Send + Sync {
+    fn kind(&self) -> TransportKind;
+
+    /// Number of registered workers.
+    fn workers(&self) -> usize;
+
+    /// The worker's locally-registered buffer (`B_n`). In this
+    /// single-process harness every buffer is registered locally; a
+    /// multi-process deployment would only expose the caller's own.
+    fn buffer(&self, worker: usize) -> &Arc<LocalBuffer>;
+
+    /// Fetch `target`'s metadata snapshot on behalf of `requester`.
+    /// Returns the counts and the bytes the backend actually moved.
+    fn remote_counts(&self, requester: usize, target: usize)
+                     -> Result<(Vec<ClassCount>, usize)>;
+
+    /// One consolidated bulk fetch of rows `(class, idx)` from `target` on
+    /// behalf of `requester`. Returns the rows and the bytes the backend
+    /// actually moved. `picks` is never empty (the fabric short-circuits).
+    fn remote_fetch(&self, requester: usize, target: usize,
+                    picks: &[(u32, usize)]) -> Result<(Vec<Sample>, usize)>;
+
+    /// Tear down background machinery (listener/connection threads). Must
+    /// be idempotent; a no-op for backends without threads.
+    fn shutdown(&self) -> Result<()>;
+}
+
+// ================================================================== inproc
+
+/// Same-process backend: a "remote" fetch reads the peer's buffer directly
+/// through its `Arc`, so rows share feature slabs with the buffer
+/// (zero-copy) and the bytes moved are the semantic payload sizes.
+pub struct InprocTransport {
+    buffers: Vec<Arc<LocalBuffer>>,
+}
+
+impl InprocTransport {
+    pub fn new(buffers: Vec<Arc<LocalBuffer>>) -> InprocTransport {
+        InprocTransport { buffers }
+    }
+}
+
+impl Transport for InprocTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Inproc
+    }
+
+    fn workers(&self) -> usize {
+        self.buffers.len()
+    }
+
+    fn buffer(&self, worker: usize) -> &Arc<LocalBuffer> {
+        &self.buffers[worker]
+    }
+
+    fn remote_counts(&self, _requester: usize, target: usize)
+                     -> Result<(Vec<ClassCount>, usize)> {
+        let counts = self.buffers[target].snapshot_counts();
+        // Size the snapshot we actually return — a second buffer read
+        // (snapshot_wire_bytes) could race a new-class insert and disagree.
+        let bytes = counts.len() * SNAPSHOT_ENTRY_BYTES;
+        Ok((counts, bytes))
+    }
+
+    fn remote_fetch(&self, _requester: usize, target: usize,
+                    picks: &[(u32, usize)]) -> Result<(Vec<Sample>, usize)> {
+        let rows = self.buffers[target].fetch_rows(picks)?;
+        let bytes = rows.iter().map(Sample::wire_bytes).sum();
+        Ok((rows, bytes))
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ===================================================================== tcp
+
+/// Real-socket backend: one listener thread per worker serving its local
+/// buffer, one pooled client connection per (requester, target) pair.
+pub struct TcpTransport {
+    buffers: Vec<Arc<LocalBuffer>>,
+    addrs: Vec<SocketAddr>,
+    /// `pool[requester * n + target]`: lazily-connected client stream.
+    /// Per-pair traffic is serialised by the slot mutex (each worker's
+    /// engine issues its RPCs sequentially, so there is no contention).
+    pool: Vec<Mutex<Option<TcpStream>>>,
+    stop: Arc<AtomicBool>,
+    listeners: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl TcpTransport {
+    /// Bind one loopback listener per worker and start serving. Ports are
+    /// OS-assigned (`127.0.0.1:0`), so any number of fabrics can coexist.
+    /// A mid-construction failure (fd/port exhaustion on a later worker)
+    /// reaps the listeners already spawned before surfacing the error, so
+    /// a failed `new` never leaks a thread.
+    pub fn new(buffers: Vec<Arc<LocalBuffer>>) -> Result<TcpTransport> {
+        let n = buffers.len();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut addrs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (w, buf) in buffers.iter().enumerate() {
+            match start_listener(w, buf, &stop) {
+                Ok((addr, handle)) => {
+                    addrs.push(addr);
+                    handles.push(handle);
+                }
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    for addr in &addrs {
+                        let _ = TcpStream::connect(addr); // wake accept()
+                    }
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(TcpTransport {
+            buffers,
+            addrs,
+            pool: (0..n * n).map(|_| Mutex::new(None)).collect(),
+            stop,
+            listeners: Mutex::new(handles),
+        })
+    }
+
+    /// The loopback address worker `w`'s listener serves on.
+    pub fn addr(&self, w: usize) -> SocketAddr {
+        self.addrs[w]
+    }
+
+    /// One request/response exchange on the pooled (requester, target)
+    /// stream. Returns the response body and the total frame bytes moved
+    /// (request + response, length prefixes included). A failed exchange
+    /// drops the pooled stream so the next call reconnects.
+    fn exchange(&self, requester: usize, target: usize, request: &[u8])
+                -> Result<(Vec<u8>, usize)> {
+        let n = self.buffers.len();
+        let mut slot = self.pool[requester * n + target]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            let stream = TcpStream::connect(self.addrs[target])
+                .with_context(|| format!(
+                    "worker {requester} connecting to worker {target} at {}",
+                    self.addrs[target]))?;
+            stream.set_nodelay(true)?;
+            *slot = Some(stream);
+        }
+        let stream = slot.as_mut().expect("pooled stream just ensured");
+        let round = (|| {
+            wire::write_frame(stream, request)?;
+            wire::read_frame(stream)?
+                .ok_or_else(|| anyhow!("worker {target} closed the connection"))
+        })();
+        match round {
+            Ok(body) => {
+                let bytes = wire::FRAME_HEADER_BYTES + request.len()
+                    + wire::FRAME_HEADER_BYTES + body.len();
+                Ok((body, bytes))
+            }
+            Err(e) => {
+                *slot = None;
+                Err(e.context(format!(
+                    "fabric rpc from worker {requester} to worker {target}")))
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn workers(&self) -> usize {
+        self.buffers.len()
+    }
+
+    fn buffer(&self, worker: usize) -> &Arc<LocalBuffer> {
+        &self.buffers[worker]
+    }
+
+    fn remote_counts(&self, requester: usize, target: usize)
+                     -> Result<(Vec<ClassCount>, usize)> {
+        let req = wire::encode_gather_counts_request();
+        let (body, bytes) = self.exchange(requester, target, &req)?;
+        Ok((wire::decode_counts_response(&body)?, bytes))
+    }
+
+    fn remote_fetch(&self, requester: usize, target: usize,
+                    picks: &[(u32, usize)]) -> Result<(Vec<Sample>, usize)> {
+        let req = wire::encode_fetch_bulk_request(picks);
+        let (body, bytes) = self.exchange(requester, target, &req)?;
+        Ok((wire::decode_fetch_response(&body)?, bytes))
+    }
+
+    fn shutdown(&self) -> Result<()> {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            // Already shut down (e.g. Drop after an explicit call): the
+            // handles are drained, and re-running the wake would connect
+            // to ports the OS may have reassigned to a foreign process.
+            return Ok(());
+        }
+        // Close pooled client streams: their serving threads see EOF.
+        for slot in &self.pool {
+            *slot.lock().unwrap_or_else(|p| p.into_inner()) = None;
+        }
+        // Wake each listener's blocking accept(); it observes `stop` and
+        // drains. Retry briefly: under fd pressure the wake connect itself
+        // can fail while the listener is still alive in accept() — giving
+        // up immediately would hang the join below forever.
+        for addr in &self.addrs {
+            for attempt in 0..20 {
+                match TcpStream::connect(addr) {
+                    Ok(_) => break,
+                    Err(_) if attempt < 19 => std::thread::sleep(
+                        std::time::Duration::from_millis(10)),
+                    Err(_) => {} // listener thread is already gone
+                }
+            }
+        }
+        let handles: Vec<JoinHandle<()>> = self
+            .listeners
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+            .collect();
+        // Join every listener even if one panicked — bailing early would
+        // leave the rest (and their serving threads) leaked and a retry
+        // impossible (the handles are already drained).
+        let mut panicked = 0usize;
+        for h in handles {
+            if h.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            bail!("{panicked} fabric listener thread(s) panicked");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+/// Bind worker `w`'s loopback listener and spawn its accept-loop thread.
+fn start_listener(w: usize, buf: &Arc<LocalBuffer>, stop: &Arc<AtomicBool>)
+                  -> Result<(SocketAddr, JoinHandle<()>)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))
+        .with_context(|| format!("binding fabric listener for worker {w}"))?;
+    let addr = listener.local_addr()?;
+    let buf = Arc::clone(buf);
+    let stop = Arc::clone(stop);
+    let handle = std::thread::Builder::new()
+        .name(format!("dcl-net-listen-{w}"))
+        .spawn(move || listen_loop(listener, buf, stop, w))?;
+    Ok((addr, handle))
+}
+
+/// Accept loop for one worker's listener. Spawns a serving thread per
+/// accepted connection and joins them all before exiting, so the listener's
+/// join transitively reaps every connection thread.
+fn listen_loop(listener: TcpListener, buffer: Arc<LocalBuffer>,
+               stop: Arc<AtomicBool>, worker: usize) {
+    let mut serving: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stop.load(Ordering::SeqCst) {
+                    break; // the shutdown wake-up connection
+                }
+                let buf = Arc::clone(&buffer);
+                let conn_stop = Arc::clone(&stop);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("dcl-net-serve-{worker}"))
+                    .spawn(move || serve_connection(stream, buf, conn_stop));
+                match spawned {
+                    Ok(handle) => serving.push(handle),
+                    // Same resource-pressure class the accept arm below
+                    // tolerates: shed this connection — the peer sees a
+                    // clean EOF and reports a normal RPC error — but keep
+                    // the listener alive for later traffic.
+                    Err(_) => std::thread::sleep(
+                        std::time::Duration::from_millis(5)),
+                }
+            }
+            Err(_) => {
+                // Transient accept failures (ECONNABORTED, fd pressure)
+                // must not kill the listener mid-run; exit only once
+                // shutdown has begun.
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+    drop(listener);
+    for h in serving {
+        let _ = h.join();
+    }
+}
+
+/// Serve one client connection: decode request frames, answer from the
+/// local buffer, until the peer closes, a protocol error occurs, or
+/// shutdown begins. The idle wait polls with a read timeout so an
+/// open-but-silent connection (a stalled or foreign peer) cannot pin
+/// `shutdown()` forever on this thread's join.
+fn serve_connection(mut stream: TcpStream, buffer: Arc<LocalBuffer>,
+                    stop: Arc<AtomicBool>) {
+    // Short poll while idle (bounds how long this thread can pin
+    // shutdown); generous budget once a frame has started, so a peer
+    // thread descheduled between its header and body writes on a loaded
+    // CI box is not mistaken for a dead connection.
+    const IDLE_POLL: std::time::Duration = std::time::Duration::from_millis(100);
+    const FRAME_READ: std::time::Duration = std::time::Duration::from_secs(2);
+    let _ = stream.set_nodelay(true);
+    loop {
+        // Peek (no bytes consumed) until a frame arrives: a timeout here
+        // is idleness, not a protocol violation — re-check the stop flag
+        // and keep waiting.
+        let _ = stream.set_read_timeout(Some(IDLE_POLL));
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // clean EOF
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock
+                                       | std::io::ErrorKind::TimedOut) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        // Data is pending: read the whole frame, tolerating mid-frame
+        // pauses up to FRAME_READ; a peer stalled longer is dropped.
+        let _ = stream.set_read_timeout(Some(FRAME_READ));
+        let body = match wire::read_frame(&mut stream) {
+            Ok(Some(body)) => body,
+            _ => return, // EOF, broken stream, or mid-frame stall
+        };
+        let response = match wire::decode_request(&body) {
+            Ok(wire::Request::GatherCounts) => {
+                wire::encode_counts_response(&buffer.snapshot_counts())
+            }
+            Ok(wire::Request::FetchBulk(picks)) => {
+                // A network-decoded request is untrusted: picks naming a
+                // class this buffer doesn't hold error out of `fetch_rows`
+                // and drop the connection instead of panicking the thread.
+                match buffer.fetch_rows(&picks) {
+                    Ok(rows) => wire::encode_fetch_response(&rows),
+                    Err(_) => return,
+                }
+            }
+            Err(_) => return, // malformed request: drop the connection
+        };
+        if wire::write_frame(&mut stream, &response).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buffers(n: usize, per_class: usize) -> Vec<Arc<LocalBuffer>> {
+        crate::testkit::filled_buffers(n, per_class, 2)
+    }
+
+    #[test]
+    fn tcp_counts_and_fetch_roundtrip() {
+        let t = TcpTransport::new(buffers(3, 5)).unwrap();
+        let (counts, bytes) = t.remote_counts(0, 2).unwrap();
+        assert_eq!(counts.len(), 4);
+        assert!(counts.iter().all(|&(_, n)| n == 5));
+        assert_eq!(bytes, wire::gather_counts_exchange_bytes(4));
+
+        let picks = vec![(1u32, 0usize), (2, 3)];
+        let (rows, bytes) = t.remote_fetch(0, 2, &picks).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|s| s.features[0] == 2.0), "rows from worker 2");
+        assert_eq!(bytes, wire::fetch_bulk_exchange_bytes(picks.len(), &rows));
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_matches_inproc_data() {
+        let bufs = buffers(2, 3);
+        let inproc = InprocTransport::new(bufs.clone());
+        let tcp = TcpTransport::new(bufs).unwrap();
+        let (ci, _) = inproc.remote_counts(0, 1).unwrap();
+        let (ct, _) = tcp.remote_counts(0, 1).unwrap();
+        assert_eq!(ci, ct);
+        let picks = vec![(0u32, 1usize), (3, 2)];
+        let (ri, _) = inproc.remote_fetch(0, 1, &picks).unwrap();
+        let (rt, _) = tcp.remote_fetch(0, 1, &picks).unwrap();
+        assert_eq!(ri, rt, "TCP rows must decode byte-identical");
+        tcp.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_pools_one_connection_per_pair() {
+        let t = TcpTransport::new(buffers(2, 2)).unwrap();
+        for _ in 0..5 {
+            t.remote_counts(0, 1).unwrap();
+        }
+        let n = t.workers();
+        let live = (0..n * n)
+            .filter(|i| t.pool[*i].lock().unwrap().is_some())
+            .count();
+        assert_eq!(live, 1, "repeat RPCs must reuse the pooled stream");
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hostile_fetch_for_unknown_class_drops_the_connection() {
+        let t = TcpTransport::new(buffers(2, 2)).unwrap();
+        let mut s = TcpStream::connect(t.addr(1)).unwrap();
+        let req = wire::encode_fetch_bulk_request(&[(99, 0)]); // absent class
+        wire::write_frame(&mut s, &req).unwrap();
+        assert!(wire::read_frame(&mut s).unwrap().is_none(),
+                "server must drop the connection, not panic");
+        // the listener survives and keeps serving legitimate traffic
+        let (rows, _) = t.remote_fetch(0, 1, &[(0, 0)]).unwrap();
+        assert_eq!(rows.len(), 1);
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_shutdown_is_idempotent_and_drop_safe() {
+        let t = TcpTransport::new(buffers(2, 1)).unwrap();
+        t.remote_counts(0, 1).unwrap();
+        t.shutdown().unwrap();
+        t.shutdown().unwrap();
+        drop(t); // Drop re-runs shutdown; must not hang or panic
+    }
+
+    #[test]
+    fn tcp_rpc_after_shutdown_errors() {
+        let t = TcpTransport::new(buffers(2, 1)).unwrap();
+        t.shutdown().unwrap();
+        assert!(t.remote_counts(0, 1).is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! Length-prefixed binary wire protocol for the TCP transport.
+//!
+//! Every message is one *frame*: a little-endian `u32` body length followed
+//! by the body. Request bodies start with a one-byte opcode; response bodies
+//! carry only the payload (the client knows which request it sent on the
+//! connection — requests are strictly serialised per pooled stream).
+//!
+//! ```text
+//! frame             := u32 body_len | body
+//! request body      := op:u8 payload
+//!   GATHER_COUNTS   := (no payload)
+//!   FETCH_BULK      := u32 n | n x (u32 class, u32 idx)
+//! response body
+//!   GATHER_COUNTS   := u32 n | n x (u32 class, u32 count)
+//!   FETCH_BULK      := u32 n | n x (u32 label, u32 dim, dim x f32)
+//! ```
+//!
+//! The fetch-response row encoding is `8 + 4·dim` bytes — deliberately the
+//! same size as [`Sample::wire_bytes`], so the *payload* the TCP backend
+//! moves matches what the in-process cost model accounts; the observable
+//! difference between backends is only the framing overhead (4-byte length
+//! prefix per frame, 1-byte opcode + pick list on the request side). The
+//! `*_frame_bytes` helpers below give those exact on-wire sizes so tests
+//! and counters can assert against them.
+//!
+//! All integers are little-endian; `f32` features travel as raw LE bit
+//! patterns, so a fetched row decodes bit-identical to the stored sample.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use crate::buffer::local::ClassCount;
+use crate::tensor::Sample;
+
+/// Request opcode: metadata (per-class count) snapshot.
+pub const OP_GATHER_COUNTS: u8 = 1;
+/// Request opcode: consolidated bulk row fetch.
+pub const OP_FETCH_BULK: u8 = 2;
+
+/// Size of the frame length prefix.
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Upper bound on a frame body. Far above any legitimate exchange (the
+/// largest is a bulk-fetch response: tens of rows × `4·dim + 8` bytes),
+/// low enough that a hostile or corrupt length prefix cannot drive a
+/// multi-gigabyte allocation in [`read_frame`].
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Upper bound on picks per bulk-fetch request. Sampling plans issue at
+/// most `reps` picks per target (single digits in the paper's setups), so
+/// this is generous headroom — while capping the *response* a small
+/// hostile request could otherwise demand: without it, a ~64 MB pick list
+/// of wide rows legitimately under [`MAX_FRAME_BYTES`] would force the
+/// serving side to allocate a response orders of magnitude larger.
+pub const MAX_PICKS_PER_FETCH: usize = 4096;
+
+/// A decoded request, as seen by the serving listener.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Request {
+    GatherCounts,
+    FetchBulk(Vec<(u32, usize)>),
+}
+
+// ---------------------------------------------------------------- framing
+
+/// Write one frame (length prefix + body).
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    let len = u32::try_from(body.len())?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame body. `Ok(None)` on clean EOF at a frame boundary (the
+/// peer closed the connection); errors on truncated frames.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match r.read(&mut len)? {
+        0 => return Ok(None),
+        4 => {}
+        n => {
+            // Partial length prefix: finish it or fail on mid-prefix EOF.
+            let mut got = n;
+            while got < 4 {
+                let k = r.read(&mut len[got..])?;
+                if k == 0 {
+                    bail!("connection closed mid frame header");
+                }
+                got += k;
+            }
+        }
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+// ---------------------------------------------------------------- requests
+
+pub fn encode_gather_counts_request() -> Vec<u8> {
+    vec![OP_GATHER_COUNTS]
+}
+
+pub fn encode_fetch_bulk_request(picks: &[(u32, usize)]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(5 + picks.len() * 8);
+    b.push(OP_FETCH_BULK);
+    b.extend_from_slice(&(picks.len() as u32).to_le_bytes());
+    for &(class, idx) in picks {
+        b.extend_from_slice(&class.to_le_bytes());
+        b.extend_from_slice(&(idx as u32).to_le_bytes());
+    }
+    b
+}
+
+pub fn decode_request(body: &[u8]) -> Result<Request> {
+    let Some((&op, rest)) = body.split_first() else {
+        bail!("empty request frame");
+    };
+    match op {
+        OP_GATHER_COUNTS => {
+            if !rest.is_empty() {
+                bail!("gather-counts request carries {} stray bytes", rest.len());
+            }
+            Ok(Request::GatherCounts)
+        }
+        OP_FETCH_BULK => {
+            let mut c = Cursor::new(rest);
+            let n = c.u32()? as usize;
+            // Bound the allocation by what the body can actually hold: a
+            // wire-controlled count must not size a Vec on its own.
+            if n > c.remaining() / 8 {
+                bail!("fetch request claims {n} picks, body holds {}",
+                      c.remaining() / 8);
+            }
+            if n > MAX_PICKS_PER_FETCH {
+                bail!("fetch request asks {n} picks, cap is \
+                       {MAX_PICKS_PER_FETCH}");
+            }
+            let mut picks = Vec::with_capacity(n);
+            for _ in 0..n {
+                let class = c.u32()?;
+                let idx = c.u32()? as usize;
+                picks.push((class, idx));
+            }
+            c.done()?;
+            Ok(Request::FetchBulk(picks))
+        }
+        other => bail!("unknown request opcode {other}"),
+    }
+}
+
+// --------------------------------------------------------------- responses
+
+pub fn encode_counts_response(counts: &[ClassCount]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(4 + counts.len() * 8);
+    b.extend_from_slice(&(counts.len() as u32).to_le_bytes());
+    for &(class, n) in counts {
+        b.extend_from_slice(&class.to_le_bytes());
+        b.extend_from_slice(&(n as u32).to_le_bytes());
+    }
+    b
+}
+
+pub fn decode_counts_response(body: &[u8]) -> Result<Vec<ClassCount>> {
+    let mut c = Cursor::new(body);
+    let n = c.u32()? as usize;
+    if n > c.remaining() / 8 {
+        bail!("counts response claims {n} entries, body holds {}",
+              c.remaining() / 8);
+    }
+    let mut counts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let class = c.u32()?;
+        let count = c.u32()? as usize;
+        counts.push((class, count));
+    }
+    c.done()?;
+    Ok(counts)
+}
+
+pub fn encode_fetch_response(rows: &[Sample]) -> Vec<u8> {
+    let per_row: usize = rows.iter().map(|s| 8 + s.features.len() * 4).sum();
+    let mut b = Vec::with_capacity(4 + per_row);
+    b.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for row in rows {
+        b.extend_from_slice(&row.label.to_le_bytes());
+        b.extend_from_slice(&(row.features.len() as u32).to_le_bytes());
+        for &f in row.features.iter() {
+            b.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+    b
+}
+
+pub fn decode_fetch_response(body: &[u8]) -> Result<Vec<Sample>> {
+    let mut c = Cursor::new(body);
+    let n = c.u32()? as usize;
+    if n > c.remaining() / 8 {
+        bail!("fetch response claims {n} rows, body holds at most {}",
+              c.remaining() / 8);
+    }
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = c.u32()?;
+        let dim = c.u32()? as usize;
+        if dim > c.remaining() / 4 {
+            bail!("row claims {dim} features, body holds {}",
+                  c.remaining() / 4);
+        }
+        let mut feats = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            feats.push(f32::from_le_bytes(c.bytes4()?));
+        }
+        rows.push(Sample::new(label, feats));
+    }
+    c.done()?;
+    Ok(rows)
+}
+
+// ------------------------------------------------------------- wire sizes
+
+/// Exact on-wire bytes of a gather-counts exchange (request + response
+/// frames, headers included) for a snapshot of `num_classes` entries.
+pub fn gather_counts_exchange_bytes(num_classes: usize) -> usize {
+    (FRAME_HEADER_BYTES + 1) + (FRAME_HEADER_BYTES + 4 + num_classes * 8)
+}
+
+/// Exact on-wire bytes of a fetch-bulk exchange for `picks` picks returning
+/// `rows` (headers included). Rows cost `8 + 4·dim` each — the same payload
+/// size [`Sample::wire_bytes`] accounts on the in-process backend.
+pub fn fetch_bulk_exchange_bytes(picks: usize, rows: &[Sample]) -> usize {
+    let payload: usize = rows.iter().map(Sample::wire_bytes).sum();
+    (FRAME_HEADER_BYTES + 5 + picks * 8) + (FRAME_HEADER_BYTES + 4 + payload)
+}
+
+// ---------------------------------------------------------------- cursor
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn bytes4(&mut self) -> Result<[u8; 4]> {
+        let Some(chunk) = self.buf.get(self.pos..self.pos + 4) else {
+            bail!("truncated frame body at offset {}", self.pos);
+        };
+        self.pos += 4;
+        Ok([chunk[0], chunk[1], chunk[2], chunk[3]])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes4()?))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} stray bytes after frame body", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_over_a_pipe() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncated_frame_errors() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(6); // header + 2 of 5 body bytes
+        let mut r = buf.as_slice();
+        assert!(read_frame(&mut r).is_err());
+        let mut r = &buf[..2]; // mid-header EOF
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let body = encode_gather_counts_request();
+        assert_eq!(decode_request(&body).unwrap(), Request::GatherCounts);
+
+        let picks = vec![(3u32, 0usize), (9, 17), (0, 2)];
+        let body = encode_fetch_bulk_request(&picks);
+        assert_eq!(decode_request(&body).unwrap(), Request::FetchBulk(picks));
+
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[77]).is_err());
+    }
+
+    #[test]
+    fn counts_roundtrip() {
+        let counts = vec![(0u32, 5usize), (7, 0), (40, 1200)];
+        let body = encode_counts_response(&counts);
+        assert_eq!(decode_counts_response(&body).unwrap(), counts);
+        assert!(decode_counts_response(&body[..body.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn fetch_response_roundtrips_bit_identical() {
+        let rows = vec![
+            Sample::new(4, vec![1.0, -2.5, f32::MIN_POSITIVE, 0.0]),
+            Sample::new(0, vec![]),
+            Sample::new(u32::MAX, vec![f32::NAN]),
+        ];
+        let body = encode_fetch_response(&rows);
+        let back = decode_fetch_response(&body).unwrap();
+        assert_eq!(back.len(), rows.len());
+        for (a, b) in rows.iter().zip(&back) {
+            assert_eq!(a.label, b.label);
+            // bit-level comparison (NaN-safe)
+            let abits: Vec<u32> = a.features.iter().map(|f| f.to_bits()).collect();
+            let bbits: Vec<u32> = b.features.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(abits, bbits);
+        }
+    }
+
+    #[test]
+    fn hostile_length_fields_are_rejected_without_allocating() {
+        // frame length far over the cap
+        let mut buf = u32::MAX.to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0; 8]);
+        let mut r = buf.as_slice();
+        assert!(read_frame(&mut r).is_err());
+
+        // fetch request claiming u32::MAX picks in a 5-byte body
+        let mut body = vec![OP_FETCH_BULK];
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_request(&body).is_err());
+
+        // counts response claiming more entries than the body holds
+        let body = u32::MAX.to_le_bytes().to_vec();
+        assert!(decode_counts_response(&body).is_err());
+
+        // fetch-response row claiming a multi-gigabyte feature dim
+        let mut body = 1u32.to_le_bytes().to_vec();
+        body.extend_from_slice(&0u32.to_le_bytes()); // label
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+        assert!(decode_fetch_response(&body).is_err());
+
+        // a well-formed request over the pick cap (response amplification)
+        let picks: Vec<(u32, usize)> =
+            (0..MAX_PICKS_PER_FETCH + 1).map(|i| (0u32, i)).collect();
+        let body = encode_fetch_bulk_request(&picks);
+        assert!(decode_request(&body).is_err());
+    }
+
+    #[test]
+    fn exchange_sizes_match_encodings() {
+        let picks = vec![(1u32, 0usize), (2, 3)];
+        let rows = vec![Sample::new(1, vec![0.5; 8]), Sample::new(2, vec![1.5; 8])];
+        let req = encode_fetch_bulk_request(&picks);
+        let resp = encode_fetch_response(&rows);
+        assert_eq!(fetch_bulk_exchange_bytes(picks.len(), &rows),
+                   (4 + req.len()) + (4 + resp.len()));
+        // response payload per row == Sample::wire_bytes
+        assert_eq!(resp.len(), 4 + rows.iter().map(Sample::wire_bytes).sum::<usize>());
+
+        let counts = vec![(0u32, 3usize), (1, 4), (2, 5)];
+        let creq = encode_gather_counts_request();
+        let cresp = encode_counts_response(&counts);
+        assert_eq!(gather_counts_exchange_bytes(counts.len()),
+                   (4 + creq.len()) + (4 + cresp.len()));
+    }
+}

@@ -99,8 +99,9 @@ impl GlobalSampler {
     }
 
     /// Execute a plan over the fabric: one bulk fetch per target (remote
-    /// fetches priced by the cost model). Returns the assembled
-    /// representatives and the accumulated virtual wire time.
+    /// fetches priced by the cost model and carried by whichever transport
+    /// backs the fabric). Returns the assembled representatives and the
+    /// accumulated virtual wire time.
     pub fn execute(&self, fabric: &Fabric, plan: &SamplingPlan)
                    -> Result<(Vec<Sample>, Duration)> {
         let mut reps = Vec::with_capacity(plan.total);
@@ -238,7 +239,7 @@ mod tests {
         let fabric = Fabric::new(buffers, CostModel::default(), false);
         let gs = GlobalSampler::new(0, SamplingScope::Global);
         let mut rng = Rng::new(6);
-        let counts = fabric.gather_counts(0);
+        let counts = fabric.gather_counts(0).unwrap();
         let plan = gs.plan(&counts, 7, &mut rng);
         let (reps, wire) = gs.execute(&fabric, &plan).unwrap();
         assert_eq!(reps.len(), 7);

@@ -38,3 +38,32 @@ pub fn tiny_config() -> Option<crate::config::ExperimentConfig> {
         .unwrap_or_else(|| PathBuf::from("artifacts").join("tiny"));
     Some(cfg)
 }
+
+/// Deterministically-filled buffer set shared by the fabric/transport
+/// tests: `n` buffers × 4 classes × `per_class` rows of `dim` features,
+/// with `features[0] = worker id` so row provenance is assertable and the
+/// remaining features distinct per (class, row, column).
+pub fn filled_buffers(n: usize, per_class: usize, dim: usize)
+                      -> Vec<std::sync::Arc<crate::buffer::LocalBuffer>> {
+    use crate::buffer::LocalBuffer;
+    use crate::config::EvictionPolicy;
+    use crate::tensor::Sample;
+    (0..n)
+        .map(|w| {
+            let b = LocalBuffer::new(100, EvictionPolicy::Random, w as u64);
+            for class in 0..4u32 {
+                for i in 0..per_class {
+                    let feats: Vec<f32> = (0..dim)
+                        .map(|k| if k == 0 {
+                            w as f32
+                        } else {
+                            (class as usize * 100 + i * 10 + k) as f32
+                        })
+                        .collect();
+                    b.insert(Sample::new(class, feats));
+                }
+            }
+            std::sync::Arc::new(b)
+        })
+        .collect()
+}

@@ -176,8 +176,9 @@ impl<'a> Trainer<'a> {
             .map(|w| Arc::new(LocalBuffer::new(
                 s_max, cfg.buffer.policy, cfg.training.seed ^ (w as u64) << 8)))
             .collect();
-        let fabric = Arc::new(Fabric::new(
-            buffers, self.cost_model(), cfg.cluster.emulate_delays));
+        let fabric = Arc::new(Fabric::for_kind(
+            cfg.cluster.transport, buffers, self.cost_model(),
+            cfg.cluster.emulate_delays)?);
         let params = EngineParams {
             batch: cfg.training.batch,
             reps: cfg.training.reps,
@@ -190,11 +191,18 @@ impl<'a> Trainer<'a> {
                 w, Arc::clone(&fabric), params, cfg.training.seed ^ (w as u64) << 16))
             .collect();
 
-        self.drive(Some(engines), |task| {
+        let out = self.drive(Some(engines), |task| {
             // rehearsal trains on the current task's data only; old tasks
             // come back through the buffer.
             self.dataset.train_indices_of_classes(self.tasks.classes(task))
-        }, false)
+        }, false);
+        // Workers and engines are joined by the time drive() returns; tear
+        // down the fabric's transport (listener/connection threads on tcp)
+        // before handing the report back, success or not.
+        let teardown = fabric.shutdown();
+        let report = out?;
+        teardown?;
+        Ok(report)
     }
 
     // ---------------------------------------------------------------- baselines
@@ -346,6 +354,7 @@ impl<'a> Trainer<'a> {
         Ok(RunReport {
             strategy: cfg.training.strategy.name().to_string(),
             variant: cfg.training.variant.clone(),
+            transport: cfg.cluster.transport.name().to_string(),
             workers: n,
             buffer_percent: cfg.buffer.percent_of_dataset,
             epochs,
@@ -493,8 +502,12 @@ fn worker_loop(w: usize,
             break; // coordinator gone
         }
     }
-    // `engine` drops here: in-flight round drained, background thread
-    // joined — nothing outlives the worker.
+    // Explicit engine teardown (drain + join) so a transport failure in
+    // the final in-flight round poisons the run instead of vanishing in
+    // Drop; past the epoch loop there are no barriers left to honor.
+    if let Some(mut e) = engine.take() {
+        poison_on_failure(shared, "engine teardown", || e.shutdown());
+    }
 }
 
 /// One worker's foreground half of an iteration: load, Listing-1 update,

@@ -142,7 +142,7 @@ fn fetch_rows_returns_requested_classes() {
                 (c, rng.below(n))
             })
             .collect();
-        let rows = buf.fetch_rows(&picks);
+        let rows = buf.fetch_rows(&picks).map_err(|e| e.to_string())?;
         for (row, &(c, _)) in rows.iter().zip(&picks) {
             if row.label != c {
                 return Err(format!("asked class {c}, got {}", row.label));

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope, Strategy};
+use dcl::config::{EvictionPolicy, SamplingScope, Strategy, TransportKind};
 use dcl::engine::{EngineParams, RehearsalEngine};
 use dcl::net::{CostModel, Fabric};
 use dcl::tensor::{Batch, Sample};
@@ -89,6 +89,36 @@ fn no_thread_outlives_its_owner() {
     assert!(report.iterations > 0);
     assert!(settles_to(baseline),
             "trainer threads leaked: {:?} > baseline {baseline}", thread_count());
+
+    // --- same run over the TCP transport: listener + connection threads --
+    let mut cfg = dcl::testkit::tiny_config().expect("tiny config");
+    cfg.training.epochs_per_task = 1;
+    cfg.training.strategy = Strategy::Rehearsal;
+    cfg.cluster.transport = TransportKind::Tcp;
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg).expect("tcp rehearsal run");
+    assert!(report.iterations > 0);
+    assert!(settles_to(baseline),
+            "tcp fabric threads (listener/serve) leaked: {:?} > baseline \
+             {baseline}", thread_count());
+
+    // a TCP fabric torn down by Drop alone must also reap its threads
+    {
+        let buffers = (0..3)
+            .map(|w| Arc::new(LocalBuffer::new(50, EvictionPolicy::Random, w as u64)))
+            .collect();
+        let fabric = dcl::net::Fabric::over_tcp(
+            buffers, CostModel::default(), false).expect("loopback fabric");
+        for w in 0..3 {
+            fabric.buffer(w).insert(Sample::new(0, vec![w as f32]));
+        }
+        fabric.fetch_bulk(0, 1, &[(0, 0)]).unwrap();
+        fabric.fetch_bulk(2, 1, &[(0, 0)]).unwrap();
+        drop(fabric); // no explicit shutdown
+    }
+    assert!(settles_to(baseline),
+            "dropped TCP fabric leaked a thread: {:?} > baseline {baseline}",
+            thread_count());
 
     // dropping with a round in flight must also tear down cleanly
     {

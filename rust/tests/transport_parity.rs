@@ -1,0 +1,158 @@
+//! Loopback parity between the fabric backends (ISSUE 2): the TCP
+//! transport is a *mechanism* swap, not a semantics change.
+//!
+//! - A fixed-seed sampling round executed over TCP must return
+//!   byte-identical samples and identical `FabricCounters.rpcs` /
+//!   `meta_rpcs` as the in-process backend. Wire `bytes` legitimately
+//!   differ (framing overhead) and are asserted separately against the
+//!   encoded frame sizes from `net::wire`.
+//! - Under the engine-parity deterministic candidate stream (c = b), a
+//!   2-worker concurrent engine run over TCP must leave the same per-class
+//!   buffer occupancy as over the in-process fabric.
+//! - A `workers = 2` rehearsal training run completes end-to-end over
+//!   `transport = "tcp"` on loopback.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope, Strategy, TransportKind};
+use dcl::engine::{EngineParams, RehearsalEngine};
+use dcl::net::{wire, CostModel, Fabric};
+use dcl::sampling::GlobalSampler;
+use dcl::tensor::{Batch, Sample};
+use dcl::train::trainer::run_experiment;
+use dcl::util::rng::Rng;
+
+use dcl::testkit::filled_buffers;
+
+#[test]
+fn fixed_seed_sampling_round_is_backend_identical() {
+    let bufs = filled_buffers(3, 6, 8);
+    let inproc = Fabric::new(bufs.clone(), CostModel::default(), false);
+    let tcp = Fabric::over_tcp(bufs.clone(), CostModel::default(), false)
+        .expect("loopback fabric");
+
+    let sampler = GlobalSampler::new(0, SamplingScope::Global);
+    let mut rng_a = Rng::new(77);
+    let mut rng_b = Rng::new(77);
+
+    let counts_a = inproc.gather_counts(0).unwrap();
+    let counts_b = tcp.gather_counts(0).unwrap();
+    assert_eq!(counts_a, counts_b, "metadata snapshots must agree");
+
+    let plan_a = sampler.plan(&counts_a, 7, &mut rng_a);
+    let plan_b = sampler.plan(&counts_b, 7, &mut rng_b);
+    assert_eq!(plan_a, plan_b, "same seed + same counts => same plan");
+
+    let (rows_a, _) = sampler.execute(&inproc, &plan_a).unwrap();
+    let (rows_b, _) = sampler.execute(&tcp, &plan_b).unwrap();
+
+    // Byte-identical samples: labels equal, features bit-for-bit equal.
+    assert_eq!(rows_a.len(), rows_b.len());
+    for (a, b) in rows_a.iter().zip(&rows_b) {
+        assert_eq!(a.label, b.label);
+        let abits: Vec<u32> = a.features.iter().map(|f| f.to_bits()).collect();
+        let bbits: Vec<u32> = b.features.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(abits, bbits, "features must survive the wire bit-exact");
+    }
+
+    // RPC counts are a property of the plan, not the backend.
+    let (rpcs_a, bytes_a, meta_a, meta_bytes_a, _) = inproc.counters.snapshot();
+    let (rpcs_b, bytes_b, meta_b, meta_bytes_b, _) = tcp.counters.snapshot();
+    assert_eq!(rpcs_a, rpcs_b, "bulk RPC count must not depend on backend");
+    assert_eq!(meta_a, meta_b, "meta RPC count must not depend on backend");
+    assert_eq!(rpcs_a, plan_a.remote_rpcs(0) as u64);
+
+    // Metadata bytes: semantic entry size on inproc (2 remote peers × 4
+    // classes × 12 B), encoded exchange frames on tcp.
+    assert_eq!(meta_bytes_a, 2 * 4 * 12);
+    assert_eq!(meta_bytes_b,
+               2 * wire::gather_counts_exchange_bytes(4) as u64);
+
+    // Wire bytes differ by exactly the framing overhead: inproc accounts
+    // the semantic payload, tcp the encoded request+response frames.
+    let mut semantic = 0u64;
+    let mut framed = 0u64;
+    for (target, picks) in &plan_a.requests {
+        if *target == 0 || picks.is_empty() {
+            continue;
+        }
+        let rows = bufs[*target].fetch_rows(picks).unwrap();
+        semantic += rows.iter().map(Sample::wire_bytes).sum::<usize>() as u64;
+        framed += wire::fetch_bulk_exchange_bytes(picks.len(), &rows) as u64;
+    }
+    assert_eq!(bytes_a, semantic, "inproc bytes = semantic payload");
+    assert_eq!(bytes_b, framed, "tcp bytes = encoded frame sizes");
+    assert!(bytes_b > bytes_a, "framing overhead must be visible");
+
+    // Virtual wire time is priced identically on both backends.
+    let wire_a = inproc.counters.wire_ns.load(Ordering::Relaxed);
+    let wire_b = tcp.counters.wire_ns.load(Ordering::Relaxed);
+    assert_eq!(wire_a, wire_b, "virtual pricing must be backend-independent");
+
+    tcp.shutdown().unwrap();
+}
+
+/// Drive `iters` iterations of the same deterministic batch stream through
+/// a 2-worker cluster over the given backend and return per-class
+/// occupancy (the engine-parity harness, parameterised by transport).
+fn run_mode(kind: TransportKind, iters: u32) -> Vec<Vec<(u32, usize)>> {
+    let (b, r) = (8usize, 4usize);
+    let buffers = (0..2)
+        .map(|w| Arc::new(LocalBuffer::new(60, EvictionPolicy::Random, w as u64)))
+        .collect();
+    let fabric = Arc::new(
+        Fabric::for_kind(kind, buffers, CostModel::default(), false).unwrap());
+    let params = EngineParams {
+        batch: b,
+        reps: r,
+        candidates: b, // c = b: occupancy independent of RNG interleaving
+        scope: SamplingScope::Global,
+        async_updates: true,
+    };
+    let mut engines: Vec<RehearsalEngine> = (0..2)
+        .map(|w| RehearsalEngine::new(w, Arc::clone(&fabric), params,
+                                      1000 + w as u64))
+        .collect();
+    for i in 0..iters {
+        for (w, e) in engines.iter_mut().enumerate() {
+            let class = (w as u32 * 5 + i) % 7;
+            let batch = Batch::new(
+                (0..b).map(|j| Sample::new(class, vec![i as f32, j as f32]))
+                    .collect());
+            e.update(&batch).unwrap();
+        }
+    }
+    for e in &mut engines {
+        e.shutdown().unwrap();
+    }
+    drop(engines);
+    let occupancy = (0..2).map(|w| fabric.buffer(w).snapshot_counts()).collect();
+    fabric.shutdown().unwrap();
+    occupancy
+}
+
+#[test]
+fn deterministic_candidate_stream_occupancy_is_backend_identical() {
+    let inproc = run_mode(TransportKind::Inproc, 40);
+    let tcp = run_mode(TransportKind::Tcp, 40);
+    assert_eq!(inproc, tcp,
+               "TCP transport changed buffer contents, not just the wire");
+    let total: usize = tcp.iter().flatten().map(|&(_, n)| n).sum();
+    assert!(total > 0, "buffers stayed empty");
+}
+
+#[test]
+fn rehearsal_training_run_completes_over_tcp_loopback() {
+    let mut cfg = dcl::testkit::tiny_config().expect("tiny config");
+    cfg.training.epochs_per_task = 1;
+    cfg.training.strategy = Strategy::Rehearsal;
+    cfg.cluster.transport = TransportKind::Tcp;
+    assert!(cfg.cluster.workers >= 2, "needs real remote traffic");
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg).expect("tcp rehearsal run");
+    assert_eq!(report.transport, "tcp");
+    assert!(report.iterations > 0);
+    assert!(report.epochs.iter().all(|e| e.train_loss.is_finite()));
+}

@@ -1,0 +1,278 @@
+//! Perf-regression gate for CI (ISSUE 2 satellite).
+//!
+//! The bench harness writes one CSV per bench binary under
+//! `target/bench_results/`. This tool turns those into a single
+//! `BENCH_ci.json` artifact and compares the metrics named in a committed
+//! baseline against it with a tolerance band:
+//!
+//! ```text
+//! bench_gate merge  [--dir target/bench_results] [--out BENCH_ci.json]
+//! bench_gate check  [--current BENCH_ci.json] [--baseline ci/bench_baseline.json]
+//! bench_gate update [--current BENCH_ci.json] [--baseline ci/bench_baseline.json]
+//! ```
+//!
+//! `check` fails (non-zero exit) when any baseline metric regresses by more
+//! than the tolerance — mean times going up, throughputs going down. A
+//! baseline metric whose `value` is `null` is *record-only*: the gate
+//! prints the measured value and passes, so the first CI run on a new
+//! machine class bootstraps the numbers (`update` writes them back into
+//! the baseline file for committing). A metric missing from the current
+//! results fails the gate: renaming a bench must not silently disable its
+//! guardrail.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dcl::cli::Args;
+use dcl::formats::json::Json;
+
+const USAGE: &str = "usage: bench_gate <merge|check|update> [--flag value ...]
+  merge  --dir DIR --out FILE        collect bench CSVs into one JSON
+  check  --current FILE --baseline FILE   fail on >tolerance regressions
+  update --current FILE --baseline FILE   write measured values into baseline";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    let current = PathBuf::from(args.get("current").unwrap_or("BENCH_ci.json"));
+    let baseline =
+        PathBuf::from(args.get("baseline").unwrap_or("ci/bench_baseline.json"));
+    match cmd.as_str() {
+        "merge" => merge(
+            Path::new(args.get("dir").unwrap_or("target/bench_results")),
+            Path::new(args.get("out").unwrap_or("BENCH_ci.json"))),
+        "check" => check(&current, &baseline),
+        "update" => update(&current, &baseline),
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+// ------------------------------------------------------------------ merge
+
+/// One parsed CSV row from the bench harness.
+fn parse_row(line: &str) -> Result<(String, Json)> {
+    let f: Vec<&str> = line.split(',').collect();
+    if f.len() < 5 {
+        bail!("malformed bench CSV row `{line}`");
+    }
+    let num = |s: &str| -> Result<Json> {
+        Ok(Json::Float(s.trim().parse::<f64>()
+            .map_err(|_| anyhow!("bad number `{s}` in `{line}`"))?))
+    };
+    let mut m = BTreeMap::new();
+    m.insert("mean_s".to_string(), num(f[1])?);
+    m.insert("p50_s".to_string(), num(f[2])?);
+    m.insert("p95_s".to_string(), num(f[3])?);
+    m.insert("p99_s".to_string(), num(f[4])?);
+    let tp = f.get(5).map(|s| s.trim()).unwrap_or("");
+    m.insert("throughput".to_string(),
+             if tp.is_empty() { Json::Null } else { num(tp)? });
+    Ok((f[0].to_string(), Json::Object(m)))
+}
+
+fn merge(dir: &Path, out: &Path) -> Result<()> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading bench results dir {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "csv"))
+        .collect();
+    paths.sort();
+    let mut benches = BTreeMap::new();
+    for path in &paths {
+        let bench = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow!("unutterable csv name {}", path.display()))?
+            .to_string();
+        let text = std::fs::read_to_string(path)?;
+        let mut rows = BTreeMap::new();
+        for line in text.lines().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (name, row) = parse_row(line)
+                .with_context(|| format!("in {}", path.display()))?;
+            rows.insert(name, row);
+        }
+        benches.insert(bench, Json::Object(rows));
+    }
+    if benches.is_empty() {
+        bail!("no bench CSVs under {} — run `cargo bench` first", dir.display());
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("benches".to_string(), Json::Object(benches));
+    std::fs::write(out, format!("{}\n", Json::Object(doc)))?;
+    println!("merged {} bench file(s) into {}", paths.len(), out.display());
+    Ok(())
+}
+
+// ------------------------------------------------------------------ check
+
+struct Metric {
+    bench: String,
+    name: String,
+    metric: String,
+    better_higher: bool,
+    value: Option<f64>,
+}
+
+fn read_baseline(path: &Path) -> Result<(f64, Vec<Metric>)> {
+    let doc = Json::parse_file(path)?;
+    let tol = doc.get("tolerance")?.as_f64()?;
+    if !(0.0..1.0).contains(&tol) {
+        bail!("tolerance {tol} out of [0, 1)");
+    }
+    let mut metrics = Vec::new();
+    for m in doc.get("metrics")?.as_array()? {
+        let better = m.get("better")?.as_str()?;
+        let better_higher = match better {
+            "higher" => true,
+            "lower" => false,
+            other => bail!("better must be higher|lower, got `{other}`"),
+        };
+        metrics.push(Metric {
+            bench: m.get("bench")?.as_str()?.to_string(),
+            name: m.get("name")?.as_str()?.to_string(),
+            metric: m.get("metric")?.as_str()?.to_string(),
+            better_higher,
+            value: match m.get("value")? {
+                Json::Null => None,
+                v => Some(v.as_f64()?),
+            },
+        });
+    }
+    Ok((tol, metrics))
+}
+
+fn current_value(cur: &Json, m: &Metric) -> Result<f64> {
+    cur.get("benches")?
+        .get(&m.bench)
+        .and_then(|b| b.get(&m.name))
+        .and_then(|r| r.get(&m.metric))
+        .and_then(|v| v.as_f64())
+        .map_err(|e| anyhow!(
+            "metric {}/{}.{} missing from current results ({e}) — renamed \
+             bench? update ci/bench_baseline.json",
+            m.bench, m.name, m.metric))
+}
+
+/// `Some(loss_fraction)` when the measurement is worse than baseline;
+/// `None` when equal or better. A positive fraction of 0.30 means "30%
+/// worse than baseline" in the metric's bad direction.
+fn regression(m: &Metric, baseline: f64, measured: f64) -> Option<f64> {
+    if baseline <= 0.0 {
+        return None; // degenerate baseline: nothing meaningful to gate
+    }
+    let loss = if m.better_higher {
+        (baseline - measured) / baseline
+    } else {
+        (measured - baseline) / baseline
+    };
+    (loss > 0.0).then_some(loss)
+}
+
+fn check(current: &Path, baseline: &Path) -> Result<()> {
+    let cur = Json::parse_file(current)?;
+    let (tol, metrics) = read_baseline(baseline)?;
+    let mut failures = Vec::new();
+    for m in &metrics {
+        let measured = current_value(&cur, m)?;
+        let id = format!("{}/{}.{}", m.bench, m.name, m.metric);
+        match m.value {
+            None => println!("RECORD {id} = {measured:.6e} (baseline null; \
+                              run `bench_gate update` and commit)"),
+            Some(base) => match regression(m, base, measured) {
+                Some(loss) if loss > tol => {
+                    println!("FAIL   {id}: {measured:.6e} vs baseline \
+                              {base:.6e} ({:.1}% worse, tolerance {:.0}%)",
+                             loss * 100.0, tol * 100.0);
+                    failures.push(id);
+                }
+                Some(loss) => println!(
+                    "ok     {id}: {measured:.6e} ({:.1}% worse, within \
+                     {:.0}%)", loss * 100.0, tol * 100.0),
+                None => println!("ok     {id}: {measured:.6e} (>= baseline)"),
+            },
+        }
+    }
+    if !failures.is_empty() {
+        bail!("{} perf regression(s) beyond {:.0}%: {}",
+              failures.len(), tol * 100.0, failures.join(", "));
+    }
+    println!("perf gate passed: {} metric(s) within tolerance", metrics.len());
+    Ok(())
+}
+
+// ----------------------------------------------------------------- update
+
+fn update(current: &Path, baseline: &Path) -> Result<()> {
+    let cur = Json::parse_file(current)?;
+    let doc = Json::parse_file(baseline)?;
+    let (_tol, metrics) = read_baseline(baseline)?;
+    let Json::Object(mut top) = doc else { bail!("baseline is not an object") };
+    let mut out = Vec::new();
+    for m in &metrics {
+        let measured = current_value(&cur, m)?;
+        let mut entry = BTreeMap::new();
+        entry.insert("bench".to_string(), Json::Str(m.bench.clone()));
+        entry.insert("name".to_string(), Json::Str(m.name.clone()));
+        entry.insert("metric".to_string(), Json::Str(m.metric.clone()));
+        entry.insert("better".to_string(), Json::Str(
+            if m.better_higher { "higher" } else { "lower" }.to_string()));
+        entry.insert("value".to_string(), Json::Float(measured));
+        out.push(Json::Object(entry));
+    }
+    top.insert("metrics".to_string(), Json::Array(out));
+    std::fs::write(baseline, format!("{}\n", Json::Object(top)))?;
+    println!("baseline {} updated from {}", baseline.display(),
+             current.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_row_parses_with_and_without_throughput() {
+        let (name, row) = parse_row("update_async_n4,0.001,0.001,0.002,0.002,\
+                                     7000.0").unwrap();
+        assert_eq!(name, "update_async_n4");
+        assert_eq!(row.get("mean_s").unwrap().as_f64().unwrap(), 0.001);
+        assert_eq!(row.get("throughput").unwrap().as_f64().unwrap(), 7000.0);
+
+        let (_, row) = parse_row("x,1,2,3,4,").unwrap();
+        assert!(matches!(row.get("throughput").unwrap(), Json::Null));
+        assert!(parse_row("too,short,row").is_err());
+    }
+
+    fn metric(better_higher: bool) -> Metric {
+        Metric {
+            bench: "b".into(),
+            name: "n".into(),
+            metric: "m".into(),
+            better_higher,
+            value: Some(100.0),
+        }
+    }
+
+    #[test]
+    fn regression_direction_is_metric_aware() {
+        // lower-is-better (times): growth is a regression
+        let m = metric(false);
+        assert!(regression(&m, 100.0, 130.0).unwrap() > 0.29);
+        assert!(regression(&m, 100.0, 90.0).is_none());
+        // higher-is-better (throughput): shrinkage is a regression
+        let m = metric(true);
+        assert!(regression(&m, 100.0, 70.0).unwrap() > 0.29);
+        assert!(regression(&m, 100.0, 110.0).is_none());
+        // degenerate baseline never gates
+        assert!(regression(&m, 0.0, 50.0).is_none());
+    }
+}
