@@ -11,7 +11,7 @@ use dcl::net::{CostModel, Fabric};
 use dcl::tensor::Sample;
 use dcl::util::rng::Rng;
 
-fn fabric(workers: usize, per_class: usize) -> Arc<Fabric> {
+fn raw_fabric(workers: usize, per_class: usize) -> Fabric {
     let mut rng = Rng::new(5);
     let buffers = (0..workers)
         .map(|w| {
@@ -25,7 +25,11 @@ fn fabric(workers: usize, per_class: usize) -> Arc<Fabric> {
             Arc::new(b)
         })
         .collect();
-    Arc::new(Fabric::new(buffers, CostModel::default(), false))
+    Fabric::new(buffers, CostModel::default(), false)
+}
+
+fn fabric(workers: usize, per_class: usize) -> Arc<Fabric> {
+    Arc::new(raw_fabric(workers, per_class))
 }
 
 fn main() {
@@ -53,10 +57,21 @@ fn main() {
         black_box(f.fetch_bulk(0, 0, &picks).unwrap());
     });
 
-    // Metadata gather across cluster sizes.
+    // Metadata gather across cluster sizes (k = 1: RPC every round).
     for n in [2usize, 4, 8] {
         let f = fabric(n, 8);
         r.bench(&format!("gather_counts_n{n}"), || {
+            black_box(f.gather_counts(0).unwrap());
+        });
+    }
+
+    // The bounded-staleness metadata plane: the same gather served from
+    // the per-peer counts cache 7 rounds out of 8. This is the win the
+    // perf gate guards — the cached round must stay far cheaper than the
+    // k = 1 all-RPC round above.
+    {
+        let f = raw_fabric(8, 8).with_meta_refresh_rounds(8);
+        r.bench("gather_counts_amortized_n8_k8", || {
             black_box(f.gather_counts(0).unwrap());
         });
     }

@@ -4,6 +4,12 @@
 //! candidate *competes with residents of the same class only*; the winner is
 //! decided by the eviction policy — uniform-random replacement in the paper,
 //! FIFO and reservoir-sampling as ablations (DESIGN.md abl-policy).
+//!
+//! Each sub-buffer owns its own deterministically-seeded eviction RNG
+//! stream (derived from the parent buffer's seed and the class id), so
+//! inserts into different classes never serialize on a shared RNG lock —
+//! the N background engines and the TCP serving threads contend only on
+//! the per-class mutexes — while a fixed seed still replays exactly.
 
 use crate::config::EvictionPolicy;
 use crate::tensor::Sample;
@@ -29,16 +35,19 @@ pub struct ClassBuffer {
     seen: u64,
     /// Next slot to overwrite under FIFO.
     fifo_next: usize,
+    /// Own eviction stream: no cross-class RNG lock on the insert path.
+    rng: Rng,
 }
 
 impl ClassBuffer {
-    pub fn new(capacity: usize, policy: EvictionPolicy) -> ClassBuffer {
+    pub fn new(capacity: usize, policy: EvictionPolicy, seed: u64) -> ClassBuffer {
         ClassBuffer {
             samples: Vec::new(),
             capacity,
             policy,
             seen: 0,
             fifo_next: 0,
+            rng: Rng::new(seed),
         }
     }
 
@@ -63,8 +72,10 @@ impl ClassBuffer {
         self.seen
     }
 
-    /// Offer one candidate (one accepted draw of Algorithm 1 line 4).
-    pub fn insert(&mut self, sample: Sample, rng: &mut Rng) -> InsertOutcome {
+    /// Offer one candidate (one accepted draw of Algorithm 1 line 4). The
+    /// eviction draw, when one is needed, comes from this sub-buffer's own
+    /// stream.
+    pub fn insert(&mut self, sample: Sample) -> InsertOutcome {
         self.seen += 1;
         if self.capacity == 0 {
             return InsertOutcome::Rejected;
@@ -75,7 +86,7 @@ impl ClassBuffer {
         }
         match self.policy {
             EvictionPolicy::Random => {
-                let slot = rng.below(self.samples.len());
+                let slot = self.rng.below(self.samples.len());
                 self.samples[slot] = sample;
                 InsertOutcome::Replaced(slot)
             }
@@ -87,7 +98,7 @@ impl ClassBuffer {
             }
             EvictionPolicy::Reservoir => {
                 // classic reservoir: keep with prob capacity/seen
-                let j = rng.below(self.seen as usize);
+                let j = self.rng.below(self.seen as usize);
                 if j < self.capacity {
                     self.samples[j] = sample;
                     InsertOutcome::Replaced(j)
@@ -105,10 +116,10 @@ impl ClassBuffer {
 
     /// Shrink to a new (smaller) capacity by evicting random residents —
     /// used when a new class arrives and S_max/K drops (paper §IV-A).
-    pub fn shrink_to(&mut self, new_capacity: usize, rng: &mut Rng) {
+    pub fn shrink_to(&mut self, new_capacity: usize) {
         self.capacity = new_capacity;
         while self.samples.len() > new_capacity {
-            let slot = rng.below(self.samples.len());
+            let slot = self.rng.below(self.samples.len());
             self.samples.swap_remove(slot);
         }
         if self.fifo_next >= new_capacity.max(1) {
@@ -133,13 +144,12 @@ mod tests {
 
     #[test]
     fn fills_then_replaces_random() {
-        let mut rng = Rng::new(1);
-        let mut b = ClassBuffer::new(3, EvictionPolicy::Random);
-        assert_eq!(b.insert(s(1.0), &mut rng), InsertOutcome::Appended);
-        assert_eq!(b.insert(s(2.0), &mut rng), InsertOutcome::Appended);
-        assert_eq!(b.insert(s(3.0), &mut rng), InsertOutcome::Appended);
+        let mut b = ClassBuffer::new(3, EvictionPolicy::Random, 1);
+        assert_eq!(b.insert(s(1.0)), InsertOutcome::Appended);
+        assert_eq!(b.insert(s(2.0)), InsertOutcome::Appended);
+        assert_eq!(b.insert(s(3.0)), InsertOutcome::Appended);
         assert_eq!(b.len(), 3);
-        match b.insert(s(4.0), &mut rng) {
+        match b.insert(s(4.0)) {
             InsertOutcome::Replaced(i) => assert!(i < 3),
             o => panic!("{o:?}"),
         }
@@ -148,23 +158,34 @@ mod tests {
 
     #[test]
     fn capacity_never_exceeded() {
-        let mut rng = Rng::new(2);
-        let mut b = ClassBuffer::new(5, EvictionPolicy::Random);
+        let mut b = ClassBuffer::new(5, EvictionPolicy::Random, 2);
         for i in 0..1000 {
-            b.insert(s(i as f32), &mut rng);
+            b.insert(s(i as f32));
             assert!(b.len() <= 5);
         }
         assert_eq!(b.seen(), 1000);
     }
 
     #[test]
+    fn owned_stream_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut b = ClassBuffer::new(4, EvictionPolicy::Random, seed);
+            for i in 0..200 {
+                b.insert(s(i as f32));
+            }
+            (0..b.len()).map(|i| b.get(i).features[0]).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay exactly");
+        assert_ne!(run(7), run(8), "streams must differ across seeds");
+    }
+
+    #[test]
     fn random_policy_mixes_old_and_new() {
         // After many insertions, survivors should span a wide range of
         // insertion times (geometric survival) — i.e. not all recent.
-        let mut rng = Rng::new(3);
-        let mut b = ClassBuffer::new(50, EvictionPolicy::Random);
+        let mut b = ClassBuffer::new(50, EvictionPolicy::Random, 3);
         for i in 0..2000 {
-            b.insert(s(i as f32), &mut rng);
+            b.insert(s(i as f32));
         }
         // Random replacement keeps each resident with prob (1-1/cap) per
         // subsequent eviction, so survivors span a geometric age range:
@@ -175,13 +196,12 @@ mod tests {
 
     #[test]
     fn fifo_replaces_in_order() {
-        let mut rng = Rng::new(4);
-        let mut b = ClassBuffer::new(2, EvictionPolicy::Fifo);
-        b.insert(s(1.0), &mut rng);
-        b.insert(s(2.0), &mut rng);
-        assert_eq!(b.insert(s(3.0), &mut rng), InsertOutcome::Replaced(0));
-        assert_eq!(b.insert(s(4.0), &mut rng), InsertOutcome::Replaced(1));
-        assert_eq!(b.insert(s(5.0), &mut rng), InsertOutcome::Replaced(0));
+        let mut b = ClassBuffer::new(2, EvictionPolicy::Fifo, 4);
+        b.insert(s(1.0));
+        b.insert(s(2.0));
+        assert_eq!(b.insert(s(3.0)), InsertOutcome::Replaced(0));
+        assert_eq!(b.insert(s(4.0)), InsertOutcome::Replaced(1));
+        assert_eq!(b.insert(s(5.0)), InsertOutcome::Replaced(0));
         assert_eq!(b.get(0).features[0], 5.0);
         assert_eq!(b.get(1).features[0], 4.0);
     }
@@ -193,11 +213,11 @@ mod tests {
         let cap = 10;
         let total = 100;
         let mut hist = vec![0u32; total];
-        let mut rng = Rng::new(5);
-        for _ in 0..trials {
-            let mut b = ClassBuffer::new(cap, EvictionPolicy::Reservoir);
+        for trial in 0..trials {
+            let mut b = ClassBuffer::new(cap, EvictionPolicy::Reservoir,
+                                         5 + trial as u64);
             for i in 0..total {
-                b.insert(s(i as f32), &mut rng);
+                b.insert(s(i as f32));
             }
             for i in 0..b.len() {
                 hist[b.get(i).features[0] as usize] += 1;
@@ -212,20 +232,18 @@ mod tests {
 
     #[test]
     fn zero_capacity_rejects() {
-        let mut rng = Rng::new(6);
-        let mut b = ClassBuffer::new(0, EvictionPolicy::Random);
-        assert_eq!(b.insert(s(1.0), &mut rng), InsertOutcome::Rejected);
+        let mut b = ClassBuffer::new(0, EvictionPolicy::Random, 6);
+        assert_eq!(b.insert(s(1.0)), InsertOutcome::Rejected);
         assert_eq!(b.len(), 0);
     }
 
     #[test]
     fn shrink_evicts_to_new_capacity() {
-        let mut rng = Rng::new(7);
-        let mut b = ClassBuffer::new(10, EvictionPolicy::Random);
+        let mut b = ClassBuffer::new(10, EvictionPolicy::Random, 7);
         for i in 0..10 {
-            b.insert(s(i as f32), &mut rng);
+            b.insert(s(i as f32));
         }
-        b.shrink_to(4, &mut rng);
+        b.shrink_to(4);
         assert_eq!(b.len(), 4);
         assert_eq!(b.capacity(), 4);
         // survivors are a subset of the originals

@@ -52,8 +52,11 @@ pub struct LocalBuffer {
     policy: EvictionPolicy,
     /// class id → its sub-buffer. Outer lock: rare class-arrival writes.
     classes: RwLock<HashMap<u32, Mutex<ClassBuffer>>>,
-    /// Eviction randomness (its own stream so reads stay lock-cheap).
-    rng: Mutex<Rng>,
+    /// Base seed: each class sub-buffer derives its own eviction stream
+    /// from it, so inserts never serialize on a buffer-global RNG lock
+    /// (the N background engines vs. the TCP serving threads) while a
+    /// fixed seed still replays exactly.
+    seed: u64,
     pub counters: BufferCounters,
 }
 
@@ -63,9 +66,15 @@ impl LocalBuffer {
             s_max,
             policy,
             classes: RwLock::new(HashMap::new()),
-            rng: Mutex::new(Rng::new(seed ^ 0xB0FF)),
+            seed: seed ^ 0xB0FF,
             counters: BufferCounters::default(),
         }
+    }
+
+    /// Deterministic per-class eviction-stream seed (splitmix-style mix so
+    /// nearby class ids give unrelated streams).
+    fn class_seed(&self, class: u32) -> u64 {
+        self.seed ^ (class as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
     }
 
     pub fn s_max(&self) -> usize {
@@ -118,17 +127,17 @@ impl LocalBuffer {
         }
         let k_new = map.len() + 1;
         let cap = self.per_class_cap(k_new);
-        let mut rng = self.rng.lock().unwrap();
         for cb in map.values() {
             let mut cb = cb.lock().unwrap();
             if cb.capacity() > cap {
-                cb.shrink_to(cap, &mut rng);
+                cb.shrink_to(cap);
             } else {
                 let new_cap = cap.max(cb.capacity());
                 cb.grow_to(new_cap);
             }
         }
-        map.insert(class, Mutex::new(ClassBuffer::new(cap, self.policy)));
+        map.insert(class, Mutex::new(
+            ClassBuffer::new(cap, self.policy, self.class_seed(class))));
     }
 
     /// Algorithm 1: offer each sample of the mini-batch with probability
@@ -149,16 +158,16 @@ impl LocalBuffer {
     }
 
     /// Insert one candidate into its class buffer (creating/rebalancing the
-    /// class map as needed).
+    /// class map as needed). Holds only the class's own mutex: the eviction
+    /// draw comes from the sub-buffer's owned RNG stream, so concurrent
+    /// inserts into different classes — and concurrent reads serving remote
+    /// fetches — never serialize on a buffer-global lock.
     pub fn insert(&self, sample: Sample) {
         let class = sample.label;
         self.ensure_class(class);
         let map = self.classes.read().unwrap();
         let cb = map.get(&class).expect("ensure_class");
-        let mut cb = cb.lock().unwrap();
-        let mut rng = self.rng.lock().unwrap();
-        let outcome = cb.insert(sample, &mut rng);
-        drop(rng);
+        let outcome = cb.lock().unwrap().insert(sample);
         self.counters.candidates_offered.fetch_add(1, Ordering::Relaxed);
         if matches!(outcome, InsertOutcome::Replaced(_)) {
             self.counters.evictions.fetch_add(1, Ordering::Relaxed);
@@ -183,14 +192,16 @@ impl LocalBuffer {
     }
 
     /// Serve rows `(class, idx)` — the RDMA-read path. Indices may be
-    /// slightly stale (the planner snapshot races with inserts), so a stale
-    /// index is clamped into the current length, which still returns a valid
-    /// representative of the same class (same guarantee the paper gets from
-    /// its fine-grain read locks). Fallible rather than panicking: a pick
-    /// naming a class the buffer doesn't hold rows for — a hostile TCP
-    /// request, a plan-construction bug, or a class rebalanced down to
-    /// empty between snapshot and fetch — errors instead of taking down
-    /// the serving thread.
+    /// stale (the planner snapshot races with inserts, and the metadata
+    /// plane serves counts up to `meta_refresh_rounds` rounds old), so an
+    /// out-of-range index is remapped with `idx % len`: every resident of
+    /// the class stays (near-)equally likely to serve a stale pick, instead
+    /// of the old `min(idx, len − 1)` clamp that concentrated the entire
+    /// staleness mass on the newest resident. Fallible rather than
+    /// panicking: a pick naming a class the buffer doesn't hold rows for —
+    /// a hostile TCP request, a plan-construction bug, or a class
+    /// rebalanced down to empty between snapshot and fetch — errors
+    /// instead of taking down the serving thread.
     pub fn fetch_rows(&self, picks: &[(u32, usize)]) -> Result<Vec<Sample>> {
         let map = self.classes.read().unwrap();
         let mut out = Vec::with_capacity(picks.len());
@@ -202,7 +213,7 @@ impl LocalBuffer {
             if cb.is_empty() {
                 bail!("fetch from empty class {class}");
             }
-            let i = idx.min(cb.len() - 1);
+            let i = idx % cb.len();
             out.push(cb.get(i).clone());
         }
         self.counters
@@ -316,11 +327,18 @@ mod tests {
     }
 
     #[test]
-    fn fetch_rows_clamps_stale_indices() {
+    fn fetch_rows_spreads_stale_indices_near_uniformly() {
         let buf = filled(100, 2, 5);
         let rows = buf.fetch_rows(&[(0, 999)]).unwrap();
         assert!(buf.fetch_rows(&[(42, 0)]).is_err(), "unknown class errs");
         assert_eq!(rows[0].label, 0);
+        // modulo remap: stale picks land on distinct residents, not all on
+        // the newest one (len = 5, so 5..10 wrap to 0..5 in order)
+        let picks: Vec<(u32, usize)> = (5..10).map(|i| (0u32, i)).collect();
+        let rows = buf.fetch_rows(&picks).unwrap();
+        let tags: Vec<f32> = rows.iter().map(|s| s.features[0]).collect();
+        assert_eq!(tags, vec![0.0, 1.0, 2.0, 3.0, 4.0],
+                   "stale mass must spread across residents");
     }
 
     #[test]

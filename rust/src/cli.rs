@@ -3,7 +3,7 @@
 //! ```text
 //! dcl train    [--preset P] [--config FILE] [--strategy S] [--variant V]
 //!              [--workers N] [--buffer-pct X] [--epochs-per-task E]
-//!              [--transport inproc|tcp]
+//!              [--transport inproc|tcp] [--meta-refresh K]
 //! dcl fig5a    [--epochs-per-task E] [--workers N]
 //! dcl fig5b    [--epochs-per-task E] [--workers N]
 //! dcl fig6     [--epochs-per-task E]
@@ -77,6 +77,8 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.cluster.transport = TransportKind::parse(t)?;
     }
     cfg.cluster.workers = args.usize_or("workers", cfg.cluster.workers)?;
+    cfg.cluster.meta_refresh_rounds =
+        args.usize_or("meta-refresh", cfg.cluster.meta_refresh_rounds)?;
     cfg.buffer.percent_of_dataset =
         args.f64_or("buffer-pct", cfg.buffer.percent_of_dataset)?;
     cfg.training.epochs_per_task =

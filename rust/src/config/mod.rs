@@ -237,6 +237,14 @@ pub struct ClusterConfig {
     pub emulate_delays: bool,
     /// Fabric backend: in-process zero-copy (default) or real TCP sockets.
     pub transport: TransportKind,
+    /// Metadata-plane refresh cadence `k`: a peer's cached (class, count)
+    /// snapshot may serve the sampling planner for up to `k` rounds before
+    /// a real metadata RPC re-fetches it (piggybacked fetch responses
+    /// refresh it for free in between). `1` — the default — refreshes
+    /// every round, bit-identical to an uncached fabric; larger values
+    /// amortize the O(N²) per-step metadata traffic to `≤ (N−1)/k` RPCs
+    /// per worker-iteration at the cost of bounded plan staleness.
+    pub meta_refresh_rounds: usize,
 }
 
 impl Default for ClusterConfig {
@@ -247,6 +255,7 @@ impl Default for ClusterConfig {
             bandwidth_gibps: 12.0,
             emulate_delays: false,
             transport: TransportKind::Inproc,
+            meta_refresh_rounds: 1,
         }
     }
 }
@@ -310,6 +319,9 @@ impl ExperimentConfig {
         }
         if self.cluster.workers == 0 {
             bail!("need at least one worker");
+        }
+        if self.cluster.meta_refresh_rounds == 0 {
+            bail!("meta_refresh_rounds must be >= 1 (1 = refresh every round)");
         }
         if t.strategy == Strategy::Rehearsal
             && self.per_worker_capacity() < d.num_classes
@@ -396,6 +408,8 @@ impl ExperimentConfig {
         if let Some(v) = doc.tables.get("cluster").and_then(|t| t.get("transport")) {
             c.transport = TransportKind::parse(v.as_str()?)?;
         }
+        c.meta_refresh_rounds = doc.get_or("cluster", "meta_refresh_rounds",
+                                           c.meta_refresh_rounds, usz)?;
 
         if let Some(v) = doc.tables.get("paths").and_then(|t| t.get("artifacts_dir")) {
             cfg.artifacts_dir = PathBuf::from(v.as_str()?);
@@ -445,6 +459,11 @@ mod tests {
         let mut cfg = preset("default").unwrap();
         cfg.buffer.percent_of_dataset = 0.0;
         assert!(cfg.validate().is_err());
+
+        let mut cfg = preset("default").unwrap();
+        assert_eq!(cfg.cluster.meta_refresh_rounds, 1, "default cadence");
+        cfg.cluster.meta_refresh_rounds = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
@@ -460,6 +479,7 @@ mod tests {
             [cluster]
             workers = 2
             transport = "tcp"
+            meta_refresh_rounds = 4
             [buffer]
             policy = "fifo"
             scope = "local"
@@ -472,6 +492,7 @@ mod tests {
         assert_eq!(cfg.training.batch, 8);
         assert_eq!(cfg.cluster.workers, 2);
         assert_eq!(cfg.cluster.transport, TransportKind::Tcp);
+        assert_eq!(cfg.cluster.meta_refresh_rounds, 4);
         assert_eq!(cfg.buffer.policy, EvictionPolicy::Fifo);
         assert_eq!(cfg.buffer.scope, SamplingScope::LocalOnly);
     }

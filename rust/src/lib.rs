@@ -25,7 +25,10 @@
 //!   policies, Algorithm 1 updates, fine-grain locking.
 //! - [`net`] — the RDMA/RPC fabric (Mochi/Thallium stand-in) with
 //!   pluggable transports: zero-copy in-process (default) or real TCP
-//!   sockets with a length-prefixed wire protocol (`[cluster] transport`).
+//!   sockets with a length-prefixed wire protocol (`[cluster] transport`),
+//!   plus the bounded-staleness metadata plane (`meta_refresh_rounds`-
+//!   cadenced per-peer counts cache, refreshed for free by snapshots
+//!   piggybacked on bulk-fetch responses).
 //! - [`sampling`] — unbiased global sampling plans + RPC consolidation.
 //! - [`engine`] — the asynchronous update/augment pipeline of Fig. 4 and
 //!   the `update()` primitive of Listing 1.

@@ -1,8 +1,33 @@
 //! The fabric: registered peer buffers + priced bulk-fetch operations,
 //! generic over the [`Transport`] backend that physically carries them.
+//!
+//! # Bounded-staleness metadata plane
+//!
+//! The paper's planner needs each peer's (class, count) snapshot every
+//! iteration; issuing `N−1` metadata RPCs per worker-iteration is O(N²)
+//! per global step and dominates at 64–128 workers. The fabric therefore
+//! keeps a **per-(requester, target) counts cache** refreshed two ways:
+//!
+//! 1. **Cadence** — `meta_refresh_rounds = k` (config `[cluster]`,
+//!    default 1): a cached entry older than `k` of the requester's
+//!    `gather_counts` rounds is re-fetched with a real metadata RPC. At
+//!    `k = 1` every round refreshes, bit-identical to the uncached
+//!    behavior; at `k > 1` amortized metadata RPCs drop to `≤ (N−1)/k`
+//!    per worker-iteration.
+//! 2. **Piggyback** — every remote `fetch_bulk` response carries the
+//!    target's current snapshot (see [`Transport::remote_fetch`]), which
+//!    resets that entry's staleness clock for free.
+//!
+//! Plans built from cached counts are therefore at most `k` rounds stale;
+//! the stale-pick tolerance in `LocalBuffer::fetch_rows` (modulo
+//! remapping) absorbs the residual snapshot/insert race. Counters stay
+//! honest: `meta_rpcs`/`meta_bytes` count only frames actually exchanged
+//! (cache hits and piggybacks add none), while the piggybacked snapshot is
+//! *priced* into virtual wire time at the semantic
+//! [`SNAPSHOT_ENTRY_BYTES`] rate on every backend.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -49,18 +74,57 @@ impl FabricCounters {
     }
 }
 
+/// One cached peer snapshot in the metadata plane.
+#[derive(Debug, Default)]
+struct PeerCounts {
+    counts: Vec<ClassCount>,
+    /// Requester round (see `MetaPlane::rounds`) at which this entry was
+    /// last refreshed — by metadata RPC or by a piggybacked fetch response.
+    refreshed_round: u64,
+    /// False until the first refresh; an invalid entry always RPCs.
+    valid: bool,
+}
+
+/// The bounded-staleness counts cache: one entry per (requester, target)
+/// pair, plus a per-requester round counter advanced by `gather_counts`.
+/// Entries are only ever touched by their requester's own threads (the
+/// foreground worker or its background engine, which serialize), so the
+/// per-entry mutexes are uncontended in practice.
+struct MetaPlane {
+    /// Refresh cadence `k` in requester rounds; 1 = refresh every round.
+    refresh_rounds: u64,
+    /// Per-requester `gather_counts` round counter.
+    rounds: Vec<AtomicU64>,
+    /// `cache[requester * n + target]`.
+    cache: Vec<Mutex<PeerCounts>>,
+}
+
+impl MetaPlane {
+    fn new(workers: usize) -> MetaPlane {
+        MetaPlane {
+            refresh_rounds: 1,
+            rounds: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            cache: (0..workers * workers)
+                .map(|_| Mutex::new(PeerCounts::default()))
+                .collect(),
+        }
+    }
+}
+
 /// The distributed rehearsal buffer's communication substrate: N registered
 /// local buffers behind a pluggable [`Transport`], plus the wire-cost model.
 ///
-/// Policy lives here — RPC/byte accounting, virtual-time pricing, optional
-/// delay emulation — while the transport owns mechanism (how bytes reach a
-/// peer). Local fetches (`target == requester`) never touch the transport
-/// and stay free on the wire, whichever backend is active.
+/// Policy lives here — RPC/byte accounting, virtual-time pricing, the
+/// bounded-staleness metadata cache, optional delay emulation — while the
+/// transport owns mechanism (how bytes reach a peer). Local fetches
+/// (`target == requester`) never touch the transport and stay free on the
+/// wire, whichever backend is active.
 pub struct Fabric {
     transport: Box<dyn Transport>,
     cost: CostModel,
     /// Sleep for the modeled wire time (wall-clock emulation mode).
     emulate_delays: bool,
+    meta: MetaPlane,
     pub counters: FabricCounters,
 }
 
@@ -75,7 +139,23 @@ impl Fabric {
     /// Fabric over an explicit backend.
     pub fn with_transport(transport: Box<dyn Transport>, cost: CostModel,
                           emulate_delays: bool) -> Fabric {
-        Fabric { transport, cost, emulate_delays, counters: FabricCounters::default() }
+        let meta = MetaPlane::new(transport.workers());
+        Fabric { transport, cost, emulate_delays, meta,
+                 counters: FabricCounters::default() }
+    }
+
+    /// Set the metadata refresh cadence `k` (rounds a cached peer snapshot
+    /// may serve the planner before a real metadata RPC re-fetches it).
+    /// `k = 1` (the default) refreshes every round — bit-identical plans to
+    /// the uncached fabric; `0` is clamped to 1.
+    pub fn with_meta_refresh_rounds(mut self, k: usize) -> Fabric {
+        self.meta.refresh_rounds = (k as u64).max(1);
+        self
+    }
+
+    /// The configured metadata refresh cadence.
+    pub fn meta_refresh_rounds(&self) -> usize {
+        self.meta.refresh_rounds as usize
     }
 
     /// Fabric whose remote traffic rides real loopback TCP sockets (one
@@ -120,17 +200,29 @@ impl Fabric {
     }
 
     /// Collect (worker, class, count) metadata from every peer — the
-    /// planner's view of the global buffer. Charged as one small RPC per
-    /// remote peer (the paper piggybacks this on its RPC layer). Fallible:
-    /// a real backend can lose a peer mid-run.
+    /// planner's view of the global buffer. One `gather_counts` call is one
+    /// *round* of the requester's metadata clock: a peer entry refreshed
+    /// (by RPC or a piggybacked fetch) within the last `meta_refresh_rounds`
+    /// rounds is served from the cache — no RPC, no wire charge — so the
+    /// counts the planner sees are at most `k` rounds stale. Fallible: a
+    /// real backend can lose a peer mid-run.
     pub fn gather_counts(&self, requester: usize) -> Result<Vec<Vec<ClassCount>>> {
         let n = self.transport.workers();
+        let k = self.meta.refresh_rounds;
+        let round = self.meta.rounds[requester].fetch_add(1, Ordering::Relaxed);
         let mut all = Vec::with_capacity(n);
         let mut wire = Duration::ZERO;
         for target in 0..n {
             if target == requester {
+                // The local snapshot is always live and always free.
                 all.push(self.transport.buffer(target).snapshot_counts());
-            } else {
+                continue;
+            }
+            if k <= 1 {
+                // Uncached fast path: k = 1 bypasses the cache entirely —
+                // bit-identical plans to the pre-cache fabric (even for
+                // call patterns where a fetch preceded the first gather)
+                // and no per-peer lock/clone on the default hot path.
                 let (counts, moved) =
                     self.transport.remote_counts(requester, target)?;
                 self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
@@ -138,7 +230,25 @@ impl Fabric {
                                                    Ordering::Relaxed);
                 wire += self.cost.cost(counts.len() * SNAPSHOT_ENTRY_BYTES);
                 all.push(counts);
+                continue;
             }
+            let mut entry = self.meta.cache[requester * n + target]
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            let fresh = entry.valid
+                && round.saturating_sub(entry.refreshed_round) < k;
+            if !fresh {
+                let (counts, moved) =
+                    self.transport.remote_counts(requester, target)?;
+                self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
+                self.counters.meta_bytes.fetch_add(moved as u64,
+                                                   Ordering::Relaxed);
+                wire += self.cost.cost(counts.len() * SNAPSHOT_ENTRY_BYTES);
+                entry.counts = counts;
+                entry.refreshed_round = round;
+                entry.valid = true;
+            }
+            all.push(entry.counts.clone());
         }
         self.charge(wire);
         Ok(all)
@@ -146,6 +256,10 @@ impl Fabric {
 
     /// One consolidated bulk fetch of rows `(class, idx)` from `target`'s
     /// buffer on behalf of `requester`. Local fetches are free on the wire.
+    /// The response piggybacks the target's current snapshot, which
+    /// refreshes the requester's cached view of that peer (no metadata
+    /// frame spent) and is priced into the virtual wire time at the
+    /// semantic [`SNAPSHOT_ENTRY_BYTES`] rate on every backend.
     /// Returns the rows and the virtual wire cost charged.
     pub fn fetch_bulk(&self, requester: usize, target: usize,
                       picks: &[(u32, usize)]) -> Result<(Vec<Sample>, Duration)> {
@@ -162,10 +276,28 @@ impl Fabric {
         if picks.is_empty() {
             return Ok((Vec::new(), Duration::ZERO));
         }
-        let (rows, moved) = self.transport.remote_fetch(requester, target, picks)?;
-        let semantic: usize = rows.iter().map(Sample::wire_bytes).sum();
+        let (rows, peer_counts, moved) =
+            self.transport.remote_fetch(requester, target, picks)?;
+        let semantic: usize = rows.iter().map(Sample::wire_bytes).sum::<usize>()
+            + peer_counts.len() * SNAPSHOT_ENTRY_BYTES;
         self.counters.rpcs.fetch_add(1, Ordering::Relaxed);
         self.counters.bytes.fetch_add(moved as u64, Ordering::Relaxed);
+        if self.meta.refresh_rounds > 1 {
+            // Opportunistic refresh: stamp with the requester's *current*
+            // round (rounds[r] − 1, since gather_counts pre-increments), so
+            // a peer fetched from this round needs no metadata RPC for the
+            // next k rounds. Skipped at k = 1, where gather_counts bypasses
+            // the cache and would never read the entry.
+            let round = self.meta.rounds[requester]
+                .load(Ordering::Relaxed)
+                .saturating_sub(1);
+            let mut entry = self.meta.cache[requester * n + target]
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            entry.counts = peer_counts;
+            entry.refreshed_round = round;
+            entry.valid = true;
+        }
         let wire = self.cost.cost(semantic);
         self.charge(wire);
         Ok((rows, wire))
@@ -209,8 +341,14 @@ mod tests {
         assert!(rows.iter().all(|s| s.features[0] == 2.0), "rows from worker 2");
         assert!(wire > Duration::ZERO);
         assert_eq!(f.counters.rpcs.load(Ordering::Relaxed), 1);
+        // inproc bytes = semantic rows + the piggybacked snapshot (4
+        // classes × SNAPSHOT_ENTRY_BYTES) that rides every remote fetch.
         assert_eq!(f.counters.bytes.load(Ordering::Relaxed),
-                   rows.iter().map(Sample::wire_bytes).sum::<usize>() as u64);
+                   (rows.iter().map(Sample::wire_bytes).sum::<usize>()
+                    + 4 * SNAPSHOT_ENTRY_BYTES) as u64);
+        // the piggyback is priced, not separately framed
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 0);
+        assert_eq!(f.counters.meta_bytes.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -241,6 +379,73 @@ mod tests {
         let before = f.counters.wire_ns.load(Ordering::Relaxed);
         f.fetch_bulk(0, 1, &[(0, 0), (1, 1), (2, 2)]).unwrap();
         assert!(f.counters.wire_ns.load(Ordering::Relaxed) > before);
+    }
+
+    #[test]
+    fn cadence_amortizes_meta_rpcs() {
+        // k = 3 over 9 rounds: each of the 3 remote peers is RPC-refreshed
+        // at rounds 0, 3, 6 → 9 meta RPCs instead of 27.
+        let f = fabric(4, 3).with_meta_refresh_rounds(3);
+        for _ in 0..9 {
+            let all = f.gather_counts(1).unwrap();
+            assert_eq!(all.len(), 4);
+        }
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 9,
+                   "3 peers x ceil(9/3) refresh rounds");
+    }
+
+    #[test]
+    fn cached_counts_are_at_most_k_rounds_stale() {
+        let f = fabric(2, 2).with_meta_refresh_rounds(4);
+        let before = f.gather_counts(0).unwrap();
+        assert_eq!(before[1], vec![(0, 2), (1, 2), (2, 2), (3, 2)]);
+        // peer 1 grows a class; rounds 1..3 still serve the cached view
+        f.buffer(1).insert(Sample::new(0, vec![9.0, 9.0]));
+        for _ in 1..4 {
+            let stale = f.gather_counts(0).unwrap();
+            assert_eq!(stale[1], before[1], "cache must serve within k rounds");
+        }
+        // round 4 crosses the cadence: the refresh sees the insert
+        let fresh = f.gather_counts(0).unwrap();
+        assert_eq!(fresh[1][0], (0, 3), "staleness exceeded k without refresh");
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn piggybacked_fetch_resets_the_staleness_clock() {
+        let f = fabric(2, 2).with_meta_refresh_rounds(2);
+        f.gather_counts(0).unwrap(); // round 0: RPC refresh
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 1);
+        f.buffer(1).insert(Sample::new(0, vec![7.0, 7.0]));
+        // the fetch piggybacks peer 1's post-insert snapshot
+        f.fetch_bulk(0, 1, &[(0, 0)]).unwrap();
+        // round 1 serves the piggybacked (fresher-than-cadence) view with
+        // no further metadata RPC...
+        let counts = f.gather_counts(0).unwrap();
+        assert_eq!(counts[1][0], (0, 3), "piggyback must refresh the cache");
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 1,
+                   "piggybacks must not be counted as metadata frames");
+        // ...and the piggyback landed during round 0, so round 2 (staleness
+        // 2 ≥ k) re-RPCs on cadence.
+        f.gather_counts(0).unwrap();
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn k1_always_refreshes_like_the_uncached_fabric() {
+        let f = fabric(3, 2).with_meta_refresh_rounds(1);
+        // even a piggybacked fetch between rounds must not suppress the
+        // per-round RPCs at k = 1 (bit-identical plans guarantee)
+        f.gather_counts(0).unwrap();
+        f.fetch_bulk(0, 1, &[(0, 0)]).unwrap();
+        f.gather_counts(0).unwrap();
+        assert_eq!(f.counters.meta_rpcs.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn zero_cadence_clamps_to_one() {
+        let f = fabric(2, 1).with_meta_refresh_rounds(0);
+        assert_eq!(f.meta_refresh_rounds(), 1);
     }
 
     #[test]

@@ -21,10 +21,22 @@
 //!
 //! Universal (any backend): fetched rows are value-identical to the stored
 //! samples (features travel as raw LE `f32` bits); `rpcs`/`meta_rpcs`
-//! counts depend only on the sampling plans; virtual wire time is priced
-//! from the semantic payload (`4·d + 8` per row, 12 bytes per snapshot
-//! entry), so Fig. 6/7 projections are backend-independent; local fetches
-//! are free on the wire; transport teardown joins every thread it spawned.
+//! counts depend only on the sampling plans and the metadata cadence;
+//! virtual wire time is priced from the semantic payload (`4·d + 8` per
+//! row, 12 bytes per snapshot entry — including the snapshot piggybacked
+//! on every remote fetch), so Fig. 6/7 projections are backend-independent;
+//! local fetches are free on the wire; transport teardown joins every
+//! thread it spawned.
+//!
+//! # Bounded-staleness metadata plane
+//!
+//! `gather_counts` serves the planner from a per-(requester, target)
+//! counts cache refreshed every `meta_refresh_rounds` rounds by a real
+//! metadata RPC and opportunistically by the snapshot piggybacked on every
+//! `fetch_bulk` response. The planner's view of a peer is thus at most
+//! `k` rounds stale, amortized metadata RPCs drop from `N−1` per
+//! worker-iteration to `≤ (N−1)/k`, and `k = 1` (the default) reproduces
+//! the uncached fabric's plans bit-identically (see [`fabric`]).
 //!
 //! `inproc` only: `Arc::ptr_eq` sharing between fetched rows and buffer
 //! residents (zero-copy), and `FabricCounters.bytes` equal to the semantic

@@ -18,7 +18,11 @@
 //! `remote_fetch`) and report the bytes they actually moved, so
 //! `FabricCounters.bytes` reflects real traffic per backend while the
 //! *virtual* wire-time pricing (computed by the fabric from the semantic
-//! payload) stays backend-independent.
+//! payload) stays backend-independent. Every `remote_fetch` additionally
+//! piggybacks the target's current metadata snapshot — on `tcp` it rides
+//! the tail of the `FETCH_BULK` response frame, on `inproc` it is a direct
+//! `snapshot_counts()` read — feeding the fabric's bounded-staleness counts
+//! cache without a dedicated metadata exchange.
 //!
 //! # Teardown
 //!
@@ -63,10 +67,14 @@ pub trait Transport: Send + Sync {
                      -> Result<(Vec<ClassCount>, usize)>;
 
     /// One consolidated bulk fetch of rows `(class, idx)` from `target` on
-    /// behalf of `requester`. Returns the rows and the bytes the backend
-    /// actually moved. `picks` is never empty (the fabric short-circuits).
+    /// behalf of `requester`. Returns the rows, the target's current
+    /// metadata snapshot **piggybacked** on the same exchange (the fabric
+    /// feeds it into its bounded-staleness counts cache — no dedicated
+    /// metadata frame is spent), and the bytes the backend actually moved.
+    /// `picks` is never empty (the fabric short-circuits).
     fn remote_fetch(&self, requester: usize, target: usize,
-                    picks: &[(u32, usize)]) -> Result<(Vec<Sample>, usize)>;
+                    picks: &[(u32, usize)])
+                    -> Result<(Vec<Sample>, Vec<ClassCount>, usize)>;
 
     /// Tear down background machinery (listener/connection threads). Must
     /// be idempotent; a no-op for backends without threads.
@@ -111,10 +119,15 @@ impl Transport for InprocTransport {
     }
 
     fn remote_fetch(&self, _requester: usize, target: usize,
-                    picks: &[(u32, usize)]) -> Result<(Vec<Sample>, usize)> {
+                    picks: &[(u32, usize)])
+                    -> Result<(Vec<Sample>, Vec<ClassCount>, usize)> {
         let rows = self.buffers[target].fetch_rows(picks)?;
-        let bytes = rows.iter().map(Sample::wire_bytes).sum();
-        Ok((rows, bytes))
+        // Piggybacked snapshot, read *after* the rows so the requester's
+        // cache never regresses behind what the fetch itself observed.
+        let counts = self.buffers[target].snapshot_counts();
+        let bytes = rows.iter().map(Sample::wire_bytes).sum::<usize>()
+            + counts.len() * SNAPSHOT_ENTRY_BYTES;
+        Ok((rows, counts, bytes))
     }
 
     fn shutdown(&self) -> Result<()> {
@@ -240,10 +253,12 @@ impl Transport for TcpTransport {
     }
 
     fn remote_fetch(&self, requester: usize, target: usize,
-                    picks: &[(u32, usize)]) -> Result<(Vec<Sample>, usize)> {
+                    picks: &[(u32, usize)])
+                    -> Result<(Vec<Sample>, Vec<ClassCount>, usize)> {
         let req = wire::encode_fetch_bulk_request(picks);
         let (body, bytes) = self.exchange(requester, target, &req)?;
-        Ok((wire::decode_fetch_response(&body)?, bytes))
+        let (rows, counts) = wire::decode_fetch_response(&body)?;
+        Ok((rows, counts, bytes))
     }
 
     fn shutdown(&self) -> Result<()> {
@@ -404,8 +419,12 @@ fn serve_connection(mut stream: TcpStream, buffer: Arc<LocalBuffer>,
                 // A network-decoded request is untrusted: picks naming a
                 // class this buffer doesn't hold error out of `fetch_rows`
                 // and drop the connection instead of panicking the thread.
+                // The response carries the buffer's current snapshot (read
+                // after the rows) so the requester's counts cache refreshes
+                // without a dedicated metadata frame.
                 match buffer.fetch_rows(&picks) {
-                    Ok(rows) => wire::encode_fetch_response(&rows),
+                    Ok(rows) => wire::encode_fetch_response(
+                        &rows, &buffer.snapshot_counts()),
                     Err(_) => return,
                 }
             }
@@ -434,10 +453,13 @@ mod tests {
         assert_eq!(bytes, wire::gather_counts_exchange_bytes(4));
 
         let picks = vec![(1u32, 0usize), (2, 3)];
-        let (rows, bytes) = t.remote_fetch(0, 2, &picks).unwrap();
+        let (rows, meta, bytes) = t.remote_fetch(0, 2, &picks).unwrap();
         assert_eq!(rows.len(), 2);
         assert!(rows.iter().all(|s| s.features[0] == 2.0), "rows from worker 2");
-        assert_eq!(bytes, wire::fetch_bulk_exchange_bytes(picks.len(), &rows));
+        assert_eq!(meta, t.buffer(2).snapshot_counts(),
+                   "fetch must piggyback the target's snapshot");
+        assert_eq!(bytes,
+                   wire::fetch_bulk_exchange_bytes(picks.len(), &rows, meta.len()));
         t.shutdown().unwrap();
     }
 
@@ -450,9 +472,10 @@ mod tests {
         let (ct, _) = tcp.remote_counts(0, 1).unwrap();
         assert_eq!(ci, ct);
         let picks = vec![(0u32, 1usize), (3, 2)];
-        let (ri, _) = inproc.remote_fetch(0, 1, &picks).unwrap();
-        let (rt, _) = tcp.remote_fetch(0, 1, &picks).unwrap();
+        let (ri, mi, _) = inproc.remote_fetch(0, 1, &picks).unwrap();
+        let (rt, mt, _) = tcp.remote_fetch(0, 1, &picks).unwrap();
         assert_eq!(ri, rt, "TCP rows must decode byte-identical");
+        assert_eq!(mi, mt, "piggybacked snapshots must agree across backends");
         tcp.shutdown().unwrap();
     }
 
@@ -479,7 +502,7 @@ mod tests {
         assert!(wire::read_frame(&mut s).unwrap().is_none(),
                 "server must drop the connection, not panic");
         // the listener survives and keeps serving legitimate traffic
-        let (rows, _) = t.remote_fetch(0, 1, &[(0, 0)]).unwrap();
+        let (rows, _, _) = t.remote_fetch(0, 1, &[(0, 0)]).unwrap();
         assert_eq!(rows.len(), 1);
         t.shutdown().unwrap();
     }

@@ -13,6 +13,7 @@
 //! response body
 //!   GATHER_COUNTS   := u32 n | n x (u32 class, u32 count)
 //!   FETCH_BULK      := u32 n | n x (u32 label, u32 dim, dim x f32)
+//!                    | u32 m | m x (u32 class, u32 count)
 //! ```
 //!
 //! The fetch-response row encoding is `8 + 4·dim` bytes — deliberately the
@@ -20,8 +21,13 @@
 //! moves matches what the in-process cost model accounts; the observable
 //! difference between backends is only the framing overhead (4-byte length
 //! prefix per frame, 1-byte opcode + pick list on the request side). The
-//! `*_frame_bytes` helpers below give those exact on-wire sizes so tests
-//! and counters can assert against them.
+//! trailing `m`-entry section of a fetch response is the serving buffer's
+//! *piggybacked metadata snapshot* — the bounded-staleness plane refreshes
+//! the requester's cached view of the target on every bulk fetch without a
+//! dedicated `GATHER_COUNTS` frame (the fabric prices it at the semantic
+//! `SNAPSHOT_ENTRY_BYTES` rate on every backend). The `*_exchange_bytes`
+//! helpers below give the exact on-wire sizes so tests and counters can
+//! assert against them.
 //!
 //! All integers are little-endian; `f32` features travel as raw LE bit
 //! patterns, so a fetched row decodes bit-identical to the stored sample.
@@ -184,9 +190,12 @@ pub fn decode_counts_response(body: &[u8]) -> Result<Vec<ClassCount>> {
     Ok(counts)
 }
 
-pub fn encode_fetch_response(rows: &[Sample]) -> Vec<u8> {
+/// Encode a fetch response: the rows plus the serving buffer's current
+/// metadata snapshot, piggybacked so the requester's counts cache refreshes
+/// for free (no dedicated GATHER_COUNTS frame).
+pub fn encode_fetch_response(rows: &[Sample], counts: &[ClassCount]) -> Vec<u8> {
     let per_row: usize = rows.iter().map(|s| 8 + s.features.len() * 4).sum();
-    let mut b = Vec::with_capacity(4 + per_row);
+    let mut b = Vec::with_capacity(4 + per_row + 4 + counts.len() * 8);
     b.extend_from_slice(&(rows.len() as u32).to_le_bytes());
     for row in rows {
         b.extend_from_slice(&row.label.to_le_bytes());
@@ -195,10 +204,16 @@ pub fn encode_fetch_response(rows: &[Sample]) -> Vec<u8> {
             b.extend_from_slice(&f.to_le_bytes());
         }
     }
+    b.extend_from_slice(&(counts.len() as u32).to_le_bytes());
+    for &(class, n) in counts {
+        b.extend_from_slice(&class.to_le_bytes());
+        b.extend_from_slice(&(n as u32).to_le_bytes());
+    }
     b
 }
 
-pub fn decode_fetch_response(body: &[u8]) -> Result<Vec<Sample>> {
+/// Decode a fetch response into `(rows, piggybacked snapshot)`.
+pub fn decode_fetch_response(body: &[u8]) -> Result<(Vec<Sample>, Vec<ClassCount>)> {
     let mut c = Cursor::new(body);
     let n = c.u32()? as usize;
     if n > c.remaining() / 8 {
@@ -219,8 +234,19 @@ pub fn decode_fetch_response(body: &[u8]) -> Result<Vec<Sample>> {
         }
         rows.push(Sample::new(label, feats));
     }
+    let m = c.u32()? as usize;
+    if m > c.remaining() / 8 {
+        bail!("fetch response claims {m} snapshot entries, body holds {}",
+              c.remaining() / 8);
+    }
+    let mut counts = Vec::with_capacity(m);
+    for _ in 0..m {
+        let class = c.u32()?;
+        let count = c.u32()? as usize;
+        counts.push((class, count));
+    }
     c.done()?;
-    Ok(rows)
+    Ok((rows, counts))
 }
 
 // ------------------------------------------------------------- wire sizes
@@ -232,11 +258,16 @@ pub fn gather_counts_exchange_bytes(num_classes: usize) -> usize {
 }
 
 /// Exact on-wire bytes of a fetch-bulk exchange for `picks` picks returning
-/// `rows` (headers included). Rows cost `8 + 4·dim` each — the same payload
-/// size [`Sample::wire_bytes`] accounts on the in-process backend.
-pub fn fetch_bulk_exchange_bytes(picks: usize, rows: &[Sample]) -> usize {
+/// `rows` plus a piggybacked snapshot of `meta_entries` (class, count)
+/// entries (headers included). Rows cost `8 + 4·dim` each — the same
+/// payload size [`Sample::wire_bytes`] accounts on the in-process backend;
+/// snapshot entries cost 8 on the wire (the fabric *prices* them at the
+/// 12-byte semantic `SNAPSHOT_ENTRY_BYTES` rate on every backend).
+pub fn fetch_bulk_exchange_bytes(picks: usize, rows: &[Sample],
+                                 meta_entries: usize) -> usize {
     let payload: usize = rows.iter().map(Sample::wire_bytes).sum();
-    (FRAME_HEADER_BYTES + 5 + picks * 8) + (FRAME_HEADER_BYTES + 4 + payload)
+    (FRAME_HEADER_BYTES + 5 + picks * 8)
+        + (FRAME_HEADER_BYTES + 4 + payload + 4 + meta_entries * 8)
 }
 
 // ---------------------------------------------------------------- cursor
@@ -329,8 +360,9 @@ mod tests {
             Sample::new(0, vec![]),
             Sample::new(u32::MAX, vec![f32::NAN]),
         ];
-        let body = encode_fetch_response(&rows);
-        let back = decode_fetch_response(&body).unwrap();
+        let snapshot = vec![(0u32, 7usize), (4, 0), (9, 31)];
+        let body = encode_fetch_response(&rows, &snapshot);
+        let (back, meta) = decode_fetch_response(&body).unwrap();
         assert_eq!(back.len(), rows.len());
         for (a, b) in rows.iter().zip(&back) {
             assert_eq!(a.label, b.label);
@@ -339,6 +371,11 @@ mod tests {
             let bbits: Vec<u32> = b.features.iter().map(|f| f.to_bits()).collect();
             assert_eq!(abits, bbits);
         }
+        assert_eq!(meta, snapshot, "piggybacked snapshot must survive");
+        // an empty snapshot section is legal (empty serving buffer)
+        let body = encode_fetch_response(&rows, &[]);
+        let (_, meta) = decode_fetch_response(&body).unwrap();
+        assert!(meta.is_empty());
     }
 
     #[test]
@@ -364,6 +401,16 @@ mod tests {
         body.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
         assert!(decode_fetch_response(&body).is_err());
 
+        // fetch-response snapshot section claiming more entries than held
+        let mut body = encode_fetch_response(&[Sample::new(0, vec![1.0])], &[]);
+        let tail = body.len() - 4;
+        body[tail..].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_fetch_response(&body).is_err());
+
+        // a response truncated mid-snapshot is rejected, not zero-filled
+        let body = encode_fetch_response(&[], &[(3, 5), (4, 6)]);
+        assert!(decode_fetch_response(&body[..body.len() - 3]).is_err());
+
         // a well-formed request over the pick cap (response amplification)
         let picks: Vec<(u32, usize)> =
             (0..MAX_PICKS_PER_FETCH + 1).map(|i| (0u32, i)).collect();
@@ -375,12 +422,15 @@ mod tests {
     fn exchange_sizes_match_encodings() {
         let picks = vec![(1u32, 0usize), (2, 3)];
         let rows = vec![Sample::new(1, vec![0.5; 8]), Sample::new(2, vec![1.5; 8])];
+        let snapshot = vec![(1u32, 9usize), (2, 4), (5, 0)];
         let req = encode_fetch_bulk_request(&picks);
-        let resp = encode_fetch_response(&rows);
-        assert_eq!(fetch_bulk_exchange_bytes(picks.len(), &rows),
+        let resp = encode_fetch_response(&rows, &snapshot);
+        assert_eq!(fetch_bulk_exchange_bytes(picks.len(), &rows, snapshot.len()),
                    (4 + req.len()) + (4 + resp.len()));
-        // response payload per row == Sample::wire_bytes
-        assert_eq!(resp.len(), 4 + rows.iter().map(Sample::wire_bytes).sum::<usize>());
+        // response payload per row == Sample::wire_bytes (+ snapshot section)
+        assert_eq!(resp.len(),
+                   4 + rows.iter().map(Sample::wire_bytes).sum::<usize>()
+                     + 4 + snapshot.len() * 8);
 
         let counts = vec![(0u32, 3usize), (1, 4), (2, 5)];
         let creq = encode_gather_counts_request();

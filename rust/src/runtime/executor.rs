@@ -39,6 +39,10 @@ pub struct StepOutput {
 #[derive(Debug, Default)]
 pub struct ExecStats {
     pub train_steps: AtomicU64,
+    /// Subset of `train_steps` that ran augmented (b + r rows, r ≥ 1) —
+    /// lets tests pin that fetched representatives actually reach the
+    /// optimizer instead of being silently dropped.
+    pub train_aug_steps: AtomicU64,
     pub train_ns: AtomicU64,
     pub update_steps: AtomicU64,
     pub update_ns: AtomicU64,
@@ -278,12 +282,24 @@ impl ModelExecutor {
     }
 
     /// Rehearsal step: b-batch + r representatives, concatenated row-wise
-    /// (the concat_rows kernel of the AOT reference).
+    /// (the concat_rows kernel of the AOT reference). The native executor
+    /// is shape-polymorphic, so any `1 ≤ r ≤ max declared r` is accepted:
+    /// partial representative sets (warm-up, buffers smaller than the
+    /// configured r, post-rebalance shrink) still train augmented instead
+    /// of forcing the caller back to the plain step. Only r above every
+    /// declared artifact is rejected — the AOT contract's upper bound.
     pub fn train_step_aug(&self, params: &[Literal], batch: &Batch,
                           reps: &Batch) -> Result<StepOutput> {
         let r = reps.len();
-        if !self.meta.train_aug_files.contains_key(&r) {
-            return Err(anyhow!("no compiled augmented step for r={r}"));
+        if r == 0 {
+            return Err(anyhow!("augmented step needs at least one \
+                                representative (use train_step)"));
+        }
+        let max_r = self.meta.train_aug_files.keys().next_back().copied()
+            .unwrap_or(0);
+        if r > max_r {
+            return Err(anyhow!("no compiled augmented step for r={r} \
+                                (largest declared is {max_r})"));
         }
         let (mut xs, mut ys) = self.check_batch(batch, self.batch)?;
         let (xr, yr) = reps.flatten();
@@ -297,6 +313,7 @@ impl ModelExecutor {
         let out = self.step(params, xs, ys, rows)?;
         self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        self.stats.train_aug_steps.fetch_add(1, Ordering::Relaxed);
         Ok(out)
     }
 
@@ -523,6 +540,29 @@ mod tests {
         let plain = exec.train_step(&params, &b).unwrap();
         assert_ne!(literal_to_vec(&aug.grads[0]).unwrap(),
                    literal_to_vec(&plain.grads[0]).unwrap());
+        assert_eq!(exec.stats.train_aug_steps.load(Ordering::Relaxed), 1);
+        assert_eq!(exec.stats.train_steps.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn partial_rep_sets_train_augmented() {
+        // Declared r = 2; a warm-up/small-buffer round fetching only 1 rep
+        // must still run the augmented step (no silent drop), while r above
+        // the declared maximum and r = 0 stay rejected.
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 8);
+        let one = batch(&exec, 1, 9);
+        let out = exec.train_step_aug(&params, &b, &one).unwrap();
+        assert!(out.loss.is_finite());
+        assert!(out.top5 <= 9.0, "9 rows trained (b=8 + r=1)");
+        assert_eq!(exec.stats.train_aug_steps.load(Ordering::Relaxed), 1);
+        let three = batch(&exec, 3, 10);
+        assert!(exec.train_step_aug(&params, &b, &three).is_err(),
+                "r beyond every declared artifact must stay rejected");
+        let zero = Batch::new(Vec::new());
+        assert!(exec.train_step_aug(&params, &b, &zero).is_err(),
+                "r = 0 is the plain step's job");
     }
 
     #[test]

@@ -40,6 +40,13 @@ impl GlobalSampler {
     /// Build a plan drawing `r` representatives without replacement,
     /// uniformly over all residents visible in `counts` (indexed by worker).
     /// Draws fewer when the global buffer holds fewer than `r`.
+    ///
+    /// `counts` may come from the fabric's bounded-staleness metadata
+    /// plane, i.e. be up to `meta_refresh_rounds` rounds old: the plan is
+    /// then location-uniform over the *snapshot* population, and the modulo
+    /// remap in `LocalBuffer::fetch_rows` keeps picks whose index outlived
+    /// the live class length near-uniform over the residents actually
+    /// present at fetch time.
     pub fn plan(&self, counts: &[Vec<(u32, usize)>], r: usize,
                 rng: &mut Rng) -> SamplingPlan {
         // Restrict to the local node under the local-only ablation.

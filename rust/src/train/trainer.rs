@@ -3,7 +3,8 @@
 //!
 //! - **Rehearsal** — the contribution: per-worker async engines over the
 //!   distributed buffer; each iteration trains on `b + r` samples
-//!   (Listing 1), with buffer management overlapped per Fig. 4.
+//!   (Listing 1) — or `b + reps.len()` when the global buffer holds fewer
+//!   than `r` — with buffer management overlapped per Fig. 4.
 //! - **Incremental** — plain data-parallel training on the current task
 //!   only (runtime lower bound, accuracy lower bound).
 //! - **FromScratch** — at each task boundary, re-initialise and train on
@@ -97,8 +98,6 @@ struct Shared<'a> {
     poisoned: &'a AtomicBool,
     first_error: &'a Mutex<Option<anyhow::Error>>,
     cost: CostModel,
-    batch: usize,
-    reps: usize,
 }
 
 impl Shared<'_> {
@@ -178,7 +177,8 @@ impl<'a> Trainer<'a> {
             .collect();
         let fabric = Arc::new(Fabric::for_kind(
             cfg.cluster.transport, buffers, self.cost_model(),
-            cfg.cluster.emulate_delays)?);
+            cfg.cluster.emulate_delays)?
+            .with_meta_refresh_rounds(cfg.cluster.meta_refresh_rounds));
         let params = EngineParams {
             batch: cfg.training.batch,
             reps: cfg.training.reps,
@@ -233,7 +233,6 @@ impl<'a> Trainer<'a> {
              reset_each_task: bool) -> Result<RunReport> {
         let cfg = self.cfg;
         let n = cfg.cluster.workers;
-        let b = cfg.training.batch;
         let schedule = self.schedule();
         let evaluator = Evaluator::new(self.exec, self.dataset, self.tasks);
 
@@ -273,8 +272,6 @@ impl<'a> Trainer<'a> {
             poisoned: &poisoned,
             first_error: &first_error,
             cost: self.cost_model(),
-            batch: b,
-            reps: cfg.training.reps,
         };
 
         let mut cmd_txs: Vec<Sender<WorkerCmd>> = Vec::with_capacity(n);
@@ -525,18 +522,21 @@ fn worker_iteration(w: usize,
     shared.breakdown[w].add_load(t0.elapsed());
 
     // Rehearsal: the Listing-1 update() primitive.
-    let rehearsal = engine.is_some();
     let reps = match engine {
         Some(e) => e.update(&batch)?,
         None => Vec::new(),
     };
 
     // Train (native executor; parameters shared read-only during compute).
-    let augmented = rehearsal && reps.len() == shared.reps;
+    // A *partial* representative set (warm-up, buffers smaller than the
+    // configured r, post-rebalance shrink) still trains augmented on
+    // b + reps.len() rows — dropping it would silently degrade replay
+    // quality exactly when the buffer is most fragile.
+    let reps_len = reps.len();
     let t1 = Instant::now();
     let out = {
         let st = shared.state.read().unwrap();
-        if augmented {
+        if reps_len > 0 {
             let reps_batch = Batch::new(reps);
             shared.exec.train_step_aug(&st.params, &batch, &reps_batch)?
         } else {
@@ -547,8 +547,9 @@ fn worker_iteration(w: usize,
     shared.breakdown[w].bump();
 
     // loss is a per-row mean, top5 a correct-count: TrainMetrics weights
-    // them consistently (see metrics::breakdown).
-    let rows = if augmented { shared.batch + shared.reps } else { shared.batch };
+    // them consistently (see metrics::breakdown) by the rows actually
+    // trained on, not the configured b + r.
+    let rows = batch.len() + reps_len;
     metrics.add_step(out.loss as f64, out.top5 as f64, rows as f64);
     shared.acc.submit(w, &out.grads)?;
     Ok(())
@@ -631,6 +632,37 @@ mod tests {
             assert_eq!(ea.train_loss, eb.train_loss);
             assert_eq!(ea.train_top5, eb.train_top5);
         }
+    }
+
+    #[test]
+    fn buffers_smaller_than_r_still_train_augmented() {
+        // Global buffer capacity (12) < configured r (16): every
+        // post-warm-up iteration fetches a *partial* representative set,
+        // which must reach train_step_aug instead of being silently
+        // dropped (the old `reps.len() != r` guard trained plain forever).
+        let mut cfg = tiny_cfg();
+        cfg.cluster.workers = 1;
+        cfg.training.strategy = Strategy::Rehearsal;
+        cfg.training.reps = 16;
+        cfg.buffer.percent_of_dataset = 5.0; // 240-sample set -> |B| = 12
+        cfg.validate().unwrap();
+        assert!(cfg.global_buffer_capacity() < cfg.training.reps,
+                "test premise: buffer must be smaller than r");
+
+        let manifest = crate::runtime::Manifest::synthetic(
+            cfg.data.input_dim, cfg.data.num_classes, cfg.training.batch,
+            vec![cfg.training.reps], cfg.training.eval_batch);
+        let exec = ModelExecutor::new(&manifest, &cfg.training.variant,
+                                      &[cfg.training.reps]).unwrap();
+        let dataset = crate::data::Dataset::generate(&cfg.data);
+        let tasks = crate::data::TaskSequence::new(
+            cfg.data.num_classes, cfg.data.num_tasks, cfg.data.seed);
+        let trainer = Trainer::new(&cfg, &exec, &dataset, &tasks);
+        let report = trainer.run().expect("partial-rep rehearsal run");
+        assert!(report.iterations > 2);
+        let aug = exec.stats.train_aug_steps.load(Ordering::Relaxed);
+        assert!(aug > 0,
+                "no iteration trained augmented: partial reps were dropped");
     }
 
     #[test]

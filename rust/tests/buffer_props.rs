@@ -25,10 +25,9 @@ fn class_buffer_never_exceeds_capacity() {
         let cap = usize_in(rng, 0, 40);
         let policy = any_policy(rng);
         let inserts = usize_in(rng, 0, 300);
-        let mut cb = ClassBuffer::new(cap, policy);
-        let mut evict_rng = Rng::new(rng.next_u64());
+        let mut cb = ClassBuffer::new(cap, policy, rng.next_u64());
         for i in 0..inserts {
-            cb.insert(sample(0, i as f32), &mut evict_rng);
+            cb.insert(sample(0, i as f32));
             if cb.len() > cap {
                 return Err(format!("len {} > cap {cap} ({policy:?})", cb.len()));
             }
@@ -45,10 +44,9 @@ fn class_buffer_fills_before_evicting() {
     forall(40, |rng| {
         let cap = usize_in(rng, 1, 30);
         let policy = any_policy(rng);
-        let mut cb = ClassBuffer::new(cap, policy);
-        let mut evict_rng = Rng::new(rng.next_u64());
+        let mut cb = ClassBuffer::new(cap, policy, rng.next_u64());
         for i in 0..cap {
-            match cb.insert(sample(0, i as f32), &mut evict_rng) {
+            match cb.insert(sample(0, i as f32)) {
                 InsertOutcome::Appended => {}
                 o => return Err(format!("unexpected {o:?} before full")),
             }

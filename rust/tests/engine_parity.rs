@@ -82,7 +82,10 @@ fn async_and_blocking_reach_identical_occupancy() {
 
 #[test]
 fn fetch_bulk_wire_bytes_formula_is_unchanged() {
-    // d=8 features: every row must be charged 8*4 + 8 = 40 wire bytes.
+    // d=8 features: every row must be charged 8*4 + 8 = 40 wire bytes,
+    // plus 12 semantic bytes per entry of the metadata snapshot that the
+    // bounded-staleness plane piggybacks on every remote fetch (one class
+    // resident on the target here).
     let d = 8usize;
     let fabric = make_fabric(2, 100);
     for i in 0..10 {
@@ -92,7 +95,7 @@ fn fetch_bulk_wire_bytes_formula_is_unchanged() {
     let (rows, wire) = fabric.fetch_bulk(0, 1, &picks).unwrap();
     assert_eq!(rows.len(), 6);
     assert_eq!(fabric.counters.bytes.load(Ordering::Relaxed),
-               (6 * (d * 4 + 8)) as u64);
+               (6 * (d * 4 + 8) + 12) as u64);
     assert_eq!(rows.iter().map(Sample::wire_bytes).sum::<usize>(), 6 * 40);
     assert!(wire > std::time::Duration::ZERO);
     assert_eq!(fabric.counters.rpcs.load(Ordering::Relaxed), 1);

@@ -1,0 +1,147 @@
+//! Bounded-staleness metadata plane (ISSUE 3): cadence-cached peer counts
+//! with piggybacked refresh must amortize metadata RPCs without changing
+//! what the planner *is* — a location-uniform sampler.
+//!
+//! - With `meta_refresh_rounds = k > 1`, metadata RPCs per worker-round
+//!   are `≤ (N−1)/k` amortized, identically over `inproc` and `tcp`.
+//! - With `k = 1`, a fixed-seed round stream reproduces the uncached
+//!   fabric's plans bit-identically.
+//! - Plans built from k-stale cached counts stay location-uniform
+//!   (chi-square over the flattened resident space) while the buffers
+//!   keep evolving underneath the cache.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use dcl::buffer::LocalBuffer;
+use dcl::config::{EvictionPolicy, SamplingScope, TransportKind};
+use dcl::net::{CostModel, Fabric};
+use dcl::sampling::GlobalSampler;
+use dcl::tensor::Sample;
+use dcl::testkit::filled_buffers;
+use dcl::util::rng::Rng;
+use dcl::util::stats::chi_square_uniform;
+
+/// Drive `rounds` gather→plan→execute rounds for worker 0 over `kind` with
+/// cadence `k`; returns (meta_rpcs, per-round plans as (target, picks)).
+fn drive(kind: TransportKind, k: usize, rounds: usize, seed: u64)
+         -> (u64, Vec<Vec<(usize, Vec<(u32, usize)>)>>) {
+    let bufs = filled_buffers(4, 6, 2);
+    let fabric = Fabric::for_kind(kind, bufs, CostModel::default(), false)
+        .expect("fabric")
+        .with_meta_refresh_rounds(k);
+    let sampler = GlobalSampler::new(0, SamplingScope::Global);
+    let mut rng = Rng::new(seed);
+    let mut plans = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let counts = fabric.gather_counts(0).unwrap();
+        let plan = sampler.plan(&counts, 7, &mut rng);
+        sampler.execute(&fabric, &plan).unwrap();
+        plans.push(plan.requests.clone());
+    }
+    let meta = fabric.counters.meta_rpcs.load(Ordering::Relaxed);
+    fabric.shutdown().unwrap();
+    (meta, plans)
+}
+
+#[test]
+fn meta_rpcs_amortize_to_peers_over_k() {
+    // N = 4, k = 5, 20 rounds: the cadence alone caps refreshes at
+    // (N−1) · ceil(rounds/k) = 12, and piggybacked fetches can only lower
+    // that — never raise it.
+    let (meta, plans) = drive(TransportKind::Inproc, 5, 20, 42);
+    let bound: u64 = 3 * 20 / 5;
+    assert!(meta <= bound, "meta rpcs {meta} > amortized bound {bound}");
+    assert!(meta > 0, "first round must RPC every peer");
+    assert_eq!(plans.len(), 20);
+
+    // k = 1 is the uncached rate: exactly N−1 per round.
+    let (meta1, _) = drive(TransportKind::Inproc, 1, 20, 42);
+    assert_eq!(meta1, 3 * 20u64);
+}
+
+#[test]
+fn amortization_is_backend_identical() {
+    // Same seed, same cadence: the meta RPC count and the plans themselves
+    // must not depend on the transport (cache hits and piggybacks are
+    // plan-driven, and plans are seed-driven).
+    for k in [1usize, 3] {
+        let (meta_i, plans_i) = drive(TransportKind::Inproc, k, 15, 7);
+        let (meta_t, plans_t) = drive(TransportKind::Tcp, k, 15, 7);
+        assert_eq!(meta_i, meta_t, "k={k}: meta rpcs diverged across backends");
+        assert_eq!(plans_i, plans_t, "k={k}: plans diverged across backends");
+    }
+}
+
+#[test]
+fn k1_reproduces_uncached_ground_truth_plans() {
+    // At k = 1 every gather refreshes by RPC, so plans must be
+    // bit-identical to planning straight off the live buffer snapshots
+    // with the same RNG stream (today's uncached behavior).
+    let bufs = filled_buffers(3, 5, 2);
+    let fabric = Fabric::new(bufs.clone(), CostModel::default(), false)
+        .with_meta_refresh_rounds(1);
+    let sampler = GlobalSampler::new(0, SamplingScope::Global);
+    let mut rng_fab = Rng::new(99);
+    let mut rng_gt = Rng::new(99);
+    for round in 0..10 {
+        let via_fabric = {
+            let counts = fabric.gather_counts(0).unwrap();
+            sampler.plan(&counts, 6, &mut rng_fab)
+        };
+        let ground_truth = {
+            let counts: Vec<Vec<(u32, usize)>> =
+                bufs.iter().map(|b| b.snapshot_counts()).collect();
+            sampler.plan(&counts, 6, &mut rng_gt)
+        };
+        assert_eq!(via_fabric, ground_truth, "round {round} diverged at k=1");
+        sampler.execute(&fabric, &via_fabric).unwrap();
+        // mutate a peer so a (wrongly) cached fabric would diverge
+        fabric.buffer(1).insert(Sample::new(0, vec![round as f32, 0.0]));
+    }
+}
+
+#[test]
+fn plans_from_k_stale_counts_stay_location_uniform() {
+    // 2 workers × 1 class × 8 residents each, buffers churning under a
+    // k = 4 cache: across many rounds every flattened resident position
+    // must be picked ~equally often (the paper's fairness requirement
+    // holds w.r.t. the snapshot the planner saw).
+    let per = 8usize;
+    let buffers: Vec<Arc<LocalBuffer>> = (0..2)
+        .map(|w| {
+            let b = LocalBuffer::new(per, EvictionPolicy::Random, w as u64);
+            for i in 0..per {
+                b.insert(Sample::new(w as u32, vec![i as f32]));
+            }
+            Arc::new(b)
+        })
+        .collect();
+    let fabric = Fabric::new(buffers, CostModel::default(), false)
+        .with_meta_refresh_rounds(4);
+    let sampler = GlobalSampler::new(0, SamplingScope::Global);
+    let mut rng = Rng::new(4242);
+    let mut churn = Rng::new(777);
+    let mut hits = vec![0u64; 2 * per];
+    let rounds: u64 = 6000;
+    for _ in 0..rounds {
+        let counts = fabric.gather_counts(0).unwrap();
+        let plan = sampler.plan(&counts, 4, &mut rng);
+        for (t, picks) in &plan.requests {
+            for &(_, idx) in picks {
+                hits[*t * per + idx] += 1;
+            }
+        }
+        // full-buffer churn: counts stay at 8 (random replacement), so the
+        // cached view is value-stable but genuinely stale in content
+        let w = churn.below(2);
+        fabric.buffer(w).insert(
+            Sample::new(w as u32, vec![churn.f32(); 1]));
+        sampler.execute(&fabric, &plan).unwrap();
+    }
+    let total: u64 = hits.iter().sum();
+    assert_eq!(total, 4 * rounds);
+    // 15 dof; 60 is far beyond the 0.9999 quantile
+    let chi2 = chi_square_uniform(&hits);
+    assert!(chi2 < 60.0, "chi2 {chi2}, hits {hits:?}");
+}

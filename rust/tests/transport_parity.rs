@@ -71,7 +71,9 @@ fn fixed_seed_sampling_round_is_backend_identical() {
                2 * wire::gather_counts_exchange_bytes(4) as u64);
 
     // Wire bytes differ by exactly the framing overhead: inproc accounts
-    // the semantic payload, tcp the encoded request+response frames.
+    // the semantic payload (rows + the piggybacked snapshot at 12 B per
+    // entry), tcp the encoded request+response frames (snapshot section
+    // included).
     let mut semantic = 0u64;
     let mut framed = 0u64;
     for (target, picks) in &plan_a.requests {
@@ -79,8 +81,11 @@ fn fixed_seed_sampling_round_is_backend_identical() {
             continue;
         }
         let rows = bufs[*target].fetch_rows(picks).unwrap();
-        semantic += rows.iter().map(Sample::wire_bytes).sum::<usize>() as u64;
-        framed += wire::fetch_bulk_exchange_bytes(picks.len(), &rows) as u64;
+        let meta_entries = bufs[*target].snapshot_counts().len();
+        semantic += (rows.iter().map(Sample::wire_bytes).sum::<usize>()
+                     + meta_entries * 12) as u64;
+        framed += wire::fetch_bulk_exchange_bytes(picks.len(), &rows,
+                                                  meta_entries) as u64;
     }
     assert_eq!(bytes_a, semantic, "inproc bytes = semantic payload");
     assert_eq!(bytes_b, framed, "tcp bytes = encoded frame sizes");
