@@ -1,0 +1,64 @@
+//! Executor kernel bench: blocked vs naive train-step throughput at the
+//! default resnet18_sim geometry (b=56, r=7, d=3072, K=40), plus a GEMM
+//! microbench at the layer-0 shape — the regression guard for the PR-4
+//! kernel/workspace split. Both variants are reported so BENCH_ci.json
+//! records the blocked kernels' margin over the scalar baseline; the
+//! `perf-gate` entries (record-only at first) track the blocked numbers.
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::runtime::{kernels, Manifest, ModelExecutor};
+use dcl::tensor::{Batch, Sample};
+use dcl::util::rng::Rng;
+
+fn mk_batch(rng: &mut Rng, rows: usize, dim: usize, classes: usize) -> Batch {
+    Batch::new((0..rows).map(|_| {
+        Sample::new(rng.below(classes) as u32,
+                    (0..dim).map(|_| rng.normal() as f32 * 0.5).collect())
+    }).collect())
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let manifest = Manifest::synthetic(3072, 40, 56, vec![7], 50);
+    let exec = ModelExecutor::new(&manifest, "resnet18_sim", &[7]).unwrap();
+    let (params, _) = exec.init_state().unwrap();
+    let mut rng = Rng::new(21);
+    let b = mk_batch(&mut rng, 56, 3072, 40);
+    let reps = mk_batch(&mut rng, 7, 3072, 40);
+    let mut ws = exec.make_workspace();
+
+    // Throughput = training rows/s (the Fig. 6 "Train" bar's currency).
+    r.bench_items("train_step_blocked_b56", 56, || {
+        black_box(exec.train_step_with(&params, &b, &mut ws).unwrap());
+    });
+    r.bench_items("train_step_naive_b56", 56, || {
+        black_box(exec.train_step_naive(&params, &b).unwrap());
+    });
+    r.bench_items("train_step_aug_blocked_b56_r7", 63, || {
+        black_box(exec.train_step_aug_with(&params, &b, &reps, &mut ws)
+            .unwrap());
+    });
+
+    // GEMM microbench at the layer-0 forward shape of an augmented step
+    // (63×3072 · 3072×512). Throughput = fused multiply-adds/s.
+    let (m, k, n) = (63usize, 3072usize, 512usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let mut pack = vec![0.0f32; kernels::pack_len(k)];
+    let mut out = vec![0.0f32; m * n];
+    r.bench_items("gemm_blocked_m63_k3072_n512", m * k * n, || {
+        kernels::gemm_bias_act(&a, m, k, &w, n, &bias, true, &mut pack,
+                               &mut out);
+        black_box(out[0]);
+    });
+    r.bench_items("gemm_naive_m63_k3072_n512", m * k * n, || {
+        for row in out.chunks_mut(n) {
+            row.copy_from_slice(&bias);
+        }
+        kernels::matmul_acc(&a, m, k, &w, n, &mut out);
+        black_box(out[0]);
+    });
+
+    r.write_csv("exec_kernels.csv");
+}

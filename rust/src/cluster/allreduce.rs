@@ -6,7 +6,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use crate::net::CostModel;
-use crate::runtime::{make_literal, Literal};
+use crate::runtime::Literal;
 
 /// Wire time of one bandwidth-optimal ring all-reduce over `n` workers for
 /// `bytes` of payload: 2(n−1) steps, each moving `bytes/n` and paying α.
@@ -38,21 +38,31 @@ impl Slot {
     }
 }
 
+/// Persistent reduce scratch: the f64 fold buffers and the mean literals
+/// that successive [`GradAccumulator::reduce_with`] calls overwrite in
+/// place — the reduce path performs no heap allocation in steady state
+/// (no more `make_literal` round-trip copies per iteration).
+struct ReduceScratch {
+    totals: Vec<Vec<f64>>,
+    means: Vec<Literal>,
+}
+
 /// Accumulates per-replica gradients and produces their exact mean.
 ///
 /// The accumulator is **sharded**: each concurrent worker submits into its
-/// own mutex-guarded slot (`submit(worker, ..)`), and [`reduce`] folds the
-/// slots together *in slot order*. That makes the reduction result
+/// own mutex-guarded slot (`submit(worker, ..)`), and [`reduce_with`] folds
+/// the slots together *in slot order*. That makes the reduction result
 /// independent of worker arrival order — bit-identical across runs for a
 /// fixed seed — while workers on different threads never contend on one
 /// central lock during the hot add. `add()` is the single-slot convenience
 /// used by sequential callers and keeps the pre-threading call shape.
 ///
-/// [`reduce`]: GradAccumulator::reduce
+/// [`reduce_with`]: GradAccumulator::reduce_with
 pub struct GradAccumulator {
     shapes: Vec<Vec<usize>>,
     slots: Vec<Mutex<Slot>>,
     bytes: usize,
+    scratch: Mutex<ReduceScratch>,
 }
 
 impl GradAccumulator {
@@ -66,7 +76,13 @@ impl GradAccumulator {
         assert!(workers > 0, "accumulator needs at least one slot");
         let slots = (0..workers).map(|_| Mutex::new(Slot::new(&shapes))).collect();
         let bytes = shapes.iter().map(|s| s.iter().product::<usize>() * 4).sum();
-        GradAccumulator { shapes, slots, bytes }
+        let scratch = Mutex::new(ReduceScratch {
+            totals: shapes.iter()
+                .map(|s| vec![0.0f64; s.iter().product()])
+                .collect(),
+            means: shapes.iter().map(|s| Literal::zeros(s)).collect(),
+        });
+        GradAccumulator { shapes, slots, bytes, scratch }
     }
 
     /// Payload bytes one replica contributes (the all-reduce message size).
@@ -111,49 +127,70 @@ impl GradAccumulator {
         Ok(())
     }
 
-    /// Emit the mean gradients and reset for the next iteration. Returns
-    /// the literals plus the modeled ring-all-reduce wire time. Slots are
-    /// folded in index order, so the result does not depend on which worker
-    /// finished first.
-    pub fn reduce(&self, cost: &CostModel) -> Result<(Vec<Literal>, Duration)> {
-        let mut guards: Vec<_> = self.slots.iter()
-            .map(|s| s.lock().unwrap())
-            .collect();
-        let replicas: usize = guards.iter().map(|g| g.count).sum();
+    /// Fold all slots into the persistent scratch, hand the mean gradients
+    /// to `f`, and reset for the next iteration — without allocating.
+    /// `f` receives the means (manifest order, borrowed from the scratch)
+    /// plus the modeled ring-all-reduce wire time; the trainer's barrier
+    /// leader applies the fused SGD update directly from the borrow.
+    ///
+    /// Slots are locked, folded and reset **in index order**, so the
+    /// result does not depend on which worker finished first. The fold is
+    /// not atomic across slots: callers must quiesce submitters first (the
+    /// trainer's barrier does; so does joining bench/test threads).
+    pub fn reduce_with<T>(&self, cost: &CostModel,
+                          f: impl FnOnce(&[Literal], Duration) -> Result<T>)
+                          -> Result<T> {
+        let mut scratch = self.scratch.lock().unwrap();
+        let mut replicas = 0usize;
+        {
+            let ReduceScratch { totals, .. } = &mut *scratch;
+            for total in totals.iter_mut() {
+                total.iter_mut().for_each(|x| *x = 0.0);
+            }
+            for slot in &self.slots {
+                let mut g = slot.lock().unwrap();
+                if g.count > 0 {
+                    replicas += g.count;
+                    for (total, sum) in totals.iter_mut().zip(&g.sums) {
+                        for (acc, &s) in total.iter_mut().zip(sum) {
+                            *acc += s;
+                        }
+                    }
+                    g.count = 0;
+                    for sum in g.sums.iter_mut() {
+                        sum.iter_mut().for_each(|s| *s = 0.0);
+                    }
+                }
+            }
+        }
         if replicas == 0 {
             bail!("reduce with no replicas accumulated");
         }
         let inv = 1.0 / replicas as f64;
-        let mut out = Vec::with_capacity(self.shapes.len());
-        for (t, shape) in self.shapes.iter().enumerate() {
-            let n: usize = shape.iter().product();
-            let mut total = vec![0.0f64; n];
-            for g in guards.iter() {
-                if g.count == 0 {
-                    continue;
+        {
+            let ReduceScratch { totals, means } = &mut *scratch;
+            for (mean, total) in means.iter_mut().zip(totals.iter()) {
+                for (o, &s) in mean.data_mut().iter_mut().zip(total) {
+                    *o = (s * inv) as f32;
                 }
-                for (acc, &s) in total.iter_mut().zip(&g.sums[t]) {
-                    *acc += s;
-                }
-            }
-            let mean: Vec<f32> = total.iter().map(|&s| (s * inv) as f32).collect();
-            out.push(make_literal(&mean, shape)?);
-        }
-        for g in guards.iter_mut() {
-            g.count = 0;
-            for sum in g.sums.iter_mut() {
-                sum.iter_mut().for_each(|s| *s = 0.0);
             }
         }
         let wire = ring_allreduce_cost(cost, replicas, self.bytes);
-        Ok((out, wire))
+        f(&scratch.means, wire)
+    }
+
+    /// Emit the mean gradients and reset for the next iteration — the
+    /// cloning wrapper over [`reduce_with`](Self::reduce_with) for
+    /// sequential callers, tests and benches.
+    pub fn reduce(&self, cost: &CostModel) -> Result<(Vec<Literal>, Duration)> {
+        self.reduce_with(cost, |means, wire| Ok((means.to_vec(), wire)))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::literal_to_vec;
+    use crate::runtime::{literal_to_vec, make_literal};
 
     #[test]
     fn ring_cost_zero_for_single_worker() {
@@ -245,6 +282,41 @@ mod tests {
         let (mean, _) = acc.reduce(&CostModel::default()).unwrap();
         // mean of 50x1 + 50x2 + 50x3 + 50x4 over 200 = 2.5
         assert_eq!(literal_to_vec(&mean[0]).unwrap(), vec![2.5; 8]);
+    }
+
+    #[test]
+    fn reduce_with_reuses_scratch_and_matches_reduce() {
+        let shapes = vec![vec![2, 2], vec![3]];
+        let acc = GradAccumulator::new(shapes);
+        let g = vec![
+            make_literal(&[1., 2., 3., 4.], &[2, 2]).unwrap(),
+            make_literal(&[0., 0., 3.], &[3]).unwrap(),
+        ];
+        acc.add(&g).unwrap();
+        let mut ptr0 = std::ptr::null();
+        acc.reduce_with(&CostModel::default(), |means, wire| {
+            assert_eq!(means[0].data(), &[1., 2., 3., 4.]);
+            assert_eq!(means[1].data(), &[0., 0., 3.]);
+            assert!(wire == Duration::ZERO, "single replica rings for free");
+            ptr0 = means[0].data().as_ptr();
+            Ok(())
+        }).unwrap();
+        // second round: same scratch slabs (no per-iteration literals),
+        // stale means fully overwritten
+        acc.add(&g).unwrap();
+        acc.add(&g).unwrap();
+        acc.reduce_with(&CostModel::default(), |means, _| {
+            assert_eq!(means[0].data(), &[1., 2., 3., 4.], "mean of 2 equals");
+            assert!(std::ptr::eq(means[0].data().as_ptr(), ptr0),
+                    "reduce scratch must be reused, not reallocated");
+            Ok(())
+        }).unwrap();
+        // closure errors propagate and still leave the accumulator reset
+        acc.add(&g).unwrap();
+        let r: Result<()> = acc.reduce_with(&CostModel::default(),
+                                            |_, _| bail!("leader failed"));
+        assert!(r.is_err());
+        assert_eq!(acc.replicas(), 0);
     }
 
     #[test]

@@ -308,6 +308,9 @@ impl ExperimentConfig {
         if t.batch == 0 {
             bail!("batch must be positive");
         }
+        if t.eval_batch == 0 {
+            bail!("eval_batch must be positive");
+        }
         if t.strategy == Strategy::Rehearsal && t.reps == 0 {
             bail!("rehearsal needs reps > 0");
         }
@@ -331,11 +334,9 @@ impl ExperimentConfig {
                    shrink the cluster)",
                   self.per_worker_capacity(), d.num_classes);
         }
-        let val_total_per_task = d.val_per_class * self.classes_per_task();
-        if val_total_per_task % t.eval_batch != 0 {
-            bail!("per-task validation size {} not divisible by eval batch {}",
-                  val_total_per_task, t.eval_batch);
-        }
+        // Validation sets need not divide eval_batch: the evaluator
+        // processes the final partial chunk (the native executor is
+        // shape-polymorphic), so any positive geometry is fine here.
         Ok(())
     }
 

@@ -33,7 +33,9 @@
 //! - [`engine`] — the asynchronous update/augment pipeline of Fig. 4 and
 //!   the `update()` primitive of Listing 1.
 //! - [`cluster`] — worker topology and the sharded exact-mean all-reduce.
-//! - [`runtime`] — native executor (manifest-driven model semantics).
+//! - [`runtime`] — native executor (manifest-driven model semantics):
+//!   cache-blocked deterministic GEMM kernels + per-worker step
+//!   workspaces (allocation-free steady-state iterations).
 //! - [`optim`] — learning-rate schedules (linear scaling, warmup, decay).
 //! - [`train`] — the rehearsal trainer, baselines, evaluation.
 //! - [`perfmodel`] — discrete-event cluster performance model (A100 +

@@ -2,29 +2,46 @@
 //!
 //! Earlier revisions executed AOT-compiled HLO through the `xla` PJRT
 //! bindings; offline build environments have neither the crate nor the
-//! `xla_extension` C++ runtime, so the executor now implements the same
-//! model semantics natively in Rust (see `python/compile/model.py`, the
+//! `xla_extension` C++ runtime, so the executor implements the same model
+//! semantics natively in Rust (see `python/compile/model.py`, the
 //! still-authoritative reference): an MLP over the Pallas `dense` kernel's
 //! math, fused softmax-xent loss, rank-based top-1/top-5 counts, and the
 //! fused SGD-momentum + weight-decay update. Parameters and momenta live as
 //! [`Literal`]s in manifest order; gradients come back the same way, are
-//! ring-averaged by [`crate::cluster`], and flow into the fused update.
+//! exact-mean reduced by [`crate::cluster`], and flow into the fused update.
+//!
+//! The compute core is split in two (PR 4):
+//!
+//! - [`super::kernels`] — cache-blocked, register-tiled GEMMs with fused
+//!   bias+ReLU / ReLU-mask epilogues and a fixed, deterministic summation
+//!   order (plus the naive scalar loops they replaced, kept as the parity
+//!   baseline);
+//! - [`super::workspace::StepWorkspace`] — per-worker step scratch. The
+//!   `*_with` entry points ([`ModelExecutor::train_step_with`],
+//!   [`ModelExecutor::train_step_aug_with`],
+//!   [`ModelExecutor::eval_step_with`]) run **allocation-free** against a
+//!   workspace; the workspace-less signatures remain as thin one-shot
+//!   wrappers for tests, benches and examples.
 //!
 //! Every method takes `&self` and the struct is plain data + atomic
 //! counters, so one executor is shared by all concurrent worker threads of
-//! the trainer runtime.
+//! the trainer runtime (each thread owning its private workspace).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::tensor::Batch;
+use crate::tensor::{Batch, Sample};
 
 use super::artifact::{Manifest, VariantMeta};
+use super::kernels;
+use super::workspace::StepWorkspace;
 pub use super::literal::{literal_to_vec, make_literal, Literal};
 
-/// Result of one train step (before all-reduce).
+/// Result of one train step (before all-reduce) — the one-shot wrapper
+/// shape; the workspace path returns [`StepStats`] and leaves the
+/// gradients in the workspace slabs.
 pub struct StepOutput {
     pub loss: f32,
     /// Top-1 correct COUNT over the step's rows (not a rate).
@@ -32,6 +49,17 @@ pub struct StepOutput {
     /// Top-5 correct COUNT over the step's rows (not a rate).
     pub top5: f32,
     pub grads: Vec<Literal>,
+}
+
+/// Scalar outputs of one workspace train step; the gradients live in the
+/// workspace ([`StepWorkspace::grads`]) to keep the hot path copy-free.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    /// Top-1 correct COUNT over the step's rows (not a rate).
+    pub top1: f32,
+    /// Top-5 correct COUNT over the step's rows (not a rate).
+    pub top5: f32,
 }
 
 /// Execution counters (nanoseconds / counts) for the Fig. 6 "Train" bar and
@@ -137,54 +165,92 @@ impl ModelExecutor {
         Ok((params, moms))
     }
 
-    fn check_batch(&self, batch: &Batch, rows: usize) -> Result<(Vec<f32>, Vec<i32>)> {
-        if batch.len() != rows {
-            bail!("batch has {} rows, executor wants {rows}", batch.len());
-        }
-        let (xs, ys) = batch.flatten();
-        if xs.len() != rows * self.input_dim {
-            bail!("batch features {} != {rows}x{}", xs.len(), self.input_dim);
-        }
-        Ok((xs, ys))
+    /// Largest r with a declared augmented-step artifact (0 when none).
+    pub fn max_reps(&self) -> usize {
+        self.meta.train_aug_files.keys().next_back().copied().unwrap_or(0)
     }
 
-    /// Forward pass: returns the activations per layer — `acts[0]` is the
-    /// input, `acts[L]` the logits; hidden activations are post-ReLU (ReLU
-    /// gradients are recovered from the sign of the stored activation).
-    fn forward(&self, params: &[Literal], xs: Vec<f32>, rows: usize) -> Vec<Vec<f32>> {
+    /// Build the per-worker step scratch: one call per worker thread, then
+    /// reused for every iteration (the `*_with` paths allocate nothing).
+    /// Sized for `batch + max_reps` train rows and `eval_batch` eval rows.
+    pub fn make_workspace(&self) -> StepWorkspace {
+        let max_rows = (self.batch + self.max_reps()).max(self.eval_batch);
+        let widths: Vec<usize> = self.layers.iter().map(|&(_, o)| o).collect();
+        let shapes: Vec<Vec<usize>> =
+            self.meta.params.iter().map(|p| p.shape.clone()).collect();
+        StepWorkspace::with_geometry(self.input_dim, max_rows, widths, &shapes)
+    }
+
+    /// Guard: `ws` was built for this executor's geometry and can hold
+    /// `rows` rows.
+    fn check_workspace(&self, ws: &StepWorkspace, rows: usize) -> Result<()> {
+        if ws.input_dim != self.input_dim
+            || ws.widths.len() != self.layers.len()
+            || ws.widths.iter().zip(&self.layers).any(|(&w, &(_, o))| w != o)
+            || ws.grads.len() != self.meta.params.len()
+        {
+            bail!("workspace geometry does not match this executor \
+                   (build it with make_workspace)");
+        }
+        if rows > ws.max_rows {
+            bail!("step of {rows} rows exceeds workspace capacity {}",
+                  ws.max_rows);
+        }
+        Ok(())
+    }
+
+    /// Flatten `batch` into the workspace input slabs at row offset
+    /// `row0`, expecting exactly `rows` samples of `input_dim` features.
+    fn load_rows(&self, ws: &mut StepWorkspace, samples: &[Sample],
+                 row0: usize, rows: usize) -> Result<()> {
+        if samples.len() != rows {
+            bail!("batch has {} rows, executor wants {rows}", samples.len());
+        }
+        let d = self.input_dim;
+        if let Some(s) = samples.iter().find(|s| s.features.len() != d) {
+            bail!("batch features {} != executor input dim {d}",
+                  s.features.len());
+        }
+        crate::tensor::flatten_samples_into(
+            samples,
+            &mut ws.xs[row0 * d..(row0 + rows) * d],
+            &mut ws.ys[row0..row0 + rows]);
+        Ok(())
+    }
+
+    /// Forward pass over the workspace: `ws.acts[l]` receives layer `l`'s
+    /// output (post-ReLU for hidden layers, raw logits for the last).
+    /// Bias seed + ReLU are fused into the blocked GEMM's epilogue.
+    fn forward_ws(&self, params: &[Literal], rows: usize,
+                  ws: &mut StepWorkspace) {
         let num_layers = self.layers.len();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(num_layers + 1);
-        acts.push(xs);
+        let StepWorkspace { xs, acts, pack, .. } = ws;
         for (l, &(fan_in, fan_out)) in self.layers.iter().enumerate() {
             let w = params[2 * l].data();
             let b = params[2 * l + 1].data();
-            let mut z = vec![0.0f32; rows * fan_out];
-            for row in z.chunks_mut(fan_out) {
-                row.copy_from_slice(b);
-            }
-            matmul_acc(&acts[l], rows, fan_in, w, fan_out, &mut z);
-            if l + 1 < num_layers {
-                for v in &mut z {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
-            acts.push(z);
+            let (before, rest) = acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 {
+                &xs[..rows * fan_in]
+            } else {
+                &before[l - 1][..rows * fan_in]
+            };
+            kernels::gemm_bias_act(input, rows, fan_in, w, fan_out, b,
+                                   l + 1 < num_layers, pack,
+                                   &mut rest[0][..rows * fan_out]);
         }
-        acts
     }
 
     /// Softmax-xent losses, rank-based hit counts and (optionally) the
-    /// scaled logit gradients for one batch of logits.
+    /// scaled logit gradients for one batch of logits. `dlogits`, when
+    /// present, must hold `rows * K` elements and is fully overwritten.
     fn loss_and_counts(&self, logits: &[f32], ys: &[i32], rows: usize,
-                       grad_scale: Option<f32>)
-                       -> (f64, f64, f64, Option<Vec<f32>>) {
+                       grad_scale: Option<f32>,
+                       mut dlogits: Option<&mut [f32]>)
+                       -> (f64, f64, f64) {
         let k = self.layers.last().expect("at least one layer").1;
         let mut loss_sum = 0.0f64;
         let mut top1 = 0.0f64;
         let mut top5 = 0.0f64;
-        let mut dlogits = grad_scale.map(|_| vec![0.0f32; rows * k]);
         for i in 0..rows {
             let row = &logits[i * k..(i + 1) * k];
             let label = ys[i] as usize;
@@ -205,7 +271,7 @@ impl ModelExecutor {
             if rank < 5 {
                 top5 += 1.0;
             }
-            if let (Some(d), Some(g)) = (dlogits.as_mut(), grad_scale) {
+            if let (Some(d), Some(g)) = (dlogits.as_deref_mut(), grad_scale) {
                 let drow = &mut d[i * k..(i + 1) * k];
                 for (j, (&x, dv)) in row.iter().zip(drow.iter_mut()).enumerate() {
                     let p = (((x - m) as f64).exp() / denom) as f32;
@@ -214,35 +280,284 @@ impl ModelExecutor {
                 }
             }
         }
-        (loss_sum, top1, top5, dlogits)
+        (loss_sum, top1, top5)
     }
 
-    /// Backward pass: gradients in manifest order (w0, b0, w1, b1, ...).
-    fn backward(&self, params: &[Literal], acts: &[Vec<f32>], rows: usize,
-                dlogits: Vec<f32>) -> Result<Vec<Literal>> {
+    /// Backward pass over the workspace: `ws.dz_a[..rows*K]` holds the
+    /// logit gradients on entry; gradients land in `ws.grads` (manifest
+    /// order), fully overwritten. The ReLU mask of the `dz·Wᵀ` hop is
+    /// fused into the blocked GEMM's epilogue.
+    fn backward_ws(&self, params: &[Literal], rows: usize,
+                   ws: &mut StepWorkspace) {
+        let StepWorkspace { xs, acts, dz_a, dz_b, pack, grads, .. } = ws;
+        let mut dz: &mut Vec<f32> = dz_a;
+        let mut dz_next: &mut Vec<f32> = dz_b;
+        for l in (0..self.layers.len()).rev() {
+            let (fan_in, fan_out) = self.layers[l];
+            let a: &[f32] = if l == 0 {
+                &xs[..rows * fan_in]
+            } else {
+                &acts[l - 1][..rows * fan_in]
+            };
+            let dzs = &dz[..rows * fan_out];
+            let (gleft, gright) = grads.split_at_mut(2 * l + 1);
+            // dW = aᵀ·dz ; db = column sums of dz
+            kernels::gemm_at_b(a, rows, fan_in, dzs, fan_out, pack,
+                               gleft[2 * l].data_mut());
+            kernels::col_sums(dzs, rows, fan_out, gright[0].data_mut());
+            if l > 0 {
+                // dh = dz·Wᵀ, masked by the ReLU of the previous layer.
+                let w = params[2 * l].data();
+                kernels::gemm_a_bt_mask(dzs, rows, fan_out, w, fan_in, a,
+                                        pack, &mut dz_next[..rows * fan_in]);
+                std::mem::swap(&mut dz, &mut dz_next);
+            }
+        }
+    }
+
+    /// Full fwd/loss/bwd over `rows` already-loaded workspace rows.
+    fn step_ws(&self, params: &[Literal], rows: usize,
+               ws: &mut StepWorkspace) -> StepStats {
+        self.forward_ws(params, rows, ws);
+        let scale = 1.0 / rows as f32;
+        let k = self.layers.last().expect("at least one layer").1;
+        let (loss_sum, top1, top5) = {
+            let StepWorkspace { ys, acts, dz_a, .. } = ws;
+            let logits = &acts[acts.len() - 1][..rows * k];
+            self.loss_and_counts(logits, &ys[..rows], rows, Some(scale),
+                                 Some(&mut dz_a[..rows * k]))
+        };
+        self.backward_ws(params, rows, ws);
+        StepStats {
+            loss: (loss_sum / rows as f64) as f32,
+            top1: top1 as f32,
+            top5: top5 as f32,
+        }
+    }
+
+    /// Plain step over a size-b batch against a reusable workspace:
+    /// allocation-free in steady state; gradients land in `ws.grads`.
+    pub fn train_step_with(&self, params: &[Literal], batch: &Batch,
+                           ws: &mut StepWorkspace) -> Result<StepStats> {
+        let rows = self.batch;
+        self.check_workspace(ws, rows)?;
+        self.load_rows(ws, &batch.samples, 0, rows)?;
+        let t0 = Instant::now();
+        let out = self.step_ws(params, rows, ws);
+        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Rehearsal step against a reusable workspace: b-batch + r
+    /// representatives, concatenated row-wise in the workspace input slab
+    /// (the concat_rows kernel of the AOT reference). The native executor
+    /// is shape-polymorphic, so any `1 ≤ r ≤ max declared r` is accepted:
+    /// partial representative sets (warm-up, buffers smaller than the
+    /// configured r, post-rebalance shrink) still train augmented instead
+    /// of forcing the caller back to the plain step. Only r above every
+    /// declared artifact is rejected — the AOT contract's upper bound.
+    pub fn train_step_aug_with(&self, params: &[Literal], batch: &Batch,
+                               reps: &Batch, ws: &mut StepWorkspace)
+                               -> Result<StepStats> {
+        let r = reps.len();
+        if r == 0 {
+            return Err(anyhow!("augmented step needs at least one \
+                                representative (use train_step)"));
+        }
+        let max_r = self.max_reps();
+        if r > max_r {
+            return Err(anyhow!("no compiled augmented step for r={r} \
+                                (largest declared is {max_r})"));
+        }
+        let rows = self.batch + r;
+        self.check_workspace(ws, rows)?;
+        self.load_rows(ws, &batch.samples, 0, self.batch)?;
+        self.load_rows(ws, &reps.samples, self.batch, r)?;
+        let t0 = Instant::now();
+        let out = self.step_ws(params, rows, ws);
+        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        self.stats.train_aug_steps.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Eval over `1 ≤ rows ≤ eval_batch` borrowed samples against a
+    /// reusable workspace: (loss_sum, top1_count, top5_count). The
+    /// executor is shape-polymorphic, so a final *partial* validation
+    /// chunk evaluates like any other — no padding, no copies.
+    pub fn eval_step_with(&self, params: &[Literal], samples: &[Sample],
+                          ws: &mut StepWorkspace) -> Result<(f32, f32, f32)> {
+        let rows = samples.len();
+        if rows == 0 || rows > self.eval_batch {
+            bail!("eval chunk of {rows} rows outside 1..={}", self.eval_batch);
+        }
+        self.check_workspace(ws, rows)?;
+        self.load_rows(ws, samples, 0, rows)?;
+        let t0 = Instant::now();
+        self.forward_ws(params, rows, ws);
+        let k = self.layers.last().expect("at least one layer").1;
+        let (loss_sum, top1, top5) = {
+            let StepWorkspace { ys, acts, .. } = ws;
+            let logits = &acts[acts.len() - 1][..rows * k];
+            self.loss_and_counts(logits, &ys[..rows], rows, None, None)
+        };
+        self.stats.eval_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.eval_steps.fetch_add(1, Ordering::Relaxed);
+        Ok((loss_sum as f32, top1 as f32, top5 as f32))
+    }
+
+    // ------------------------------------------------ one-shot wrappers
+
+    /// Plain step over a size-b batch (one-shot wrapper: builds a fresh
+    /// workspace per call; hot paths hold a workspace and use
+    /// [`train_step_with`](Self::train_step_with)).
+    pub fn train_step(&self, params: &[Literal], batch: &Batch) -> Result<StepOutput> {
+        let mut ws = self.make_workspace();
+        let s = self.train_step_with(params, batch, &mut ws)?;
+        Ok(StepOutput { loss: s.loss, top1: s.top1, top5: s.top5,
+                        grads: ws.into_grads() })
+    }
+
+    /// Rehearsal step (one-shot wrapper over
+    /// [`train_step_aug_with`](Self::train_step_aug_with)).
+    pub fn train_step_aug(&self, params: &[Literal], batch: &Batch,
+                          reps: &Batch) -> Result<StepOutput> {
+        let mut ws = self.make_workspace();
+        let s = self.train_step_aug_with(params, batch, reps, &mut ws)?;
+        Ok(StepOutput { loss: s.loss, top1: s.top1, top5: s.top5,
+                        grads: ws.into_grads() })
+    }
+
+    /// Eval over one batch of `1 ≤ rows ≤ eval_batch` samples (one-shot
+    /// wrapper over [`eval_step_with`](Self::eval_step_with)).
+    pub fn eval_step(&self, params: &[Literal], batch: &Batch) -> Result<(f32, f32, f32)> {
+        let mut ws = self.make_workspace();
+        self.eval_step_with(params, &batch.samples, &mut ws)
+    }
+
+    // ------------------------------------------------------ fused update
+
+    /// Fused SGD update, in place: `m' = mu·m + g + wd·w ; w' = w − lr·m'`
+    /// (biases skip weight decay). Allocation-free — the barrier leader
+    /// calls this with the mean gradients still in the accumulator's
+    /// scratch.
+    pub fn apply_update_in(&self, params: &mut [Literal],
+                           moms: &mut [Literal], grads: &[Literal],
+                           lr: f64) -> Result<()> {
+        let p = self.meta.params.len();
+        if grads.len() != p || params.len() != p || moms.len() != p {
+            bail!("update got {} grads for {} params / {} moms, want {p}",
+                  grads.len(), params.len(), moms.len());
+        }
+        let t0 = Instant::now();
+        let mu = self.meta.momentum as f32;
+        let lr = lr as f32;
+        for ((w, m), g) in params.iter_mut().zip(moms.iter_mut()).zip(grads) {
+            if w.numel() != g.numel() || m.numel() != g.numel() {
+                bail!("update tensor size mismatch: w={} m={} g={}",
+                      w.numel(), m.numel(), g.numel());
+            }
+            let wd = if w.shape().len() > 1 { self.meta.weight_decay as f32 } else { 0.0 };
+            let (wv, mv) = (w.data_mut(), m.data_mut());
+            for ((wx, mx), &gx) in wv.iter_mut().zip(mv.iter_mut()).zip(g.data()) {
+                let m2 = mu * *mx + gx + wd * *wx;
+                *mx = m2;
+                *wx -= lr * m2;
+            }
+        }
+        self.stats.update_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.update_steps.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Fused SGD update, by value (wrapper over
+    /// [`apply_update_in`](Self::apply_update_in) for sequential callers):
+    /// consumes (params, moms, averaged grads, lr), returns the new pair.
+    pub fn apply_update(&self, mut params: Vec<Literal>,
+                        mut moms: Vec<Literal>, grads: &[Literal], lr: f64)
+                        -> Result<(Vec<Literal>, Vec<Literal>)> {
+        self.apply_update_in(&mut params, &mut moms, grads, lr)?;
+        Ok((params, moms))
+    }
+
+    // ------------------------------------------- naive reference path
+
+    /// Plain step computed with the pre-blocking scalar loops and fresh
+    /// allocations — the parity baseline for the kernel test suite and
+    /// the `exec_kernels` bench. Deliberately does NOT touch `stats`, so
+    /// baseline runs never pollute `train_step_ms`.
+    pub fn train_step_naive(&self, params: &[Literal], batch: &Batch) -> Result<StepOutput> {
+        let rows = self.batch;
+        if batch.len() != rows {
+            bail!("batch has {} rows, executor wants {rows}", batch.len());
+        }
+        let (xs, ys) = batch.flatten();
+        if xs.len() != rows * self.input_dim {
+            bail!("batch features {} != {rows}x{}", xs.len(), self.input_dim);
+        }
+        let acts = self.naive_forward(params, xs, rows);
+        let logits = acts.last().expect("forward produced logits");
+        let scale = 1.0 / rows as f32;
+        let mut dlogits = vec![0.0f32; rows * self.layers.last().unwrap().1];
+        let (loss_sum, top1, top5) =
+            self.loss_and_counts(logits, &ys, rows, Some(scale),
+                                 Some(&mut dlogits));
+        let grads = self.naive_backward(params, &acts, rows, dlogits)?;
+        Ok(StepOutput {
+            loss: (loss_sum / rows as f64) as f32,
+            top1: top1 as f32,
+            top5: top5 as f32,
+            grads,
+        })
+    }
+
+    /// Naive forward: `acts[0]` is the input, `acts[L]` the logits; hidden
+    /// activations are post-ReLU.
+    fn naive_forward(&self, params: &[Literal], xs: Vec<f32>,
+                     rows: usize) -> Vec<Vec<f32>> {
+        let num_layers = self.layers.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(num_layers + 1);
+        acts.push(xs);
+        for (l, &(fan_in, fan_out)) in self.layers.iter().enumerate() {
+            let w = params[2 * l].data();
+            let b = params[2 * l + 1].data();
+            let mut z = vec![0.0f32; rows * fan_out];
+            for row in z.chunks_mut(fan_out) {
+                row.copy_from_slice(b);
+            }
+            kernels::matmul_acc(&acts[l], rows, fan_in, w, fan_out, &mut z);
+            if l + 1 < num_layers {
+                for v in &mut z {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Naive backward: gradients in manifest order (w0, b0, w1, b1, ...).
+    fn naive_backward(&self, params: &[Literal], acts: &[Vec<f32>],
+                      rows: usize, dlogits: Vec<f32>) -> Result<Vec<Literal>> {
         let num_layers = self.layers.len();
         let mut grads: Vec<Option<Literal>> = (0..2 * num_layers).map(|_| None).collect();
         let mut dz = dlogits;
         for l in (0..num_layers).rev() {
             let (fan_in, fan_out) = self.layers[l];
             let a = &acts[l];
-            // dW = aᵀ·dz
             let mut dw = vec![0.0f32; fan_in * fan_out];
-            matmul_at_b(a, rows, fan_in, &dz, fan_out, &mut dw);
-            // db = column sums of dz
+            kernels::matmul_at_b(a, rows, fan_in, &dz, fan_out, &mut dw);
             let mut db = vec![0.0f32; fan_out];
-            for row in dz.chunks(fan_out) {
-                for (d, &v) in db.iter_mut().zip(row) {
-                    *d += v;
-                }
-            }
+            kernels::col_sums(&dz, rows, fan_out, &mut db);
             grads[2 * l] = Some(Literal::new(vec![fan_in, fan_out], dw)?);
             grads[2 * l + 1] = Some(Literal::new(vec![fan_out], db)?);
             if l > 0 {
-                // dh = dz·Wᵀ, masked by the ReLU of the previous layer.
                 let w = params[2 * l].data();
                 let mut dh = vec![0.0f32; rows * fan_in];
-                matmul_a_bt(&dz, rows, fan_out, w, fan_in, &mut dh);
+                kernels::matmul_a_bt(&dz, rows, fan_out, w, fan_in, &mut dh);
                 for (d, &h) in dh.iter_mut().zip(a.iter()) {
                     if h <= 0.0 {
                         *d = 0.0;
@@ -252,178 +567,6 @@ impl ModelExecutor {
             }
         }
         Ok(grads.into_iter().map(|g| g.expect("all layers visited")).collect())
-    }
-
-    fn step(&self, params: &[Literal], xs: Vec<f32>, ys: Vec<i32>,
-            rows: usize) -> Result<StepOutput> {
-        let acts = self.forward(params, xs, rows);
-        let logits = acts.last().expect("forward produced logits");
-        let scale = 1.0 / rows as f32;
-        let (loss_sum, top1, top5, dlogits) =
-            self.loss_and_counts(logits, &ys, rows, Some(scale));
-        let grads = self.backward(params, &acts, rows,
-                                  dlogits.expect("grad requested"))?;
-        Ok(StepOutput {
-            loss: (loss_sum / rows as f64) as f32,
-            top1: top1 as f32,
-            top5: top5 as f32,
-            grads,
-        })
-    }
-
-    /// Plain step over a size-b batch (baselines / warm-up iterations).
-    pub fn train_step(&self, params: &[Literal], batch: &Batch) -> Result<StepOutput> {
-        let (xs, ys) = self.check_batch(batch, self.batch)?;
-        let t0 = Instant::now();
-        let out = self.step(params, xs, ys, self.batch)?;
-        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
-        Ok(out)
-    }
-
-    /// Rehearsal step: b-batch + r representatives, concatenated row-wise
-    /// (the concat_rows kernel of the AOT reference). The native executor
-    /// is shape-polymorphic, so any `1 ≤ r ≤ max declared r` is accepted:
-    /// partial representative sets (warm-up, buffers smaller than the
-    /// configured r, post-rebalance shrink) still train augmented instead
-    /// of forcing the caller back to the plain step. Only r above every
-    /// declared artifact is rejected — the AOT contract's upper bound.
-    pub fn train_step_aug(&self, params: &[Literal], batch: &Batch,
-                          reps: &Batch) -> Result<StepOutput> {
-        let r = reps.len();
-        if r == 0 {
-            return Err(anyhow!("augmented step needs at least one \
-                                representative (use train_step)"));
-        }
-        let max_r = self.meta.train_aug_files.keys().next_back().copied()
-            .unwrap_or(0);
-        if r > max_r {
-            return Err(anyhow!("no compiled augmented step for r={r} \
-                                (largest declared is {max_r})"));
-        }
-        let (mut xs, mut ys) = self.check_batch(batch, self.batch)?;
-        let (xr, yr) = reps.flatten();
-        if xr.len() != r * self.input_dim {
-            bail!("reps features {} != {r}x{}", xr.len(), self.input_dim);
-        }
-        xs.extend_from_slice(&xr);
-        ys.extend_from_slice(&yr);
-        let rows = self.batch + r;
-        let t0 = Instant::now();
-        let out = self.step(params, xs, ys, rows)?;
-        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
-        self.stats.train_aug_steps.fetch_add(1, Ordering::Relaxed);
-        Ok(out)
-    }
-
-    /// Fused SGD update: consumes (params, moms, averaged grads, lr) and
-    /// returns the new (params, moms):
-    /// `m' = mu·m + g + wd·w ; w' = w − lr·m'` (biases skip weight decay).
-    pub fn apply_update(&self, params: Vec<Literal>, moms: Vec<Literal>,
-                        grads: &[Literal], lr: f64)
-                        -> Result<(Vec<Literal>, Vec<Literal>)> {
-        let p = self.meta.params.len();
-        if grads.len() != p {
-            bail!("update got {} grads, want {p}", grads.len());
-        }
-        let t0 = Instant::now();
-        let mu = self.meta.momentum as f32;
-        let lr = lr as f32;
-        let mut new_params = Vec::with_capacity(p);
-        let mut new_moms = Vec::with_capacity(p);
-        for ((mut w, mut m), g) in params.into_iter().zip(moms).zip(grads) {
-            if w.numel() != g.numel() || m.numel() != g.numel() {
-                bail!("update tensor size mismatch: w={} m={} g={}",
-                      w.numel(), m.numel(), g.numel());
-            }
-            let wd = if w.shape().len() > 1 { self.meta.weight_decay as f32 } else { 0.0 };
-            {
-                let (wv, mv) = (w.data_mut(), m.data_mut());
-                for ((wx, mx), &gx) in wv.iter_mut().zip(mv.iter_mut()).zip(g.data()) {
-                    let m2 = mu * *mx + gx + wd * *wx;
-                    *mx = m2;
-                    *wx -= lr * m2;
-                }
-            }
-            new_params.push(w);
-            new_moms.push(m);
-        }
-        self.stats.update_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.update_steps.fetch_add(1, Ordering::Relaxed);
-        Ok((new_params, new_moms))
-    }
-
-    /// Eval over one eval-batch: (loss_sum, top1_count, top5_count).
-    pub fn eval_step(&self, params: &[Literal], batch: &Batch) -> Result<(f32, f32, f32)> {
-        let (xs, ys) = self.check_batch(batch, self.eval_batch)?;
-        let t0 = Instant::now();
-        let acts = self.forward(params, xs, self.eval_batch);
-        let logits = acts.last().expect("forward produced logits");
-        let (loss_sum, top1, top5, _) =
-            self.loss_and_counts(logits, &ys, self.eval_batch, None);
-        self.stats.eval_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.eval_steps.fetch_add(1, Ordering::Relaxed);
-        Ok((loss_sum as f32, top1 as f32, top5 as f32))
-    }
-}
-
-/// `out (m×n) += a (m×k) · w (k×n)`, row-major, cache-friendly i-k-j order.
-fn matmul_acc(a: &[f32], m: usize, k: usize, w: &[f32], n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // ReLU sparsity
-            }
-            let wrow = &w[l * n..(l + 1) * n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += av * wv;
-            }
-        }
-    }
-}
-
-/// `out (k×n) += aᵀ (k×m) · d (m×n)` where `a` is stored (m×k) row-major.
-fn matmul_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(d.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let drow = &d[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[l * n..(l + 1) * n];
-            for (o, &dv) in orow.iter_mut().zip(drow) {
-                *o += av * dv;
-            }
-        }
-    }
-}
-
-/// `out (m×k) = d (m×n) · wᵀ (n×k)` where `w` is stored (k×n) row-major.
-fn matmul_a_bt(d: &[f32], m: usize, n: usize, w: &[f32], k: usize, out: &mut [f32]) {
-    debug_assert_eq!(d.len(), m * n);
-    debug_assert_eq!(w.len(), k * n);
-    debug_assert_eq!(out.len(), m * k);
-    for i in 0..m {
-        let drow = &d[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (l, o) in orow.iter_mut().enumerate() {
-            let wrow = &w[l * n..(l + 1) * n];
-            let mut s = 0.0f32;
-            for (&dv, &wv) in drow.iter().zip(wrow) {
-                s += dv * wv;
-            }
-            *o = s;
-        }
     }
 }
 
@@ -573,5 +716,90 @@ mod tests {
         let (loss_sum, top1, top5) = exec.eval_step(&params, &b).unwrap();
         assert!(loss_sum.is_finite() && loss_sum > 0.0);
         assert!(top1 >= 0.0 && top1 <= top5 && top5 <= 10.0);
+    }
+
+    #[test]
+    fn eval_accepts_partial_chunks() {
+        // Shape-polymorphic eval: any 1..=eval_batch rows; 0 and
+        // eval_batch+1 stay rejected.
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let mut ws = exec.make_workspace();
+        let b = batch(&exec, 7, 20);
+        let (loss_sum, top1, top5) =
+            exec.eval_step_with(&params, &b.samples, &mut ws).unwrap();
+        assert!(loss_sum.is_finite() && loss_sum > 0.0);
+        assert!(top1 >= 0.0 && top1 <= top5 && top5 <= 7.0);
+        let too_big = batch(&exec, 11, 21);
+        assert!(exec.eval_step(&params, &too_big).is_err());
+        assert!(exec.eval_step(&params, &Batch::new(Vec::new())).is_err());
+    }
+
+    #[test]
+    fn blocked_step_matches_naive_step_exactly() {
+        // The blocked kernels keep the naive loops' per-element summation
+        // order, so whole steps agree to the last bit — losses, counts and
+        // every gradient tensor.
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        for seed in [30u64, 31, 32] {
+            let b = batch(&exec, 8, seed);
+            let blocked = exec.train_step(&params, &b).unwrap();
+            let naive = exec.train_step_naive(&params, &b).unwrap();
+            assert_eq!(blocked.loss, naive.loss);
+            assert_eq!(blocked.top1, naive.top1);
+            assert_eq!(blocked.top5, naive.top5);
+            for (gb, gn) in blocked.grads.iter().zip(&naive.grads) {
+                assert_eq!(gb.shape(), gn.shape());
+                assert_eq!(gb.data(), gn.data(),
+                           "blocked vs naive gradient mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_stable_and_traceless() {
+        // One workspace across many steps: gradient slabs never move
+        // (pointer-stable, the zero-allocation invariant's visible half)
+        // and a dirty workspace reproduces a fresh one's results exactly.
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b1 = batch(&exec, 8, 40);
+        let b2 = batch(&exec, 8, 41);
+        let reps = batch(&exec, 2, 42);
+        let mut ws = exec.make_workspace();
+        let s1 = exec.train_step_with(&params, &b1, &mut ws).unwrap();
+        let ptrs: Vec<*const f32> =
+            ws.grads().iter().map(|g| g.data().as_ptr()).collect();
+        let g1: Vec<Vec<f32>> =
+            ws.grads().iter().map(|g| g.data().to_vec()).collect();
+        // interleave other work through the same workspace
+        exec.train_step_aug_with(&params, &b2, &reps, &mut ws).unwrap();
+        exec.eval_step_with(&params, &b1.samples[..5], &mut ws).unwrap();
+        let s1b = exec.train_step_with(&params, &b1, &mut ws).unwrap();
+        assert_eq!(s1.loss, s1b.loss);
+        assert_eq!(s1.top1, s1b.top1);
+        assert_eq!(s1.top5, s1b.top5);
+        for ((g, want), ptr) in ws.grads().iter().zip(&g1).zip(&ptrs) {
+            assert_eq!(g.data(), &want[..], "dirty-workspace grad drift");
+            assert!(std::ptr::eq(g.data().as_ptr(), *ptr),
+                    "gradient slab reallocated");
+        }
+        // fresh workspace agrees too
+        let mut ws2 = exec.make_workspace();
+        let s1c = exec.train_step_with(&params, &b1, &mut ws2).unwrap();
+        assert_eq!(s1.loss, s1c.loss);
+    }
+
+    #[test]
+    fn foreign_workspace_rejected() {
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let other = Manifest::synthetic(64, 8, 8, vec![2], 10);
+        let other_exec = ModelExecutor::new(&other, "resnet18_sim", &[2]).unwrap();
+        let mut ws = other_exec.make_workspace();
+        let b = batch(&exec, 8, 50);
+        assert!(exec.train_step_with(&params, &b, &mut ws).is_err(),
+                "mismatched workspace geometry must be rejected");
     }
 }

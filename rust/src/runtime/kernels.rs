@@ -1,0 +1,516 @@
+//! Cache-blocked, register-tiled GEMM kernels for the native executor.
+//!
+//! The executor's three matmul shapes (forward `a·W`, weight-gradient
+//! `aᵀ·dz`, input-gradient `dz·Wᵀ`) share one structure here:
+//!
+//! 1. the output is walked in **column strips** of [`NR`] columns; the
+//!    strip of the B-side operand is packed once into a contiguous,
+//!    zero-padded panel (`pack`) that stays L1/L2-resident while every
+//!    row block streams over it;
+//! 2. a **register-tiled micro-kernel** ([`MR`] rows × [`NR`] columns of
+//!    f32 accumulators, monomorphised over the row count) walks the
+//!    reduction dimension once, broadcasting one A-side scalar per row
+//!    and fusing a multiply-add across the strip;
+//! 3. an **epilogue** applies the fused bias+ReLU (forward) or the
+//!    ReLU-mask (backward `dz·Wᵀ`) at store time, so activations and
+//!    input gradients never take a second pass.
+//!
+//! # Determinism contract
+//!
+//! Every output element is a sum over the reduction dimension taken in
+//! **ascending index order**, one scalar fma at a time — exactly the order
+//! of the naive scalar loops ([`matmul_acc`], [`matmul_at_b`],
+//! [`matmul_a_bt`]) these kernels replace. Lanes of the micro-kernel map
+//! to *distinct* output elements, never to partial sums of one element, so
+//! auto-vectorisation cannot reorder any float addition. Consequences the
+//! test suite pins:
+//!
+//! - blocked and naive kernels agree **exactly** (same floats, not just
+//!   within tolerance) on inputs where the naive loops take no
+//!   zero-skip shortcuts, and to f32 `==` everywhere;
+//! - results are a pure function of the inputs — workspace reuse, row
+//!   blocking and strip order leave no trace — so `workers = 1`
+//!   fixed-seed runs stay bit-identical run-to-run.
+//!
+//! The kernels write only `out[..m*n]` slices handed in by the caller
+//! (the per-worker [`super::workspace::StepWorkspace`]); they allocate
+//! nothing.
+
+/// Micro-kernel row block (output rows accumulated per pass).
+pub const MR: usize = 4;
+/// Column-strip width (f32 accumulator lanes per output row).
+pub const NR: usize = 16;
+
+/// Minimum `pack` length for a reduction dimension of `red` elements.
+pub fn pack_len(red: usize) -> usize {
+    red * NR
+}
+
+// ------------------------------------------------------------------ packing
+
+/// Pack `w[.., j0..j0+nr]` (row-major k×n) into `pack[l*NR + c]`,
+/// zero-padding columns `nr..NR` so micro-kernels always run full-width.
+fn pack_strip(w: &[f32], k: usize, n: usize, j0: usize, nr: usize,
+              pack: &mut [f32]) {
+    for l in 0..k {
+        let src = &w[l * n + j0..l * n + j0 + nr];
+        let dst = &mut pack[l * NR..(l + 1) * NR];
+        dst[..nr].copy_from_slice(src);
+        dst[nr..].fill(0.0);
+    }
+}
+
+/// Pack the transposed strip `w[l0..l0+nr, ..]ᵀ` (w row-major kdim×n) into
+/// `pack[j*NR + c] = w[(l0+c)*n + j]`, zero-padding lanes `nr..NR`.
+fn pack_strip_t(w: &[f32], n: usize, l0: usize, nr: usize, pack: &mut [f32]) {
+    if nr < NR {
+        for dst in pack[..n * NR].chunks_exact_mut(NR) {
+            dst[nr..].fill(0.0);
+        }
+    }
+    for c in 0..nr {
+        let wrow = &w[(l0 + c) * n..(l0 + c + 1) * n];
+        for (j, &v) in wrow.iter().enumerate() {
+            pack[j * NR + c] = v;
+        }
+    }
+}
+
+// ------------------------------------------------------------- micro-kernels
+
+/// Forward micro-kernel: `M_` rows of `out[.., j0..j0+nr] = a·pack + bias`,
+/// optional ReLU at store. Reduction over `l = 0..k` ascending.
+#[inline(always)]
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn micro_fwd<const M_: usize>(a: &[f32], k: usize, i0: usize, pack: &[f32],
+                              bias: &[f32], j0: usize, nr: usize, relu: bool,
+                              n: usize, out: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; M_];
+    for row in acc.iter_mut() {
+        row[..nr].copy_from_slice(&bias[j0..j0 + nr]);
+    }
+    let arows: [&[f32]; M_] =
+        core::array::from_fn(|r| &a[(i0 + r) * k..(i0 + r + 1) * k]);
+    for (l, wrow) in pack.chunks_exact(NR).take(k).enumerate() {
+        for r in 0..M_ {
+            let av = arows[r][l];
+            for c in 0..NR {
+                acc[r][c] += av * wrow[c];
+            }
+        }
+    }
+    for r in 0..M_ {
+        let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + nr];
+        for (c, o) in orow.iter_mut().enumerate() {
+            let v = acc[r][c];
+            *o = if relu && v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// Weight-gradient micro-kernel: `M_` rows (of the k dimension) of
+/// `out[l0.., j0..j0+nr] = aᵀ·pack`. Reduction over `i = 0..m` ascending.
+#[inline(always)]
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn micro_at_b<const M_: usize>(a: &[f32], m: usize, k: usize, l0: usize,
+                               pack: &[f32], j0: usize, nr: usize, n: usize,
+                               out: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; M_];
+    for (i, drow) in pack.chunks_exact(NR).take(m).enumerate() {
+        let arow = &a[i * k + l0..i * k + l0 + M_];
+        for r in 0..M_ {
+            let av = arow[r];
+            for c in 0..NR {
+                acc[r][c] += av * drow[c];
+            }
+        }
+    }
+    for r in 0..M_ {
+        let orow = &mut out[(l0 + r) * n + j0..(l0 + r) * n + j0 + nr];
+        for (c, o) in orow.iter_mut().enumerate() {
+            *o = acc[r][c];
+        }
+    }
+}
+
+/// Input-gradient micro-kernel: `M_` rows of
+/// `out[.., l0..l0+nr] = d·packᵀ`, zeroed where the stored activation is
+/// ≤ 0 (fused ReLU mask). Reduction over `j = 0..n` ascending.
+#[inline(always)]
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn micro_a_bt<const M_: usize>(d: &[f32], n: usize, i0: usize, pack: &[f32],
+                               l0: usize, nr: usize, kdim: usize, act: &[f32],
+                               out: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; M_];
+    let drows: [&[f32]; M_] =
+        core::array::from_fn(|r| &d[(i0 + r) * n..(i0 + r + 1) * n]);
+    for (j, prow) in pack.chunks_exact(NR).take(n).enumerate() {
+        for r in 0..M_ {
+            let dv = drows[r][j];
+            for c in 0..NR {
+                acc[r][c] += dv * prow[c];
+            }
+        }
+    }
+    for r in 0..M_ {
+        let arow = &act[(i0 + r) * kdim + l0..(i0 + r) * kdim + l0 + nr];
+        let orow = &mut out[(i0 + r) * kdim + l0..(i0 + r) * kdim + l0 + nr];
+        for c in 0..nr {
+            orow[c] = if arow[c] <= 0.0 { 0.0 } else { acc[r][c] };
+        }
+    }
+}
+
+// ------------------------------------------------------------ blocked GEMMs
+
+/// Forward dense layer: `out (m×n) = a (m×k) · w (k×n) + bias`, with an
+/// optional fused ReLU. `pack` needs [`pack_len`]`(k)` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_act(a: &[f32], m: usize, k: usize, w: &[f32], n: usize,
+                     bias: &[f32], relu: bool, pack: &mut [f32],
+                     out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert!(pack.len() >= pack_len(k));
+    let mut j = 0;
+    while j < n {
+        let nr = NR.min(n - j);
+        pack_strip(w, k, n, j, nr, pack);
+        let mut i = 0;
+        while i + MR <= m {
+            micro_fwd::<MR>(a, k, i, pack, bias, j, nr, relu, n, out);
+            i += MR;
+        }
+        match m - i {
+            1 => micro_fwd::<1>(a, k, i, pack, bias, j, nr, relu, n, out),
+            2 => micro_fwd::<2>(a, k, i, pack, bias, j, nr, relu, n, out),
+            3 => micro_fwd::<3>(a, k, i, pack, bias, j, nr, relu, n, out),
+            _ => {}
+        }
+        j += NR;
+    }
+}
+
+/// Weight gradient: `out (k×n) = aᵀ (k×m) · d (m×n)` where `a` is stored
+/// (m×k) row-major. Overwrites `out`. `pack` needs [`pack_len`]`(m)`.
+pub fn gemm_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize,
+                 pack: &mut [f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    debug_assert!(pack.len() >= pack_len(m));
+    let mut j = 0;
+    while j < n {
+        let nr = NR.min(n - j);
+        pack_strip(d, m, n, j, nr, pack);
+        let mut l = 0;
+        while l + MR <= k {
+            micro_at_b::<MR>(a, m, k, l, pack, j, nr, n, out);
+            l += MR;
+        }
+        match k - l {
+            1 => micro_at_b::<1>(a, m, k, l, pack, j, nr, n, out),
+            2 => micro_at_b::<2>(a, m, k, l, pack, j, nr, n, out),
+            3 => micro_at_b::<3>(a, m, k, l, pack, j, nr, n, out),
+            _ => {}
+        }
+        j += NR;
+    }
+}
+
+/// Input gradient with fused ReLU mask:
+/// `out (m×kdim) = d (m×n) · wᵀ (n×kdim)` where `w` is stored (kdim×n)
+/// row-major, then `out[i][l] = 0` wherever `act[i][l] ≤ 0` (`act` is the
+/// post-ReLU activation that fed the layer). `pack` needs
+/// [`pack_len`]`(n)`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_a_bt_mask(d: &[f32], m: usize, n: usize, w: &[f32], kdim: usize,
+                      act: &[f32], pack: &mut [f32], out: &mut [f32]) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(w.len(), kdim * n);
+    debug_assert_eq!(act.len(), m * kdim);
+    debug_assert_eq!(out.len(), m * kdim);
+    debug_assert!(pack.len() >= pack_len(n));
+    let mut l = 0;
+    while l < kdim {
+        let nr = NR.min(kdim - l);
+        pack_strip_t(w, n, l, nr, pack);
+        let mut i = 0;
+        while i + MR <= m {
+            micro_a_bt::<MR>(d, n, i, pack, l, nr, kdim, act, out);
+            i += MR;
+        }
+        match m - i {
+            1 => micro_a_bt::<1>(d, n, i, pack, l, nr, kdim, act, out),
+            2 => micro_a_bt::<2>(d, n, i, pack, l, nr, kdim, act, out),
+            3 => micro_a_bt::<3>(d, n, i, pack, l, nr, kdim, act, out),
+            _ => {}
+        }
+        l += NR;
+    }
+}
+
+/// Bias gradient: `out (n) = column sums of d (m×n)`, rows ascending —
+/// the exact summation order of the old scalar loop.
+pub fn col_sums(d: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for row in d.chunks_exact(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+// ----------------------------------------------------- naive scalar kernels
+
+/// `out (m×n) += a (m×k) · w (k×n)`, row-major, cache-friendly i-k-j order.
+/// The pre-blocking scalar reference: kept as the parity baseline for the
+/// kernel test suite and the `exec_kernels` bench.
+pub fn matmul_acc(a: &[f32], m: usize, k: usize, w: &[f32], n: usize,
+                  out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // ReLU sparsity
+            }
+            let wrow = &w[l * n..(l + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv;
+            }
+        }
+    }
+}
+
+/// `out (k×n) += aᵀ (k×m) · d (m×n)` where `a` is stored (m×k) row-major.
+/// Naive scalar reference (see [`matmul_acc`]).
+pub fn matmul_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize,
+                   out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let drow = &d[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[l * n..(l + 1) * n];
+            for (o, &dv) in orow.iter_mut().zip(drow) {
+                *o += av * dv;
+            }
+        }
+    }
+}
+
+/// `out (m×k) = d (m×n) · wᵀ (n×k)` where `w` is stored (k×n) row-major.
+/// Naive scalar reference (see [`matmul_acc`]).
+pub fn matmul_a_bt(d: &[f32], m: usize, n: usize, w: &[f32], k: usize,
+                   out: &mut [f32]) {
+    debug_assert_eq!(d.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let drow = &d[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (l, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[l * n..(l + 1) * n];
+            let mut s = 0.0f32;
+            for (&dv, &wv) in drow.iter().zip(wrow) {
+                s += dv * wv;
+            }
+            *o = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Shapes that exercise every row/column remainder path of the tiling
+    /// (m mod MR ∈ {0,1,2,3}, n and k mod NR ∈ several classes).
+    const SHAPES: [(usize, usize, usize); 7] = [
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 16, 16),
+        (8, 33, 17),
+        (17, 64, 40),
+        (5, 100, 3),
+        (63, 96, 50),
+    ];
+
+    fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Like `fill` but with exact zeros sprinkled in, mimicking post-ReLU
+    /// activations (the naive kernels take a skip shortcut on those).
+    fn fill_sparse(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if rng.below(3) == 0 { 0.0 } else { rng.normal() as f32 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn forward_matches_naive_exactly() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &SHAPES {
+            for relu in [false, true] {
+                let a = fill(&mut rng, m * k);
+                let w = fill(&mut rng, k * n);
+                let bias = fill(&mut rng, n);
+                // naive: seed rows with bias, accumulate, then ReLU
+                let mut want = vec![0.0f32; m * n];
+                for row in want.chunks_mut(n) {
+                    row.copy_from_slice(&bias);
+                }
+                matmul_acc(&a, m, k, &w, n, &mut want);
+                if relu {
+                    for v in &mut want {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                let mut pack = vec![0.0f32; pack_len(k)];
+                let mut got = vec![f32::NAN; m * n];
+                gemm_bias_act(&a, m, k, &w, n, &bias, relu, &mut pack,
+                              &mut got);
+                assert_eq!(got, want, "fwd mismatch at ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_matches_naive_on_sparse_inputs() {
+        // Post-ReLU inputs contain exact zeros; the naive loop skips them,
+        // the blocked kernel adds +0.0 contributions. Values must still
+        // agree under f32 equality.
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &SHAPES {
+            let a = fill_sparse(&mut rng, m * k);
+            let w = fill(&mut rng, k * n);
+            let bias = fill(&mut rng, n);
+            let mut want = vec![0.0f32; m * n];
+            for row in want.chunks_mut(n) {
+                row.copy_from_slice(&bias);
+            }
+            matmul_acc(&a, m, k, &w, n, &mut want);
+            let mut pack = vec![0.0f32; pack_len(k)];
+            let mut got = vec![f32::NAN; m * n];
+            gemm_bias_act(&a, m, k, &w, n, &bias, false, &mut pack, &mut got);
+            assert_eq!(got, want, "sparse fwd mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn weight_grad_matches_naive_exactly() {
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &SHAPES {
+            let a = fill_sparse(&mut rng, m * k);
+            let d = fill(&mut rng, m * n);
+            let mut want = vec![0.0f32; k * n];
+            matmul_at_b(&a, m, k, &d, n, &mut want);
+            let mut pack = vec![0.0f32; pack_len(m)];
+            let mut got = vec![f32::NAN; k * n];
+            gemm_at_b(&a, m, k, &d, n, &mut pack, &mut got);
+            assert_eq!(got, want, "at_b mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn input_grad_matches_naive_exactly() {
+        let mut rng = Rng::new(14);
+        for &(m, n, kdim) in &SHAPES {
+            let d = fill(&mut rng, m * n);
+            let w = fill(&mut rng, kdim * n);
+            let act = fill_sparse(&mut rng, m * kdim);
+            let mut want = vec![0.0f32; m * kdim];
+            matmul_a_bt(&d, m, n, &w, kdim, &mut want);
+            for (v, &h) in want.iter_mut().zip(&act) {
+                if h <= 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let mut pack = vec![0.0f32; pack_len(n)];
+            let mut got = vec![f32::NAN; m * kdim];
+            gemm_a_bt_mask(&d, m, n, &w, kdim, &act, &mut pack, &mut got);
+            assert_eq!(got, want, "a_bt mismatch at ({m},{n},{kdim})");
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_tracks_f64_reference() {
+        // Order-independent correctness check: an f64 accumulator bounds
+        // the f32 rounding of any summation order.
+        let mut rng = Rng::new(15);
+        let (m, k, n) = (13, 77, 29);
+        let a = fill(&mut rng, m * k);
+        let w = fill(&mut rng, k * n);
+        let bias = vec![0.0f32; n];
+        let mut pack = vec![0.0f32; pack_len(k)];
+        let mut got = vec![0.0f32; m * n];
+        gemm_bias_act(&a, m, k, &w, n, &bias, false, &mut pack, &mut got);
+        for i in 0..m {
+            for j in 0..n {
+                let exact: f64 = (0..k)
+                    .map(|l| a[i * k + l] as f64 * w[l * n + j] as f64)
+                    .sum();
+                let diff = (got[i * n + j] as f64 - exact).abs();
+                assert!(diff <= 1e-4 * (1.0 + exact.abs()),
+                        "({i},{j}): {} vs {exact}", got[i * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_match_row_ascending_order() {
+        let mut rng = Rng::new(16);
+        let (m, n) = (9, 21);
+        let d = fill(&mut rng, m * n);
+        let mut want = vec![0.0f32; n];
+        for row in d.chunks(n) {
+            for (o, &v) in want.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        let mut got = vec![f32::NAN; n];
+        col_sums(&d, m, n, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn kernels_are_deterministic_across_calls() {
+        let mut rng = Rng::new(17);
+        let (m, k, n) = (10, 48, 24);
+        let a = fill(&mut rng, m * k);
+        let w = fill(&mut rng, k * n);
+        let bias = fill(&mut rng, n);
+        let mut pack = vec![0.0f32; pack_len(k)];
+        let mut first = vec![0.0f32; m * n];
+        gemm_bias_act(&a, m, k, &w, n, &bias, true, &mut pack, &mut first);
+        for _ in 0..3 {
+            // dirty workspace buffers must leave no trace
+            pack.fill(f32::NAN);
+            let mut again = vec![f32::NAN; m * n];
+            gemm_bias_act(&a, m, k, &w, n, &bias, true, &mut pack,
+                          &mut again);
+            assert!(first.iter().zip(&again)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "rerun must be bit-identical");
+        }
+    }
+}

@@ -2,13 +2,34 @@
 //! when present, synthesized from the built-in variant table otherwise) and
 //! the native executor that implements the reference model semantics —
 //! MLP forward/backward, fused softmax-xent, fused SGD-momentum — in plain
-//! Rust. All executor state is `Sync`, so the trainer's concurrent worker
-//! threads share one executor.
+//! Rust, split into three layers:
+//!
+//! - [`kernels`] — cache-blocked, register-tiled GEMMs (packed B-panels,
+//!   column-strip micro-kernels, fused bias+ReLU / ReLU-mask epilogues)
+//!   with a **fixed, deterministic summation order**: every output element
+//!   reduces in ascending index order, exactly like the naive scalar loops
+//!   the module also retains as the parity baseline.
+//! - [`workspace`] — [`StepWorkspace`], the per-worker step scratch:
+//!   flattened inputs sized for `b + max_r` rows, activation slabs, dz
+//!   ping-pong buffers, the packing panel, and gradient slabs that the
+//!   all-reduce reads directly. Steady-state `*_with` steps allocate
+//!   nothing (pinned by `rust/tests/zero_alloc.rs`).
+//! - [`executor`] — step orchestration: `train_step_with` /
+//!   `train_step_aug_with` / `eval_step_with` against a workspace, with
+//!   the workspace-less signatures kept as one-shot wrappers.
+//!
+//! All executor state is `Sync` (plain data + atomic counters), so the
+//! trainer's concurrent worker threads share one executor while each owns
+//! its private workspace. `python/compile/model.py` remains the semantic
+//! reference for everything the kernels compute.
 
 pub mod artifact;
 pub mod executor;
+pub mod kernels;
 pub mod literal;
+pub mod workspace;
 
 pub use artifact::{Manifest, VariantMeta};
-pub use executor::{ModelExecutor, StepOutput};
+pub use executor::{ModelExecutor, StepOutput, StepStats};
 pub use literal::{literal_to_vec, make_literal, Literal};
+pub use workspace::StepWorkspace;

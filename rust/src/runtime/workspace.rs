@@ -1,0 +1,89 @@
+//! Reusable per-worker scratch for the executor's step path.
+//!
+//! A [`StepWorkspace`] owns every buffer a train/eval step writes:
+//! flattened inputs (`xs`/`ys`, sized for `batch + max_r` rows),
+//! per-layer activation slabs, the ping-pong `dz` gradient buffers, the
+//! GEMM packing panel, and the gradient [`Literal`]s that
+//! [`crate::cluster::GradAccumulator::submit`] reads directly. All
+//! buffers are allocated once, at construction, at their maximum size —
+//! steady-state `train_step_with` / `train_step_aug_with` /
+//! `eval_step_with` iterations perform **zero heap allocations** (pinned
+//! by `rust/tests/zero_alloc.rs`).
+//!
+//! Ownership: one workspace per worker thread (the trainer builds one in
+//! each `worker_loop`), never shared — the executor itself stays `Sync`
+//! plain data. Reuse leaves no trace in the results: every kernel fully
+//! overwrites the slice it is handed, so a fixed seed at `workers = 1`
+//! remains bit-identical run-to-run.
+
+use super::literal::Literal;
+use crate::runtime::kernels;
+
+/// Preallocated step scratch; build via
+/// [`super::executor::ModelExecutor::make_workspace`].
+pub struct StepWorkspace {
+    /// Feature width the buffers were sized for.
+    pub(super) input_dim: usize,
+    /// Row capacity: `max(batch + max_r, eval_batch)`.
+    pub(super) max_rows: usize,
+    /// Per-layer output widths (hidden*, logits) — the geometry guard.
+    pub(super) widths: Vec<usize>,
+    /// Flattened input features, `max_rows * input_dim`.
+    pub(super) xs: Vec<f32>,
+    /// Labels, `max_rows`.
+    pub(super) ys: Vec<i32>,
+    /// Activation slabs: `acts[l]` holds `max_rows * widths[l]`; the last
+    /// one is the logits.
+    pub(super) acts: Vec<Vec<f32>>,
+    /// Ping-pong dz buffers, `max_rows * max(widths)` each: `dz_a` holds
+    /// the logit gradients after the loss, then the two alternate as the
+    /// backward pass walks down the layers.
+    pub(super) dz_a: Vec<f32>,
+    pub(super) dz_b: Vec<f32>,
+    /// GEMM packing panel, `max(input_dim, widths, max_rows) * NR`.
+    pub(super) pack: Vec<f32>,
+    /// Gradient slabs in manifest order (w0, b0, w1, b1, ...); the
+    /// backward pass overwrites them in place each step.
+    pub(super) grads: Vec<Literal>,
+}
+
+impl StepWorkspace {
+    /// Build a workspace for the given geometry. `param_shapes` is the
+    /// manifest-ordered parameter shape list (gradient slab shapes).
+    pub(super) fn with_geometry(input_dim: usize, max_rows: usize,
+                                widths: Vec<usize>,
+                                param_shapes: &[Vec<usize>])
+                                -> StepWorkspace {
+        let max_width = widths.iter().copied().max().unwrap_or(0);
+        let pack_dim = input_dim.max(max_width).max(max_rows);
+        StepWorkspace {
+            input_dim,
+            max_rows,
+            xs: vec![0.0; max_rows * input_dim],
+            ys: vec![0; max_rows],
+            acts: widths.iter().map(|&w| vec![0.0; max_rows * w]).collect(),
+            dz_a: vec![0.0; max_rows * max_width],
+            dz_b: vec![0.0; max_rows * max_width],
+            pack: vec![0.0; kernels::pack_len(pack_dim)],
+            grads: param_shapes.iter().map(|s| Literal::zeros(s)).collect(),
+            widths,
+        }
+    }
+
+    /// Row capacity of the input/activation slabs.
+    pub fn max_rows(&self) -> usize {
+        self.max_rows
+    }
+
+    /// The gradients of the most recent `train_step_*_with` call, in
+    /// manifest order — hand this straight to
+    /// [`crate::cluster::GradAccumulator::submit`].
+    pub fn grads(&self) -> &[Literal] {
+        &self.grads
+    }
+
+    /// Move the gradient slabs out (one-shot wrapper paths).
+    pub fn into_grads(self) -> Vec<Literal> {
+        self.grads
+    }
+}

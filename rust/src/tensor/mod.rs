@@ -145,20 +145,43 @@ impl Batch {
     }
 
     /// (features row-major [n, d], labels [n]) — the executor input layout.
+    /// Allocates; the hot step path writes into preallocated workspace
+    /// slabs via [`flatten_into`](Batch::flatten_into) instead.
     pub fn flatten(&self) -> (Vec<f32>, Vec<i32>) {
         let d = self.samples.first().map_or(0, |s| s.features.len());
-        let mut xs = Vec::with_capacity(self.samples.len() * d);
-        let mut ys = Vec::with_capacity(self.samples.len());
-        for s in &self.samples {
-            debug_assert_eq!(s.features.len(), d, "ragged batch");
-            xs.extend_from_slice(&s.features);
-            ys.push(s.label as i32);
-        }
+        let mut xs = vec![0.0f32; self.samples.len() * d];
+        let mut ys = vec![0i32; self.samples.len()];
+        self.flatten_into(&mut xs, &mut ys);
         (xs, ys)
+    }
+
+    /// Flatten into caller-owned slices (the workspace path: zero
+    /// allocations). `xs` must hold exactly `len() * d` elements and `ys`
+    /// exactly `len()`; panics on mismatch or a ragged batch — callers
+    /// validate geometry first.
+    pub fn flatten_into(&self, xs: &mut [f32], ys: &mut [i32]) {
+        flatten_samples_into(&self.samples, xs, ys);
     }
 
     pub fn wire_bytes(&self) -> usize {
         self.samples.iter().map(Sample::wire_bytes).sum()
+    }
+}
+
+/// Flatten a borrowed sample slice into caller-owned buffers — shared by
+/// [`Batch::flatten_into`] and the executor's workspace/eval paths, which
+/// evaluate straight from `&[Sample]` chunks without building a `Batch`.
+pub fn flatten_samples_into(samples: &[Sample], xs: &mut [f32],
+                            ys: &mut [i32]) {
+    let n = samples.len();
+    assert_eq!(ys.len(), n, "flatten_into: {} label slots for {n} rows",
+               ys.len());
+    let d = if n == 0 { 0 } else { xs.len() / n };
+    assert_eq!(xs.len(), n * d, "flatten_into: xs not row-aligned");
+    for (i, s) in samples.iter().enumerate() {
+        assert_eq!(s.features.len(), d, "ragged batch");
+        xs[i * d..(i + 1) * d].copy_from_slice(&s.features);
+        ys[i] = s.label as i32;
     }
 }
 
@@ -220,5 +243,21 @@ mod tests {
         assert_eq!(xs, vec![1., 2., 3., 4.]);
         assert_eq!(ys, vec![3, 5]);
         assert_eq!(b.wire_bytes(), 2 * (8 + 8));
+    }
+
+    #[test]
+    fn flatten_into_reuses_caller_slices() {
+        let b = Batch::new(vec![
+            Sample::new(3, vec![1., 2.]),
+            Sample::new(5, vec![3., 4.]),
+        ]);
+        // dirty, larger backing buffers: only the prefix is written
+        let mut xs = [9.0f32; 6];
+        let mut ys = [7i32; 3];
+        b.flatten_into(&mut xs[..4], &mut ys[..2]);
+        assert_eq!(&xs[..4], &[1., 2., 3., 4.]);
+        assert_eq!(&ys[..2], &[3, 5]);
+        assert_eq!(xs[4], 9.0, "beyond the batch stays untouched");
+        assert_eq!(ys[2], 7);
     }
 }

@@ -20,8 +20,10 @@
 //! and its [`WorkerBreakdown`]. The per-iteration protocol is
 //! barrier-synchronised synchronous data parallelism:
 //!
-//! 1. every worker runs load → `engine.update()` → `train_step`
-//!    concurrently, then submits its gradients to its own shard of the
+//! 1. every worker runs load → `engine.update()` → `train_step_with`
+//!    (against its private, reused `StepWorkspace` — the steady-state
+//!    step path allocates nothing) concurrently, then submits the
+//!    workspace-resident gradients to its own shard of the
 //!    [`GradAccumulator`];
 //! 2. all workers rendezvous at a [`Barrier`]; the barrier's leader folds
 //!    the shards **in worker order** (arrival-order independent, so a
@@ -469,6 +471,9 @@ fn worker_loop(w: usize,
                mut engine: Option<RehearsalEngine>,
                cmd_rx: Receiver<WorkerCmd>,
                res_tx: Sender<(usize, TrainMetrics)>) {
+    // One step workspace per worker thread, reused for every iteration of
+    // every epoch: the steady-state train path allocates nothing.
+    let mut ws = shared.exec.make_workspace();
     while let Ok(cmd) = cmd_rx.recv() {
         let (batches, loader_seed, lr) = match cmd {
             WorkerCmd::Stop => break,
@@ -483,7 +488,8 @@ fn worker_loop(w: usize,
         for _ in 0..iterations {
             if !shared.poisoned.load(Ordering::SeqCst) {
                 poison_on_failure(shared, "worker", || worker_iteration(
-                    w, shared, &mut loader, engine.as_mut(), &mut metrics));
+                    w, shared, &mut loader, engine.as_mut(), &mut ws,
+                    &mut metrics));
             }
             // Rendezvous: all gradients submitted (or the run poisoned).
             let leader = shared.barrier.wait().is_leader();
@@ -508,11 +514,12 @@ fn worker_loop(w: usize,
 }
 
 /// One worker's foreground half of an iteration: load, Listing-1 update,
-/// train step, gradient submit.
+/// train step (against this worker's reusable workspace), gradient submit.
 fn worker_iteration(w: usize,
                     shared: &Shared<'_>,
                     loader: &mut Loader,
                     engine: Option<&mut RehearsalEngine>,
+                    ws: &mut crate::runtime::StepWorkspace,
                     metrics: &mut TrainMetrics) -> Result<()> {
     // Load (prefetched; wait only).
     let t0 = Instant::now();
@@ -538,9 +545,10 @@ fn worker_iteration(w: usize,
         let st = shared.state.read().unwrap();
         if reps_len > 0 {
             let reps_batch = Batch::new(reps);
-            shared.exec.train_step_aug(&st.params, &batch, &reps_batch)?
+            shared.exec.train_step_aug_with(&st.params, &batch, &reps_batch,
+                                            ws)?
         } else {
-            shared.exec.train_step(&st.params, &batch)?
+            shared.exec.train_step_with(&st.params, &batch, ws)?
         }
     };
     shared.breakdown[w].add_train(t1.elapsed());
@@ -548,23 +556,24 @@ fn worker_iteration(w: usize,
 
     // loss is a per-row mean, top5 a correct-count: TrainMetrics weights
     // them consistently (see metrics::breakdown) by the rows actually
-    // trained on, not the configured b + r.
+    // trained on, not the configured b + r. The gradients stay in the
+    // workspace slabs; the accumulator reads them in place.
     let rows = batch.len() + reps_len;
     metrics.add_step(out.loss as f64, out.top5 as f64, rows as f64);
-    shared.acc.submit(w, &out.grads)?;
+    shared.acc.submit(w, ws.grads())?;
     Ok(())
 }
 
 /// Barrier leader's half: exact mean over the worker shards (worker order,
-/// deterministic) + fused SGD update of the single parameter copy.
+/// deterministic) + fused SGD update of the single parameter copy, applied
+/// straight from the accumulator's reduce scratch — no per-iteration
+/// literal copies anywhere on this path.
 fn leader_update(shared: &Shared<'_>, lr: f64) -> Result<()> {
-    let (mean_grads, _wire) = shared.acc.reduce(&shared.cost)?;
-    let mut st = shared.state.write().unwrap();
-    let params = std::mem::take(&mut st.params);
-    let moms = std::mem::take(&mut st.moms);
-    let (p2, m2) = shared.exec.apply_update(params, moms, &mean_grads, lr)?;
-    st.params = p2;
-    st.moms = m2;
+    shared.acc.reduce_with(&shared.cost, |mean_grads, _wire| {
+        let mut st = shared.state.write().unwrap();
+        let ParamState { params, moms } = &mut *st;
+        shared.exec.apply_update_in(params, moms, mean_grads, lr)
+    })?;
     shared.iterations_done.fetch_add(1, Ordering::Relaxed);
     Ok(())
 }

@@ -1,0 +1,107 @@
+//! Pins the PR-4 tentpole invariant: a steady-state training iteration —
+//! flatten → blocked fwd/bwd (`train_step_with` / `train_step_aug_with`)
+//! → `submit` → `reduce_with` → `apply_update_in` — performs **zero heap
+//! allocations** once the per-worker [`StepWorkspace`] and the
+//! accumulator's reduce scratch are warm.
+//!
+//! Mechanism: a counting `#[global_allocator]` wrapping `System`. This
+//! file deliberately holds a single `#[test]` so no sibling test thread
+//! can allocate inside the measurement window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dcl::cluster::GradAccumulator;
+use dcl::net::CostModel;
+use dcl::runtime::{Manifest, ModelExecutor};
+use dcl::tensor::{Batch, Sample};
+use dcl::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                      new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn batch(dim: usize, classes: usize, rows: usize, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    Batch::new((0..rows).map(|_| {
+        Sample::new(rng.below(classes) as u32,
+                    (0..dim).map(|_| rng.normal() as f32 * 0.5).collect())
+    }).collect())
+}
+
+#[test]
+fn steady_state_train_iteration_allocates_nothing() {
+    // Small input dim keeps the test fast; the layer stack (512, 256)
+    // still exercises every kernel path, including edge tiles.
+    let (dim, classes, b, r) = (64usize, 8usize, 8usize, 2usize);
+    let m = Manifest::synthetic(dim, classes, b, vec![r], 10);
+    let exec = ModelExecutor::new(&m, "resnet18_sim", &[r]).unwrap();
+    let (mut params, mut moms) = exec.init_state().unwrap();
+    let shapes: Vec<Vec<usize>> =
+        exec.meta.params.iter().map(|p| p.shape.clone()).collect();
+    let acc = GradAccumulator::with_workers(shapes, 1);
+    let cost = CostModel::default();
+    let mut ws = exec.make_workspace();
+    let plain = batch(dim, classes, b, 1);
+    let aug_b = batch(dim, classes, b, 2);
+    let reps = batch(dim, classes, r, 3);
+
+    let one_iteration = |params: &mut Vec<_>, moms: &mut Vec<_>,
+                         ws: &mut dcl::runtime::StepWorkspace,
+                         augmented: bool| {
+        let stats = if augmented {
+            exec.train_step_aug_with(params, &aug_b, &reps, ws).unwrap()
+        } else {
+            exec.train_step_with(params, &plain, ws).unwrap()
+        };
+        assert!(stats.loss.is_finite());
+        acc.submit(0, ws.grads()).unwrap();
+        acc.reduce_with(&cost, |mean, _wire| {
+            exec.apply_update_in(params, moms, mean, 0.05)
+        }).unwrap();
+    };
+
+    // Warm-up: first touches may fault in lazily-initialised runtime
+    // state (timer calibration, lock shadows) besides filling the
+    // workspace slabs.
+    for i in 0..3 {
+        one_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
+    }
+
+    let slab0 = ws.grads()[0].data().as_ptr() as usize;
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..10 {
+        one_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0,
+               "steady-state train iterations must not allocate \
+                ({} allocator calls in 10 iterations)", after - before);
+    assert_eq!(ws.grads()[0].data().as_ptr() as usize, slab0,
+               "gradient slab moved despite zero allocations");
+}
