@@ -1,13 +1,28 @@
 //! Gradient all-reduce benchmarks: exact-mean accumulation over replica
 //! gradients (the data-parallel sync on the training critical path), the
-//! sharded submit path the threaded worker runtime uses, and the ring cost
-//! model across scales.
+//! sharded submit path the threaded worker runtime uses, the PR-5
+//! chunk-parallel reduce-scatter + update against the old leader fold,
+//! and the ring cost model across scales.
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::cluster::{ring_allreduce_cost, GradAccumulator};
 use dcl::net::CostModel;
 use dcl::runtime::{make_literal, Literal};
 use dcl::util::rng::Rng;
+
+/// The trainer's fused SGD math over one span (weight decay applied
+/// uniformly — both protocols below do identical arithmetic, which is
+/// what the comparison prices).
+fn sgd_span(w: &mut [f32], m: &mut [f32], g: &[f32]) {
+    const MU: f32 = 0.9;
+    const WD: f32 = 1e-4;
+    const LR: f32 = 0.05;
+    for ((wx, mx), &gx) in w.iter_mut().zip(m.iter_mut()).zip(g) {
+        let m2 = MU * *mx + gx + WD * *wx;
+        *mx = m2;
+        *wx -= LR * m2;
+    }
+}
 
 fn main() {
     let mut r = Runner::from_args();
@@ -59,6 +74,78 @@ fn main() {
         }
         black_box(acc3.reduce(&CostModel::default()).unwrap());
     });
+
+    // Chunk-parallel reduce-scatter + update vs the old leader fold
+    // (PR 5): both submit N replicas, fold them to the mean and apply the
+    // fused SGD update over the full parameter space. The leader variant
+    // does all O(N·P) fold + P update work on one thread while the others
+    // would idle at the barrier; the chunk variant spreads it over N
+    // threads folding C = 4·N owned chunks each. Identical arithmetic —
+    // only the partitioning (and thread spawn overhead, charged to the
+    // chunk side) differs.
+    let cost = CostModel::default();
+    for n in [2usize, 4, 8] {
+        let acc = GradAccumulator::with_workers(shapes.clone(), n);
+        let mut params: Vec<Literal> =
+            shapes.iter().map(|s| Literal::zeros(s)).collect();
+        let mut moms: Vec<Literal> =
+            shapes.iter().map(|s| Literal::zeros(s)).collect();
+        r.bench_items(&format!("leader_fold_update_n{n}"), bytes * n, || {
+            for w in 0..n {
+                acc.submit(w, &grads[w % grads.len()]).unwrap();
+            }
+            acc.reduce_with(&cost, |means, _wire| {
+                for ((p, m), g) in
+                    params.iter_mut().zip(moms.iter_mut()).zip(means)
+                {
+                    sgd_span(p.data_mut(), m.data_mut(), g.data());
+                }
+                Ok(())
+            }).unwrap();
+        });
+
+        let acc = GradAccumulator::with_chunks(shapes.clone(), n, n * 4);
+        // One (params, moms) copy per worker: each thread updates only
+        // its owned chunks' spans of its copy — the same arithmetic and
+        // memory traffic as the trainer's disjoint shared-slab writes,
+        // without reaching for the trainer's raw-pointer plumbing.
+        let mut states: Vec<(Vec<Literal>, Vec<Literal>)> = (0..n)
+            .map(|_| (shapes.iter().map(|s| Literal::zeros(s)).collect(),
+                      shapes.iter().map(|s| Literal::zeros(s)).collect()))
+            .collect();
+        r.bench_items(&format!("chunk_reduce_update_n{n}"), bytes * n, || {
+            for w in 0..n {
+                acc.submit(w, &grads[w % grads.len()]).unwrap();
+            }
+            let replicas = acc.replicas();
+            let acc_ref = &acc;
+            std::thread::scope(|s| {
+                for (w, (p, m)) in states.iter_mut().enumerate() {
+                    s.spawn(move || {
+                        let plan = acc_ref.plan();
+                        for chunk in plan.owned_by(w) {
+                            acc_ref.reduce_chunk_with(chunk, replicas, |mean| {
+                                for seg in plan.segments(chunk) {
+                                    let g = &mean[seg.chunk_off
+                                        ..seg.chunk_off + seg.len()];
+                                    sgd_span(
+                                        &mut p[seg.tensor].data_mut()
+                                            [seg.start..seg.end],
+                                        &mut m[seg.tensor].data_mut()
+                                            [seg.start..seg.end],
+                                        g);
+                                }
+                                Ok(())
+                            }).unwrap();
+                        }
+                    });
+                }
+            });
+            for w in 0..n {
+                acc.end_round(w).unwrap();
+            }
+        });
+    }
 
     // Ring cost model across scales (pure arithmetic).
     let cm = CostModel::default();

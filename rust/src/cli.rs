@@ -4,6 +4,7 @@
 //! dcl train    [--preset P] [--config FILE] [--strategy S] [--variant V]
 //!              [--workers N] [--buffer-pct X] [--epochs-per-task E]
 //!              [--transport inproc|tcp] [--meta-refresh K]
+//!              [--reduce-chunks C]
 //! dcl fig5a    [--epochs-per-task E] [--workers N]
 //! dcl fig5b    [--epochs-per-task E] [--workers N]
 //! dcl fig6     [--epochs-per-task E]
@@ -79,6 +80,9 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.cluster.workers = args.usize_or("workers", cfg.cluster.workers)?;
     cfg.cluster.meta_refresh_rounds =
         args.usize_or("meta-refresh", cfg.cluster.meta_refresh_rounds)?;
+    // Chunk-parallel reduce width C (0 = auto: 4 chunks per worker).
+    cfg.cluster.reduce_chunks =
+        args.usize_or("reduce-chunks", cfg.cluster.reduce_chunks)?;
     cfg.buffer.percent_of_dataset =
         args.f64_or("buffer-pct", cfg.buffer.percent_of_dataset)?;
     cfg.training.epochs_per_task =

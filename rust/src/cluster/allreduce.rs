@@ -1,5 +1,20 @@
-//! Exact gradient averaging + ring-all-reduce cost model.
+//! Exact gradient averaging — sequential and chunk-parallel — plus the
+//! ring-all-reduce cost model.
+//!
+//! [`GradAccumulator`] is **sharded** (one mutex-guarded slot per worker)
+//! and **chunked** (PR 5): a [`ChunkPlan`] pre-partitions the flattened
+//! parameter space into `C ≥ N` contiguous chunks with a static owner map
+//! (chunk `j` → worker `j mod N`), so the fold + mean can run
+//! chunk-parallel on every worker thread
+//! ([`GradAccumulator::reduce_chunk_with`]) instead of serially on the
+//! barrier leader ([`GradAccumulator::reduce_with`], retained for
+//! sequential callers, tests and benches). Both paths fold every element
+//! in ascending slot order in f64 and round to f32 once, so chunking is
+//! **bitwise invisible**: any worker count, chunk count and arrival order
+//! reduces to the exact bits of the sequential fold (pinned by the tests
+//! below; allocation-freedom pinned by `rust/tests/zero_alloc.rs`).
 
+use std::ops::Range;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -22,6 +37,143 @@ pub fn ring_allreduce_cost(cost: &CostModel, n: usize, bytes: usize) -> Duration
     Duration::from_secs_f64(secs)
 }
 
+/// Static partition of the flattened parameter space (all tensors
+/// concatenated in manifest order) into contiguous, near-equal chunks with
+/// a fixed owner map: chunk `j` belongs to worker `j mod workers`.
+///
+/// Chunk boundaries ignore tensor boundaries — a chunk crossing tensors is
+/// walked as a sequence of [`Segment`]s. Balanced bounds `⌊j·P/C⌋` keep
+/// chunk sizes within one element of each other; when `C > P` the surplus
+/// chunks are empty (legal: they fold nothing).
+#[derive(Clone, Debug)]
+pub struct ChunkPlan {
+    /// `chunks + 1` flat offsets; chunk `j` covers `bounds[j]..bounds[j+1]`.
+    bounds: Vec<usize>,
+    /// Flat start offset of each tensor, plus the total `P` at the end.
+    tensor_starts: Vec<usize>,
+    workers: usize,
+}
+
+/// One chunk's intersection with one tensor: `start..end` elements of
+/// tensor `tensor`, living at `chunk_off` within the chunk's scratch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Tensor index (manifest order).
+    pub tensor: usize,
+    /// First element of the span within the tensor.
+    pub start: usize,
+    /// One past the last element of the span within the tensor.
+    pub end: usize,
+    /// Offset of the span inside the chunk (indexes the chunk mean).
+    pub chunk_off: usize,
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+impl ChunkPlan {
+    /// Partition the flat space of `shapes` into `chunks` ranges owned by
+    /// `workers` workers. `chunks` is clamped up to `max(workers, 1)` so
+    /// every worker owns at least one chunk (the `C ≥ N` invariant).
+    pub fn new(shapes: &[Vec<usize>], workers: usize, chunks: usize) -> ChunkPlan {
+        assert!(workers > 0, "chunk plan needs at least one worker");
+        let chunks = chunks.max(workers);
+        let mut tensor_starts = Vec::with_capacity(shapes.len() + 1);
+        let mut total = 0usize;
+        for s in shapes {
+            tensor_starts.push(total);
+            total += s.iter().product::<usize>();
+        }
+        tensor_starts.push(total);
+        let bounds = (0..=chunks).map(|j| j * total / chunks).collect();
+        ChunkPlan { bounds, tensor_starts, workers }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Total flattened element count P.
+    pub fn total_len(&self) -> usize {
+        *self.tensor_starts.last().expect("plan has a total")
+    }
+
+    /// Static owner of `chunk`.
+    pub fn owner(&self, chunk: usize) -> usize {
+        chunk % self.workers
+    }
+
+    /// The chunks `worker` owns, ascending. Allocation-free. A worker
+    /// index outside the plan would silently enumerate another worker's
+    /// chunks, so it is rejected loudly instead.
+    pub fn owned_by(&self, worker: usize) -> impl Iterator<Item = usize> {
+        assert!(worker < self.workers,
+                "worker {worker} outside plan of {} workers", self.workers);
+        (worker..self.num_chunks()).step_by(self.workers)
+    }
+
+    /// Flat element range of `chunk`.
+    pub fn range(&self, chunk: usize) -> Range<usize> {
+        self.bounds[chunk]..self.bounds[chunk + 1]
+    }
+
+    /// Walk `chunk` as per-tensor [`Segment`]s. Allocation-free.
+    pub fn segments(&self, chunk: usize) -> SegmentIter<'_> {
+        let r = self.range(chunk);
+        // Last tensor whose start is at or before the chunk start.
+        let tensor = self
+            .tensor_starts
+            .partition_point(|&s| s <= r.start)
+            .saturating_sub(1);
+        SegmentIter { plan: self, tensor, flat: r.start, chunk: r }
+    }
+}
+
+/// Iterator over one chunk's [`Segment`]s (see [`ChunkPlan::segments`]).
+pub struct SegmentIter<'a> {
+    plan: &'a ChunkPlan,
+    tensor: usize,
+    flat: usize,
+    chunk: Range<usize>,
+}
+
+impl Iterator for SegmentIter<'_> {
+    type Item = Segment;
+
+    fn next(&mut self) -> Option<Segment> {
+        while self.flat < self.chunk.end {
+            let t_start = self.plan.tensor_starts[self.tensor];
+            let t_end = self.plan.tensor_starts[self.tensor + 1];
+            if t_end <= self.flat {
+                // zero-size tensor, or this tensor's span is exhausted
+                self.tensor += 1;
+                continue;
+            }
+            let lo = self.flat;
+            let hi = self.chunk.end.min(t_end);
+            self.flat = hi;
+            return Some(Segment {
+                tensor: self.tensor,
+                start: lo - t_start,
+                end: hi - t_start,
+                chunk_off: lo - self.chunk.start,
+            });
+        }
+        None
+    }
+}
+
 /// One worker's private partial sums (f64 to avoid order-dependent f32
 /// drift) plus how many replicas it accumulated.
 struct Slot {
@@ -41,28 +193,60 @@ impl Slot {
 /// Persistent reduce scratch: the f64 fold buffers and the mean literals
 /// that successive [`GradAccumulator::reduce_with`] calls overwrite in
 /// place — the reduce path performs no heap allocation in steady state
-/// (no more `make_literal` round-trip copies per iteration).
+/// (no more `make_literal` round-trip copies per iteration). Built lazily
+/// on the first `reduce_with`: the trainer only ever takes the chunked
+/// path, so eager construction would pin a dead whole-P copy
+/// (~12 bytes/param) per production accumulator.
 struct ReduceScratch {
     totals: Vec<Vec<f64>>,
     means: Vec<Literal>,
 }
 
+/// One chunk's persistent fold scratch: the f64 totals and the f32 mean
+/// that successive [`GradAccumulator::reduce_chunk_with`] calls overwrite
+/// in place, sized to the chunk at construction (the chunked path is the
+/// trainer's hot path — its scratch is eager so the steady state never
+/// allocates, first iteration included).
+struct ChunkScratch {
+    totals: Vec<f64>,
+    means: Vec<f32>,
+    /// Set by this round's fold, cleared by the owner's
+    /// [`GradAccumulator::end_round`]: a second fold of the same chunk in
+    /// one round would read the already-zeroed slot sums and hand the
+    /// caller a silently wrong all-zero mean — this turns that misuse
+    /// into an error instead.
+    folded: bool,
+}
+
 /// Accumulates per-replica gradients and produces their exact mean.
 ///
 /// The accumulator is **sharded**: each concurrent worker submits into its
-/// own mutex-guarded slot (`submit(worker, ..)`), and [`reduce_with`] folds
-/// the slots together *in slot order*. That makes the reduction result
-/// independent of worker arrival order — bit-identical across runs for a
-/// fixed seed — while workers on different threads never contend on one
-/// central lock during the hot add. `add()` is the single-slot convenience
-/// used by sequential callers and keeps the pre-threading call shape.
+/// own mutex-guarded slot (`submit(worker, ..)`). Two reduce paths fold
+/// the slots together, both *in slot order* (arrival-order independent,
+/// bit-identical across runs for a fixed seed):
+///
+/// - [`reduce_with`] — the whole space on the calling thread (sequential
+///   callers, tests, benches, the leader-fold baseline);
+/// - [`reduce_chunk_with`] — one [`ChunkPlan`] chunk at a time, so N
+///   worker threads fold C ≥ N chunks concurrently and the serial O(N·P)
+///   leader section becomes ~O(P·(1 + 1/N)) per worker (the trainer's
+///   chunk-parallel reduce-scatter; the parameter update happens in the
+///   same pass, and the trainer's second barrier is the all-gather).
+///
+/// `add()` is the single-slot convenience used by sequential callers and
+/// keeps the pre-threading call shape.
 ///
 /// [`reduce_with`]: GradAccumulator::reduce_with
+/// [`reduce_chunk_with`]: GradAccumulator::reduce_chunk_with
 pub struct GradAccumulator {
     shapes: Vec<Vec<usize>>,
     slots: Vec<Mutex<Slot>>,
     bytes: usize,
-    scratch: Mutex<ReduceScratch>,
+    /// Lazily built on first `reduce_with` (None until a sequential
+    /// caller shows up — the trainer never does).
+    scratch: Mutex<Option<ReduceScratch>>,
+    plan: ChunkPlan,
+    chunk_scratch: Vec<Mutex<ChunkScratch>>,
 }
 
 impl GradAccumulator {
@@ -71,18 +255,41 @@ impl GradAccumulator {
         GradAccumulator::with_workers(shapes, 1)
     }
 
-    /// One slot per concurrent worker.
+    /// One slot per concurrent worker; one chunk per worker (C = N).
     pub fn with_workers(shapes: Vec<Vec<usize>>, workers: usize) -> GradAccumulator {
+        let chunks = workers;
+        GradAccumulator::with_chunks(shapes, workers, chunks)
+    }
+
+    /// One slot per worker and a `chunks`-way [`ChunkPlan`] (clamped to
+    /// C ≥ N). More chunks than workers interleave the per-slot lock
+    /// acquisitions of concurrent chunk folds (smaller pipeline bubbles
+    /// when all workers walk the slots in the same ascending order) at no
+    /// cost to the result — chunking is bitwise invisible.
+    pub fn with_chunks(shapes: Vec<Vec<usize>>, workers: usize,
+                       chunks: usize) -> GradAccumulator {
         assert!(workers > 0, "accumulator needs at least one slot");
+        let plan = ChunkPlan::new(&shapes, workers, chunks);
         let slots = (0..workers).map(|_| Mutex::new(Slot::new(&shapes))).collect();
         let bytes = shapes.iter().map(|s| s.iter().product::<usize>() * 4).sum();
-        let scratch = Mutex::new(ReduceScratch {
-            totals: shapes.iter()
-                .map(|s| vec![0.0f64; s.iter().product()])
-                .collect(),
-            means: shapes.iter().map(|s| Literal::zeros(s)).collect(),
-        });
-        GradAccumulator { shapes, slots, bytes, scratch }
+        let chunk_scratch = (0..plan.num_chunks())
+            .map(|c| {
+                let len = plan.range(c).len();
+                Mutex::new(ChunkScratch {
+                    totals: vec![0.0f64; len],
+                    means: vec![0.0f32; len],
+                    folded: false,
+                })
+            })
+            .collect();
+        GradAccumulator {
+            shapes,
+            slots,
+            bytes,
+            scratch: Mutex::new(None),
+            plan,
+            chunk_scratch,
+        }
     }
 
     /// Payload bytes one replica contributes (the all-reduce message size).
@@ -94,7 +301,15 @@ impl GradAccumulator {
         self.slots.len()
     }
 
+    /// The static chunk partition + owner map this accumulator folds by.
+    pub fn plan(&self) -> &ChunkPlan {
+        &self.plan
+    }
+
     /// Replicas accumulated since the last reduce, across all slots.
+    /// In the chunk-parallel protocol this is read between the barriers
+    /// (submitters quiesced, counts stable), so every worker prices the
+    /// same mean denominator.
     pub fn replicas(&self) -> usize {
         self.slots.iter().map(|s| s.lock().unwrap().count).sum()
     }
@@ -130,8 +345,7 @@ impl GradAccumulator {
     /// Fold all slots into the persistent scratch, hand the mean gradients
     /// to `f`, and reset for the next iteration — without allocating.
     /// `f` receives the means (manifest order, borrowed from the scratch)
-    /// plus the modeled ring-all-reduce wire time; the trainer's barrier
-    /// leader applies the fused SGD update directly from the borrow.
+    /// plus the modeled ring-all-reduce wire time.
     ///
     /// Slots are locked, folded and reset **in index order**, so the
     /// result does not depend on which worker finished first. The fold is
@@ -140,7 +354,15 @@ impl GradAccumulator {
     pub fn reduce_with<T>(&self, cost: &CostModel,
                           f: impl FnOnce(&[Literal], Duration) -> Result<T>)
                           -> Result<T> {
-        let mut scratch = self.scratch.lock().unwrap();
+        let mut guard = self.scratch.lock().unwrap();
+        // First sequential reduce builds the scratch; every later call
+        // reuses it (the steady state stays allocation-free).
+        let scratch = guard.get_or_insert_with(|| ReduceScratch {
+            totals: self.shapes.iter()
+                .map(|s| vec![0.0f64; s.iter().product()])
+                .collect(),
+            means: self.shapes.iter().map(|s| Literal::zeros(s)).collect(),
+        });
         let mut replicas = 0usize;
         {
             let ReduceScratch { totals, .. } = &mut *scratch;
@@ -175,8 +397,84 @@ impl GradAccumulator {
                 }
             }
         }
-        let wire = ring_allreduce_cost(cost, replicas, self.bytes);
+        // Ring size = the configured participant (worker) count: a slot
+        // can carry several replicas (gradient accumulation) and a
+        // straggler round can carry fewer, but neither changes how many
+        // ring peers the payload crosses — pricing with `replicas` here
+        // overstated Fig. 7 wire time for multi-replica rounds.
+        let wire = ring_allreduce_cost(cost, self.slots.len(), self.bytes);
         f(&scratch.means, wire)
+    }
+
+    /// Fold **one chunk** of the flattened gradient space across all
+    /// slots — in ascending slot order, the exact per-element arithmetic
+    /// of [`reduce_with`](Self::reduce_with) — divide by `replicas`, and
+    /// hand the chunk mean to `f` (chunk-local; index it with
+    /// [`Segment::chunk_off`]). Allocation-free: the per-chunk scratch is
+    /// built at construction.
+    ///
+    /// Chunk-parallel protocol (the trainer's): once all submitters have
+    /// quiesced (first barrier), every worker calls this for each chunk it
+    /// owns ([`ChunkPlan::owned_by`]) with the same `replicas` (read via
+    /// [`replicas`](Self::replicas) — counts are stable between the
+    /// barriers). The fold zeroes the slot ranges it consumes, so the
+    /// round leaves the sums clean; each worker then retires its own
+    /// slot's count with [`end_round`](Self::end_round) after the
+    /// all-gather barrier. Distinct chunks may fold concurrently; folding
+    /// the same chunk twice in one round is rejected (its slot ranges are
+    /// already consumed — a second fold would silently emit a zero mean).
+    pub fn reduce_chunk_with<T>(&self, chunk: usize, replicas: usize,
+                                f: impl FnOnce(&[f32]) -> Result<T>)
+                                -> Result<T> {
+        if chunk >= self.plan.num_chunks() {
+            bail!("reduce of chunk {chunk}, plan has {}", self.plan.num_chunks());
+        }
+        if replicas == 0 {
+            bail!("chunk reduce with no replicas accumulated");
+        }
+        let mut scratch = self.chunk_scratch[chunk].lock().unwrap();
+        if scratch.folded {
+            bail!("chunk {chunk} already folded this round (its slot ranges \
+                   are consumed — call end_round before the next fold)");
+        }
+        scratch.folded = true;
+        let ChunkScratch { totals, means, .. } = &mut *scratch;
+        totals.iter_mut().for_each(|x| *x = 0.0);
+        for slot in &self.slots {
+            let mut g = slot.lock().unwrap();
+            if g.count == 0 {
+                continue;
+            }
+            for seg in self.plan.segments(chunk) {
+                let sums = &mut g.sums[seg.tensor][seg.start..seg.end];
+                let acc = &mut totals[seg.chunk_off..seg.chunk_off + seg.len()];
+                for (a, s) in acc.iter_mut().zip(sums.iter_mut()) {
+                    *a += *s;
+                    *s = 0.0; // leave the slot clean for the next round
+                }
+            }
+        }
+        let inv = 1.0 / replicas as f64;
+        for (m, &t) in means.iter_mut().zip(totals.iter()) {
+            *m = (t * inv) as f32;
+        }
+        f(means)
+    }
+
+    /// Close a chunk-parallel round for `worker`: reset its slot's replica
+    /// count (the chunk folds already zeroed its sums) and re-arm the
+    /// fold-once guard of the chunks `worker` owns. Call once per worker
+    /// after the all-gather barrier — i.e. once every chunk has been
+    /// folded — and before that worker's next `submit`.
+    pub fn end_round(&self, worker: usize) -> Result<()> {
+        if worker >= self.slots.len() {
+            bail!("end_round on slot {worker} of {}", self.slots.len());
+        }
+        self.slots[worker].lock().unwrap().count = 0;
+        for chunk in self.plan.owned_by(worker) {
+            self.chunk_scratch[chunk].lock().unwrap().folded = false;
+        }
+        Ok(())
     }
 
     /// Emit the mean gradients and reset for the next iteration — the
@@ -191,6 +489,7 @@ impl GradAccumulator {
 mod tests {
     use super::*;
     use crate::runtime::{literal_to_vec, make_literal};
+    use crate::util::rng::Rng;
 
     #[test]
     fn ring_cost_zero_for_single_worker() {
@@ -232,12 +531,40 @@ mod tests {
         let (mean, wire) = acc.reduce(&CostModel::default()).unwrap();
         assert_eq!(literal_to_vec(&mean[0]).unwrap(), vec![2., 2., 2., 2.]);
         assert_eq!(literal_to_vec(&mean[1]).unwrap(), vec![0.5, 0.5, 2.]);
-        assert!(wire > Duration::ZERO);
+        // wire is priced by the PARTICIPANT count (one slot here), not by
+        // how many replicas the slot accumulated: one ring peer is free.
+        assert_eq!(wire, Duration::ZERO);
         // accumulator reset
         assert_eq!(acc.replicas(), 0);
         acc.add(&g1).unwrap();
         let (mean, _) = acc.reduce(&CostModel::default()).unwrap();
         assert_eq!(literal_to_vec(&mean[0]).unwrap(), vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn wire_priced_by_worker_count_not_replicas() {
+        // Two participants, two replicas each (gradient accumulation):
+        // the ring spans n = 2 peers regardless of the 4 replicas.
+        let shapes = vec![vec![8]];
+        let cost = CostModel::new(2.0, 12.0);
+        let acc = GradAccumulator::with_workers(shapes.clone(), 2);
+        let g = vec![make_literal(&[1.0; 8], &[8]).unwrap()];
+        for w in 0..2 {
+            acc.submit(w, &g).unwrap();
+            acc.submit(w, &g).unwrap();
+        }
+        assert_eq!(acc.replicas(), 4);
+        let (_, wire) = acc.reduce(&cost).unwrap();
+        assert_eq!(wire, ring_allreduce_cost(&cost, 2, acc.payload_bytes()));
+        assert_ne!(wire, ring_allreduce_cost(&cost, 4, acc.payload_bytes()));
+        // A straggler round (3 of 4 slots submitted) still prices the
+        // configured ring: the quiet peer participates in the transport.
+        let acc = GradAccumulator::with_workers(shapes, 4);
+        for w in 0..3 {
+            acc.submit(w, &g).unwrap();
+        }
+        let (_, wire) = acc.reduce(&cost).unwrap();
+        assert_eq!(wire, ring_allreduce_cost(&cost, 4, acc.payload_bytes()));
     }
 
     #[test]
@@ -297,7 +624,7 @@ mod tests {
         acc.reduce_with(&CostModel::default(), |means, wire| {
             assert_eq!(means[0].data(), &[1., 2., 3., 4.]);
             assert_eq!(means[1].data(), &[0., 0., 3.]);
-            assert!(wire == Duration::ZERO, "single replica rings for free");
+            assert!(wire == Duration::ZERO, "single participant rings for free");
             ptr0 = means[0].data().as_ptr();
             Ok(())
         }).unwrap();
@@ -326,5 +653,190 @@ mod tests {
         assert!(acc.add(&wrong).is_err());
         assert!(acc.reduce(&CostModel::default()).is_err());
         assert!(acc.submit(5, &wrong).is_err());
+    }
+
+    // ---------------------------------------------- chunk plan + fold
+
+    /// Shapes with P = 26 elements across three tensors — awkward on
+    /// purpose (chunk bounds land inside and between tensors).
+    fn odd_shapes() -> Vec<Vec<usize>> {
+        vec![vec![3, 5], vec![7], vec![2, 2]]
+    }
+
+    #[test]
+    fn chunk_plan_partitions_the_flat_space() {
+        let shapes = odd_shapes();
+        for (workers, chunks) in [(1, 1), (3, 3), (3, 7), (2, 5), (3, 26),
+                                  (3, 31), (4, 2)] {
+            let plan = ChunkPlan::new(&shapes, workers, chunks);
+            assert_eq!(plan.total_len(), 26);
+            assert!(plan.num_chunks() >= workers, "C >= N clamp");
+            // bounds cover 0..P contiguously and monotonically
+            let mut flat = 0usize;
+            let mut owned = vec![0usize; workers];
+            for c in 0..plan.num_chunks() {
+                let r = plan.range(c);
+                assert_eq!(r.start, flat);
+                flat = r.end;
+                assert_eq!(plan.owner(c), c % workers);
+                owned[plan.owner(c)] += 1;
+                // segments reconstruct exactly the chunk's range
+                let mut seen = 0usize;
+                for seg in plan.segments(c) {
+                    assert!(!seg.is_empty());
+                    assert_eq!(seg.chunk_off, seen);
+                    seen += seg.len();
+                }
+                assert_eq!(seen, r.len(), "chunk {c} segment coverage");
+            }
+            assert_eq!(flat, 26);
+            // owner map partitions the chunks; owned_by agrees
+            assert!(owned.iter().all(|&n| n > 0), "every worker owns a chunk");
+            for w in 0..workers {
+                let mine: Vec<usize> = plan.owned_by(w).collect();
+                assert_eq!(mine.len(), owned[w]);
+                assert!(mine.iter().all(|&c| plan.owner(c) == w));
+            }
+        }
+        // C > P: surplus chunks are empty but the space is still covered
+        let plan = ChunkPlan::new(&shapes, 3, 31);
+        let empties = (0..plan.num_chunks())
+            .filter(|&c| plan.range(c).is_empty())
+            .count();
+        assert!(empties > 0, "31 chunks over 26 elements must leave empties");
+        for c in 0..plan.num_chunks() {
+            if plan.range(c).is_empty() {
+                assert_eq!(plan.segments(c).count(), 0);
+            }
+        }
+    }
+
+    /// Flatten manifest-ordered literals for whole-space comparison.
+    fn flat(lits: &[Literal]) -> Vec<f32> {
+        lits.iter().flat_map(|l| l.data().iter().copied()).collect()
+    }
+
+    #[test]
+    fn chunked_reduce_is_bit_identical_to_sequential() {
+        // Scrambled slot arrival x every chunk count geometry (C = 1 clamps
+        // to N; C not dividing P; C > P) must reduce to the exact bits of
+        // the sequential fold: same per-element slot order, same f64
+        // arithmetic, one f32 rounding.
+        let shapes = odd_shapes();
+        let workers = 3;
+        let mut rng = Rng::new(42);
+        let mk = |rng: &mut Rng| -> Vec<Literal> {
+            shapes.iter().map(|s| {
+                let n: usize = s.iter().product();
+                let v: Vec<f32> =
+                    (0..n).map(|_| rng.normal() as f32 * 0.37 + 0.001).collect();
+                make_literal(&v, s).unwrap()
+            }).collect()
+        };
+        let g0 = mk(&mut rng);
+        let g1 = mk(&mut rng);
+        let g2 = mk(&mut rng);
+
+        // ground truth: sequential sharded reduce (slot 1 left empty —
+        // the count == 0 skip must match on both paths)
+        let seq = GradAccumulator::with_workers(shapes.clone(), workers);
+        seq.submit(2, &g2).unwrap();
+        seq.submit(0, &g0).unwrap();
+        seq.submit(0, &g1).unwrap();
+        let (want, _) = seq.reduce(&CostModel::default()).unwrap();
+        let want = flat(&want);
+
+        for chunks in [1usize, 2, 3, 4, 5, 7, 13, 26, 31, 64] {
+            let acc = GradAccumulator::with_chunks(shapes.clone(), workers, chunks);
+            // same replicas, different arrival order again
+            acc.submit(0, &g0).unwrap();
+            acc.submit(2, &g2).unwrap();
+            acc.submit(0, &g1).unwrap();
+            let replicas = acc.replicas();
+            assert_eq!(replicas, 3);
+            let plan = acc.plan();
+            let mut got = vec![0.0f32; plan.total_len()];
+            // fold the chunks in scrambled order: ownership is static, so
+            // chunk order cannot matter either
+            let mut order: Vec<usize> = (0..plan.num_chunks()).collect();
+            order.reverse();
+            order.rotate_left(chunks % plan.num_chunks().max(1));
+            for &c in &order {
+                let r = plan.range(c);
+                acc.reduce_chunk_with(c, replicas, |mean| {
+                    assert_eq!(mean.len(), r.len());
+                    got[r.clone()].copy_from_slice(mean);
+                    Ok(())
+                }).unwrap();
+            }
+            for w in 0..workers {
+                acc.end_round(w).unwrap();
+            }
+            assert_eq!(got, want, "C = {chunks} diverged from sequential");
+            assert_eq!(acc.replicas(), 0, "round must leave the slots clean");
+        }
+    }
+
+    #[test]
+    fn chunked_rounds_reset_and_reuse_scratch() {
+        let shapes = odd_shapes();
+        let acc = GradAccumulator::with_chunks(shapes.clone(), 2, 5);
+        let g = |seed: u64| -> Vec<Literal> {
+            let mut rng = Rng::new(seed);
+            shapes.iter().map(|s| {
+                let n: usize = s.iter().product();
+                let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                make_literal(&v, s).unwrap()
+            }).collect()
+        };
+        let run_round = |a: &GradAccumulator| -> (Vec<f32>, usize) {
+            a.submit(0, &g(7)).unwrap();
+            a.submit(1, &g(8)).unwrap();
+            let plan = a.plan();
+            let mut out = vec![0.0f32; plan.total_len()];
+            let mut ptr = 0usize;
+            for c in 0..plan.num_chunks() {
+                let r = plan.range(c);
+                a.reduce_chunk_with(c, a.replicas(), |mean| {
+                    out[r.clone()].copy_from_slice(mean);
+                    if c == 0 {
+                        ptr = mean.as_ptr() as usize;
+                    }
+                    Ok(())
+                }).unwrap();
+            }
+            for w in 0..2 {
+                a.end_round(w).unwrap();
+            }
+            (out, ptr)
+        };
+        let (r1, p1) = run_round(&acc);
+        let (r2, p2) = run_round(&acc);
+        assert_eq!(r1, r2, "a clean round must reproduce itself");
+        assert_eq!(p1, p2, "chunk scratch must be reused, not reallocated");
+        // misuse is rejected without poisoning the accumulator
+        assert!(acc.reduce_chunk_with(99, 1, |_| Ok(())).is_err());
+        assert!(acc.reduce_chunk_with(0, 0, |_| Ok(())).is_err());
+        assert!(acc.end_round(9).is_err());
+        // double-folding one chunk inside a round is an error (the first
+        // fold consumed the slot ranges; a silent second fold would hand
+        // back an all-zero mean), and end_round re-arms the guard
+        acc.submit(0, &g(9)).unwrap();
+        acc.reduce_chunk_with(0, 1, |_| Ok(())).unwrap();
+        assert!(acc.reduce_chunk_with(0, 1, |_| Ok(())).is_err(),
+                "second fold of chunk 0 must be rejected");
+        for c in 1..acc.plan().num_chunks() {
+            acc.reduce_chunk_with(c, 1, |_| Ok(())).unwrap();
+        }
+        for w in 0..2 {
+            acc.end_round(w).unwrap();
+        }
+        acc.submit(1, &g(10)).unwrap();
+        for c in 0..acc.plan().num_chunks() {
+            acc.reduce_chunk_with(c, 1, |_| Ok(())).unwrap();
+        }
+        for w in 0..2 {
+            acc.end_round(w).unwrap();
+        }
     }
 }

@@ -1,14 +1,22 @@
 //! Data-parallel cluster semantics: gradient all-reduce (paper §II).
 //!
-//! Replicas execute in-process (sequentially on this testbed), so the
-//! all-reduce produces the *exact* average — bitwise data-parallel
-//! semantics — while the ring-all-reduce wire cost is charged by the same
-//! alpha-beta model the fabric uses (bandwidth-optimal ring:
-//! `2·(N−1)/N · bytes / bw + 2·(N−1) · α`). Because replicas stay in exact
-//! sync after every all-reduce, a single parameter copy is maintained
-//! (documented optimisation, DESIGN.md §5); per-replica gradients are still
-//! computed from each worker's own shard.
+//! Replicas execute in-process, so the all-reduce produces the *exact*
+//! average — bitwise data-parallel semantics — while the ring-all-reduce
+//! wire cost is charged by the same alpha-beta model the fabric uses
+//! (bandwidth-optimal ring: `2·(N−1)/N · bytes / bw + 2·(N−1) · α`,
+//! priced over the configured participant count). Because replicas stay in
+//! exact sync after every all-reduce, a single parameter copy is
+//! maintained (documented optimisation, DESIGN.md §5); per-replica
+//! gradients are still computed from each worker's own shard.
+//!
+//! The reduction itself is **chunk-parallel** (PR 5): a [`ChunkPlan`]
+//! statically partitions the flattened parameter space into `C ≥ N`
+//! contiguous chunks (owner map `chunk → chunk mod N`), and every worker
+//! folds + applies its owned chunks between the trainer's two barriers —
+//! the software analogue of reduce-scatter + all-gather, dividing the old
+//! serial leader fold by N without changing a single output bit (the fold
+//! keeps ascending slot order per element).
 
 pub mod allreduce;
 
-pub use allreduce::{ring_allreduce_cost, GradAccumulator};
+pub use allreduce::{ring_allreduce_cost, ChunkPlan, GradAccumulator, Segment};

@@ -245,6 +245,14 @@ pub struct ClusterConfig {
     /// amortize the O(N²) per-step metadata traffic to `≤ (N−1)/k` RPCs
     /// per worker-iteration at the cost of bounded plan staleness.
     pub meta_refresh_rounds: usize,
+    /// Chunk count `C` of the chunk-parallel reduce-scatter: the flattened
+    /// parameter space is statically partitioned into `C ≥ workers`
+    /// contiguous chunks and every worker folds + updates its owned chunks
+    /// between the iteration barriers. `0` — the default — picks the auto
+    /// policy (4 chunks per worker). Chunking is **bitwise invisible**
+    /// (the fold keeps ascending slot order per element), so this is
+    /// purely a throughput knob.
+    pub reduce_chunks: usize,
 }
 
 impl Default for ClusterConfig {
@@ -256,6 +264,7 @@ impl Default for ClusterConfig {
             emulate_delays: false,
             transport: TransportKind::Inproc,
             meta_refresh_rounds: 1,
+            reduce_chunks: 0,
         }
     }
 }
@@ -325,6 +334,14 @@ impl ExperimentConfig {
         }
         if self.cluster.meta_refresh_rounds == 0 {
             bail!("meta_refresh_rounds must be >= 1 (1 = refresh every round)");
+        }
+        if self.cluster.reduce_chunks != 0
+            && self.cluster.reduce_chunks < self.cluster.workers
+        {
+            bail!("reduce_chunks ({}) must be 0 (auto) or >= workers ({}): \
+                   every worker owns at least one chunk of the parallel \
+                   reduce",
+                  self.cluster.reduce_chunks, self.cluster.workers);
         }
         if t.strategy == Strategy::Rehearsal
             && self.per_worker_capacity() < d.num_classes
@@ -411,6 +428,8 @@ impl ExperimentConfig {
         }
         c.meta_refresh_rounds = doc.get_or("cluster", "meta_refresh_rounds",
                                            c.meta_refresh_rounds, usz)?;
+        c.reduce_chunks = doc.get_or("cluster", "reduce_chunks",
+                                     c.reduce_chunks, usz)?;
 
         if let Some(v) = doc.tables.get("paths").and_then(|t| t.get("artifacts_dir")) {
             cfg.artifacts_dir = PathBuf::from(v.as_str()?);
@@ -465,6 +484,13 @@ mod tests {
         assert_eq!(cfg.cluster.meta_refresh_rounds, 1, "default cadence");
         cfg.cluster.meta_refresh_rounds = 0;
         assert!(cfg.validate().is_err());
+
+        let mut cfg = preset("default").unwrap();
+        assert_eq!(cfg.cluster.reduce_chunks, 0, "default is auto");
+        cfg.cluster.reduce_chunks = cfg.cluster.workers - 1; // C < N
+        assert!(cfg.validate().is_err());
+        cfg.cluster.reduce_chunks = cfg.cluster.workers; // C = N is legal
+        cfg.validate().unwrap();
     }
 
     #[test]
@@ -481,6 +507,7 @@ mod tests {
             workers = 2
             transport = "tcp"
             meta_refresh_rounds = 4
+            reduce_chunks = 8
             [buffer]
             policy = "fifo"
             scope = "local"
@@ -494,6 +521,7 @@ mod tests {
         assert_eq!(cfg.cluster.workers, 2);
         assert_eq!(cfg.cluster.transport, TransportKind::Tcp);
         assert_eq!(cfg.cluster.meta_refresh_rounds, 4);
+        assert_eq!(cfg.cluster.reduce_chunks, 8);
         assert_eq!(cfg.buffer.policy, EvictionPolicy::Fifo);
         assert_eq!(cfg.buffer.scope, SamplingScope::LocalOnly);
     }

@@ -65,6 +65,12 @@ pub struct PerfConstants {
     pub sample_bytes: usize,
     /// Fraction of the all-reduce hidden behind the backward pass.
     pub allreduce_overlap: f64,
+    /// Host-side gradient fold + fused SGD update throughput per worker,
+    /// in 1e9 elements/second (f64 slot adds plus the f32 update over
+    /// cache-streamed spans; AVX2-class core). Prices the chunk-parallel
+    /// reduce compute, which scales as `P·(1 + 1/N)` per worker instead
+    /// of the old `P·(N + 1)` serial leader fold.
+    pub reduce_gelems: f64,
 }
 
 impl Default for PerfConstants {
@@ -75,6 +81,7 @@ impl Default for PerfConstants {
             op_overhead_us: 0.5,
             sample_bytes: 64 * 1024,
             allreduce_overlap: 0.5,
+            reduce_gelems: 4.0,
         }
     }
 }

@@ -9,7 +9,10 @@
 //!   variants stand in for (published numbers: ResNet-50 ≈ 750 img/s,
 //!   ResNet-18 ≈ 2200 img/s, GhostNet-50 ≈ 1500 img/s), plus the ring
 //!   all-reduce of fp32 gradients over the ConnectX-6 fabric, with 50 %
-//!   bucket overlap against the backward pass (Horovod default behaviour).
+//!   bucket overlap against the backward pass (Horovod default
+//!   behaviour), plus the chunk-parallel reduce compute — the gradient
+//!   fold + fused update is spread across all N workers (PR 5), so its
+//!   term is `P·(1 + 1/N)` elements per worker, not `P·(N + 1)` on one.
 //! - **Load**: DALI-style prefetched pipeline, amortised per-image cost.
 //! - **Populate / Augment** (background): candidate memcpys, metadata
 //!   gather, consolidated bulk fetches priced by the same [`CostModel`]

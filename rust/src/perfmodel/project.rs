@@ -16,6 +16,11 @@ pub struct IterationProjection {
     /// Exposed (non-overlapped) all-reduce time, included in `train_ms`
     /// (the paper's Train bar includes Horovod's reduction stalls).
     pub allreduce_exposed_ms: f64,
+    /// Chunk-parallel gradient fold + fused SGD update compute, included
+    /// in `train_ms`: spread over all N workers it scales as
+    /// `P·(1 + 1/N)` per worker (the pre-PR-5 serial leader fold was
+    /// `P·(N + 1)` on one thread).
+    pub reduce_ms: f64,
     pub populate_ms: f64,
     pub augment_ms: f64,
     /// Foreground critical path (what the training loop experiences).
@@ -77,13 +82,21 @@ impl PerfModel {
         let k = &self.consts;
         let rows = b + r;
 
-        // Foreground: prefetched load + compute + exposed all-reduce.
+        // Foreground: prefetched load + compute + exposed all-reduce +
+        // the chunk-parallel reduce compute. The serial O(N·P) leader
+        // fold of the pre-PR-5 protocol is now spread across all N
+        // workers: each folds the N slot partials of its P/N-element
+        // share (P element-adds) and applies the fused update there
+        // (P/N more), so the per-worker term is P·(1 + 1/N).
         let load_ms = b as f64 * k.load_us_per_image / 1e3;
         let compute_ms = rows as f64 / model.a100_img_per_sec() * 1e3;
         let ar = ring_allreduce_cost(&self.cost, n, model.grad_bytes());
         let allreduce_exposed_ms =
             ar.as_secs_f64() * 1e3 * (1.0 - k.allreduce_overlap);
-        let train_ms = compute_ms + allreduce_exposed_ms;
+        let p_elems = (model.grad_bytes() / 4) as f64;
+        let reduce_ms =
+            p_elems * (1.0 + 1.0 / n as f64) / (k.reduce_gelems * 1e9) * 1e3;
+        let train_ms = compute_ms + allreduce_exposed_ms + reduce_ms;
         let foreground_ms = load_ms + train_ms;
 
         // Background populate: c candidate copies into B_n.
@@ -133,6 +146,7 @@ impl PerfModel {
             load_ms,
             train_ms,
             allreduce_exposed_ms,
+            reduce_ms,
             populate_ms,
             augment_ms,
             foreground_ms,
@@ -273,6 +287,28 @@ mod tests {
             reh.total.as_secs_f64() - inc.total.as_secs_f64()
         };
         assert!(gap(128) <= gap(8) + 1e-9);
+    }
+
+    #[test]
+    fn reduce_term_parallelizes_with_workers() {
+        // The chunk-parallel reduce compute is divided across workers:
+        // P·(1 + 1/N) per worker, strictly shrinking with N toward the
+        // P/rate asymptote, and it rides the Train bar.
+        let pm = model();
+        let k = PerfConstants::default();
+        let p_elems = (ModelClass::ResNet50.grad_bytes() / 4) as f64;
+        let want = |n: f64| p_elems * (1.0 + 1.0 / n)
+            / (k.reduce_gelems * 1e9) * 1e3;
+        let i2 = pm.iteration(ModelClass::ResNet50, 2, 56, 7, 14);
+        let i64 = pm.iteration(ModelClass::ResNet50, 64, 56, 7, 14);
+        assert!(i64.reduce_ms < i2.reduce_ms);
+        assert!((i2.reduce_ms - want(2.0)).abs() < 1e-9, "{}", i2.reduce_ms);
+        assert!((i64.reduce_ms - want(64.0)).abs() < 1e-9);
+        // included in the Train bar, alongside the exposed all-reduce
+        let compute = (56.0 + 7.0) / ModelClass::ResNet50.a100_img_per_sec()
+            * 1e3;
+        let sum = compute + i2.allreduce_exposed_ms + i2.reduce_ms;
+        assert!((i2.train_ms - sum).abs() < 1e-9);
     }
 
     #[test]

@@ -89,7 +89,10 @@ impl ExecStats {
         }
     }
 
-    /// Mean optimizer-step time in milliseconds.
+    /// Mean optimizer-step time in milliseconds. Under the chunk-parallel
+    /// trainer every worker adds its fold+update span time to `update_ns`
+    /// while `update_steps` counts one per global step, so this reads as
+    /// the *total update CPU per step* (≈ wall time × N workers).
     pub fn update_step_ms(&self) -> f64 {
         let n = self.update_steps.load(Ordering::Relaxed);
         if n == 0 {
@@ -438,10 +441,35 @@ impl ModelExecutor {
 
     // ------------------------------------------------------ fused update
 
-    /// Fused SGD update, in place: `m' = mu·m + g + wd·w ; w' = w − lr·m'`
-    /// (biases skip weight decay). Allocation-free — the barrier leader
-    /// calls this with the mean gradients still in the accumulator's
-    /// scratch.
+    /// Fused SGD-momentum update over one contiguous span of a single
+    /// parameter tensor: `m' = mu·m + g + wd·w ; w' = w − lr·m'`, with
+    /// weight decay applied iff `decay` (weight tensors; biases pass
+    /// false). This is the range-limited primitive the chunk-parallel
+    /// trainer calls per [`crate::cluster::Segment`] with the chunk's
+    /// mean-gradient slice; [`apply_update_in`](Self::apply_update_in) is
+    /// the whole-tensor wrapper. Allocation-free and stat-free (callers
+    /// aggregate timing; the trainer's barrier leader counts the step).
+    pub fn apply_update_span(&self, w: &mut [f32], m: &mut [f32], g: &[f32],
+                             decay: bool, lr: f64) {
+        debug_assert!(w.len() == g.len() && m.len() == g.len(),
+                      "update span lengths diverge: w={} m={} g={}",
+                      w.len(), m.len(), g.len());
+        let mu = self.meta.momentum as f32;
+        let wd = if decay { self.meta.weight_decay as f32 } else { 0.0 };
+        let lr = lr as f32;
+        for ((wx, mx), &gx) in w.iter_mut().zip(m.iter_mut()).zip(g) {
+            let m2 = mu * *mx + gx + wd * *wx;
+            *mx = m2;
+            *wx -= lr * m2;
+        }
+    }
+
+    /// Fused SGD update, in place, over every tensor (biases skip weight
+    /// decay). Allocation-free — sequential callers invoke this with the
+    /// mean gradients still in the accumulator's reduce scratch; the
+    /// chunk-parallel trainer uses
+    /// [`apply_update_span`](Self::apply_update_span) per owned segment
+    /// instead.
     pub fn apply_update_in(&self, params: &mut [Literal],
                            moms: &mut [Literal], grads: &[Literal],
                            lr: f64) -> Result<()> {
@@ -451,20 +479,14 @@ impl ModelExecutor {
                   grads.len(), params.len(), moms.len());
         }
         let t0 = Instant::now();
-        let mu = self.meta.momentum as f32;
-        let lr = lr as f32;
         for ((w, m), g) in params.iter_mut().zip(moms.iter_mut()).zip(grads) {
             if w.numel() != g.numel() || m.numel() != g.numel() {
                 bail!("update tensor size mismatch: w={} m={} g={}",
                       w.numel(), m.numel(), g.numel());
             }
-            let wd = if w.shape().len() > 1 { self.meta.weight_decay as f32 } else { 0.0 };
-            let (wv, mv) = (w.data_mut(), m.data_mut());
-            for ((wx, mx), &gx) in wv.iter_mut().zip(mv.iter_mut()).zip(g.data()) {
-                let m2 = mu * *mx + gx + wd * *wx;
-                *mx = m2;
-                *wx -= lr * m2;
-            }
+            let decay = w.shape().len() > 1;
+            self.apply_update_span(w.data_mut(), m.data_mut(), g.data(),
+                                   decay, lr);
         }
         self.stats.update_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.update_steps.fetch_add(1, Ordering::Relaxed);
@@ -627,6 +649,39 @@ mod tests {
             let expect_p = p0[i] - lr * expect_m;
             assert!((m1[i] - expect_m).abs() < 1e-5, "mom[{i}]");
             assert!((p1[i] - expect_p).abs() < 1e-5, "param[{i}]");
+        }
+    }
+
+    #[test]
+    fn span_update_matches_whole_tensor_update_bitwise() {
+        // The chunk-parallel trainer applies the fused update through
+        // apply_update_span over arbitrary sub-ranges; splitting a tensor
+        // into spans must reproduce apply_update_in bit-for-bit.
+        let exec = tiny_exec();
+        let (params, moms) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 11);
+        let out = exec.train_step(&params, &b).unwrap();
+        let lr = 0.05f64;
+        let (want_p, want_m) =
+            exec.apply_update(params.clone(), moms.clone(), &out.grads, lr)
+                .unwrap();
+        let mut got_p = params;
+        let mut got_m = moms;
+        for t in 0..got_p.len() {
+            let decay = got_p[t].shape().len() > 1;
+            let n = got_p[t].numel();
+            // uneven three-way split (single-element head, lopsided rest)
+            let cuts = [0usize, 1.min(n), n / 3, n];
+            for win in cuts.windows(2) {
+                let (a, z) = (win[0].min(win[1]), win[1]);
+                exec.apply_update_span(&mut got_p[t].data_mut()[a..z],
+                                       &mut got_m[t].data_mut()[a..z],
+                                       &out.grads[t].data()[a..z], decay, lr);
+            }
+        }
+        for t in 0..got_p.len() {
+            assert_eq!(got_p[t].data(), want_p[t].data(), "params[{t}]");
+            assert_eq!(got_m[t].data(), want_m[t].data(), "moms[{t}]");
         }
     }
 

@@ -77,7 +77,9 @@ impl StepWorkspace {
 
     /// The gradients of the most recent `train_step_*_with` call, in
     /// manifest order — hand this straight to
-    /// [`crate::cluster::GradAccumulator::submit`].
+    /// [`crate::cluster::GradAccumulator::submit`], where the worker's
+    /// slot accumulates them for the chunk-parallel reduce
+    /// ([`crate::cluster::GradAccumulator::reduce_chunk_with`]).
     pub fn grads(&self) -> &[Literal] {
         &self.grads
     }

@@ -18,28 +18,42 @@
 //! N background engine threads genuinely contend with N foreground train
 //! loops — the paper's overlap claim is exercised under real concurrency),
 //! and its [`WorkerBreakdown`]. The per-iteration protocol is
-//! barrier-synchronised synchronous data parallelism:
+//! barrier-synchronised synchronous data parallelism with a
+//! **chunk-parallel reduce-scatter + update** (PR 5):
 //!
 //! 1. every worker runs load → `engine.update()` → `train_step_with`
 //!    (against its private, reused `StepWorkspace` — the steady-state
 //!    step path allocates nothing) concurrently, then submits the
 //!    workspace-resident gradients to its own shard of the
 //!    [`GradAccumulator`];
-//! 2. all workers rendezvous at a [`Barrier`]; the barrier's leader folds
-//!    the shards **in worker order** (arrival-order independent, so a
-//!    fixed seed at `workers = 1` reproduces the sequential
-//!    implementation's report exactly), applies the fused SGD update to
-//!    the single shared parameter copy behind an `RwLock`, and charges the
-//!    ring-all-reduce wire time to the virtual clock;
-//! 3. a second barrier releases everyone into the next iteration with the
-//!    new parameters.
+//! 2. all workers rendezvous at a [`Barrier`]; between the barriers the
+//!    flattened parameter space — pre-partitioned by a
+//!    [`ChunkPlan`](crate::cluster::ChunkPlan) into `C ≥ N` contiguous
+//!    chunks with a static owner map (chunk `j` → worker `j mod N`) —
+//!    is reduced by **every** worker, not a lone leader: each folds its
+//!    owned chunks across all gradient slots **in slot order** (the fold
+//!    is arrival-order independent and bit-identical to the sequential
+//!    reduce for any chunk count, so a fixed seed at `workers = 1`
+//!    reproduces the sequential implementation's report exactly),
+//!    computes the chunk mean, and applies the fused SGD update in place
+//!    to its owned parameter/momentum ranges through pre-captured
+//!    disjoint slab views. The old serial O(N·P) leader fold is now
+//!    ~O(P·(1 + 1/N)) work per worker;
+//! 3. the second barrier is the **all-gather**: it publishes every
+//!    chunk's update to the next iteration's readers, after which each
+//!    worker retires its own gradient slot for the next round.
 //!
-//! Concurrency invariants: parameters are only written between the two
-//! barriers (no reader can hold the lock there); gradient shards are
-//! per-worker (no contention on the hot add); worker errors poison the run
-//! instead of abandoning the barrier, so the remaining workers drain the
-//! epoch and the error is reported at the epoch boundary; every worker,
-//! loader and engine thread is joined before `drive()` returns.
+//! Concurrency invariants: parameters are written ONLY between the two
+//! barriers, where each worker holds **exclusive ownership of its owned
+//! chunks' ranges** (disjoint by the static owner map) and no thread
+//! holds the parameter `RwLock` — the lock still guards the
+//! epoch-boundary accesses (coordinator eval reads, from-scratch resets,
+//! which overwrite in place so the captured slab views stay valid) and
+//! the workers' in-iteration reads. Gradient shards are per-worker (no
+//! contention on the hot add); worker errors poison the run instead of
+//! abandoning the barrier, so the remaining workers drain the epoch and
+//! the error is reported at the epoch boundary; every worker, loader and
+//! engine thread is joined before `drive()` returns.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -78,6 +92,83 @@ struct ParamState {
     moms: Vec<Literal>,
 }
 
+/// Chunks per worker when `[cluster] reduce_chunks = 0` (auto). More
+/// chunks than workers stagger the concurrent folds' per-slot lock
+/// acquisitions (all workers walk the slots in the same ascending order,
+/// so C = N would pipeline them lockstep); 4× keeps the bubble small
+/// without shrinking chunks below cache-line-friendly spans. Chunking is
+/// bitwise invisible, so the value is purely a throughput knob.
+const AUTO_CHUNKS_PER_WORKER: usize = 4;
+
+/// Raw, `Send + Sync` views of the parameter/momentum slabs, captured once
+/// per run under a write lock, for the between-barrier chunk updates.
+///
+/// # Safety contract
+///
+/// Writes through these pointers are race-free and unaliased because of
+/// the barrier protocol:
+///
+/// - they happen ONLY between the two iteration barriers, where no thread
+///   holds the parameter `RwLock` (workers drop their read guards before
+///   submitting; the coordinator touches the lock only while the workers
+///   are parked between epochs);
+/// - each worker writes only its owned chunks' ranges, and chunk
+///   ownership is a static partition
+///   ([`ChunkPlan::owner`](crate::cluster::ChunkPlan::owner)) — ranges
+///   are disjoint across workers;
+/// - the barriers provide the happens-before edges between these writes
+///   and the next iteration's (or, via the epoch channels, the
+///   coordinator's) reads.
+///
+/// The pointers stay valid for the whole run because the slabs are never
+/// reallocated: `apply_update_span` writes in place, and the from-scratch
+/// task reset copies fresh values INTO the existing literals (see
+/// `coordinate`) instead of swapping the vectors.
+struct ParamSlabs {
+    params: Vec<(*mut f32, usize)>,
+    moms: Vec<(*mut f32, usize)>,
+    /// Per-tensor weight-decay flag (rank > 1), manifest order.
+    decay: Vec<bool>,
+}
+
+unsafe impl Send for ParamSlabs {}
+unsafe impl Sync for ParamSlabs {}
+
+impl ParamSlabs {
+    fn capture(st: &mut ParamState) -> ParamSlabs {
+        fn view(v: &mut [Literal]) -> Vec<(*mut f32, usize)> {
+            v.iter_mut()
+                .map(|l| (l.data_mut().as_mut_ptr(), l.numel()))
+                .collect()
+        }
+        let decay = st.params.iter().map(|p| p.shape().len() > 1).collect();
+        ParamSlabs {
+            params: view(&mut st.params),
+            moms: view(&mut st.moms),
+            decay,
+        }
+    }
+
+    /// Mutable parameter/momentum views of `tensor`'s `[start, start+len)`
+    /// element span.
+    ///
+    /// # Safety
+    ///
+    /// The caller must hold exclusive ownership of this span under the
+    /// chunk protocol (between the barriers, own chunks only) — see the
+    /// type-level contract.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn span(&self, tensor: usize, start: usize, len: usize)
+                   -> (&mut [f32], &mut [f32]) {
+        let (wp, wn) = self.params[tensor];
+        let (mp, mn) = self.moms[tensor];
+        assert!(start + len <= wn && start + len <= mn,
+                "span {start}+{len} exceeds tensor {tensor} ({wn}/{mn})");
+        (std::slice::from_raw_parts_mut(wp.add(start), len),
+         std::slice::from_raw_parts_mut(mp.add(start), len))
+    }
+}
+
 /// One epoch of work for one worker.
 enum WorkerCmd {
     Epoch {
@@ -93,13 +184,13 @@ enum WorkerCmd {
 struct Shared<'a> {
     exec: &'a ModelExecutor,
     state: &'a RwLock<ParamState>,
+    slabs: &'a ParamSlabs,
     acc: &'a GradAccumulator,
     barrier: &'a Barrier,
     breakdown: &'a [WorkerBreakdown],
     iterations_done: &'a AtomicUsize,
     poisoned: &'a AtomicBool,
     first_error: &'a Mutex<Option<anyhow::Error>>,
-    cost: CostModel,
 }
 
 impl Shared<'_> {
@@ -254,10 +345,18 @@ impl<'a> Trainer<'a> {
         let (params0, moms0) = self.exec.init_state()?;
         let shapes: Vec<Vec<usize>> =
             self.exec.meta.params.iter().map(|p| p.shape.clone()).collect();
-        let acc = GradAccumulator::with_workers(shapes, n);
+        let chunks = match cfg.cluster.reduce_chunks {
+            0 => n * AUTO_CHUNKS_PER_WORKER,
+            c => c,
+        };
+        let acc = GradAccumulator::with_chunks(shapes, n, chunks);
         let allreduce_bytes = acc.payload_bytes();
 
         let state = RwLock::new(ParamState { params: params0, moms: moms0 });
+        // Capture the slab views the chunk updates write through; valid
+        // for the whole run (see ParamSlabs — the slabs are never
+        // reallocated, only overwritten in place).
+        let slabs = ParamSlabs::capture(&mut state.write().unwrap());
         let barrier = Barrier::new(n);
         let breakdown: Vec<WorkerBreakdown> =
             (0..n).map(|_| WorkerBreakdown::default()).collect();
@@ -267,13 +366,13 @@ impl<'a> Trainer<'a> {
         let shared = Shared {
             exec: self.exec,
             state: &state,
+            slabs: &slabs,
             acc: &acc,
             barrier: &barrier,
             breakdown: &breakdown,
             iterations_done: &iterations_done,
             poisoned: &poisoned,
             first_error: &first_error,
-            cost: self.cost_model(),
         };
 
         let mut cmd_txs: Vec<Sender<WorkerCmd>> = Vec::with_capacity(n);
@@ -389,10 +488,17 @@ impl<'a> Trainer<'a> {
 
         for task in 0..self.tasks.num_tasks() {
             if reset_each_task {
+                // Overwrite IN PLACE: the workers' captured slab views
+                // must stay valid for the whole run (see ParamSlabs), so
+                // the literals are refilled, never swapped.
                 let (p, m) = self.exec.init_state()?;
                 let mut st = state.write().unwrap();
-                st.params = p;
-                st.moms = m;
+                for (dst, src) in st.params.iter_mut().zip(&p) {
+                    dst.data_mut().copy_from_slice(src.data());
+                }
+                for (dst, src) in st.moms.iter_mut().zip(&m) {
+                    dst.data_mut().copy_from_slice(src.data());
+                }
             }
             let pool = indices_for_task(task);
             if pool.len() < n * b {
@@ -493,12 +599,25 @@ fn worker_loop(w: usize,
             }
             // Rendezvous: all gradients submitted (or the run poisoned).
             let leader = shared.barrier.wait().is_leader();
-            if leader && !shared.poisoned.load(Ordering::SeqCst) {
-                poison_on_failure(shared, "all-reduce leader",
-                                  || leader_update(shared, lr));
+            if !shared.poisoned.load(Ordering::SeqCst) {
+                // Chunk-parallel reduce-scatter + update: EVERY worker
+                // folds and applies its owned chunks between the barriers.
+                poison_on_failure(shared, "chunk reduce-update",
+                                  || chunk_update(w, shared, lr));
+                if leader && !shared.poisoned.load(Ordering::SeqCst) {
+                    shared.iterations_done.fetch_add(1, Ordering::Relaxed);
+                    shared.exec.stats.update_steps
+                        .fetch_add(1, Ordering::Relaxed);
+                }
             }
-            // Release everyone into the next iteration with new params.
+            // All-gather: the second barrier publishes every chunk's
+            // update to the next iteration's readers...
             shared.barrier.wait();
+            // ...after which each worker retires its own gradient slot
+            // (the folds already zeroed the sums; this resets the count
+            // before this worker's next submit).
+            poison_on_failure(shared, "slot retire",
+                              || shared.acc.end_round(w));
         }
         drop(loader);
         if res_tx.send((w, metrics)).is_err() {
@@ -564,17 +683,38 @@ fn worker_iteration(w: usize,
     Ok(())
 }
 
-/// Barrier leader's half: exact mean over the worker shards (worker order,
-/// deterministic) + fused SGD update of the single parameter copy, applied
-/// straight from the accumulator's reduce scratch — no per-iteration
-/// literal copies anywhere on this path.
-fn leader_update(shared: &Shared<'_>, lr: f64) -> Result<()> {
-    shared.acc.reduce_with(&shared.cost, |mean_grads, _wire| {
-        let mut st = shared.state.write().unwrap();
-        let ParamState { params, moms } = &mut *st;
-        shared.exec.apply_update_in(params, moms, mean_grads, lr)
-    })?;
-    shared.iterations_done.fetch_add(1, Ordering::Relaxed);
+/// Every worker's between-barriers half: fold the chunks this worker owns
+/// across all gradient slots (ascending slot order — arrival-order
+/// independent and bit-identical to the sequential reduce) and apply the
+/// fused SGD update to the owned parameter/momentum ranges through the
+/// pre-captured slab views. The old serial O(N·P) leader fold becomes
+/// ~O(P·(1 + 1/N)) work per worker, with no per-iteration allocation —
+/// the chunk scratch lives in the accumulator.
+fn chunk_update(w: usize, shared: &Shared<'_>, lr: f64) -> Result<()> {
+    let plan = shared.acc.plan();
+    // Counts are stable between the barriers (all submitters quiesced),
+    // so every worker reads the same replica total for the mean.
+    let replicas = shared.acc.replicas();
+    let t0 = Instant::now();
+    for chunk in plan.owned_by(w) {
+        shared.acc.reduce_chunk_with(chunk, replicas, |mean| {
+            for seg in plan.segments(chunk) {
+                let g = &mean[seg.chunk_off..seg.chunk_off + seg.len()];
+                // SAFETY: chunk ownership is a static partition — this
+                // worker owns `chunk`, so its segments are disjoint from
+                // every other worker's writes — and no thread holds the
+                // parameter RwLock between the barriers (see ParamSlabs).
+                let (wv, mv) = unsafe {
+                    shared.slabs.span(seg.tensor, seg.start, seg.len())
+                };
+                shared.exec.apply_update_span(
+                    wv, mv, g, shared.slabs.decay[seg.tensor], lr);
+            }
+            Ok(())
+        })?;
+    }
+    shared.exec.stats.update_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     Ok(())
 }
 
@@ -672,6 +812,34 @@ mod tests {
         let aug = exec.stats.train_aug_steps.load(Ordering::Relaxed);
         assert!(aug > 0,
                 "no iteration trained augmented: partial reps were dropped");
+    }
+
+    #[test]
+    fn chunk_counts_are_bitwise_invisible() {
+        // The chunk-parallel reduce folds every element in the same slot
+        // order regardless of C, so the partitioning must never show up
+        // in the numbers: N = 2 runs at C = auto (4·N), C = N and an odd
+        // C that divides neither the parameter count nor the worker count
+        // report bit-identical losses and accuracies.
+        let mut cfg = tiny_cfg();
+        cfg.cluster.workers = 2;
+        cfg.training.strategy = Strategy::Incremental;
+        let mut reports = Vec::new();
+        for chunks in [0usize, 2, 7] {
+            cfg.cluster.reduce_chunks = chunks;
+            cfg.validate().unwrap();
+            reports.push(run_experiment(&cfg).expect("chunked run"));
+        }
+        let a = &reports[0];
+        for b in &reports[1..] {
+            assert_eq!(a.iterations, b.iterations);
+            assert_eq!(a.final_accuracy_t, b.final_accuracy_t);
+            assert_eq!(a.final_top1_accuracy_t, b.final_top1_accuracy_t);
+            for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+                assert_eq!(ea.train_loss, eb.train_loss);
+                assert_eq!(ea.train_top5, eb.train_top5);
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,12 @@
-//! Pins the PR-4 tentpole invariant: a steady-state training iteration —
-//! flatten → blocked fwd/bwd (`train_step_with` / `train_step_aug_with`)
-//! → `submit` → `reduce_with` → `apply_update_in` — performs **zero heap
-//! allocations** once the per-worker [`StepWorkspace`] and the
-//! accumulator's reduce scratch are warm.
+//! Pins the PR-4/PR-5 tentpole invariant: a steady-state training
+//! iteration — flatten → blocked fwd/bwd (`train_step_with` /
+//! `train_step_aug_with`) → `submit` → reduce → update — performs **zero
+//! heap allocations** once the per-worker [`StepWorkspace`] and the
+//! accumulator's reduce scratch are warm. Both reduce paths are pinned:
+//! the sequential `reduce_with` + `apply_update_in`, and the PR-5
+//! chunk-parallel `reduce_chunk_with` + range-limited `apply_update_span`
+//! (per-chunk scratch built once at accumulator construction, segment
+//! walking allocation-free).
 //!
 //! Mechanism: a counting `#[global_allocator]` wrapping `System`. This
 //! file deliberately holds a single `#[test]` so no sibling test thread
@@ -13,7 +17,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use dcl::cluster::GradAccumulator;
 use dcl::net::CostModel;
-use dcl::runtime::{Manifest, ModelExecutor};
+use dcl::runtime::{Literal, Manifest, ModelExecutor};
 use dcl::tensor::{Batch, Sample};
 use dcl::util::rng::Rng;
 
@@ -64,7 +68,11 @@ fn steady_state_train_iteration_allocates_nothing() {
     let (mut params, mut moms) = exec.init_state().unwrap();
     let shapes: Vec<Vec<usize>> =
         exec.meta.params.iter().map(|p| p.shape.clone()).collect();
-    let acc = GradAccumulator::with_workers(shapes, 1);
+    let acc = GradAccumulator::with_workers(shapes.clone(), 1);
+    // Chunk-parallel accumulator: C = 3 over this model's parameter count
+    // divides nothing, so chunks cross tensor boundaries and the segment
+    // walk is exercised; one worker legally owns every chunk.
+    let acc_c = GradAccumulator::with_chunks(shapes, 1, 3);
     let cost = CostModel::default();
     let mut ws = exec.make_workspace();
     let plain = batch(dim, classes, b, 1);
@@ -86,22 +94,56 @@ fn steady_state_train_iteration_allocates_nothing() {
         }).unwrap();
     };
 
+    // Same iteration through the chunk-parallel protocol: fold owned
+    // chunks (all of them, worker 0 of 1) + range-limited fused update
+    // per segment, then retire the slot.
+    let chunk_iteration = |params: &mut Vec<Literal>, moms: &mut Vec<Literal>,
+                           ws: &mut dcl::runtime::StepWorkspace,
+                           augmented: bool| {
+        let stats = if augmented {
+            exec.train_step_aug_with(params, &aug_b, &reps, ws).unwrap()
+        } else {
+            exec.train_step_with(params, &plain, ws).unwrap()
+        };
+        assert!(stats.loss.is_finite());
+        acc_c.submit(0, ws.grads()).unwrap();
+        let replicas = acc_c.replicas();
+        let plan = acc_c.plan();
+        for chunk in plan.owned_by(0) {
+            acc_c.reduce_chunk_with(chunk, replicas, |mean| {
+                for seg in plan.segments(chunk) {
+                    let g = &mean[seg.chunk_off..seg.chunk_off + seg.len()];
+                    let decay = params[seg.tensor].shape().len() > 1;
+                    exec.apply_update_span(
+                        &mut params[seg.tensor].data_mut()[seg.start..seg.end],
+                        &mut moms[seg.tensor].data_mut()[seg.start..seg.end],
+                        g, decay, 0.05);
+                }
+                Ok(())
+            }).unwrap();
+        }
+        acc_c.end_round(0).unwrap();
+    };
+
     // Warm-up: first touches may fault in lazily-initialised runtime
     // state (timer calibration, lock shadows) besides filling the
-    // workspace slabs.
+    // workspace slabs and both accumulators' scratch.
     for i in 0..3 {
         one_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
+        chunk_iteration(&mut params, &mut moms, &mut ws, i % 2 == 0);
     }
 
     let slab0 = ws.grads()[0].data().as_ptr() as usize;
     let before = ALLOC_CALLS.load(Ordering::SeqCst);
     for i in 0..10 {
         one_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
+        chunk_iteration(&mut params, &mut moms, &mut ws, i % 2 == 0);
     }
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert_eq!(after - before, 0,
-               "steady-state train iterations must not allocate \
-                ({} allocator calls in 10 iterations)", after - before);
+               "steady-state train iterations (sequential + chunked reduce) \
+                must not allocate ({} allocator calls in 10 iterations)",
+               after - before);
     assert_eq!(ws.grads()[0].data().as_ptr() as usize, slab0,
                "gradient slab moved despite zero allocations");
 }

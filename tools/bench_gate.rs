@@ -177,6 +177,17 @@ fn regression(m: &Metric, baseline: f64, measured: f64) -> Option<f64> {
     (loss > 0.0).then_some(loss)
 }
 
+/// Ids of baseline entries that are still record-only (`value: null`) — a
+/// bootstrap entry left null never gates anything, so `check` summarizes
+/// them at the end of the job log where stale ones get noticed.
+fn record_only_ids(metrics: &[Metric]) -> Vec<String> {
+    metrics
+        .iter()
+        .filter(|m| m.value.is_none())
+        .map(|m| format!("{}/{}.{}", m.bench, m.name, m.metric))
+        .collect()
+}
+
 fn check(current: &Path, baseline: &Path) -> Result<()> {
     let cur = Json::parse_file(current)?;
     let (tol, metrics) = read_baseline(baseline)?;
@@ -201,11 +212,20 @@ fn check(current: &Path, baseline: &Path) -> Result<()> {
             },
         }
     }
+    let record_only = record_only_ids(&metrics);
+    if !record_only.is_empty() {
+        println!("note:  {} of {} gated metric(s) are still record-only \
+                  (null baseline) and gate NOTHING — arm them with \
+                  `bench_gate update` + commit: {}",
+                 record_only.len(), metrics.len(), record_only.join(", "));
+    }
     if !failures.is_empty() {
         bail!("{} perf regression(s) beyond {:.0}%: {}",
               failures.len(), tol * 100.0, failures.join(", "));
     }
-    println!("perf gate passed: {} metric(s) within tolerance", metrics.len());
+    println!("perf gate passed: {} armed metric(s) within tolerance, \
+              {} record-only",
+             metrics.len() - record_only.len(), record_only.len());
     Ok(())
 }
 
@@ -260,6 +280,23 @@ mod tests {
             better_higher,
             value: Some(100.0),
         }
+    }
+
+    #[test]
+    fn record_only_summary_lists_null_baselines() {
+        let mut armed = metric(false);
+        armed.name = "armed".into();
+        let mut null_a = metric(true);
+        null_a.name = "boot_a".into();
+        null_a.value = None;
+        let mut null_b = metric(false);
+        null_b.bench = "other".into();
+        null_b.name = "boot_b".into();
+        null_b.value = None;
+        let ids = record_only_ids(&[armed, null_a, null_b]);
+        assert_eq!(ids, vec!["b/boot_a.m".to_string(),
+                             "other/boot_b.m".to_string()]);
+        assert!(record_only_ids(&[metric(true)]).is_empty());
     }
 
     #[test]
