@@ -2,7 +2,8 @@
 //! gradients (the data-parallel sync on the training critical path), the
 //! sharded submit path the threaded worker runtime uses, the PR-5
 //! chunk-parallel reduce-scatter + update against the old leader fold,
-//! and the ring cost model across scales.
+//! the PR-6 layer-streamed overlap step against the barrier-synchronous
+//! step, and the ring cost model across scales.
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::cluster::{ring_allreduce_cost, GradAccumulator};
@@ -145,6 +146,85 @@ fn main() {
                 acc.end_round(w).unwrap();
             }
         });
+    }
+
+    // PR 6: layer-streamed overlap vs the barrier-synchronous step, as
+    // wall-clock per step. Both variants run N threads doing identical
+    // work — a deterministic per-bucket "backward burn" (stand-in for the
+    // remaining backward compute) plus the same fold + fused-SGD
+    // arithmetic. The sync variant submits the whole gradient set only
+    // after the full backward, so every fold sits behind the barrier; the
+    // overlap variant submits each layer bucket as its burn finishes and
+    // eagerly folds ready regions *inside* the backward window
+    // (submit_bucket + fold_ready), leaving the barrier section only the
+    // stragglers. Thread-spawn overhead is charged to both sides.
+    fn burn(bucket: &[Literal]) -> f32 {
+        let mut acc = 0.0f32;
+        for _ in 0..2 {
+            for l in bucket {
+                for &v in l.data() {
+                    acc += v * v;
+                }
+            }
+        }
+        black_box(acc)
+    }
+    for n in [2usize, 4, 8] {
+        for overlap in [false, true] {
+            let acc = GradAccumulator::with_chunks(shapes.clone(), n, n * 4);
+            let mut states: Vec<(Vec<Literal>, Vec<Literal>)> = (0..n)
+                .map(|_| (shapes.iter().map(|s| Literal::zeros(s)).collect(),
+                          shapes.iter().map(|s| Literal::zeros(s)).collect()))
+                .collect();
+            let barrier = std::sync::Barrier::new(n);
+            let name = if overlap {
+                format!("overlap_step_n{n}")
+            } else {
+                format!("sync_step_n{n}")
+            };
+            r.bench_items(&name, bytes * n, || {
+                let (acc, barrier, grads) = (&acc, &barrier, &grads);
+                std::thread::scope(|s| {
+                    for (w, (p, m)) in states.iter_mut().enumerate() {
+                        s.spawn(move || {
+                            let plan = acc.plan();
+                            let g = &grads[w % grads.len()];
+                            for b in (0..plan.num_buckets()).rev() {
+                                burn(&g[plan.bucket_tensor_range(b)]);
+                                if overlap {
+                                    acc.submit_bucket(
+                                        w, b, &g[plan.bucket_tensor_range(b)])
+                                        .unwrap();
+                                    acc.fold_ready(w).unwrap();
+                                }
+                            }
+                            if !overlap {
+                                acc.submit(w, g).unwrap();
+                            }
+                            barrier.wait();
+                            let replicas = acc.replicas();
+                            for chunk in plan.owned_by(w) {
+                                acc.reduce_chunk_with(chunk, replicas, |mean| {
+                                    for seg in plan.segments(chunk) {
+                                        let gs = &mean[seg.chunk_off
+                                            ..seg.chunk_off + seg.len()];
+                                        sgd_span(
+                                            &mut p[seg.tensor].data_mut()
+                                                [seg.start..seg.end],
+                                            &mut m[seg.tensor].data_mut()
+                                                [seg.start..seg.end],
+                                            gs);
+                                    }
+                                    Ok(())
+                                }).unwrap();
+                            }
+                            barrier.wait();
+                            acc.end_round(w).unwrap();
+                        });
+                    }
+                });
+            });
+        }
     }
 
     // Ring cost model across scales (pure arithmetic).

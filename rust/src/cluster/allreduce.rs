@@ -1,20 +1,30 @@
-//! Exact gradient averaging — sequential and chunk-parallel — plus the
-//! ring-all-reduce cost model.
+//! Exact gradient averaging — sequential, chunk-parallel and
+//! layer-streamed — plus the ring-all-reduce cost model.
 //!
-//! [`GradAccumulator`] is **sharded** (one mutex-guarded slot per worker)
-//! and **chunked** (PR 5): a [`ChunkPlan`] pre-partitions the flattened
-//! parameter space into `C ≥ N` contiguous chunks with a static owner map
-//! (chunk `j` → worker `j mod N`), so the fold + mean can run
-//! chunk-parallel on every worker thread
+//! [`GradAccumulator`] is **sharded** (one mutex-guarded slot per worker),
+//! **chunked** (PR 5) and **bucketed** (PR 6): a [`ChunkPlan`]
+//! pre-partitions the flattened parameter space into `C ≥ N` contiguous
+//! chunks with a static owner map (chunk `j` → worker `j mod N`), so the
+//! fold + mean can run chunk-parallel on every worker thread
 //! ([`GradAccumulator::reduce_chunk_with`]) instead of serially on the
 //! barrier leader ([`GradAccumulator::reduce_with`], retained for
-//! sequential callers, tests and benches). Both paths fold every element
-//! in ascending slot order in f64 and round to f32 once, so chunking is
-//! **bitwise invisible**: any worker count, chunk count and arrival order
-//! reduces to the exact bits of the sequential fold (pinned by the tests
-//! below; allocation-freedom pinned by `rust/tests/zero_alloc.rs`).
+//! sequential callers, tests and benches). The same flat space is also
+//! cut into per-layer **buckets** (one per (w, b) tensor pair), so a
+//! streamed backward pass can hand each layer's gradients over the moment
+//! they are final ([`GradAccumulator::submit_bucket`]) and chunk owners
+//! can fold early-arriving buckets *before* the first barrier
+//! ([`GradAccumulator::fold_ready`]) — reduce work overlaps the rest of
+//! backward instead of waiting for it.
+//!
+//! Every path folds every element across slots in **ascending slot order
+//! in f64** and rounds to f32 once, so chunking AND bucketing are
+//! **bitwise invisible**: any worker count, chunk count, bucket count and
+//! arrival interleaving reduces to the exact bits of the sequential fold
+//! (pinned by the tests below; allocation-freedom pinned by
+//! `rust/tests/zero_alloc.rs`).
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -52,6 +62,27 @@ pub struct ChunkPlan {
     /// Flat start offset of each tensor, plus the total `P` at the end.
     tensor_starts: Vec<usize>,
     workers: usize,
+    /// `buckets + 1` flat offsets; bucket `b` covers
+    /// `bucket_bounds[b]..bucket_bounds[b+1]`. Buckets respect tensor
+    /// boundaries (unlike chunks): one per (w, b) pair for paired shape
+    /// lists, else a single bucket over everything.
+    bucket_bounds: Vec<usize>,
+    /// `buckets + 1` tensor-index offsets; bucket `b` owns tensors
+    /// `bucket_tensors[b]..bucket_tensors[b+1]` (manifest order).
+    bucket_tensors: Vec<usize>,
+    /// Per-chunk (chunk ∩ bucket) intersections, ascending — the unit of
+    /// eager folding (fold-once-per-(chunk, bucket, round)).
+    chunk_regions: Vec<Vec<Region>>,
+}
+
+/// One chunk's intersection with one gradient bucket: the eager-fold
+/// granularity of the streamed protocol. Regions partition their chunk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Region {
+    /// Bucket (layer) index this region's elements belong to.
+    pub bucket: usize,
+    /// Flat element range (a sub-range of the chunk's [`ChunkPlan::range`]).
+    pub flat: Range<usize>,
 }
 
 /// One chunk's intersection with one tensor: `start..end` elements of
@@ -92,8 +123,34 @@ impl ChunkPlan {
             total += s.iter().product::<usize>();
         }
         tensor_starts.push(total);
-        let bounds = (0..=chunks).map(|j| j * total / chunks).collect();
-        ChunkPlan { bounds, tensor_starts, workers }
+        let bounds: Vec<usize> = (0..=chunks).map(|j| j * total / chunks).collect();
+        // Bucket geometry: one bucket per (w, b) tensor pair when the
+        // shape list pairs up — the executor's layer structure, so bucket
+        // `l` IS layer `l`'s (dW, db) — else a single bucket covering
+        // every tensor (arbitrary tensor lists in tests and benches
+        // stream degenerately but legally).
+        let paired = shapes.len() >= 2 && shapes.len() % 2 == 0;
+        let bucket_tensors: Vec<usize> = if paired {
+            (0..=shapes.len() / 2).map(|i| 2 * i).collect()
+        } else {
+            vec![0, shapes.len()]
+        };
+        let bucket_bounds: Vec<usize> =
+            bucket_tensors.iter().map(|&t| tensor_starts[t]).collect();
+        let chunk_regions: Vec<Vec<Region>> = (0..chunks)
+            .map(|c| {
+                let r = bounds[c]..bounds[c + 1];
+                (0..bucket_bounds.len() - 1)
+                    .filter_map(|b| {
+                        let lo = r.start.max(bucket_bounds[b]);
+                        let hi = r.end.min(bucket_bounds[b + 1]);
+                        (lo < hi).then(|| Region { bucket: b, flat: lo..hi })
+                    })
+                    .collect()
+            })
+            .collect();
+        ChunkPlan { bounds, tensor_starts, workers, bucket_bounds,
+                    bucket_tensors, chunk_regions }
     }
 
     pub fn num_chunks(&self) -> usize {
@@ -128,31 +185,64 @@ impl ChunkPlan {
         self.bounds[chunk]..self.bounds[chunk + 1]
     }
 
+    /// Number of gradient buckets (the streamed-submit granularity; one
+    /// per model layer for paired shape lists).
+    pub fn num_buckets(&self) -> usize {
+        self.bucket_bounds.len() - 1
+    }
+
+    /// Flat element range of `bucket`.
+    pub fn bucket_range(&self, bucket: usize) -> Range<usize> {
+        self.bucket_bounds[bucket]..self.bucket_bounds[bucket + 1]
+    }
+
+    /// Tensor index range (manifest order) of `bucket` — the tensors a
+    /// streamed [`GradAccumulator::submit_bucket`] must hand over.
+    pub fn bucket_tensor_range(&self, bucket: usize) -> Range<usize> {
+        self.bucket_tensors[bucket]..self.bucket_tensors[bucket + 1]
+    }
+
+    /// The (chunk ∩ bucket) [`Region`]s of `chunk`, ascending — together
+    /// they partition the chunk. Empty for empty chunks.
+    pub fn regions(&self, chunk: usize) -> &[Region] {
+        &self.chunk_regions[chunk]
+    }
+
     /// Walk `chunk` as per-tensor [`Segment`]s. Allocation-free.
     pub fn segments(&self, chunk: usize) -> SegmentIter<'_> {
         let r = self.range(chunk);
-        // Last tensor whose start is at or before the chunk start.
+        let base = r.start;
+        self.segments_in(r, base)
+    }
+
+    /// Walk an arbitrary flat sub-range as per-tensor [`Segment`]s whose
+    /// `chunk_off` is relative to `base` (the containing chunk's start —
+    /// region folds index the chunk scratch with it). Allocation-free;
+    /// [`segments`](Self::segments) is the whole-chunk special case.
+    fn segments_in(&self, span: Range<usize>, base: usize) -> SegmentIter<'_> {
+        // Last tensor whose start is at or before the span start.
         let tensor = self
             .tensor_starts
-            .partition_point(|&s| s <= r.start)
+            .partition_point(|&s| s <= span.start)
             .saturating_sub(1);
-        SegmentIter { plan: self, tensor, flat: r.start, chunk: r }
+        SegmentIter { plan: self, tensor, flat: span.start, span, base }
     }
 }
 
-/// Iterator over one chunk's [`Segment`]s (see [`ChunkPlan::segments`]).
+/// Iterator over a flat span's [`Segment`]s (see [`ChunkPlan::segments`]).
 pub struct SegmentIter<'a> {
     plan: &'a ChunkPlan,
     tensor: usize,
     flat: usize,
-    chunk: Range<usize>,
+    span: Range<usize>,
+    base: usize,
 }
 
 impl Iterator for SegmentIter<'_> {
     type Item = Segment;
 
     fn next(&mut self) -> Option<Segment> {
-        while self.flat < self.chunk.end {
+        while self.flat < self.span.end {
             let t_start = self.plan.tensor_starts[self.tensor];
             let t_end = self.plan.tensor_starts[self.tensor + 1];
             if t_end <= self.flat {
@@ -161,13 +251,13 @@ impl Iterator for SegmentIter<'_> {
                 continue;
             }
             let lo = self.flat;
-            let hi = self.chunk.end.min(t_end);
+            let hi = self.span.end.min(t_end);
             self.flat = hi;
             return Some(Segment {
                 tensor: self.tensor,
                 start: lo - t_start,
                 end: hi - t_start,
-                chunk_off: lo - self.chunk.start,
+                chunk_off: lo - self.base,
             });
         }
         None
@@ -178,13 +268,18 @@ impl Iterator for SegmentIter<'_> {
 /// drift) plus how many replicas it accumulated.
 struct Slot {
     sums: Vec<Vec<f64>>,
+    /// Submits seen per bucket this round. A whole `submit` bumps every
+    /// bucket; a streamed `submit_bucket` bumps one. `count` is always
+    /// their minimum — the number of *complete* replicas in the slot.
+    bucket_submits: Vec<usize>,
     count: usize,
 }
 
 impl Slot {
-    fn new(shapes: &[Vec<usize>]) -> Slot {
+    fn new(shapes: &[Vec<usize>], buckets: usize) -> Slot {
         Slot {
             sums: shapes.iter().map(|s| vec![0.0f64; s.iter().product()]).collect(),
+            bucket_submits: vec![0; buckets],
             count: 0,
         }
     }
@@ -210,12 +305,18 @@ struct ReduceScratch {
 struct ChunkScratch {
     totals: Vec<f64>,
     means: Vec<f32>,
-    /// Set by this round's fold, cleared by the owner's
-    /// [`GradAccumulator::end_round`]: a second fold of the same chunk in
-    /// one round would read the already-zeroed slot sums and hand the
-    /// caller a silently wrong all-zero mean — this turns that misuse
-    /// into an error instead.
-    folded: bool,
+    /// Fold-once-per-(chunk, bucket, round) guard, one flag per
+    /// [`Region`] of this chunk: set when the region's slot ranges are
+    /// consumed (eagerly by [`GradAccumulator::fold_ready`] or in the
+    /// finishing [`GradAccumulator::reduce_chunk_with`]), cleared by the
+    /// owner's [`GradAccumulator::end_round`].
+    region_folded: Vec<bool>,
+    /// Set by this round's finishing [`GradAccumulator::reduce_chunk_with`],
+    /// cleared by [`GradAccumulator::end_round`]: a second finish of the
+    /// same chunk in one round would read the already-zeroed slot sums
+    /// and hand the caller a silently wrong all-zero mean — this turns
+    /// that misuse into an error instead.
+    finished: bool,
 }
 
 /// Accumulates per-replica gradients and produces their exact mean.
@@ -233,11 +334,27 @@ struct ChunkScratch {
 ///   chunk-parallel reduce-scatter; the parameter update happens in the
 ///   same pass, and the trainer's second barrier is the all-gather).
 ///
+/// The **streamed** path (PR 6) layers on top of the chunked one:
+/// [`submit_bucket`] lands one layer's (dW, db) pair the moment backward
+/// finishes it, and [`fold_ready`] lets a worker eagerly fold any of its
+/// owned (chunk, bucket) regions whose bucket every worker has already
+/// submitted this round — before the first barrier, overlapping the rest
+/// of backward. [`reduce_chunk_with`] then *finishes* the chunk (folds
+/// whatever the eager path did not reach) and publishes the mean. The
+/// eager path requires the trainer's discipline — exactly one replica per
+/// worker per round, closed by [`end_round`] — and must not be mixed with
+/// multi-replica `submit` accumulation or `reduce_with` rounds on the
+/// same accumulator (the monotonic readiness counters assume one submit
+/// per (worker, bucket, round)).
+///
 /// `add()` is the single-slot convenience used by sequential callers and
 /// keeps the pre-threading call shape.
 ///
 /// [`reduce_with`]: GradAccumulator::reduce_with
 /// [`reduce_chunk_with`]: GradAccumulator::reduce_chunk_with
+/// [`submit_bucket`]: GradAccumulator::submit_bucket
+/// [`fold_ready`]: GradAccumulator::fold_ready
+/// [`end_round`]: GradAccumulator::end_round
 pub struct GradAccumulator {
     shapes: Vec<Vec<usize>>,
     slots: Vec<Mutex<Slot>>,
@@ -247,6 +364,16 @@ pub struct GradAccumulator {
     scratch: Mutex<Option<ReduceScratch>>,
     plan: ChunkPlan,
     chunk_scratch: Vec<Mutex<ChunkScratch>>,
+    /// Monotonic per-bucket submit counters (never reset): with one
+    /// submit per (worker, bucket, round), bucket `b` is ready for round
+    /// `r`'s eager fold exactly when `ready[b] == (r + 1) · N`. The
+    /// barrier protocol makes `>=` exact: while any worker is still
+    /// pre-barrier in round `r`, no worker can have entered round
+    /// `r + 1`, so the counter cannot overshoot the target.
+    ready: Vec<AtomicUsize>,
+    /// Rounds completed per worker (bumped by `end_round`) — the `r` in
+    /// that worker's eager-fold readiness target.
+    round_of: Vec<AtomicUsize>,
 }
 
 impl GradAccumulator {
@@ -270,7 +397,9 @@ impl GradAccumulator {
                        chunks: usize) -> GradAccumulator {
         assert!(workers > 0, "accumulator needs at least one slot");
         let plan = ChunkPlan::new(&shapes, workers, chunks);
-        let slots = (0..workers).map(|_| Mutex::new(Slot::new(&shapes))).collect();
+        let slots = (0..workers)
+            .map(|_| Mutex::new(Slot::new(&shapes, plan.num_buckets())))
+            .collect();
         let bytes = shapes.iter().map(|s| s.iter().product::<usize>() * 4).sum();
         let chunk_scratch = (0..plan.num_chunks())
             .map(|c| {
@@ -278,10 +407,13 @@ impl GradAccumulator {
                 Mutex::new(ChunkScratch {
                     totals: vec![0.0f64; len],
                     means: vec![0.0f32; len],
-                    folded: false,
+                    region_folded: vec![false; plan.regions(c).len()],
+                    finished: false,
                 })
             })
             .collect();
+        let ready = (0..plan.num_buckets()).map(|_| AtomicUsize::new(0)).collect();
+        let round_of = (0..workers).map(|_| AtomicUsize::new(0)).collect();
         GradAccumulator {
             shapes,
             slots,
@@ -289,6 +421,8 @@ impl GradAccumulator {
             scratch: Mutex::new(None),
             plan,
             chunk_scratch,
+            ready,
+            round_of,
         }
     }
 
@@ -320,7 +454,9 @@ impl GradAccumulator {
     }
 
     /// Add one replica's gradients into `worker`'s slot. Thread-safe; only
-    /// the owning slot's mutex is taken.
+    /// the owning slot's mutex is taken. A whole submit is every bucket
+    /// arriving at once, so the readiness counters advance the same way
+    /// as a complete [`submit_bucket`](Self::submit_bucket) sweep.
     pub fn submit(&self, worker: usize, grads: &[Literal]) -> Result<()> {
         if worker >= self.slots.len() {
             bail!("submit to slot {worker} of {}", self.slots.len());
@@ -328,18 +464,147 @@ impl GradAccumulator {
         if grads.len() != self.shapes.len() {
             bail!("accumulator got {} tensors, want {}", grads.len(), self.shapes.len());
         }
-        let mut slot = self.slots[worker].lock().unwrap();
-        for (sum, g) in slot.sums.iter_mut().zip(grads) {
-            let v = g.data();
-            if v.len() != sum.len() {
-                bail!("gradient tensor size {} != {}", v.len(), sum.len());
+        {
+            let mut slot = self.slots[worker].lock().unwrap();
+            let Slot { sums, bucket_submits, count } = &mut *slot;
+            for (sum, g) in sums.iter_mut().zip(grads) {
+                let v = g.data();
+                if v.len() != sum.len() {
+                    bail!("gradient tensor size {} != {}", v.len(), sum.len());
+                }
+                for (s, &x) in sum.iter_mut().zip(v) {
+                    *s += x as f64;
+                }
             }
-            for (s, &x) in sum.iter_mut().zip(v) {
-                *s += x as f64;
+            for b in bucket_submits.iter_mut() {
+                *b += 1;
+            }
+            *count += 1;
+        }
+        for r in &self.ready {
+            r.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(())
+    }
+
+    /// Streamed submit: add one layer bucket's gradients — the tensors of
+    /// [`ChunkPlan::bucket_tensor_range`]`(bucket)`, manifest order —
+    /// into `worker`'s slot, the moment backward finishes them. The
+    /// slot's replica count advances only when every bucket of the
+    /// replica has landed. Thread-safe; only the owning slot's mutex is
+    /// taken, plus one atomic bump of the bucket's readiness counter.
+    pub fn submit_bucket(&self, worker: usize, bucket: usize,
+                         grads: &[Literal]) -> Result<()> {
+        if worker >= self.slots.len() {
+            bail!("submit to slot {worker} of {}", self.slots.len());
+        }
+        let nb = self.plan.num_buckets();
+        if bucket >= nb {
+            bail!("submit to bucket {bucket} of {nb}");
+        }
+        let tensors = self.plan.bucket_tensor_range(bucket);
+        if grads.len() != tensors.len() {
+            bail!("bucket {bucket} got {} tensors, want {}",
+                  grads.len(), tensors.len());
+        }
+        {
+            let mut slot = self.slots[worker].lock().unwrap();
+            let Slot { sums, bucket_submits, count } = &mut *slot;
+            for (sum, g) in sums[tensors].iter_mut().zip(grads) {
+                let v = g.data();
+                if v.len() != sum.len() {
+                    bail!("gradient tensor size {} != {}", v.len(), sum.len());
+                }
+                for (s, &x) in sum.iter_mut().zip(v) {
+                    *s += x as f64;
+                }
+            }
+            bucket_submits[bucket] += 1;
+            *count = bucket_submits.iter().copied().min().unwrap_or(0);
+        }
+        self.ready[bucket].fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Eagerly fold every (chunk, bucket) region `worker` owns whose
+    /// bucket **every** worker has already submitted this round —
+    /// callable any time before the first barrier (typically from the
+    /// streamed backward's bucket sink), non-blocking beyond the
+    /// uncontended per-chunk/slot mutexes. Returns how many regions were
+    /// folded. Folding writes only the accumulator's f64 chunk scratch
+    /// (never parameters), so running under the trainer's params read
+    /// lock is safe.
+    ///
+    /// Readiness is exact, not heuristic: `ready[b]` counts submits of
+    /// bucket `b` monotonically across rounds, and while this worker is
+    /// pre-barrier in round `r` no worker can have entered round `r + 1`
+    /// (the first barrier has not released), so `ready[b] ≥ (r + 1) · N`
+    /// holds iff all `N` workers submitted `b` in round `r`. Requires the
+    /// streamed discipline: exactly one replica per worker per round,
+    /// rounds closed by [`end_round`](Self::end_round).
+    pub fn fold_ready(&self, worker: usize) -> Result<usize> {
+        if worker >= self.slots.len() {
+            bail!("fold_ready on slot {worker} of {}", self.slots.len());
+        }
+        let target =
+            (self.round_of[worker].load(Ordering::SeqCst) + 1) * self.slots.len();
+        let mut folded = 0usize;
+        for chunk in self.plan.owned_by(worker) {
+            let regions = self.plan.regions(chunk);
+            if regions.is_empty() {
+                continue;
+            }
+            let mut scratch = self.chunk_scratch[chunk].lock().unwrap();
+            if scratch.finished {
+                continue;
+            }
+            let start = self.plan.range(chunk).start;
+            let ChunkScratch { totals, region_folded, .. } = &mut *scratch;
+            for (i, region) in regions.iter().enumerate() {
+                if !region_folded[i]
+                    && self.ready[region.bucket].load(Ordering::SeqCst) >= target
+                {
+                    self.fold_region(region, start, totals);
+                    region_folded[i] = true;
+                    folded += 1;
+                }
             }
         }
-        slot.count += 1;
-        Ok(())
+        Ok(folded)
+    }
+
+    /// Fold one (chunk ∩ bucket) region across all slots — ascending slot
+    /// order, the exact per-element arithmetic of the sequential reduce —
+    /// into the chunk's f64 totals: zero the region's totals, accumulate,
+    /// and zero the consumed slot sums. A slot that never submitted this
+    /// bucket is skipped; its sums are +0.0, so skipping is bitwise
+    /// identical to folding it (the partials can never be −0.0 — they
+    /// start at +0.0 and IEEE round-to-nearest addition cannot produce
+    /// −0.0 from +0.0 starts), matching the sequential path's
+    /// empty-slot skip.
+    ///
+    /// Lock order: callers hold the chunk scratch mutex; slot mutexes are
+    /// taken inside — the same order as the finish path, and submitters
+    /// only ever take slot mutexes, so the protocol cannot deadlock.
+    fn fold_region(&self, region: &Region, chunk_start: usize,
+                   totals: &mut [f64]) {
+        let lo = region.flat.start - chunk_start;
+        let hi = region.flat.end - chunk_start;
+        totals[lo..hi].iter_mut().for_each(|x| *x = 0.0);
+        for slot in &self.slots {
+            let mut g = slot.lock().unwrap();
+            if g.bucket_submits[region.bucket] == 0 {
+                continue;
+            }
+            for seg in self.plan.segments_in(region.flat.clone(), chunk_start) {
+                let sums = &mut g.sums[seg.tensor][seg.start..seg.end];
+                let acc = &mut totals[seg.chunk_off..seg.chunk_off + seg.len()];
+                for (a, s) in acc.iter_mut().zip(sums.iter_mut()) {
+                    *a += *s;
+                    *s = 0.0; // leave the slot clean for the next round
+                }
+            }
+        }
     }
 
     /// Fold all slots into the persistent scratch, hand the mean gradients
@@ -379,6 +644,7 @@ impl GradAccumulator {
                         }
                     }
                     g.count = 0;
+                    g.bucket_submits.iter_mut().for_each(|b| *b = 0);
                     for sum in g.sums.iter_mut() {
                         sum.iter_mut().for_each(|s| *s = 0.0);
                     }
@@ -417,12 +683,16 @@ impl GradAccumulator {
     /// quiesced (first barrier), every worker calls this for each chunk it
     /// owns ([`ChunkPlan::owned_by`]) with the same `replicas` (read via
     /// [`replicas`](Self::replicas) — counts are stable between the
-    /// barriers). The fold zeroes the slot ranges it consumes, so the
-    /// round leaves the sums clean; each worker then retires its own
-    /// slot's count with [`end_round`](Self::end_round) after the
-    /// all-gather barrier. Distinct chunks may fold concurrently; folding
-    /// the same chunk twice in one round is rejected (its slot ranges are
-    /// already consumed — a second fold would silently emit a zero mean).
+    /// barriers). This is the **finish** path of the streamed protocol:
+    /// regions already consumed by an eager
+    /// [`fold_ready`](Self::fold_ready) are left alone, the rest are
+    /// folded now, and the whole chunk's mean is published. Either way
+    /// the folds zero the slot ranges they consume, so the round leaves
+    /// the sums clean; each worker then retires its own slot with
+    /// [`end_round`](Self::end_round) after the all-gather barrier.
+    /// Distinct chunks may fold concurrently; finishing the same chunk
+    /// twice in one round is rejected (its slot ranges are already
+    /// consumed — a second fold would silently emit a zero mean).
     pub fn reduce_chunk_with<T>(&self, chunk: usize, replicas: usize,
                                 f: impl FnOnce(&[f32]) -> Result<T>)
                                 -> Result<T> {
@@ -433,25 +703,19 @@ impl GradAccumulator {
             bail!("chunk reduce with no replicas accumulated");
         }
         let mut scratch = self.chunk_scratch[chunk].lock().unwrap();
-        if scratch.folded {
+        if scratch.finished {
             bail!("chunk {chunk} already folded this round (its slot ranges \
                    are consumed — call end_round before the next fold)");
         }
-        scratch.folded = true;
-        let ChunkScratch { totals, means, .. } = &mut *scratch;
-        totals.iter_mut().for_each(|x| *x = 0.0);
-        for slot in &self.slots {
-            let mut g = slot.lock().unwrap();
-            if g.count == 0 {
-                continue;
-            }
-            for seg in self.plan.segments(chunk) {
-                let sums = &mut g.sums[seg.tensor][seg.start..seg.end];
-                let acc = &mut totals[seg.chunk_off..seg.chunk_off + seg.len()];
-                for (a, s) in acc.iter_mut().zip(sums.iter_mut()) {
-                    *a += *s;
-                    *s = 0.0; // leave the slot clean for the next round
-                }
+        scratch.finished = true;
+        let start = self.plan.range(chunk).start;
+        let ChunkScratch { totals, means, region_folded, .. } = &mut *scratch;
+        // Regions partition the chunk, so every total element is zeroed
+        // and folded exactly once per round — by the eager path or here.
+        for (i, region) in self.plan.regions(chunk).iter().enumerate() {
+            if !region_folded[i] {
+                self.fold_region(region, start, totals);
+                region_folded[i] = true;
             }
         }
         let inv = 1.0 / replicas as f64;
@@ -462,17 +726,26 @@ impl GradAccumulator {
     }
 
     /// Close a chunk-parallel round for `worker`: reset its slot's replica
-    /// count (the chunk folds already zeroed its sums) and re-arm the
-    /// fold-once guard of the chunks `worker` owns. Call once per worker
-    /// after the all-gather barrier — i.e. once every chunk has been
-    /// folded — and before that worker's next `submit`.
+    /// and bucket counts (the chunk folds already zeroed its sums),
+    /// advance its round counter (the epoch the eager readiness check is
+    /// measured against), and re-arm the per-region fold guards of the
+    /// chunks `worker` owns. Call once per worker after the all-gather
+    /// barrier — i.e. once every chunk has been finished — and before
+    /// that worker's next `submit`/`submit_bucket`.
     pub fn end_round(&self, worker: usize) -> Result<()> {
         if worker >= self.slots.len() {
             bail!("end_round on slot {worker} of {}", self.slots.len());
         }
-        self.slots[worker].lock().unwrap().count = 0;
+        {
+            let mut slot = self.slots[worker].lock().unwrap();
+            slot.count = 0;
+            slot.bucket_submits.iter_mut().for_each(|b| *b = 0);
+        }
+        self.round_of[worker].fetch_add(1, Ordering::SeqCst);
         for chunk in self.plan.owned_by(worker) {
-            self.chunk_scratch[chunk].lock().unwrap().folded = false;
+            let mut scratch = self.chunk_scratch[chunk].lock().unwrap();
+            scratch.finished = false;
+            scratch.region_folded.iter_mut().for_each(|r| *r = false);
         }
         Ok(())
     }
@@ -774,6 +1047,213 @@ mod tests {
             }
             assert_eq!(got, want, "C = {chunks} diverged from sequential");
             assert_eq!(acc.replicas(), 0, "round must leave the slots clean");
+        }
+    }
+
+    /// Six tensors in (w, b) pairs — three layer buckets — with awkward
+    /// sizes: P = 39, bucket bounds at 16 and 31, so chunk bounds land
+    /// inside buckets and tensors alike.
+    fn layered_shapes() -> Vec<Vec<usize>> {
+        vec![vec![3, 4], vec![4], vec![4, 3], vec![3], vec![3, 2], vec![2]]
+    }
+
+    #[test]
+    fn bucket_geometry_covers_the_space() {
+        let plan = ChunkPlan::new(&layered_shapes(), 2, 5);
+        assert_eq!(plan.num_buckets(), 3);
+        assert_eq!(plan.bucket_range(0), 0..16);
+        assert_eq!(plan.bucket_range(1), 16..31);
+        assert_eq!(plan.bucket_range(2), 31..39);
+        assert_eq!(plan.bucket_tensor_range(1), 2..4);
+        // buckets partition the flat space contiguously
+        let mut flat = 0usize;
+        for b in 0..plan.num_buckets() {
+            assert_eq!(plan.bucket_range(b).start, flat);
+            flat = plan.bucket_range(b).end;
+        }
+        assert_eq!(flat, plan.total_len());
+        // regions partition each chunk, ascending, each within one bucket
+        for chunks in [2usize, 3, 7, 39, 64] {
+            let plan = ChunkPlan::new(&layered_shapes(), 2, chunks);
+            for c in 0..plan.num_chunks() {
+                let r = plan.range(c);
+                let mut at = r.start;
+                for region in plan.regions(c) {
+                    assert_eq!(region.flat.start, at, "chunk {c} region gap");
+                    at = region.flat.end;
+                    let b = plan.bucket_range(region.bucket);
+                    assert!(b.start <= region.flat.start
+                            && region.flat.end <= b.end,
+                            "chunk {c} region escapes its bucket");
+                }
+                assert_eq!(at, r.end, "chunk {c} region coverage");
+            }
+        }
+        // an odd tensor count degrades to a single all-covering bucket
+        let plan = ChunkPlan::new(&odd_shapes(), 3, 4);
+        assert_eq!(plan.num_buckets(), 1);
+        assert_eq!(plan.bucket_range(0), 0..26);
+        assert_eq!(plan.bucket_tensor_range(0), 0..3);
+    }
+
+    #[test]
+    fn streamed_buckets_are_bitwise_invisible() {
+        // The PR 6 pin: scrambled bucket arrival interleavings × chunk
+        // counts, folded eagerly as buckets become ready, must reduce to
+        // the exact bits of the sequential fold — bucketing, like
+        // chunking, cannot show up in the numbers.
+        let shapes = layered_shapes();
+        let workers = 3;
+        let mut rng = Rng::new(97);
+        let mk = |rng: &mut Rng| -> Vec<Literal> {
+            shapes.iter().map(|s| {
+                let n: usize = s.iter().product();
+                let v: Vec<f32> =
+                    (0..n).map(|_| rng.normal() as f32 * 0.41 + 0.003).collect();
+                make_literal(&v, s).unwrap()
+            }).collect()
+        };
+        let gs: Vec<Vec<Literal>> = (0..workers).map(|_| mk(&mut rng)).collect();
+
+        // ground truth: sequential sharded reduce of the same replicas
+        let seq = GradAccumulator::with_workers(shapes.clone(), workers);
+        for (w, g) in gs.iter().enumerate() {
+            seq.submit(w, g).unwrap();
+        }
+        let (want, _) = seq.reduce(&CostModel::default()).unwrap();
+        let want = flat(&want);
+
+        for (ci, &chunks) in [1usize, 2, 3, 5, 7, 13, 39, 64].iter().enumerate() {
+            let acc = GradAccumulator::with_chunks(shapes.clone(), workers, chunks);
+            let plan = acc.plan();
+            let nb = plan.num_buckets();
+            let total_regions: usize =
+                (0..plan.num_chunks()).map(|c| plan.regions(c).len()).sum();
+            // Two rounds back-to-back: the second exercises the re-armed
+            // guards and the advanced round counters.
+            for round in 0..2usize {
+                // (worker, bucket) submits in a different scrambled
+                // interleaving per geometry and round, every worker
+                // polling fold_ready after each arrival.
+                let mut submits: Vec<(usize, usize)> = (0..workers)
+                    .flat_map(|w| (0..nb).map(move |b| (w, b)))
+                    .collect();
+                submits.rotate_left((ci + round * 5) % submits.len());
+                if (ci + round) % 2 == 1 {
+                    submits.reverse();
+                }
+                let mut eager = 0usize;
+                for &(w, b) in &submits {
+                    let ts = plan.bucket_tensor_range(b);
+                    acc.submit_bucket(w, b, &gs[w][ts]).unwrap();
+                    for p in 0..workers {
+                        eager += acc.fold_ready(p).unwrap();
+                    }
+                }
+                assert_eq!(eager, total_regions,
+                           "C = {chunks}: every region must fold eagerly \
+                            once all submits have landed");
+                let replicas = acc.replicas();
+                assert_eq!(replicas, workers, "all replicas complete");
+                // finish in scrambled chunk order — nothing is left to
+                // fold, the finish just publishes the means
+                let mut got = vec![0.0f32; plan.total_len()];
+                let mut order: Vec<usize> = (0..plan.num_chunks()).collect();
+                order.reverse();
+                order.rotate_left((round + chunks) % plan.num_chunks().max(1));
+                for &c in &order {
+                    let r = plan.range(c);
+                    acc.reduce_chunk_with(c, replicas, |mean| {
+                        got[r.clone()].copy_from_slice(mean);
+                        Ok(())
+                    }).unwrap();
+                }
+                for w in 0..workers {
+                    acc.end_round(w).unwrap();
+                }
+                assert_eq!(got, want,
+                           "C = {chunks}, round {round} diverged from \
+                            sequential");
+                assert_eq!(acc.replicas(), 0, "round must leave slots clean");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_misuse_is_rejected() {
+        let acc = GradAccumulator::with_chunks(layered_shapes(), 2, 3);
+        let plan = acc.plan();
+        let g: Vec<Literal> = layered_shapes().iter()
+            .map(|s| Literal::zeros(s))
+            .collect();
+        let ts = plan.bucket_tensor_range(1);
+        assert!(acc.submit_bucket(9, 1, &g[ts.clone()]).is_err(), "bad slot");
+        assert!(acc.submit_bucket(0, 7, &g[ts.clone()]).is_err(), "bad bucket");
+        assert!(acc.submit_bucket(0, 0, &g[ts]).is_err(),
+                "bucket 0 wants tensors 0..2, not 2..4");
+        assert!(acc.fold_ready(9).is_err(), "bad worker");
+        assert_eq!(acc.fold_ready(0).unwrap(), 0, "nothing submitted yet");
+    }
+
+    #[test]
+    fn concurrent_streamed_rounds_match_sequential() {
+        // The full streamed protocol under real threads: N workers stream
+        // buckets in different per-worker orders, eagerly folding their
+        // own chunks mid-"backward", then finish + publish between two
+        // barriers — for several rounds, so the re-armed guards and round
+        // counters are exercised under contention.
+        use std::sync::Barrier;
+        let shapes = layered_shapes();
+        let workers = 3usize;
+        let mut rng = Rng::new(1234);
+        let mk = |rng: &mut Rng| -> Vec<Literal> {
+            shapes.iter().map(|s| {
+                let n: usize = s.iter().product();
+                let v: Vec<f32> =
+                    (0..n).map(|_| rng.normal() as f32 * 0.29 + 0.01).collect();
+                make_literal(&v, s).unwrap()
+            }).collect()
+        };
+        let gs: Vec<Vec<Literal>> = (0..workers).map(|_| mk(&mut rng)).collect();
+        let seq = GradAccumulator::with_workers(shapes.clone(), workers);
+        for (w, g) in gs.iter().enumerate() {
+            seq.submit(w, g).unwrap();
+        }
+        let (want, _) = seq.reduce(&CostModel::default()).unwrap();
+        let want = flat(&want);
+
+        let acc = GradAccumulator::with_chunks(shapes.clone(), workers, 7);
+        let barrier = Barrier::new(workers);
+        let out = Mutex::new(vec![0.0f32; acc.plan().total_len()]);
+        for round in 0..3usize {
+            std::thread::scope(|s| {
+                for w in 0..workers {
+                    let (acc, barrier, gs, out) = (&acc, &barrier, &gs, &out);
+                    s.spawn(move || {
+                        let plan = acc.plan();
+                        let nb = plan.num_buckets();
+                        for i in 0..nb {
+                            let b = (i + w + round) % nb;
+                            let ts = plan.bucket_tensor_range(b);
+                            acc.submit_bucket(w, b, &gs[w][ts]).unwrap();
+                            acc.fold_ready(w).unwrap();
+                        }
+                        barrier.wait();
+                        let replicas = acc.replicas();
+                        for chunk in plan.owned_by(w) {
+                            let r = plan.range(chunk);
+                            acc.reduce_chunk_with(chunk, replicas, |mean| {
+                                out.lock().unwrap()[r.clone()]
+                                    .copy_from_slice(mean);
+                                Ok(())
+                            }).unwrap();
+                        }
+                        barrier.wait();
+                        acc.end_round(w).unwrap();
+                    });
+                }
+            });
+            assert_eq!(*out.lock().unwrap(), want, "round {round} diverged");
         }
     }
 

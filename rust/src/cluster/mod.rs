@@ -16,7 +16,18 @@
 //! the software analogue of reduce-scatter + all-gather, dividing the old
 //! serial leader fold by N without changing a single output bit (the fold
 //! keeps ascending slot order per element).
+//!
+//! On top of the chunk plan, the reduction is **layer-streamed** (PR 6):
+//! backward emits per-layer `(dW, db)` buckets via
+//! [`GradAccumulator::submit_bucket`] as they become final, and chunk
+//! owners eagerly fold every [`Region`] (chunk ∩ bucket intersection)
+//! whose bucket has fully arrived — before the first barrier, overlapped
+//! with the rest of backward — via [`GradAccumulator::fold_ready`].
+//! Bucket arrival order is bitwise invisible for the same reason chunking
+//! is: elements are independent and each is still folded in ascending
+//! slot order.
 
 pub mod allreduce;
 
-pub use allreduce::{ring_allreduce_cost, ChunkPlan, GradAccumulator, Segment};
+pub use allreduce::{ring_allreduce_cost, ChunkPlan, GradAccumulator, Region,
+                    Segment};

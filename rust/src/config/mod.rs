@@ -299,15 +299,19 @@ impl ExperimentConfig {
             / self.cluster.workers
     }
 
-    /// Classes per task (disjoint Class-IL split).
+    /// Classes per task (disjoint Class-IL split), rounded down: when `K`
+    /// does not divide evenly, the first `K mod T` tasks take one extra
+    /// class (see `data::TaskSequence`).
     pub fn classes_per_task(&self) -> usize {
         self.data.num_classes / self.data.num_tasks
     }
 
     pub fn validate(&self) -> Result<()> {
         let d = &self.data;
-        if d.num_classes == 0 || d.num_tasks == 0 || d.num_classes % d.num_tasks != 0 {
-            bail!("num_classes ({}) must be a positive multiple of num_tasks ({})",
+        if d.num_classes == 0 || d.num_tasks == 0 || d.num_classes < d.num_tasks {
+            bail!("need num_classes ({}) >= num_tasks ({}) > 0 \
+                   (every task takes at least one class; remainders spread \
+                   across the first tasks)",
                   d.num_classes, d.num_tasks);
         }
         if d.train_per_class == 0 || d.input_dim == 0 {
@@ -469,8 +473,14 @@ mod tests {
     #[test]
     fn validation_catches_bad_geometry() {
         let mut cfg = preset("default").unwrap();
-        cfg.data.num_classes = 41; // not divisible by 4 tasks
+        cfg.data.num_classes = 3; // fewer classes than the 4 tasks
         assert!(cfg.validate().is_err());
+
+        // indivisible-but-sufficient geometry is now legal: the remainder
+        // classes spread across the first tasks (see data::TaskSequence)
+        let mut cfg = preset("default").unwrap();
+        cfg.data.num_classes = 41;
+        assert!(cfg.validate().is_ok());
 
         let mut cfg = preset("default").unwrap();
         cfg.training.candidates = cfg.training.batch + 1;

@@ -1,9 +1,15 @@
 //! Class-incremental task sequence (paper §II, §VI-A).
 //!
-//! T disjoint tasks, each owning `K/T` classes; the model visits tasks in
-//! order and can never revisit earlier tasks' training data (except through
-//! the rehearsal buffer). The class→task assignment is a seeded shuffle so
-//! task difficulty is exchangeable across seeds.
+//! T disjoint tasks; the model visits tasks in order and can never revisit
+//! earlier tasks' training data (except through the rehearsal buffer). The
+//! class→task assignment is a seeded shuffle so task difficulty is
+//! exchangeable across seeds. `K` classes need not divide evenly into `T`
+//! tasks: sizes differ by at most one, with the first `K mod T` tasks
+//! taking `⌈K/T⌉` classes and the rest `⌊K/T⌋` — degenerate geometries
+//! (zero tasks, fewer classes than tasks) are rejected with an error
+//! instead of a panic.
+
+use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;
 
@@ -16,22 +22,32 @@ pub struct TaskSequence {
 }
 
 impl TaskSequence {
-    pub fn new(num_classes: usize, num_tasks: usize, seed: u64) -> TaskSequence {
-        assert!(num_tasks > 0 && num_classes % num_tasks == 0,
-                "classes {num_classes} not divisible into {num_tasks} tasks");
+    pub fn new(num_classes: usize, num_tasks: usize, seed: u64)
+               -> Result<TaskSequence> {
+        if num_tasks == 0 {
+            bail!("task sequence needs at least one task");
+        }
+        if num_classes < num_tasks {
+            bail!("{num_classes} classes cannot fill {num_tasks} tasks \
+                   (every task needs at least one class)");
+        }
         let mut ids: Vec<usize> = (0..num_classes).collect();
         Rng::new(seed ^ 0x7A5C5).shuffle(&mut ids);
-        let per = num_classes / num_tasks;
+        let base = num_classes / num_tasks;
+        let extra = num_classes % num_tasks;
         let mut classes = Vec::with_capacity(num_tasks);
         let mut task_of = vec![0usize; num_classes];
+        let mut at = 0usize;
         for t in 0..num_tasks {
-            let group: Vec<usize> = ids[t * per..(t + 1) * per].to_vec();
+            let take = base + usize::from(t < extra);
+            let group: Vec<usize> = ids[at..at + take].to_vec();
+            at += take;
             for &c in &group {
                 task_of[c] = t;
             }
             classes.push(group);
         }
-        TaskSequence { classes, task_of }
+        Ok(TaskSequence { classes, task_of })
     }
 
     pub fn num_tasks(&self) -> usize {
@@ -59,7 +75,7 @@ mod tests {
 
     #[test]
     fn disjoint_and_complete() {
-        let ts = TaskSequence::new(12, 4, 3);
+        let ts = TaskSequence::new(12, 4, 3).unwrap();
         assert_eq!(ts.num_tasks(), 4);
         let mut all: Vec<usize> = (0..4).flat_map(|t| ts.classes(t).to_vec()).collect();
         all.sort_unstable();
@@ -74,23 +90,45 @@ mod tests {
 
     #[test]
     fn up_to_accumulates() {
-        let ts = TaskSequence::new(8, 4, 1);
+        let ts = TaskSequence::new(8, 4, 1).unwrap();
         assert_eq!(ts.classes_up_to(0).len(), 2);
         assert_eq!(ts.classes_up_to(3).len(), 8);
     }
 
     #[test]
     fn seeded_shuffle_changes_assignment() {
-        let a = TaskSequence::new(100, 4, 1);
-        let b = TaskSequence::new(100, 4, 2);
+        let a = TaskSequence::new(100, 4, 1).unwrap();
+        let b = TaskSequence::new(100, 4, 2).unwrap();
         assert_ne!(a.classes(0), b.classes(0));
-        let c = TaskSequence::new(100, 4, 1);
+        let c = TaskSequence::new(100, 4, 1).unwrap();
         assert_eq!(a.classes(0), c.classes(0));
     }
 
     #[test]
-    #[should_panic]
-    fn rejects_indivisible() {
-        TaskSequence::new(10, 4, 0);
+    fn remainder_classes_spread_across_first_tasks() {
+        // 10 classes over 4 tasks: the 2 remainder classes land on tasks
+        // 0 and 1 → sizes [3, 3, 2, 2]; the split stays disjoint and
+        // complete and task_of agrees with the groups.
+        let ts = TaskSequence::new(10, 4, 0).unwrap();
+        let sizes: Vec<usize> = (0..4).map(|t| ts.classes(t).len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        let mut all: Vec<usize> =
+            (0..4).flat_map(|t| ts.classes(t).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        for t in 0..4 {
+            for &c in ts.classes(t) {
+                assert_eq!(ts.task_of_class(c), t);
+            }
+        }
+        assert_eq!(ts.classes_up_to(3).len(), 10);
+    }
+
+    #[test]
+    fn degenerate_geometries_rejected() {
+        assert!(TaskSequence::new(10, 0, 0).is_err(), "zero tasks");
+        assert!(TaskSequence::new(3, 4, 0).is_err(),
+                "fewer classes than tasks");
+        assert!(TaskSequence::new(4, 4, 1).is_ok(), "one class per task");
     }
 }

@@ -90,7 +90,7 @@ impl Session {
         }
         let dataset = self.dataset(cfg);
         let tasks = TaskSequence::new(cfg.data.num_classes, cfg.data.num_tasks,
-                                      cfg.data.seed);
+                                      cfg.data.seed)?;
         Trainer::new(cfg, exec, &dataset, &tasks).run()
     }
 }

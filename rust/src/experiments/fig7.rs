@@ -53,9 +53,13 @@ pub fn run(epochs_per_task: usize) -> Result<()> {
     println!("wrote {}", pa.display());
 
     // ---- 7b: projected runtime vs N (paper geometry) -------------------
+    // `reduce_hidden_ms_proj` surfaces the PR-6 overlap term: per-iteration
+    // fold time hidden inside the backward window by the layer-streamed
+    // buckets (already subtracted from the Train bar / total runtime).
     let mut b = CsvWriter::new(
         &results_dir().join("fig7b.csv"),
-        &["model", "strategy", "workers", "total_runtime_s_proj"],
+        &["model", "strategy", "workers", "total_runtime_s_proj",
+          "reduce_hidden_ms_proj"],
     )?;
     let pm = PerfModel::new(CostModel::default(), PerfConstants::default());
     // Paper geometry: 4 tasks x 250 classes x ~1300 imgs, 30 epochs/task.
@@ -66,9 +70,14 @@ pub fn run(epochs_per_task: usize) -> Result<()> {
             for n in PROJECTED_N {
                 let proj = pm.run(class, strategy, n, 56, 7, 14, 4, 30,
                                   samples_per_task, true);
+                let hidden = match strategy {
+                    Strategy::Rehearsal =>
+                        pm.iteration(class, n, 56, 7, 14).reduce_hidden_ms,
+                    _ => pm.iteration(class, n, 56, 0, 0).reduce_hidden_ms,
+                };
                 b.row(&[
                     variant.into(), strategy.name().into(), n.to_string(),
-                    f(proj.total.as_secs_f64()),
+                    f(proj.total.as_secs_f64()), f(hidden),
                 ])?;
             }
         }

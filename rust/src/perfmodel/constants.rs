@@ -65,6 +65,12 @@ pub struct PerfConstants {
     pub sample_bytes: usize,
     /// Fraction of the all-reduce hidden behind the backward pass.
     pub allreduce_overlap: f64,
+    /// Fraction of the compute window that is the backward pass — the
+    /// window the layer-streamed bucket fold (PR 6) can hide inside:
+    /// buckets are submitted and eagerly folded while the lower layers'
+    /// backward is still running. Backward ≈ 2× forward cost for dense
+    /// nets → ~2/3 of the step.
+    pub backward_frac: f64,
     /// Host-side gradient fold + fused SGD update throughput per worker,
     /// in 1e9 elements/second (f64 slot adds plus the f32 update over
     /// cache-streamed spans; AVX2-class core). Prices the chunk-parallel
@@ -81,6 +87,7 @@ impl Default for PerfConstants {
             op_overhead_us: 0.5,
             sample_bytes: 64 * 1024,
             allreduce_overlap: 0.5,
+            backward_frac: 0.66,
             reduce_gelems: 4.0,
         }
     }

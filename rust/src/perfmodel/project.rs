@@ -16,11 +16,18 @@ pub struct IterationProjection {
     /// Exposed (non-overlapped) all-reduce time, included in `train_ms`
     /// (the paper's Train bar includes Horovod's reduction stalls).
     pub allreduce_exposed_ms: f64,
-    /// Chunk-parallel gradient fold + fused SGD update compute, included
-    /// in `train_ms`: spread over all N workers it scales as
-    /// `P·(1 + 1/N)` per worker (the pre-PR-5 serial leader fold was
-    /// `P·(N + 1)` on one thread).
+    /// *Exposed* share of the chunk-parallel gradient fold + fused SGD
+    /// update compute, included in `train_ms`. The per-worker term is
+    /// `P·(1 + 1/N)` (the pre-PR-5 serial leader fold was `P·(N + 1)` on
+    /// one thread); since PR 6 the fold half (`P`) streams bucket-by-
+    /// bucket inside the backward window, so only what exceeds that
+    /// window — plus the between-barriers update (`P/N`), which can never
+    /// hide — stays on the Train bar. `reduce_ms + reduce_hidden_ms`
+    /// always equals the full `P·(1 + 1/N)` term.
     pub reduce_ms: f64,
+    /// Share of the fold hidden inside the backward window by the PR-6
+    /// layer-streamed buckets (`min(fold, backward_frac · compute)`).
+    pub reduce_hidden_ms: f64,
     pub populate_ms: f64,
     pub augment_ms: f64,
     /// Foreground critical path (what the training loop experiences).
@@ -83,19 +90,24 @@ impl PerfModel {
         let rows = b + r;
 
         // Foreground: prefetched load + compute + exposed all-reduce +
-        // the chunk-parallel reduce compute. The serial O(N·P) leader
-        // fold of the pre-PR-5 protocol is now spread across all N
-        // workers: each folds the N slot partials of its P/N-element
-        // share (P element-adds) and applies the fused update there
-        // (P/N more), so the per-worker term is P·(1 + 1/N).
+        // the exposed share of the chunk-parallel reduce compute. The
+        // serial O(N·P) leader fold of the pre-PR-5 protocol is spread
+        // across all N workers: each folds the N slot partials of its
+        // P/N-element share (P element-adds) and applies the fused update
+        // there (P/N more), so the per-worker term is P·(1 + 1/N). Since
+        // PR 6 the fold half streams bucket-by-bucket inside the backward
+        // window (backward_frac of compute) and only its overflow is
+        // exposed; the update runs between the barriers and never hides.
         let load_ms = b as f64 * k.load_us_per_image / 1e3;
         let compute_ms = rows as f64 / model.a100_img_per_sec() * 1e3;
         let ar = ring_allreduce_cost(&self.cost, n, model.grad_bytes());
         let allreduce_exposed_ms =
             ar.as_secs_f64() * 1e3 * (1.0 - k.allreduce_overlap);
         let p_elems = (model.grad_bytes() / 4) as f64;
-        let reduce_ms =
-            p_elems * (1.0 + 1.0 / n as f64) / (k.reduce_gelems * 1e9) * 1e3;
+        let fold_ms = p_elems / (k.reduce_gelems * 1e9) * 1e3;
+        let update_ms = fold_ms / n as f64;
+        let reduce_hidden_ms = fold_ms.min(compute_ms * k.backward_frac);
+        let reduce_ms = fold_ms + update_ms - reduce_hidden_ms;
         let train_ms = compute_ms + allreduce_exposed_ms + reduce_ms;
         let foreground_ms = load_ms + train_ms;
 
@@ -147,6 +159,7 @@ impl PerfModel {
             train_ms,
             allreduce_exposed_ms,
             reduce_ms,
+            reduce_hidden_ms,
             populate_ms,
             augment_ms,
             foreground_ms,
@@ -291,19 +304,29 @@ mod tests {
 
     #[test]
     fn reduce_term_parallelizes_with_workers() {
-        // The chunk-parallel reduce compute is divided across workers:
-        // P·(1 + 1/N) per worker, strictly shrinking with N toward the
-        // P/rate asymptote, and it rides the Train bar.
+        // The chunk-parallel reduce compute is divided across workers —
+        // P·(1 + 1/N) per worker — and since PR 6 the fold half streams
+        // inside the backward window: exposed + hidden always equals the
+        // full term, the hidden share is positive whenever backward has
+        // room, and only the exposed share rides the Train bar.
         let pm = model();
         let k = PerfConstants::default();
         let p_elems = (ModelClass::ResNet50.grad_bytes() / 4) as f64;
-        let want = |n: f64| p_elems * (1.0 + 1.0 / n)
+        let total = |n: f64| p_elems * (1.0 + 1.0 / n)
             / (k.reduce_gelems * 1e9) * 1e3;
         let i2 = pm.iteration(ModelClass::ResNet50, 2, 56, 7, 14);
         let i64 = pm.iteration(ModelClass::ResNet50, 64, 56, 7, 14);
-        assert!(i64.reduce_ms < i2.reduce_ms);
-        assert!((i2.reduce_ms - want(2.0)).abs() < 1e-9, "{}", i2.reduce_ms);
-        assert!((i64.reduce_ms - want(64.0)).abs() < 1e-9);
+        assert!((i2.reduce_ms + i2.reduce_hidden_ms - total(2.0)).abs() < 1e-9,
+                "exposed {} + hidden {}", i2.reduce_ms, i2.reduce_hidden_ms);
+        assert!((i64.reduce_ms + i64.reduce_hidden_ms - total(64.0)).abs()
+                < 1e-9);
+        assert!(i2.reduce_hidden_ms > 0.0, "backward must hide some fold");
+        assert!(i64.reduce_ms < i2.reduce_ms, "exposed share shrinks with N");
+        // ResNet-50's whole fold fits inside the backward window, so the
+        // exposed share is exactly the un-hidable P/N update term.
+        let update = |n: f64| p_elems / n / (k.reduce_gelems * 1e9) * 1e3;
+        assert!((i2.reduce_ms - update(2.0)).abs() < 1e-9,
+                "{}", i2.reduce_ms);
         // included in the Train bar, alongside the exposed all-reduce
         let compute = (56.0 + 7.0) / ModelClass::ResNet50.a100_img_per_sec()
             * 1e3;

@@ -39,6 +39,14 @@ use super::kernels;
 use super::workspace::StepWorkspace;
 pub use super::literal::{literal_to_vec, make_literal, Literal};
 
+/// Bucket-ready callback for the streamed backward pass (PR 6): invoked
+/// once per layer, in backward order (last layer first), the moment that
+/// layer's `(dW, db)` pair is final in the workspace slabs. The slice is
+/// the layer's two gradient [`Literal`]s (borrowed, no copy) — exactly
+/// [`StepWorkspace::layer_grads`]. An error aborts the step and
+/// propagates; the remaining layers are not computed.
+pub type BucketSink<'a> = dyn FnMut(usize, &[Literal]) -> Result<()> + 'a;
+
 /// Result of one train step (before all-reduce) — the one-shot wrapper
 /// shape; the workspace path returns [`StepStats`] and leaves the
 /// gradients in the workspace slabs.
@@ -173,6 +181,14 @@ impl ModelExecutor {
         self.meta.train_aug_files.keys().next_back().copied().unwrap_or(0)
     }
 
+    /// Number of dense layers — equivalently, the number of per-layer
+    /// `(dW, db)` gradient buckets the streamed backward emits. The
+    /// trainer checks this against
+    /// [`crate::cluster::ChunkPlan::num_buckets`] before streaming.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
     /// Build the per-worker step scratch: one call per worker thread, then
     /// reused for every iteration (the `*_with` paths allocate nothing).
     /// Sized for `batch + max_reps` train rows and `eval_batch` eval rows.
@@ -286,12 +302,17 @@ impl ModelExecutor {
         (loss_sum, top1, top5)
     }
 
-    /// Backward pass over the workspace: `ws.dz_a[..rows*K]` holds the
-    /// logit gradients on entry; gradients land in `ws.grads` (manifest
-    /// order), fully overwritten. The ReLU mask of the `dz·Wᵀ` hop is
-    /// fused into the blocked GEMM's epilogue.
-    fn backward_ws(&self, params: &[Literal], rows: usize,
-                   ws: &mut StepWorkspace) {
+    /// Backward pass over the workspace, **layer-streamed** (PR 6):
+    /// `ws.dz_a[..rows*K]` holds the logit gradients on entry; gradients
+    /// land in `ws.grads` (manifest order), fully overwritten. After each
+    /// layer's `(dW, db)` pair is final — and *before* the `dz·Wᵀ` hop
+    /// that feeds the next (lower) layer — `sink` is invoked with the
+    /// pair, so the caller can ship bucket `l` while layers `l-1..0` are
+    /// still computing. The ReLU mask of the `dz·Wᵀ` hop is fused into
+    /// the blocked GEMM's epilogue.
+    fn backward_ws_streamed(&self, params: &[Literal], rows: usize,
+                            ws: &mut StepWorkspace,
+                            sink: &mut BucketSink<'_>) -> Result<()> {
         let StepWorkspace { xs, acts, dz_a, dz_b, pack, grads, .. } = ws;
         let mut dz: &mut Vec<f32> = dz_a;
         let mut dz_next: &mut Vec<f32> = dz_b;
@@ -308,6 +329,8 @@ impl ModelExecutor {
             kernels::gemm_at_b(a, rows, fan_in, dzs, fan_out, pack,
                                gleft[2 * l].data_mut());
             kernels::col_sums(dzs, rows, fan_out, gright[0].data_mut());
+            // bucket l is final: hand it off before computing the hop
+            sink(l, &grads[2 * l..2 * l + 2])?;
             if l > 0 {
                 // dh = dz·Wᵀ, masked by the ReLU of the previous layer.
                 let w = params[2 * l].data();
@@ -316,11 +339,14 @@ impl ModelExecutor {
                 std::mem::swap(&mut dz, &mut dz_next);
             }
         }
+        Ok(())
     }
 
-    /// Full fwd/loss/bwd over `rows` already-loaded workspace rows.
-    fn step_ws(&self, params: &[Literal], rows: usize,
-               ws: &mut StepWorkspace) -> StepStats {
+    /// Full fwd/loss/bwd over `rows` already-loaded workspace rows, with a
+    /// bucket sink streaming each layer's gradients as backward descends.
+    fn step_ws_streamed(&self, params: &[Literal], rows: usize,
+                        ws: &mut StepWorkspace,
+                        sink: &mut BucketSink<'_>) -> Result<StepStats> {
         self.forward_ws(params, rows, ws);
         let scale = 1.0 / rows as f32;
         let k = self.layers.last().expect("at least one layer").1;
@@ -330,26 +356,48 @@ impl ModelExecutor {
             self.loss_and_counts(logits, &ys[..rows], rows, Some(scale),
                                  Some(&mut dz_a[..rows * k]))
         };
-        self.backward_ws(params, rows, ws);
-        StepStats {
+        self.backward_ws_streamed(params, rows, ws, sink)?;
+        Ok(StepStats {
             loss: (loss_sum / rows as f64) as f32,
             top1: top1 as f32,
             top5: top5 as f32,
-        }
+        })
+    }
+
+    /// Full fwd/loss/bwd over `rows` already-loaded workspace rows.
+    fn step_ws(&self, params: &[Literal], rows: usize,
+               ws: &mut StepWorkspace) -> StepStats {
+        self.step_ws_streamed(params, rows, ws, &mut |_, _| Ok(()))
+            .expect("no-op sink cannot fail")
+    }
+
+    /// Plain step with a streamed backward: `sink` receives each layer's
+    /// `(dW, db)` bucket the moment it is final (last layer first), while
+    /// the lower layers' backward is still running — the overlap window
+    /// the chunk-parallel trainer folds eagerly into. Identical bits to
+    /// [`train_step_with`](Self::train_step_with): the sink only observes
+    /// slabs, it never changes what is computed. Sink time rides
+    /// `train_ns` (it executes inside the step); a sink error aborts the
+    /// step before the stats are counted.
+    pub fn train_step_streamed_with(&self, params: &[Literal], batch: &Batch,
+                                    ws: &mut StepWorkspace,
+                                    sink: &mut BucketSink<'_>)
+                                    -> Result<StepStats> {
+        let rows = self.batch;
+        self.check_workspace(ws, rows)?;
+        self.load_rows(ws, &batch.samples, 0, rows)?;
+        let t0 = Instant::now();
+        let out = self.step_ws_streamed(params, rows, ws, sink)?;
+        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
     }
 
     /// Plain step over a size-b batch against a reusable workspace:
     /// allocation-free in steady state; gradients land in `ws.grads`.
     pub fn train_step_with(&self, params: &[Literal], batch: &Batch,
                            ws: &mut StepWorkspace) -> Result<StepStats> {
-        let rows = self.batch;
-        self.check_workspace(ws, rows)?;
-        self.load_rows(ws, &batch.samples, 0, rows)?;
-        let t0 = Instant::now();
-        let out = self.step_ws(params, rows, ws);
-        self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
-        Ok(out)
+        self.train_step_streamed_with(params, batch, ws, &mut |_, _| Ok(()))
     }
 
     /// Rehearsal step against a reusable workspace: b-batch + r
@@ -363,6 +411,19 @@ impl ModelExecutor {
     pub fn train_step_aug_with(&self, params: &[Literal], batch: &Batch,
                                reps: &Batch, ws: &mut StepWorkspace)
                                -> Result<StepStats> {
+        self.train_step_aug_streamed_with(params, batch, reps, ws,
+                                          &mut |_, _| Ok(()))
+    }
+
+    /// Rehearsal step with a streamed backward — the augmented twin of
+    /// [`train_step_streamed_with`](Self::train_step_streamed_with); same
+    /// r-validation contract as
+    /// [`train_step_aug_with`](Self::train_step_aug_with).
+    pub fn train_step_aug_streamed_with(&self, params: &[Literal],
+                                        batch: &Batch, reps: &Batch,
+                                        ws: &mut StepWorkspace,
+                                        sink: &mut BucketSink<'_>)
+                                        -> Result<StepStats> {
         let r = reps.len();
         if r == 0 {
             return Err(anyhow!("augmented step needs at least one \
@@ -378,7 +439,7 @@ impl ModelExecutor {
         self.load_rows(ws, &batch.samples, 0, self.batch)?;
         self.load_rows(ws, &reps.samples, self.batch, r)?;
         let t0 = Instant::now();
-        let out = self.step_ws(params, rows, ws);
+        let out = self.step_ws_streamed(params, rows, ws, sink)?;
         self.stats.train_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
         self.stats.train_aug_steps.fetch_add(1, Ordering::Relaxed);
@@ -844,6 +905,67 @@ mod tests {
         let mut ws2 = exec.make_workspace();
         let s1c = exec.train_step_with(&params, &b1, &mut ws2).unwrap();
         assert_eq!(s1.loss, s1c.loss);
+    }
+
+    #[test]
+    fn streamed_step_matches_plain_step_exactly() {
+        // The bucket sink only observes slabs: the streamed step must
+        // reproduce the plain step bit-for-bit, emit buckets in backward
+        // order (last layer first), and hand out the workspace's own
+        // gradient slabs (no copies).
+        let exec = tiny_exec();
+        let (params, _) = exec.init_state().unwrap();
+        let b = batch(&exec, 8, 60);
+        let reps = batch(&exec, 2, 61);
+        let mut ws = exec.make_workspace();
+        let plain = exec.train_step_with(&params, &b, &mut ws).unwrap();
+        let g_plain: Vec<Vec<f32>> =
+            ws.grads().iter().map(|g| g.data().to_vec()).collect();
+
+        let mut ws2 = exec.make_workspace();
+        let mut order: Vec<usize> = Vec::new();
+        let mut ptrs: Vec<usize> = Vec::new();
+        let streamed = exec.train_step_streamed_with(
+            &params, &b, &mut ws2,
+            &mut |l, g| {
+                assert_eq!(g.len(), 2, "bucket is one (dW, db) pair");
+                order.push(l);
+                ptrs.push(g[0].data().as_ptr() as usize);
+                Ok(())
+            }).unwrap();
+        assert_eq!(streamed.loss, plain.loss);
+        assert_eq!(streamed.top1, plain.top1);
+        assert_eq!(streamed.top5, plain.top5);
+        let want_order: Vec<usize> = (0..exec.num_layers()).rev().collect();
+        assert_eq!(order, want_order, "buckets arrive last layer first");
+        for (&l, &p) in order.iter().zip(&ptrs) {
+            assert_eq!(p, ws2.layer_grads(l)[0].data().as_ptr() as usize,
+                       "sink must see the workspace slab, not a copy");
+        }
+        for (g2, want) in ws2.grads().iter().zip(&g_plain) {
+            assert_eq!(g2.data(), &want[..], "streamed grads diverged");
+        }
+        assert_eq!(ws2.num_layer_buckets(), exec.num_layers());
+
+        // augmented twin agrees with the plain augmented step
+        let aug = exec.train_step_aug_with(&params, &b, &reps, &mut ws).unwrap();
+        let g_aug: Vec<Vec<f32>> =
+            ws.grads().iter().map(|g| g.data().to_vec()).collect();
+        let aug_s = exec.train_step_aug_streamed_with(
+            &params, &b, &reps, &mut ws2, &mut |_, _| Ok(())).unwrap();
+        assert_eq!(aug_s.loss, aug.loss);
+        for (g2, want) in ws2.grads().iter().zip(&g_aug) {
+            assert_eq!(g2.data(), &want[..], "streamed aug grads diverged");
+        }
+
+        // a sink error aborts the step and is not counted as a train step
+        let steps_before = exec.stats.train_steps.load(Ordering::Relaxed);
+        let err = exec.train_step_streamed_with(
+            &params, &b, &mut ws2,
+            &mut |l, _| if l == 0 { bail!("sink refused") } else { Ok(()) });
+        assert!(err.is_err(), "sink error must propagate");
+        assert_eq!(exec.stats.train_steps.load(Ordering::Relaxed),
+                   steps_before, "failed step must not count");
     }
 
     #[test]

@@ -84,6 +84,19 @@ impl StepWorkspace {
         &self.grads
     }
 
+    /// Layer `l`'s gradient pair `(dW, db)` — the slab views the streamed
+    /// backward hands to its bucket sink the moment the pair is final
+    /// (bucket `l` of [`crate::cluster::ChunkPlan`]'s layer-bucket
+    /// geometry). Borrowed straight from the workspace slabs: no copy.
+    pub fn layer_grads(&self, l: usize) -> &[Literal] {
+        &self.grads[2 * l..2 * l + 2]
+    }
+
+    /// Number of per-layer gradient buckets (`(dW, db)` pairs).
+    pub fn num_layer_buckets(&self) -> usize {
+        self.grads.len() / 2
+    }
+
     /// Move the gradient slabs out (one-shot wrapper paths).
     pub fn into_grads(self) -> Vec<Literal> {
         self.grads

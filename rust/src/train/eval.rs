@@ -89,7 +89,7 @@ mod tests {
             augment: false,
             seed: 17,
         });
-        let tasks = TaskSequence::new(4, 2, 17);
+        let tasks = TaskSequence::new(4, 2, 17).unwrap();
         (exec, dataset, tasks)
     }
 

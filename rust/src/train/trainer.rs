@@ -19,29 +19,39 @@
 //! loops — the paper's overlap claim is exercised under real concurrency),
 //! and its [`WorkerBreakdown`]. The per-iteration protocol is
 //! barrier-synchronised synchronous data parallelism with a
-//! **chunk-parallel reduce-scatter + update** (PR 5):
+//! **layer-streamed, chunk-parallel reduce-scatter + update** (PR 5 + 6):
 //!
-//! 1. every worker runs load → `engine.update()` → `train_step_with`
-//!    (against its private, reused `StepWorkspace` — the steady-state
-//!    step path allocates nothing) concurrently, then submits the
-//!    workspace-resident gradients to its own shard of the
-//!    [`GradAccumulator`];
+//! 1. every worker runs load → `engine.update()` →
+//!    `train_step_streamed_with` (against its private, reused
+//!    `StepWorkspace` — the steady-state step path allocates nothing)
+//!    concurrently. The step's bucket sink submits each layer's
+//!    `(dW, db)` pair to the worker's own [`GradAccumulator`] slot via
+//!    `submit_bucket` the moment backward finalises it — last layer
+//!    first, while the lower layers are still computing — and then calls
+//!    `fold_ready`, which eagerly folds any of this worker's owned
+//!    chunk∩bucket regions whose bucket has arrived from **all** workers.
+//!    Most of the reduce-scatter therefore happens inside the backward
+//!    window, before any barrier;
 //! 2. all workers rendezvous at a [`Barrier`]; between the barriers the
 //!    flattened parameter space — pre-partitioned by a
 //!    [`ChunkPlan`](crate::cluster::ChunkPlan) into `C ≥ N` contiguous
 //!    chunks with a static owner map (chunk `j` → worker `j mod N`) —
-//!    is reduced by **every** worker, not a lone leader: each folds its
-//!    owned chunks across all gradient slots **in slot order** (the fold
-//!    is arrival-order independent and bit-identical to the sequential
-//!    reduce for any chunk count, so a fixed seed at `workers = 1`
-//!    reproduces the sequential implementation's report exactly),
-//!    computes the chunk mean, and applies the fused SGD update in place
-//!    to its owned parameter/momentum ranges through pre-captured
-//!    disjoint slab views. The old serial O(N·P) leader fold is now
-//!    ~O(P·(1 + 1/N)) work per worker;
+//!    is *finished* by **every** worker, not a lone leader: each folds
+//!    whatever of its owned regions the eager path had not yet claimed
+//!    (stragglers' last buckets), always across all gradient slots **in
+//!    slot order** (the fold is arrival-order independent and
+//!    bit-identical to the sequential reduce for any chunk count and any
+//!    bucket arrival order, so a fixed seed at `workers = 1` reproduces
+//!    the sequential implementation's report exactly), computes the
+//!    chunk mean, and applies the fused SGD update in place to its owned
+//!    parameter/momentum ranges through pre-captured disjoint slab
+//!    views. The old serial O(N·P) leader fold is now ~O(P·(1 + 1/N))
+//!    work per worker, and the fold's exposed (post-barrier) share
+//!    shrinks further by whatever the backward window hid;
 //! 3. the second barrier is the **all-gather**: it publishes every
 //!    chunk's update to the next iteration's readers, after which each
-//!    worker retires its own gradient slot for the next round.
+//!    worker retires its own gradient slot — and re-arms its owned
+//!    chunks' readiness guards — for the next round.
 //!
 //! Concurrency invariants: parameters are written ONLY between the two
 //! barriers, where each worker holds **exclusive ownership of its owned
@@ -49,11 +59,15 @@
 //! holds the parameter `RwLock` — the lock still guards the
 //! epoch-boundary accesses (coordinator eval reads, from-scratch resets,
 //! which overwrite in place so the captured slab views stay valid) and
-//! the workers' in-iteration reads. Gradient shards are per-worker (no
-//! contention on the hot add); worker errors poison the run instead of
-//! abandoning the barrier, so the remaining workers drain the epoch and
-//! the error is reported at the epoch boundary; every worker, loader and
-//! engine thread is joined before `drive()` returns.
+//! the workers' in-iteration reads. Eager folds are safe *under* that
+//! read lock because they write only the accumulator's own f64 chunk
+//! scratch, never the parameters. Gradient shards are per-worker (no
+//! contention on the hot add); per-region fold-once guards plus
+//! monotonic bucket-readiness counters make eager and finish folds
+//! race-free (see `cluster::allreduce`); worker errors poison the run
+//! instead of abandoning the barrier, so the remaining workers drain the
+//! epoch and the error is reported at the epoch boundary; every worker,
+//! loader and engine thread is joined before `drive()` returns.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -350,6 +364,11 @@ impl<'a> Trainer<'a> {
             c => c,
         };
         let acc = GradAccumulator::with_chunks(shapes, n, chunks);
+        if acc.plan().num_buckets() != self.exec.num_layers() {
+            bail!("accumulator bucket count {} != executor layer count {} \
+                   (streamed submit would desync)",
+                  acc.plan().num_buckets(), self.exec.num_layers());
+        }
         let allreduce_bytes = acc.payload_bytes();
 
         let state = RwLock::new(ParamState { params: params0, moms: moms0 });
@@ -633,7 +652,9 @@ fn worker_loop(w: usize,
 }
 
 /// One worker's foreground half of an iteration: load, Listing-1 update,
-/// train step (against this worker's reusable workspace), gradient submit.
+/// streamed train step (against this worker's reusable workspace) whose
+/// bucket sink submits each layer's gradients and eagerly folds whatever
+/// owned regions became ready — the PR 6 overlap window.
 fn worker_iteration(w: usize,
                     shared: &Shared<'_>,
                     loader: &mut Loader,
@@ -662,12 +683,24 @@ fn worker_iteration(w: usize,
     let t1 = Instant::now();
     let out = {
         let st = shared.state.read().unwrap();
+        // Streamed submit: backward's sink ships bucket l (layer l's
+        // (dW, db), straight from the workspace slabs) and immediately
+        // tries to fold any of this worker's owned regions whose bucket
+        // has arrived from everyone — reduction overlapped with the rest
+        // of backward. Eager folds only write the accumulator's own f64
+        // scratch, so running them under this read lock is safe.
+        let mut sink = |bucket: usize, grads: &[Literal]| -> Result<()> {
+            shared.acc.submit_bucket(w, bucket, grads)?;
+            shared.acc.fold_ready(w)?;
+            Ok(())
+        };
         if reps_len > 0 {
             let reps_batch = Batch::new(reps);
-            shared.exec.train_step_aug_with(&st.params, &batch, &reps_batch,
-                                            ws)?
+            shared.exec.train_step_aug_streamed_with(
+                &st.params, &batch, &reps_batch, ws, &mut sink)?
         } else {
-            shared.exec.train_step_with(&st.params, &batch, ws)?
+            shared.exec.train_step_streamed_with(
+                &st.params, &batch, ws, &mut sink)?
         }
     };
     shared.breakdown[w].add_train(t1.elapsed());
@@ -675,21 +708,26 @@ fn worker_iteration(w: usize,
 
     // loss is a per-row mean, top5 a correct-count: TrainMetrics weights
     // them consistently (see metrics::breakdown) by the rows actually
-    // trained on, not the configured b + r. The gradients stay in the
-    // workspace slabs; the accumulator reads them in place.
+    // trained on, not the configured b + r. The gradients were already
+    // streamed into this worker's accumulator slot bucket-by-bucket
+    // during backward; one last poll catches regions whose final bucket
+    // arrived from a peer after our own backward finished.
     let rows = batch.len() + reps_len;
     metrics.add_step(out.loss as f64, out.top5 as f64, rows as f64);
-    shared.acc.submit(w, ws.grads())?;
+    shared.acc.fold_ready(w)?;
     Ok(())
 }
 
-/// Every worker's between-barriers half: fold the chunks this worker owns
-/// across all gradient slots (ascending slot order — arrival-order
-/// independent and bit-identical to the sequential reduce) and apply the
-/// fused SGD update to the owned parameter/momentum ranges through the
-/// pre-captured slab views. The old serial O(N·P) leader fold becomes
-/// ~O(P·(1 + 1/N)) work per worker, with no per-iteration allocation —
-/// the chunk scratch lives in the accumulator.
+/// Every worker's between-barriers half — the **finish path**: fold
+/// whatever owned regions the eager streamed path had not yet claimed
+/// (always ascending slot order — arrival-order independent and
+/// bit-identical to the sequential reduce), publish each owned chunk's
+/// mean, and apply the fused SGD update to the owned parameter/momentum
+/// ranges through the pre-captured slab views. In steady state the eager
+/// folds have already done most of the work inside the backward window;
+/// the old serial O(N·P) leader fold remains bounded by ~O(P·(1 + 1/N))
+/// work per worker even when nothing overlapped, with no per-iteration
+/// allocation — the chunk scratch lives in the accumulator.
 fn chunk_update(w: usize, shared: &Shared<'_>, lr: f64) -> Result<()> {
     let plan = shared.acc.plan();
     // Counts are stable between the barriers (all submitters quiesced),
@@ -745,7 +783,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunReport> {
                                   &[cfg.training.reps])?;
     let dataset = Dataset::generate(&cfg.data);
     let tasks = TaskSequence::new(cfg.data.num_classes, cfg.data.num_tasks,
-                                  cfg.data.seed);
+                                  cfg.data.seed)?;
     let trainer = Trainer::new(cfg, &exec, &dataset, &tasks);
     trainer.run()
 }
@@ -805,7 +843,7 @@ mod tests {
                                       &[cfg.training.reps]).unwrap();
         let dataset = crate::data::Dataset::generate(&cfg.data);
         let tasks = crate::data::TaskSequence::new(
-            cfg.data.num_classes, cfg.data.num_tasks, cfg.data.seed);
+            cfg.data.num_classes, cfg.data.num_tasks, cfg.data.seed).unwrap();
         let trainer = Trainer::new(&cfg, &exec, &dataset, &tasks);
         let report = trainer.run().expect("partial-rep rehearsal run");
         assert!(report.iterations > 2);

@@ -1,12 +1,15 @@
-//! Pins the PR-4/PR-5 tentpole invariant: a steady-state training
+//! Pins the PR-4/PR-5/PR-6 tentpole invariant: a steady-state training
 //! iteration — flatten → blocked fwd/bwd (`train_step_with` /
 //! `train_step_aug_with`) → `submit` → reduce → update — performs **zero
 //! heap allocations** once the per-worker [`StepWorkspace`] and the
-//! accumulator's reduce scratch are warm. Both reduce paths are pinned:
-//! the sequential `reduce_with` + `apply_update_in`, and the PR-5
+//! accumulator's reduce scratch are warm. All three reduce paths are
+//! pinned: the sequential `reduce_with` + `apply_update_in`; the PR-5
 //! chunk-parallel `reduce_chunk_with` + range-limited `apply_update_span`
 //! (per-chunk scratch built once at accumulator construction, segment
-//! walking allocation-free).
+//! walking allocation-free); and the PR-6 layer-streamed path
+//! (`train_step_streamed_with` whose sink runs `submit_bucket` +
+//! `fold_ready` per bucket — per-bucket readiness counters and per-region
+//! fold guards are all preallocated at accumulator construction).
 //!
 //! Mechanism: a counting `#[global_allocator]` wrapping `System`. This
 //! file deliberately holds a single `#[test]` so no sibling test thread
@@ -72,7 +75,11 @@ fn steady_state_train_iteration_allocates_nothing() {
     // Chunk-parallel accumulator: C = 3 over this model's parameter count
     // divides nothing, so chunks cross tensor boundaries and the segment
     // walk is exercised; one worker legally owns every chunk.
-    let acc_c = GradAccumulator::with_chunks(shapes, 1, 3);
+    let acc_c = GradAccumulator::with_chunks(shapes.clone(), 1, 3);
+    // Streamed accumulator: same geometry, fed bucket-by-bucket from the
+    // backward sink with eager folds (N = 1, so every bucket is ready the
+    // moment this worker submits it).
+    let acc_s = GradAccumulator::with_chunks(shapes, 1, 3);
     let cost = CostModel::default();
     let mut ws = exec.make_workspace();
     let plain = batch(dim, classes, b, 1);
@@ -125,12 +132,54 @@ fn steady_state_train_iteration_allocates_nothing() {
         acc_c.end_round(0).unwrap();
     };
 
+    // The PR-6 layer-streamed iteration: backward's sink submits each
+    // (dW, db) bucket and eagerly folds the regions it completed, then
+    // the finish path publishes the (already-folded) chunks and applies
+    // the fused update per segment.
+    let streamed_iteration = |params: &mut Vec<Literal>,
+                              moms: &mut Vec<Literal>,
+                              ws: &mut dcl::runtime::StepWorkspace,
+                              augmented: bool| {
+        let stats = {
+            let mut sink = |b: usize, g: &[Literal]| -> anyhow::Result<()> {
+                acc_s.submit_bucket(0, b, g)?;
+                acc_s.fold_ready(0)?;
+                Ok(())
+            };
+            if augmented {
+                exec.train_step_aug_streamed_with(params, &aug_b, &reps, ws,
+                                                  &mut sink).unwrap()
+            } else {
+                exec.train_step_streamed_with(params, &plain, ws, &mut sink)
+                    .unwrap()
+            }
+        };
+        assert!(stats.loss.is_finite());
+        let replicas = acc_s.replicas();
+        let plan = acc_s.plan();
+        for chunk in plan.owned_by(0) {
+            acc_s.reduce_chunk_with(chunk, replicas, |mean| {
+                for seg in plan.segments(chunk) {
+                    let g = &mean[seg.chunk_off..seg.chunk_off + seg.len()];
+                    let decay = params[seg.tensor].shape().len() > 1;
+                    exec.apply_update_span(
+                        &mut params[seg.tensor].data_mut()[seg.start..seg.end],
+                        &mut moms[seg.tensor].data_mut()[seg.start..seg.end],
+                        g, decay, 0.05);
+                }
+                Ok(())
+            }).unwrap();
+        }
+        acc_s.end_round(0).unwrap();
+    };
+
     // Warm-up: first touches may fault in lazily-initialised runtime
     // state (timer calibration, lock shadows) besides filling the
-    // workspace slabs and both accumulators' scratch.
+    // workspace slabs and the accumulators' scratch.
     for i in 0..3 {
         one_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
         chunk_iteration(&mut params, &mut moms, &mut ws, i % 2 == 0);
+        streamed_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
     }
 
     let slab0 = ws.grads()[0].data().as_ptr() as usize;
@@ -138,11 +187,13 @@ fn steady_state_train_iteration_allocates_nothing() {
     for i in 0..10 {
         one_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
         chunk_iteration(&mut params, &mut moms, &mut ws, i % 2 == 0);
+        streamed_iteration(&mut params, &mut moms, &mut ws, i % 2 == 1);
     }
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert_eq!(after - before, 0,
-               "steady-state train iterations (sequential + chunked reduce) \
-                must not allocate ({} allocator calls in 10 iterations)",
+               "steady-state train iterations (sequential + chunked + \
+                streamed reduce) must not allocate ({} allocator calls in \
+                10 iterations)",
                after - before);
     assert_eq!(ws.grads()[0].data().as_ptr() as usize, slab0,
                "gradient slab moved despite zero allocations");

@@ -9,6 +9,8 @@
 //! bench_gate merge  [--dir target/bench_results] [--out BENCH_ci.json]
 //! bench_gate check  [--current BENCH_ci.json] [--baseline ci/bench_baseline.json]
 //! bench_gate update [--current BENCH_ci.json] [--baseline ci/bench_baseline.json]
+//! bench_gate record [--current BENCH_ci.json] [--baseline ci/bench_baseline.json]
+//!                   [--out bench_baseline_candidate.json]
 //! ```
 //!
 //! `check` fails (non-zero exit) when any baseline metric regresses by more
@@ -19,6 +21,13 @@
 //! the baseline file for committing). A metric missing from the current
 //! results fails the gate: renaming a bench must not silently disable its
 //! guardrail.
+//!
+//! `record` is `update` aimed at a *candidate* file: it writes the
+//! refreshed baseline (every gated metric filled with this run's measured
+//! value) to `--out`, leaving the committed baseline untouched. CI uploads
+//! the candidate as an artifact on every run, so arming a record-only
+//! entry — or refreshing a stale one — is a download-review-commit away
+//! instead of requiring a local bench run on the CI machine class.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -28,10 +37,13 @@ use anyhow::{anyhow, bail, Context, Result};
 use dcl::cli::Args;
 use dcl::formats::json::Json;
 
-const USAGE: &str = "usage: bench_gate <merge|check|update> [--flag value ...]
+const USAGE: &str = "usage: bench_gate <merge|check|update|record> [--flag value ...]
   merge  --dir DIR --out FILE        collect bench CSVs into one JSON
   check  --current FILE --baseline FILE   fail on >tolerance regressions
-  update --current FILE --baseline FILE   write measured values into baseline";
+  update --current FILE --baseline FILE   write measured values into baseline
+  record --current FILE --baseline FILE --out FILE
+                                     write a refreshed-baseline candidate
+                                     (committed baseline untouched)";
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +61,9 @@ fn main() -> Result<()> {
             Path::new(args.get("out").unwrap_or("BENCH_ci.json"))),
         "check" => check(&current, &baseline),
         "update" => update(&current, &baseline),
+        "record" => record(
+            &current, &baseline,
+            Path::new(args.get("out").unwrap_or("bench_baseline_candidate.json"))),
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }
 }
@@ -229,16 +244,16 @@ fn check(current: &Path, baseline: &Path) -> Result<()> {
     Ok(())
 }
 
-// ----------------------------------------------------------------- update
+// --------------------------------------------------------- update / record
 
-fn update(current: &Path, baseline: &Path) -> Result<()> {
-    let cur = Json::parse_file(current)?;
-    let doc = Json::parse_file(baseline)?;
-    let (_tol, metrics) = read_baseline(baseline)?;
-    let Json::Object(mut top) = doc else { bail!("baseline is not an object") };
+/// Rebuild the baseline's `metrics` array with every gated metric's value
+/// replaced by the measured one from `cur`. Shared by `update` (which
+/// writes it back over the committed baseline) and `record` (which writes
+/// it to a candidate file for CI artifact upload).
+fn refreshed_metrics(cur: &Json, metrics: &[Metric]) -> Result<Json> {
     let mut out = Vec::new();
-    for m in &metrics {
-        let measured = current_value(&cur, m)?;
+    for m in metrics {
+        let measured = current_value(cur, m)?;
         let mut entry = BTreeMap::new();
         entry.insert("bench".to_string(), Json::Str(m.bench.clone()));
         entry.insert("name".to_string(), Json::Str(m.name.clone()));
@@ -248,10 +263,36 @@ fn update(current: &Path, baseline: &Path) -> Result<()> {
         entry.insert("value".to_string(), Json::Float(measured));
         out.push(Json::Object(entry));
     }
-    top.insert("metrics".to_string(), Json::Array(out));
-    std::fs::write(baseline, format!("{}\n", Json::Object(top)))?;
+    Ok(Json::Array(out))
+}
+
+/// The full refreshed baseline document: the committed baseline with its
+/// `metrics` array swapped for measured values (tolerance and any other
+/// top-level keys carried over verbatim).
+fn refreshed_doc(current: &Path, baseline: &Path) -> Result<Json> {
+    let cur = Json::parse_file(current)?;
+    let doc = Json::parse_file(baseline)?;
+    let (_tol, metrics) = read_baseline(baseline)?;
+    let Json::Object(mut top) = doc else { bail!("baseline is not an object") };
+    top.insert("metrics".to_string(), refreshed_metrics(&cur, &metrics)?);
+    Ok(Json::Object(top))
+}
+
+fn update(current: &Path, baseline: &Path) -> Result<()> {
+    let doc = refreshed_doc(current, baseline)?;
+    std::fs::write(baseline, format!("{doc}\n"))?;
     println!("baseline {} updated from {}", baseline.display(),
              current.display());
+    Ok(())
+}
+
+fn record(current: &Path, baseline: &Path, out: &Path) -> Result<()> {
+    let doc = refreshed_doc(current, baseline)?;
+    std::fs::write(out, format!("{doc}\n"))?;
+    println!("wrote refreshed-baseline candidate {} from {} (committed \
+              baseline {} untouched; review + copy over to arm or refresh \
+              the gate)",
+             out.display(), current.display(), baseline.display());
     Ok(())
 }
 
@@ -297,6 +338,28 @@ mod tests {
         assert_eq!(ids, vec!["b/boot_a.m".to_string(),
                              "other/boot_b.m".to_string()]);
         assert!(record_only_ids(&[metric(true)]).is_empty());
+    }
+
+    #[test]
+    fn refreshed_metrics_fills_measured_values() {
+        let cur = Json::parse(
+            r#"{"benches":{"b":{"n":{"m":42.5},"boot":{"m":7.0}}}}"#).unwrap();
+        let mut null_m = metric(false);
+        null_m.name = "boot".into();
+        null_m.value = None;
+        let out = refreshed_metrics(&cur, &[metric(false), null_m]).unwrap();
+        let arr = out.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        // armed entry refreshed from 100.0 -> measured 42.5
+        assert_eq!(arr[0].get("value").unwrap().as_f64().unwrap(), 42.5);
+        assert_eq!(arr[0].get("better").unwrap().as_str().unwrap(), "lower");
+        // record-only (null) entry armed with the measured value
+        assert_eq!(arr[1].get("value").unwrap().as_f64().unwrap(), 7.0);
+        // a metric missing from current results is an error, not a silent
+        // null carry-over
+        let mut gone = metric(false);
+        gone.name = "renamed".into();
+        assert!(refreshed_metrics(&cur, &[gone]).is_err());
     }
 
     #[test]
