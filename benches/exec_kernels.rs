@@ -3,9 +3,17 @@
 //! microbench at the layer-0 shape — the regression guard for the PR-4
 //! kernel/workspace split. Both variants are reported so BENCH_ci.json
 //! records the blocked kernels' margin over the scalar baseline; the
-//! `perf-gate` entries (record-only at first) track the blocked numbers.
+//! `perf-gate` entries track the blocked numbers on the *dispatch* path
+//! (whatever ISA the runner resolves — AVX2 on the CI machine class).
+//!
+//! PR 7 adds forced-scalar twins (`*_scalar_*` rows) for the gated
+//! dispatch-path benches: since both ISA paths are bit-identical, the only
+//! thing the SIMD port is allowed to change is these rows' relative
+//! throughput, and the pair makes the SIMD margin visible in every
+//! BENCH_ci.json without arming a separate gate for it.
 
 use dcl::bench_harness::{black_box, Runner};
+use dcl::runtime::kernels::Isa;
 use dcl::runtime::{kernels, Manifest, ModelExecutor};
 use dcl::tensor::{Batch, Sample};
 use dcl::util::rng::Rng;
@@ -27,6 +35,12 @@ fn main() {
     let reps = mk_batch(&mut rng, 7, 3072, 40);
     let mut ws = exec.make_workspace();
 
+    // The gated rows run on the dispatch path; tag the run so the CSV's
+    // consumer knows which ISA produced the blocked numbers.
+    let dispatch_isa = kernels::active_isa();
+    eprintln!("exec_kernels: dispatch path runs on isa={}",
+              dispatch_isa.name());
+
     // Throughput = training rows/s (the Fig. 6 "Train" bar's currency).
     r.bench_items("train_step_blocked_b56", 56, || {
         black_box(exec.train_step_with(&params, &b, &mut ws).unwrap());
@@ -38,6 +52,19 @@ fn main() {
         black_box(exec.train_step_aug_with(&params, &b, &reps, &mut ws)
             .unwrap());
     });
+
+    // Forced-scalar twins of the gated blocked rows: pin the dispatch to
+    // the scalar blocked path, measure, then restore the resolved ISA.
+    // When the runner has no AVX2 these rows equal the rows above.
+    kernels::set_active_isa(Isa::Scalar);
+    r.bench_items("train_step_scalar_b56", 56, || {
+        black_box(exec.train_step_with(&params, &b, &mut ws).unwrap());
+    });
+    r.bench_items("train_step_aug_scalar_b56_r7", 63, || {
+        black_box(exec.train_step_aug_with(&params, &b, &reps, &mut ws)
+            .unwrap());
+    });
+    kernels::set_active_isa(dispatch_isa);
 
     // GEMM microbench at the layer-0 forward shape of an augmented step
     // (63×3072 · 3072×512). Throughput = fused multiply-adds/s.
@@ -52,6 +79,13 @@ fn main() {
                                &mut out);
         black_box(out[0]);
     });
+    kernels::set_active_isa(Isa::Scalar);
+    r.bench_items("gemm_scalar_m63_k3072_n512", m * k * n, || {
+        kernels::gemm_bias_act(&a, m, k, &w, n, &bias, true, &mut pack,
+                               &mut out);
+        black_box(out[0]);
+    });
+    kernels::set_active_isa(dispatch_isa);
     r.bench_items("gemm_naive_m63_k3072_n512", m * k * n, || {
         for row in out.chunks_mut(n) {
             row.copy_from_slice(&bias);

@@ -4,7 +4,7 @@
 //! dcl train    [--preset P] [--config FILE] [--strategy S] [--variant V]
 //!              [--workers N] [--buffer-pct X] [--epochs-per-task E]
 //!              [--transport inproc|tcp] [--meta-refresh K]
-//!              [--reduce-chunks C]
+//!              [--reduce-chunks C] [--pin-workers true|false]
 //! dcl fig5a    [--epochs-per-task E] [--workers N]
 //! dcl fig5b    [--epochs-per-task E] [--workers N]
 //! dcl fig6     [--epochs-per-task E]
@@ -61,6 +61,14 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.parse()
+                .map_err(|_| anyhow!("--{key} wants true|false")),
+            None => Ok(default),
+        }
+    }
 }
 
 fn train_config(args: &Args) -> Result<ExperimentConfig> {
@@ -83,6 +91,9 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
     // Chunk-parallel reduce width C (0 = auto: 4 chunks per worker).
     cfg.cluster.reduce_chunks =
         args.usize_or("reduce-chunks", cfg.cluster.reduce_chunks)?;
+    // Pin worker threads to CPUs (Linux only; no-op elsewhere).
+    cfg.cluster.pin_workers =
+        args.bool_or("pin-workers", cfg.cluster.pin_workers)?;
     cfg.buffer.percent_of_dataset =
         args.f64_or("buffer-pct", cfg.buffer.percent_of_dataset)?;
     cfg.training.epochs_per_task =
@@ -213,6 +224,17 @@ mod tests {
         assert!(Args::parse(&["--dangling".into()]).is_err());
         let a = Args::parse(&["--n".into(), "x".into()]).unwrap();
         assert!(a.usize_or("n", 1).is_err());
+        let a = Args::parse(&["--pin-workers".into(), "yes".into()]).unwrap();
+        assert!(a.bool_or("pin-workers", false).is_err());
+    }
+
+    #[test]
+    fn bool_flags_parse() {
+        let a = Args::parse(&["--pin-workers".into(), "true".into()]).unwrap();
+        assert!(a.bool_or("pin-workers", false).unwrap());
+        let a = Args::parse(&["--pin-workers".into(), "false".into()]).unwrap();
+        assert!(!a.bool_or("pin-workers", true).unwrap());
+        assert!(a.bool_or("missing", true).unwrap());
     }
 
     #[test]

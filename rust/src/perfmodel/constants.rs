@@ -1,4 +1,12 @@
 //! Calibration constants for the performance model.
+//!
+//! Host-side rates here are calibrated for an AVX2-class core. Since PR 7
+//! the executor's GEMMs dispatch between a blocked-scalar and a blocked
+//! AVX2 path at runtime (`runtime::kernels::active_isa`, forced via
+//! `DCL_KERNEL_ISA`); the two are bit-identical but not speed-identical,
+//! so when re-calibrating against `benches/exec_kernels.rs` use the
+//! dispatch-path rows (`*_blocked_*`) — the forced-scalar twins
+//! (`*_scalar_*`) exist to expose the SIMD margin, not to calibrate from.
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,229 @@
+//! Worker thread pinning via raw `sched_{get,set}affinity` syscalls.
+//!
+//! The trainer's per-worker state — the [`super::StepWorkspace`] slabs,
+//! the owned `ParamSlabs` chunk ranges, the accumulator slot — is all
+//! thread-private and hot every iteration. Pinning each worker thread to
+//! one CPU keeps that state cache-/NUMA-local across iterations instead
+//! of migrating with the scheduler. Driven by `[cluster] pin_workers` →
+//! `cli --pin-workers` (default off).
+//!
+//! The crate builds offline with no libc binding (vendored `anyhow` is the
+//! only dependency), so the two syscalls are issued directly with
+//! `core::arch::asm!` on Linux x86-64 / aarch64. Everywhere else
+//! [`pin_current_thread`] is a no-op returning `Ok(None)` — pinning is a
+//! locality hint, never a correctness requirement.
+//!
+//! Semantics of slot → CPU: the current *allowed* set (which respects any
+//! cgroup/taskset restriction already applied to the process) is read
+//! first, and slot `w` is pinned to the `w mod |allowed|`-th allowed CPU.
+//! Workers therefore spread round-robin over whatever CPUs the operator
+//! gave the process, and oversubscribed runs (more workers than CPUs)
+//! still pin validly. The steady-state success path is allocation-free
+//! (fixed 128-byte masks on the stack), so re-pinning could even sit on
+//! the hot path — pinned by `rust/tests/zero_alloc.rs`.
+
+use crate::Result;
+
+/// Pin the calling thread to the `slot % |allowed|`-th CPU of its current
+/// allowed set.
+///
+/// - `Ok(Some(cpu))` — pinned to that CPU id.
+/// - `Ok(None)` — unsupported platform (non-Linux, or an arch without a
+///   syscall shim here): deliberate no-op.
+/// - `Err(_)` — the platform supports pinning but the syscall failed
+///   (e.g. EPERM under a restrictive seccomp profile). The caller asked
+///   for pinning and did not get it, so this surfaces as a run error
+///   rather than degrading silently.
+pub fn pin_current_thread(slot: usize) -> Result<Option<usize>> {
+    imp::pin(slot)
+}
+
+/// Number of CPUs the calling thread is currently allowed to run on
+/// (`None` on unsupported platforms).
+pub fn allowed_cpus() -> Result<Option<usize>> {
+    imp::allowed()
+}
+
+#[cfg(all(target_os = "linux",
+          any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    use anyhow::bail;
+
+    use crate::Result;
+
+    /// Fixed-size CPU mask: 1024 CPUs / 128 bytes, glibc's `cpu_set_t`.
+    const MASK_BYTES: usize = 128;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SCHED_GETAFFINITY: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SCHED_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SCHED_GETAFFINITY: usize = 123;
+
+    /// Raw 3-argument syscall; returns the kernel's raw result (negative
+    /// errno on failure).
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") a1 as isize => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// `sched_getaffinity(0, ..)` into a fixed mask (tid 0 = this thread).
+    fn get_mask(mask: &mut [u8; MASK_BYTES]) -> Result<()> {
+        let rc = unsafe {
+            syscall3(SYS_SCHED_GETAFFINITY, 0, MASK_BYTES,
+                     mask.as_mut_ptr() as usize)
+        };
+        if rc < 0 {
+            bail!("sched_getaffinity failed (errno {})", -rc);
+        }
+        Ok(())
+    }
+
+    /// `sched_setaffinity(0, ..)` from a fixed mask (tid 0 = this thread).
+    fn set_mask(mask: &[u8; MASK_BYTES]) -> Result<()> {
+        let rc = unsafe {
+            syscall3(SYS_SCHED_SETAFFINITY, 0, MASK_BYTES,
+                     mask.as_ptr() as usize)
+        };
+        if rc < 0 {
+            bail!("sched_setaffinity failed (errno {})", -rc);
+        }
+        Ok(())
+    }
+
+    fn count(mask: &[u8; MASK_BYTES]) -> usize {
+        mask.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    pub fn allowed() -> Result<Option<usize>> {
+        let mut mask = [0u8; MASK_BYTES];
+        get_mask(&mut mask)?;
+        Ok(Some(count(&mask)))
+    }
+
+    pub fn pin(slot: usize) -> Result<Option<usize>> {
+        let mut mask = [0u8; MASK_BYTES];
+        get_mask(&mut mask)?;
+        let allowed = count(&mask);
+        if allowed == 0 {
+            bail!("sched_getaffinity returned an empty CPU set");
+        }
+        // slot-th allowed CPU, round-robin over the allowed set.
+        let pick = slot % allowed;
+        let mut seen = 0usize;
+        let mut cpu = None;
+        'scan: for (i, &b) in mask.iter().enumerate() {
+            if b == 0 {
+                continue;
+            }
+            for bit in 0..8 {
+                if b & (1 << bit) != 0 {
+                    if seen == pick {
+                        cpu = Some(i * 8 + bit);
+                        break 'scan;
+                    }
+                    seen += 1;
+                }
+            }
+        }
+        let Some(cpu) = cpu else {
+            bail!("allowed-CPU scan ended before pick {pick} of {allowed}");
+        };
+        let mut one = [0u8; MASK_BYTES];
+        one[cpu / 8] = 1 << (cpu % 8);
+        set_mask(&one)?;
+        Ok(Some(cpu))
+    }
+
+    #[cfg(test)]
+    pub(super) fn with_restored_mask<T>(f: impl FnOnce() -> T) -> T {
+        let mut saved = [0u8; MASK_BYTES];
+        get_mask(&mut saved).expect("save affinity");
+        let out = f();
+        set_mask(&saved).expect("restore affinity");
+        out
+    }
+}
+
+#[cfg(not(all(target_os = "linux",
+              any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod imp {
+    use crate::Result;
+
+    pub fn pin(_slot: usize) -> Result<Option<usize>> {
+        Ok(None)
+    }
+
+    pub fn allowed() -> Result<Option<usize>> {
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(all(target_os = "linux",
+              any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn pinning_lands_on_an_allowed_cpu_and_wraps() {
+        imp::with_restored_mask(|| {
+            let total = allowed_cpus().unwrap().unwrap();
+            assert!(total >= 1);
+            let cpu0 = pin_current_thread(0).unwrap().unwrap();
+            // After pinning, exactly one CPU is allowed.
+            assert_eq!(allowed_cpus().unwrap(), Some(1));
+            // Re-pinning the same slot from the pinned state is
+            // idempotent: slot 0 of a 1-CPU allowed set is that CPU.
+            assert_eq!(pin_current_thread(0).unwrap(), Some(cpu0));
+        });
+        // Restored: the full allowed set is back.
+        let total = allowed_cpus().unwrap().unwrap();
+        assert!(total >= 1);
+        // Slots wrap round-robin over the allowed set: slot `total` picks
+        // the same CPU as slot 0 when evaluated from the same full mask.
+        let a = imp::with_restored_mask(|| {
+            pin_current_thread(0).unwrap().unwrap()
+        });
+        let b = imp::with_restored_mask(|| {
+            pin_current_thread(total).unwrap().unwrap()
+        });
+        assert_eq!(a, b, "slot wraps modulo the allowed set");
+    }
+
+    #[test]
+    #[cfg(not(all(target_os = "linux",
+                  any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    fn pinning_is_a_noop_off_linux() {
+        assert_eq!(pin_current_thread(3).unwrap(), None);
+        assert_eq!(allowed_cpus().unwrap(), None);
+    }
+}

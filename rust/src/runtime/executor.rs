@@ -189,6 +189,15 @@ impl ModelExecutor {
         self.layers.len()
     }
 
+    /// Name of the kernel ISA path steps on this process execute
+    /// (`"scalar"` or `"avx2"`) — resolved once from hardware detection
+    /// and the `DCL_KERNEL_ISA` override (see
+    /// [`kernels::active_isa`]). Both paths are bit-identical; this is a
+    /// throughput label for logs and the `exec_kernels` bench rows.
+    pub fn kernel_isa(&self) -> &'static str {
+        kernels::active_isa().name()
+    }
+
     /// Build the per-worker step scratch: one call per worker thread, then
     /// reused for every iteration (the `*_with` paths allocate nothing).
     /// Sized for `batch + max_reps` train rows and `eval_batch` eval rows.

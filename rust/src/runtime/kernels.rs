@@ -32,9 +32,36 @@
 //!   blocking and strip order leave no trace — so `workers = 1`
 //!   fixed-seed runs stay bit-identical run-to-run.
 //!
+//! # ISA dispatch
+//!
+//! Each driver ([`gemm_bias_act`], [`gemm_at_b`], [`gemm_a_bt_mask`],
+//! [`col_sums`]) dispatches between two implementations of the same
+//! blocking walk:
+//!
+//! - the **scalar** path (`*_scalar`) — the universal fallback, portable
+//!   to any target;
+//! - the **AVX2** path (x86-64 only) — each NR = 16 column strip lives in
+//!   two 256-bit registers, one lane per *distinct* output element, and
+//!   every reduction step is one single-rounded IEEE multiply followed by
+//!   one single-rounded add (`_mm256_mul_ps` + `_mm256_add_ps`). Fused
+//!   multiply-add (`_mm256_fmadd_ps`) is deliberately **not** used: the
+//!   scalar `acc += av * w` rounds twice per step, and FMA's single
+//!   rounding would break the f32 `==` parity contract below.
+//!
+//! Because lanes never share an element and the per-element operation
+//! sequence is identical, the two paths are **bit-identical** — the parity
+//! suite pins `==` across simd/scalar/naive, and switching paths mid-run
+//! is semantically invisible. The path is picked once per process by
+//! [`active_isa`]: runtime hardware detection
+//! (`is_x86_feature_detected!("avx2")`), overridable with the
+//! `DCL_KERNEL_ISA` env knob (`scalar` | `avx2` | `auto`) so CI exercises
+//! both paths, and by [`set_active_isa`] so benches compare them in one
+//! process.
+//!
 //! The kernels write only `out[..m*n]` slices handed in by the caller
 //! (the per-worker [`super::workspace::StepWorkspace`]); they allocate
-//! nothing.
+//! nothing. (The one-time `DCL_KERNEL_ISA` env read allocates; it is
+//! cached before the steady state — pinned by `rust/tests/zero_alloc.rs`.)
 
 /// Micro-kernel row block (output rows accumulated per pass).
 pub const MR: usize = 4;
@@ -44,6 +71,87 @@ pub const NR: usize = 16;
 /// Minimum `pack` length for a reduction dimension of `red` elements.
 pub fn pack_len(red: usize) -> usize {
     red * NR
+}
+
+// ------------------------------------------------------------ ISA dispatch
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Kernel instruction-set path. Both variants are bit-identical (see the
+/// module docs), so the choice is a pure throughput knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Isa {
+    /// Portable scalar blocked kernels — the universal fallback.
+    Scalar = 1,
+    /// AVX2 blocked kernels (x86-64 with runtime-detected AVX2 only).
+    Avx2 = 2,
+}
+
+impl Isa {
+    /// Stable lowercase name, matching the `DCL_KERNEL_ISA` values.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+        }
+    }
+}
+
+/// 0 = not yet resolved; otherwise an `Isa` discriminant. One process-wide
+/// cell: the paths are bit-identical, so a racy double-init (both threads
+/// detect the same hardware) and even a mid-run switch are harmless.
+static ACTIVE_ISA: AtomicU8 = AtomicU8::new(0);
+
+/// Whether this CPU can run the AVX2 path (runtime detection).
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// Whether this CPU can run the AVX2 path (never, off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// Resolve a `DCL_KERNEL_ISA` request against hardware support. `scalar`
+/// forces the fallback; `avx2` requests the SIMD path but degrades to
+/// scalar when the hardware lacks it (the paths are bit-identical, so the
+/// degradation is observable only in throughput); anything else — `auto`,
+/// unset, typos — picks the best available path.
+fn isa_from_request(req: Option<&str>, avx2: bool) -> Isa {
+    match req {
+        Some(s) if s.eq_ignore_ascii_case("scalar") => Isa::Scalar,
+        _ if avx2 => Isa::Avx2,
+        _ => Isa::Scalar,
+    }
+}
+
+/// The kernel path every dispatching driver in this module uses. Resolved
+/// once per process (env read + feature detection), then cached — steady
+/// state is a single relaxed atomic load.
+pub fn active_isa() -> Isa {
+    match ACTIVE_ISA.load(Ordering::Relaxed) {
+        1 => Isa::Scalar,
+        2 => Isa::Avx2,
+        _ => {
+            let req = std::env::var("DCL_KERNEL_ISA").ok();
+            set_active_isa(isa_from_request(req.as_deref(), avx2_available()))
+        }
+    }
+}
+
+/// Force the kernel path for this process (benches compare both paths in
+/// one run; tests pin the fallback). An `Avx2` request is clamped to
+/// `Scalar` when the hardware lacks AVX2; returns the path actually set.
+pub fn set_active_isa(isa: Isa) -> Isa {
+    let applied = match isa {
+        Isa::Avx2 if !avx2_available() => Isa::Scalar,
+        other => other,
+    };
+    ACTIVE_ISA.store(applied as u8, Ordering::Relaxed);
+    applied
 }
 
 // ------------------------------------------------------------------ packing
@@ -161,14 +269,77 @@ fn micro_a_bt<const M_: usize>(d: &[f32], n: usize, i0: usize, pack: &[f32],
     }
 }
 
-// ------------------------------------------------------------ blocked GEMMs
+// ----------------------------------------------- blocked GEMMs (dispatch)
 
 /// Forward dense layer: `out (m×n) = a (m×k) · w (k×n) + bias`, with an
 /// optional fused ReLU. `pack` needs [`pack_len`]`(k)` elements.
+/// Dispatches on [`active_isa`]; both paths are bit-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_bias_act(a: &[f32], m: usize, k: usize, w: &[f32], n: usize,
                      bias: &[f32], relu: bool, pack: &mut [f32],
                      out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: Isa::Avx2 is only ever stored after a successful runtime
+        // AVX2 detection (`set_active_isa` clamps to availability).
+        unsafe { simd::gemm_bias_act(a, m, k, w, n, bias, relu, pack, out) }
+        return;
+    }
+    gemm_bias_act_scalar(a, m, k, w, n, bias, relu, pack, out);
+}
+
+/// Weight gradient: `out (k×n) = aᵀ (k×m) · d (m×n)` where `a` is stored
+/// (m×k) row-major. Overwrites `out`. `pack` needs [`pack_len`]`(m)`.
+/// Dispatches on [`active_isa`]; both paths are bit-identical.
+pub fn gemm_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize,
+                 pack: &mut [f32], out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: see `gemm_bias_act`.
+        unsafe { simd::gemm_at_b(a, m, k, d, n, pack, out) }
+        return;
+    }
+    gemm_at_b_scalar(a, m, k, d, n, pack, out);
+}
+
+/// Input gradient with fused ReLU mask:
+/// `out (m×kdim) = d (m×n) · wᵀ (n×kdim)` where `w` is stored (kdim×n)
+/// row-major, then `out[i][l] = 0` wherever `act[i][l] ≤ 0` (`act` is the
+/// post-ReLU activation that fed the layer). `pack` needs
+/// [`pack_len`]`(n)`. Dispatches on [`active_isa`]; both paths are
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_a_bt_mask(d: &[f32], m: usize, n: usize, w: &[f32], kdim: usize,
+                      act: &[f32], pack: &mut [f32], out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: see `gemm_bias_act`.
+        unsafe { simd::gemm_a_bt_mask(d, m, n, w, kdim, act, pack, out) }
+        return;
+    }
+    gemm_a_bt_mask_scalar(d, m, n, w, kdim, act, pack, out);
+}
+
+/// Bias gradient: `out (n) = column sums of d (m×n)`, rows ascending.
+/// Dispatches on [`active_isa`]; both paths are bit-identical.
+pub fn col_sums(d: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if active_isa() == Isa::Avx2 {
+        // SAFETY: see `gemm_bias_act`.
+        unsafe { simd::col_sums(d, m, n, out) }
+        return;
+    }
+    col_sums_scalar(d, m, n, out);
+}
+
+// ------------------------------------------------- blocked GEMMs (scalar)
+
+/// Scalar path of [`gemm_bias_act`] — the universal fallback, public so
+/// the parity suite and the `exec_kernels` bench can pin it directly.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_act_scalar(a: &[f32], m: usize, k: usize, w: &[f32],
+                            n: usize, bias: &[f32], relu: bool,
+                            pack: &mut [f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(bias.len(), n);
@@ -193,10 +364,9 @@ pub fn gemm_bias_act(a: &[f32], m: usize, k: usize, w: &[f32], n: usize,
     }
 }
 
-/// Weight gradient: `out (k×n) = aᵀ (k×m) · d (m×n)` where `a` is stored
-/// (m×k) row-major. Overwrites `out`. `pack` needs [`pack_len`]`(m)`.
-pub fn gemm_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize,
-                 pack: &mut [f32], out: &mut [f32]) {
+/// Scalar path of [`gemm_at_b`] (see [`gemm_bias_act_scalar`]).
+pub fn gemm_at_b_scalar(a: &[f32], m: usize, k: usize, d: &[f32], n: usize,
+                        pack: &mut [f32], out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(out.len(), k * n);
@@ -220,14 +390,11 @@ pub fn gemm_at_b(a: &[f32], m: usize, k: usize, d: &[f32], n: usize,
     }
 }
 
-/// Input gradient with fused ReLU mask:
-/// `out (m×kdim) = d (m×n) · wᵀ (n×kdim)` where `w` is stored (kdim×n)
-/// row-major, then `out[i][l] = 0` wherever `act[i][l] ≤ 0` (`act` is the
-/// post-ReLU activation that fed the layer). `pack` needs
-/// [`pack_len`]`(n)`.
+/// Scalar path of [`gemm_a_bt_mask`] (see [`gemm_bias_act_scalar`]).
 #[allow(clippy::too_many_arguments)]
-pub fn gemm_a_bt_mask(d: &[f32], m: usize, n: usize, w: &[f32], kdim: usize,
-                      act: &[f32], pack: &mut [f32], out: &mut [f32]) {
+pub fn gemm_a_bt_mask_scalar(d: &[f32], m: usize, n: usize, w: &[f32],
+                             kdim: usize, act: &[f32], pack: &mut [f32],
+                             out: &mut [f32]) {
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(w.len(), kdim * n);
     debug_assert_eq!(act.len(), m * kdim);
@@ -252,15 +419,262 @@ pub fn gemm_a_bt_mask(d: &[f32], m: usize, n: usize, w: &[f32], kdim: usize,
     }
 }
 
-/// Bias gradient: `out (n) = column sums of d (m×n)`, rows ascending —
-/// the exact summation order of the old scalar loop.
-pub fn col_sums(d: &[f32], m: usize, n: usize, out: &mut [f32]) {
+/// Scalar path of [`col_sums`]: rows ascending — the exact summation
+/// order of the old scalar loop.
+pub fn col_sums_scalar(d: &[f32], m: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(d.len(), m * n);
     debug_assert_eq!(out.len(), n);
     out.fill(0.0);
     for row in d.chunks_exact(n) {
         for (o, &v) in out.iter_mut().zip(row) {
             *o += v;
+        }
+    }
+}
+
+// ------------------------------------------------------------- AVX2 kernels
+
+/// AVX2 implementations of the four blocked drivers: same packing, same
+/// blocking walk, same per-element operation sequence as the scalar
+/// micro-kernels. Each NR = 16 accumulator lane is one *distinct* output
+/// element held in two 256-bit registers; every reduction step is one IEEE
+/// multiply then one IEEE add (`_mm256_mul_ps` + `_mm256_add_ps`,
+/// deliberately NOT `_mm256_fmadd_ps` — the fused single rounding would
+/// break f32 `==` parity with the twice-rounding scalar `acc += av * w`).
+/// Epilogues (bias seeding, ReLU, ReLU-mask, partial-strip stores) run the
+/// exact scalar code on a stack copy of the accumulators, so -0.0 and NaN
+/// behaviour is inherited rather than re-derived. The micro-kernels are
+/// `#[inline(always)]` into the `#[target_feature(enable = "avx2")]`
+/// drivers, so they compile with AVX2 codegen.
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    use super::{pack_strip, pack_strip_t, MR, NR};
+    use core::arch::x86_64::*;
+
+    /// Load the two 8-lane halves of one NR-wide packed row.
+    #[inline(always)]
+    unsafe fn load2(row: *const f32) -> (__m256, __m256) {
+        (_mm256_loadu_ps(row), _mm256_loadu_ps(row.add(8)))
+    }
+
+    /// Spill the two accumulator halves to a stack array for the scalar
+    /// epilogue.
+    #[inline(always)]
+    unsafe fn spill(lo: __m256, hi: __m256) -> [f32; NR] {
+        let mut acc = [0.0f32; NR];
+        _mm256_storeu_ps(acc.as_mut_ptr(), lo);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(8), hi);
+        acc
+    }
+
+    /// AVX2 forward micro-kernel — mirrors `super::micro_fwd` lane by lane.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn micro_fwd<const M_: usize>(a: &[f32], k: usize, i0: usize,
+                                         pack: &[f32], bias: &[f32],
+                                         j0: usize, nr: usize, relu: bool,
+                                         n: usize, out: &mut [f32]) {
+        let mut seed = [0.0f32; NR];
+        seed[..nr].copy_from_slice(&bias[j0..j0 + nr]);
+        let (b_lo, b_hi) = load2(seed.as_ptr());
+        let mut lo = [b_lo; M_];
+        let mut hi = [b_hi; M_];
+        let arows: [&[f32]; M_] =
+            core::array::from_fn(|r| &a[(i0 + r) * k..(i0 + r + 1) * k]);
+        for (l, wrow) in pack.chunks_exact(NR).take(k).enumerate() {
+            let (w_lo, w_hi) = load2(wrow.as_ptr());
+            for r in 0..M_ {
+                let av = _mm256_set1_ps(arows[r][l]);
+                lo[r] = _mm256_add_ps(lo[r], _mm256_mul_ps(av, w_lo));
+                hi[r] = _mm256_add_ps(hi[r], _mm256_mul_ps(av, w_hi));
+            }
+        }
+        for r in 0..M_ {
+            let acc = spill(lo[r], hi[r]);
+            let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + nr];
+            for (c, o) in orow.iter_mut().enumerate() {
+                let v = acc[c];
+                *o = if relu && v < 0.0 { 0.0 } else { v };
+            }
+        }
+    }
+
+    /// AVX2 weight-gradient micro-kernel — mirrors `super::micro_at_b`.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn micro_at_b<const M_: usize>(a: &[f32], m: usize, k: usize,
+                                          l0: usize, pack: &[f32], j0: usize,
+                                          nr: usize, n: usize,
+                                          out: &mut [f32]) {
+        let zero = _mm256_setzero_ps();
+        let mut lo = [zero; M_];
+        let mut hi = [zero; M_];
+        for (i, drow) in pack.chunks_exact(NR).take(m).enumerate() {
+            let (d_lo, d_hi) = load2(drow.as_ptr());
+            let arow = &a[i * k + l0..i * k + l0 + M_];
+            for r in 0..M_ {
+                let av = _mm256_set1_ps(arow[r]);
+                lo[r] = _mm256_add_ps(lo[r], _mm256_mul_ps(av, d_lo));
+                hi[r] = _mm256_add_ps(hi[r], _mm256_mul_ps(av, d_hi));
+            }
+        }
+        for r in 0..M_ {
+            let acc = spill(lo[r], hi[r]);
+            let orow = &mut out[(l0 + r) * n + j0..(l0 + r) * n + j0 + nr];
+            orow.copy_from_slice(&acc[..nr]);
+        }
+    }
+
+    /// AVX2 input-gradient micro-kernel — mirrors `super::micro_a_bt`.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    unsafe fn micro_a_bt<const M_: usize>(d: &[f32], n: usize, i0: usize,
+                                          pack: &[f32], l0: usize, nr: usize,
+                                          kdim: usize, act: &[f32],
+                                          out: &mut [f32]) {
+        let zero = _mm256_setzero_ps();
+        let mut lo = [zero; M_];
+        let mut hi = [zero; M_];
+        let drows: [&[f32]; M_] =
+            core::array::from_fn(|r| &d[(i0 + r) * n..(i0 + r + 1) * n]);
+        for (j, prow) in pack.chunks_exact(NR).take(n).enumerate() {
+            let (p_lo, p_hi) = load2(prow.as_ptr());
+            for r in 0..M_ {
+                let dv = _mm256_set1_ps(drows[r][j]);
+                lo[r] = _mm256_add_ps(lo[r], _mm256_mul_ps(dv, p_lo));
+                hi[r] = _mm256_add_ps(hi[r], _mm256_mul_ps(dv, p_hi));
+            }
+        }
+        for r in 0..M_ {
+            let acc = spill(lo[r], hi[r]);
+            let arow = &act[(i0 + r) * kdim + l0..(i0 + r) * kdim + l0 + nr];
+            let orow =
+                &mut out[(i0 + r) * kdim + l0..(i0 + r) * kdim + l0 + nr];
+            for c in 0..nr {
+                orow[c] = if arow[c] <= 0.0 { 0.0 } else { acc[c] };
+            }
+        }
+    }
+
+    /// AVX2 driver of [`super::gemm_bias_act`] — identical blocking walk.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`super::avx2_available()`).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_bias_act(a: &[f32], m: usize, k: usize, w: &[f32],
+                                n: usize, bias: &[f32], relu: bool,
+                                pack: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(w.len(), k * n);
+        debug_assert_eq!(bias.len(), n);
+        debug_assert_eq!(out.len(), m * n);
+        debug_assert!(pack.len() >= super::pack_len(k));
+        let mut j = 0;
+        while j < n {
+            let nr = NR.min(n - j);
+            pack_strip(w, k, n, j, nr, pack);
+            let mut i = 0;
+            while i + MR <= m {
+                micro_fwd::<MR>(a, k, i, pack, bias, j, nr, relu, n, out);
+                i += MR;
+            }
+            match m - i {
+                1 => micro_fwd::<1>(a, k, i, pack, bias, j, nr, relu, n, out),
+                2 => micro_fwd::<2>(a, k, i, pack, bias, j, nr, relu, n, out),
+                3 => micro_fwd::<3>(a, k, i, pack, bias, j, nr, relu, n, out),
+                _ => {}
+            }
+            j += NR;
+        }
+    }
+
+    /// AVX2 driver of [`super::gemm_at_b`] — identical blocking walk.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`super::avx2_available()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_at_b(a: &[f32], m: usize, k: usize, d: &[f32],
+                            n: usize, pack: &mut [f32], out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(d.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        debug_assert!(pack.len() >= super::pack_len(m));
+        let mut j = 0;
+        while j < n {
+            let nr = NR.min(n - j);
+            pack_strip(d, m, n, j, nr, pack);
+            let mut l = 0;
+            while l + MR <= k {
+                micro_at_b::<MR>(a, m, k, l, pack, j, nr, n, out);
+                l += MR;
+            }
+            match k - l {
+                1 => micro_at_b::<1>(a, m, k, l, pack, j, nr, n, out),
+                2 => micro_at_b::<2>(a, m, k, l, pack, j, nr, n, out),
+                3 => micro_at_b::<3>(a, m, k, l, pack, j, nr, n, out),
+                _ => {}
+            }
+            j += NR;
+        }
+    }
+
+    /// AVX2 driver of [`super::gemm_a_bt_mask`] — identical blocking walk.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`super::avx2_available()`).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_a_bt_mask(d: &[f32], m: usize, n: usize, w: &[f32],
+                                 kdim: usize, act: &[f32], pack: &mut [f32],
+                                 out: &mut [f32]) {
+        debug_assert_eq!(d.len(), m * n);
+        debug_assert_eq!(w.len(), kdim * n);
+        debug_assert_eq!(act.len(), m * kdim);
+        debug_assert_eq!(out.len(), m * kdim);
+        debug_assert!(pack.len() >= super::pack_len(n));
+        let mut l = 0;
+        while l < kdim {
+            let nr = NR.min(kdim - l);
+            pack_strip_t(w, n, l, nr, pack);
+            let mut i = 0;
+            while i + MR <= m {
+                micro_a_bt::<MR>(d, n, i, pack, l, nr, kdim, act, out);
+                i += MR;
+            }
+            match m - i {
+                1 => micro_a_bt::<1>(d, n, i, pack, l, nr, kdim, act, out),
+                2 => micro_a_bt::<2>(d, n, i, pack, l, nr, kdim, act, out),
+                3 => micro_a_bt::<3>(d, n, i, pack, l, nr, kdim, act, out),
+                _ => {}
+            }
+            l += NR;
+        }
+    }
+
+    /// AVX2 column sums: 8 columns per vector, rows ascending — the exact
+    /// per-element summation order of [`super::col_sums_scalar`].
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`super::avx2_available()`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn col_sums(d: &[f32], m: usize, n: usize, out: &mut [f32]) {
+        debug_assert_eq!(d.len(), m * n);
+        debug_assert_eq!(out.len(), n);
+        out.fill(0.0);
+        let lanes = n - n % 8;
+        for row in d.chunks_exact(n) {
+            let mut c = 0;
+            while c < lanes {
+                let o = out.as_mut_ptr().add(c);
+                let s = _mm256_add_ps(_mm256_loadu_ps(o),
+                                      _mm256_loadu_ps(row.as_ptr().add(c)));
+                _mm256_storeu_ps(o, s);
+                c += 8;
+            }
+            for (o, &v) in out[lanes..].iter_mut().zip(&row[lanes..]) {
+                *o += v;
+            }
         }
     }
 }
@@ -490,6 +904,137 @@ mod tests {
         let mut got = vec![f32::NAN; n];
         col_sums(&d, m, n, &mut got);
         assert_eq!(got, want);
+    }
+
+    /// Extra shapes aimed at the SIMD remainder paths: strip widths that
+    /// are not multiples of the 8-lane vector (cols % 8 ∉ {0}), row blocks
+    /// below MR, and reduction dims straddling the NR panel.
+    const REMAINDER_SHAPES: [(usize, usize, usize); 6] = [
+        (1, 8, 9),
+        (2, 9, 19),
+        (3, 31, 33),
+        (4, 7, 15),
+        (6, 40, 65),
+        (7, 129, 101),
+    ];
+
+    #[test]
+    fn isa_request_resolution() {
+        // scalar always honoured; avx2 clamped to hardware; auto/unset/
+        // garbage pick the best available.
+        assert_eq!(isa_from_request(Some("scalar"), true), Isa::Scalar);
+        assert_eq!(isa_from_request(Some("SCALAR"), false), Isa::Scalar);
+        assert_eq!(isa_from_request(Some("avx2"), true), Isa::Avx2);
+        assert_eq!(isa_from_request(Some("avx2"), false), Isa::Scalar);
+        assert_eq!(isa_from_request(Some("auto"), true), Isa::Avx2);
+        assert_eq!(isa_from_request(Some("auto"), false), Isa::Scalar);
+        assert_eq!(isa_from_request(None, true), Isa::Avx2);
+        assert_eq!(isa_from_request(None, false), Isa::Scalar);
+        assert_eq!(isa_from_request(Some("typo"), true), Isa::Avx2);
+    }
+
+    #[test]
+    fn forced_isa_is_clamped_to_hardware() {
+        let prev = active_isa();
+        // Scalar is always accepted; Avx2 only where the hardware has it.
+        assert_eq!(set_active_isa(Isa::Scalar), Isa::Scalar);
+        let applied = set_active_isa(Isa::Avx2);
+        if avx2_available() {
+            assert_eq!(applied, Isa::Avx2);
+        } else {
+            assert_eq!(applied, Isa::Scalar);
+        }
+        // Restoring is harmless: both paths are bit-identical, so other
+        // tests racing this global observe identical results either way.
+        set_active_isa(prev);
+    }
+
+    /// Every remainder shape × dense/sparse input, all four kernels: the
+    /// AVX2 path must agree with the scalar blocked path to the bit.
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn simd_paths_match_scalar_bitwise() {
+        if !avx2_available() {
+            return; // nothing to compare on this hardware
+        }
+        let mut rng = Rng::new(18);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        for &(m, k, n) in SHAPES.iter().chain(&REMAINDER_SHAPES) {
+            for sparse in [false, true] {
+                let mk = |rng: &mut Rng, len: usize| {
+                    if sparse { fill_sparse(rng, len) } else { fill(rng, len) }
+                };
+                // forward (both relu arms)
+                let a = mk(&mut rng, m * k);
+                let w = fill(&mut rng, k * n);
+                let bias = fill(&mut rng, n);
+                let mut pack = vec![0.0f32; pack_len(k.max(m).max(n))];
+                for relu in [false, true] {
+                    let mut want = vec![f32::NAN; m * n];
+                    gemm_bias_act_scalar(&a, m, k, &w, n, &bias, relu,
+                                         &mut pack, &mut want);
+                    let mut got = vec![f32::NAN; m * n];
+                    unsafe {
+                        simd::gemm_bias_act(&a, m, k, &w, n, &bias, relu,
+                                            &mut pack, &mut got);
+                    }
+                    assert_eq!(bits(&got), bits(&want),
+                               "fwd simd/scalar split at ({m},{k},{n})");
+                }
+                // weight gradient
+                let d = mk(&mut rng, m * n);
+                let mut want = vec![f32::NAN; k * n];
+                gemm_at_b_scalar(&a, m, k, &d, n, &mut pack, &mut want);
+                let mut got = vec![f32::NAN; k * n];
+                unsafe {
+                    simd::gemm_at_b(&a, m, k, &d, n, &mut pack, &mut got);
+                }
+                assert_eq!(bits(&got), bits(&want),
+                           "at_b simd/scalar split at ({m},{k},{n})");
+                // input gradient + ReLU mask (kdim = k here)
+                let act = fill_sparse(&mut rng, m * k);
+                let wt = fill(&mut rng, k * n);
+                let mut want = vec![f32::NAN; m * k];
+                gemm_a_bt_mask_scalar(&d, m, n, &wt, k, &act, &mut pack,
+                                      &mut want);
+                let mut got = vec![f32::NAN; m * k];
+                unsafe {
+                    simd::gemm_a_bt_mask(&d, m, n, &wt, k, &act, &mut pack,
+                                         &mut got);
+                }
+                assert_eq!(bits(&got), bits(&want),
+                           "a_bt simd/scalar split at ({m},{k},{n})");
+                // column sums
+                let mut want = vec![f32::NAN; n];
+                col_sums_scalar(&d, m, n, &mut want);
+                let mut got = vec![f32::NAN; n];
+                unsafe { simd::col_sums(&d, m, n, &mut got) };
+                assert_eq!(bits(&got), bits(&want),
+                           "col_sums simd/scalar split at ({m},{n})");
+            }
+        }
+    }
+
+    /// The blocked scalar path must match naive on the remainder shapes
+    /// too (so `simd == scalar == naive` closes the triangle there).
+    #[test]
+    fn remainder_shapes_match_naive_exactly() {
+        let mut rng = Rng::new(19);
+        for &(m, k, n) in &REMAINDER_SHAPES {
+            let a = fill_sparse(&mut rng, m * k);
+            let w = fill(&mut rng, k * n);
+            let bias = fill(&mut rng, n);
+            let mut want = vec![0.0f32; m * n];
+            for row in want.chunks_mut(n) {
+                row.copy_from_slice(&bias);
+            }
+            matmul_acc(&a, m, k, &w, n, &mut want);
+            let mut pack = vec![0.0f32; pack_len(k)];
+            let mut got = vec![f32::NAN; m * n];
+            gemm_bias_act_scalar(&a, m, k, &w, n, &bias, false, &mut pack,
+                                 &mut got);
+            assert_eq!(got, want, "remainder fwd mismatch at ({m},{k},{n})");
+        }
     }
 
     #[test]

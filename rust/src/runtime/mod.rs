@@ -8,7 +8,12 @@
 //!   column-strip micro-kernels, fused bias+ReLU / ReLU-mask epilogues)
 //!   with a **fixed, deterministic summation order**: every output element
 //!   reduces in ascending index order, exactly like the naive scalar loops
-//!   the module also retains as the parity baseline.
+//!   the module also retains as the parity baseline. Two bit-identical
+//!   ISA paths (portable scalar, runtime-detected AVX2) sit behind one
+//!   dispatch point, overridable via `DCL_KERNEL_ISA`.
+//! - [`affinity`] — raw-syscall worker thread pinning
+//!   (`sched_setaffinity`, Linux x86-64/aarch64; no-op elsewhere) so
+//!   per-worker workspaces and owned parameter chunks stay cache-local.
 //! - [`workspace`] — [`StepWorkspace`], the per-worker step scratch:
 //!   flattened inputs sized for `b + max_r` rows, activation slabs, dz
 //!   ping-pong buffers, the packing panel, and gradient slabs that the
@@ -23,6 +28,7 @@
 //! its private workspace. `python/compile/model.py` remains the semantic
 //! reference for everything the kernels compute.
 
+pub mod affinity;
 pub mod artifact;
 pub mod executor;
 pub mod kernels;

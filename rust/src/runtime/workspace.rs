@@ -19,6 +19,45 @@
 use super::literal::Literal;
 use crate::runtime::kernels;
 
+/// An `f32` buffer whose first element sits on a 32-byte boundary (one
+/// AVX2 vector), built safely by over-allocating and offsetting — no
+/// custom allocator, no unsafe. The kernels use unaligned loads either
+/// way (output rows can start anywhere), but an aligned packing panel
+/// lets the hardware issue aligned 256-bit loads on the hot strip.
+pub(super) struct AlignedF32 {
+    buf: Vec<f32>,
+    off: usize,
+    len: usize,
+}
+
+impl AlignedF32 {
+    /// 32-byte alignment = 8 f32 lanes of headroom.
+    const PAD: usize = 8;
+
+    pub(super) fn zeroed(len: usize) -> AlignedF32 {
+        let buf = vec![0.0f32; len + Self::PAD];
+        let off = buf.as_ptr().align_offset(32);
+        // align_offset on a 4-byte element needs at most 7 elements; its
+        // usize::MAX "impossible" answer cannot happen here, but degrade
+        // to unaligned rather than panic if it ever does.
+        let off = if off < Self::PAD { off } else { 0 };
+        AlignedF32 { buf, off, len }
+    }
+}
+
+impl core::ops::Deref for AlignedF32 {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf[self.off..self.off + self.len]
+    }
+}
+
+impl core::ops::DerefMut for AlignedF32 {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf[self.off..self.off + self.len]
+    }
+}
+
 /// Preallocated step scratch; build via
 /// [`super::executor::ModelExecutor::make_workspace`].
 pub struct StepWorkspace {
@@ -40,8 +79,9 @@ pub struct StepWorkspace {
     /// backward pass walks down the layers.
     pub(super) dz_a: Vec<f32>,
     pub(super) dz_b: Vec<f32>,
-    /// GEMM packing panel, `max(input_dim, widths, max_rows) * NR`.
-    pub(super) pack: Vec<f32>,
+    /// GEMM packing panel, `max(input_dim, widths, max_rows) * NR`,
+    /// 32-byte aligned for the AVX2 kernel path.
+    pub(super) pack: AlignedF32,
     /// Gradient slabs in manifest order (w0, b0, w1, b1, ...); the
     /// backward pass overwrites them in place each step.
     pub(super) grads: Vec<Literal>,
@@ -64,7 +104,7 @@ impl StepWorkspace {
             acts: widths.iter().map(|&w| vec![0.0; max_rows * w]).collect(),
             dz_a: vec![0.0; max_rows * max_width],
             dz_b: vec![0.0; max_rows * max_width],
-            pack: vec![0.0; kernels::pack_len(pack_dim)],
+            pack: AlignedF32::zeroed(kernels::pack_len(pack_dim)),
             grads: param_shapes.iter().map(|s| Literal::zeros(s)).collect(),
             widths,
         }

@@ -16,9 +16,13 @@
 //! `check` fails (non-zero exit) when any baseline metric regresses by more
 //! than the tolerance — mean times going up, throughputs going down. A
 //! baseline metric whose `value` is `null` is *record-only*: the gate
-//! prints the measured value and passes, so the first CI run on a new
-//! machine class bootstraps the numbers (`update` writes them back into
-//! the baseline file for committing). A metric missing from the current
+//! prints the measured value and (individually) passes, so the first CI
+//! run on a new machine class bootstraps the numbers (`update` writes them
+//! back into the baseline file for committing). Record-only entries are
+//! however **budgeted**: the baseline's optional top-level
+//! `max_record_only` (default 0) caps how many may stay null before
+//! `check` fails the whole gate — a baseline can bootstrap, but it cannot
+//! quietly stay disarmed forever. A metric missing from the current
 //! results fails the gate: renaming a bench must not silently disable its
 //! guardrail.
 //!
@@ -137,12 +141,24 @@ struct Metric {
     value: Option<f64>,
 }
 
-fn read_baseline(path: &Path) -> Result<(f64, Vec<Metric>)> {
+fn read_baseline(path: &Path) -> Result<(f64, usize, Vec<Metric>)> {
     let doc = Json::parse_file(path)?;
     let tol = doc.get("tolerance")?.as_f64()?;
     if !(0.0..1.0).contains(&tol) {
         bail!("tolerance {tol} out of [0, 1)");
     }
+    // Record-only budget: how many `value: null` entries `check` tolerates
+    // before failing. Absent key = 0 = every gated metric must be armed.
+    let max_record_only = match doc.get("max_record_only") {
+        Ok(v) => {
+            let f = v.as_f64()?;
+            if f < 0.0 || f.fract() != 0.0 {
+                bail!("max_record_only {f} is not a non-negative integer");
+            }
+            f as usize
+        }
+        Err(_) => 0,
+    };
     let mut metrics = Vec::new();
     for m in doc.get("metrics")?.as_array()? {
         let better = m.get("better")?.as_str()?;
@@ -162,7 +178,7 @@ fn read_baseline(path: &Path) -> Result<(f64, Vec<Metric>)> {
             },
         });
     }
-    Ok((tol, metrics))
+    Ok((tol, max_record_only, metrics))
 }
 
 fn current_value(cur: &Json, m: &Metric) -> Result<f64> {
@@ -205,7 +221,7 @@ fn record_only_ids(metrics: &[Metric]) -> Vec<String> {
 
 fn check(current: &Path, baseline: &Path) -> Result<()> {
     let cur = Json::parse_file(current)?;
-    let (tol, metrics) = read_baseline(baseline)?;
+    let (tol, max_record_only, metrics) = read_baseline(baseline)?;
     let mut failures = Vec::new();
     for m in &metrics {
         let measured = current_value(&cur, m)?;
@@ -238,9 +254,19 @@ fn check(current: &Path, baseline: &Path) -> Result<()> {
         bail!("{} perf regression(s) beyond {:.0}%: {}",
               failures.len(), tol * 100.0, failures.join(", "));
     }
+    if record_only.len() > max_record_only {
+        bail!("{} record-only (null) baseline entr{} exceed the budget of \
+               {} (`max_record_only`): {} — arm them from this run's \
+               bench_baseline_candidate.json artifact (or raise the budget \
+               deliberately)",
+              record_only.len(),
+              if record_only.len() == 1 { "y" } else { "ies" },
+              max_record_only, record_only.join(", "));
+    }
     println!("perf gate passed: {} armed metric(s) within tolerance, \
-              {} record-only",
-             metrics.len() - record_only.len(), record_only.len());
+              {} record-only (budget {})",
+             metrics.len() - record_only.len(), record_only.len(),
+             max_record_only);
     Ok(())
 }
 
@@ -272,7 +298,7 @@ fn refreshed_metrics(cur: &Json, metrics: &[Metric]) -> Result<Json> {
 fn refreshed_doc(current: &Path, baseline: &Path) -> Result<Json> {
     let cur = Json::parse_file(current)?;
     let doc = Json::parse_file(baseline)?;
-    let (_tol, metrics) = read_baseline(baseline)?;
+    let (_tol, _max_record_only, metrics) = read_baseline(baseline)?;
     let Json::Object(mut top) = doc else { bail!("baseline is not an object") };
     top.insert("metrics".to_string(), refreshed_metrics(&cur, &metrics)?);
     Ok(Json::Object(top))
@@ -360,6 +386,65 @@ mod tests {
         let mut gone = metric(false);
         gone.name = "renamed".into();
         assert!(refreshed_metrics(&cur, &[gone]).is_err());
+    }
+
+    fn write_temp(name: &str, body: &str) -> PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("bench_gate_test_{}_{name}", std::process::id()));
+        std::fs::write(&path, body).unwrap();
+        path
+    }
+
+    #[test]
+    fn baseline_record_only_budget_parses_and_defaults_to_zero() {
+        let armed = r#"{"bench":"b","name":"n","metric":"m",
+                        "better":"lower","value":1.0}"#;
+        // Absent key -> budget 0.
+        let p = write_temp("b0.json", &format!(
+            r#"{{"tolerance":0.25,"metrics":[{armed}]}}"#));
+        let (tol, max_ro, metrics) = read_baseline(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(tol, 0.25);
+        assert_eq!(max_ro, 0);
+        assert_eq!(metrics.len(), 1);
+        // Explicit key is honoured.
+        let p = write_temp("b3.json", &format!(
+            r#"{{"tolerance":0.25,"max_record_only":3,"metrics":[{armed}]}}"#));
+        let (_, max_ro, _) = read_baseline(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(max_ro, 3);
+        // Negative or fractional budgets are rejected.
+        let p = write_temp("bneg.json", &format!(
+            r#"{{"tolerance":0.25,"max_record_only":-1,"metrics":[{armed}]}}"#));
+        assert!(read_baseline(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+        let p = write_temp("bfrac.json", &format!(
+            r#"{{"tolerance":0.25,"max_record_only":1.5,"metrics":[{armed}]}}"#));
+        assert!(read_baseline(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn check_fails_when_record_only_exceeds_budget() {
+        let cur = write_temp("cur.json",
+            r#"{"benches":{"b":{"n":{"m":1.0},"o":{"m":2.0}}}}"#);
+        let over = write_temp("over.json",
+            r#"{"tolerance":0.25,"max_record_only":0,"metrics":[
+                {"bench":"b","name":"n","metric":"m","better":"lower",
+                 "value":null},
+                {"bench":"b","name":"o","metric":"m","better":"lower",
+                 "value":2.0}]}"#);
+        assert!(check(&cur, &over).is_err());
+        std::fs::remove_file(&over).unwrap();
+        let within = write_temp("within.json",
+            r#"{"tolerance":0.25,"max_record_only":1,"metrics":[
+                {"bench":"b","name":"n","metric":"m","better":"lower",
+                 "value":null},
+                {"bench":"b","name":"o","metric":"m","better":"lower",
+                 "value":2.0}]}"#);
+        assert!(check(&cur, &within).is_ok());
+        std::fs::remove_file(&within).unwrap();
+        std::fs::remove_file(&cur).unwrap();
     }
 
     #[test]
