@@ -5,7 +5,7 @@
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::buffer::LocalBuffer;
-use dcl::config::EvictionPolicy;
+use dcl::config::PolicyKind;
 use dcl::tensor::Sample;
 use dcl::util::rng::Rng;
 
@@ -15,7 +15,7 @@ fn sample(rng: &mut Rng, class: u32) -> Sample {
     Sample::new(class, (0..DIM).map(|_| rng.f32()).collect())
 }
 
-fn filled_buffer(policy: EvictionPolicy, classes: u32, per_class: usize) -> LocalBuffer {
+fn filled_buffer(policy: PolicyKind, classes: u32, per_class: usize) -> LocalBuffer {
     let buf = LocalBuffer::new((classes as usize) * per_class, policy, 7);
     let mut rng = Rng::new(3);
     for c in 0..classes {
@@ -31,7 +31,7 @@ fn main() {
     let mut rng = Rng::new(1);
 
     // Algorithm 1: one batch update (b=56, c=14) against a warm buffer.
-    let buf = filled_buffer(EvictionPolicy::Random, 40, 18);
+    let buf = filled_buffer(PolicyKind::Uniform, 40, 18);
     let batch: Vec<Sample> = (0..56).map(|i| sample(&mut rng, i % 40)).collect();
     let mut urng = Rng::new(9);
     r.bench_items("algorithm1_update_b56_c14", 56, || {
@@ -39,8 +39,8 @@ fn main() {
     });
 
     // Per-policy insert cost at capacity (every insert evicts).
-    for policy in [EvictionPolicy::Random, EvictionPolicy::Fifo,
-                   EvictionPolicy::Reservoir] {
+    for policy in [PolicyKind::Uniform, PolicyKind::Fifo,
+                   PolicyKind::Reservoir] {
         let buf = filled_buffer(policy, 8, 32);
         let mut i = 0u32;
         r.bench(&format!("insert_evict_{}", policy.name()), || {
@@ -51,7 +51,7 @@ fn main() {
 
     // Row fetch: the consolidated bulk read a peer's sampling plan issues
     // (r=7 rows from one node).
-    let buf = filled_buffer(EvictionPolicy::Random, 40, 18);
+    let buf = filled_buffer(PolicyKind::Uniform, 40, 18);
     let picks: Vec<(u32, usize)> = (0..7).map(|i| (i as u32 * 5, i)).collect();
     r.bench_items("fetch_rows_r7", 7, || {
         black_box(buf.fetch_rows(&picks).unwrap());

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::config::{PolicyKind, SamplingScope};
 use dcl::engine::{EngineParams, RehearsalEngine};
 use dcl::net::{CostModel, Fabric};
 use dcl::tensor::{Batch, Sample};
@@ -21,7 +21,7 @@ fn make_fabric(n: usize) -> Arc<Fabric> {
     let mut rng = Rng::new(5);
     let buffers = (0..n)
         .map(|w| {
-            let b = LocalBuffer::new(720, EvictionPolicy::Random, w as u64);
+            let b = LocalBuffer::new(720, PolicyKind::Uniform, w as u64);
             for c in 0..40u32 {
                 for _ in 0..18 {
                     b.insert(Sample::new(c, (0..3072).map(|_| rng.f32()).collect()));

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::config::{PolicyKind, SamplingScope};
 use dcl::net::{CostModel, Fabric};
 use dcl::perfmodel::{ModelClass, PerfConstants, PerfModel};
 use dcl::sampling::GlobalSampler;
@@ -42,7 +42,7 @@ fn main() {
     let mut rng = Rng::new(3);
     let buffers: Vec<Arc<LocalBuffer>> = (0..4)
         .map(|w| {
-            let b = LocalBuffer::new(750, EvictionPolicy::Random, w as u64);
+            let b = LocalBuffer::new(750, PolicyKind::Uniform, w as u64);
             for c in 0..40u32 {
                 for _ in 0..18 {
                     b.insert(Sample::new(c, (0..3072).map(|_| rng.f32()).collect()));

@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::buffer::LocalBuffer;
-use dcl::config::EvictionPolicy;
+use dcl::config::PolicyKind;
 use dcl::net::{CostModel, Fabric};
 use dcl::tensor::Sample;
 use dcl::util::rng::Rng;
@@ -15,7 +15,7 @@ fn raw_fabric(workers: usize, per_class: usize) -> Fabric {
     let mut rng = Rng::new(5);
     let buffers = (0..workers)
         .map(|w| {
-            let b = LocalBuffer::new(40 * per_class, EvictionPolicy::Random,
+            let b = LocalBuffer::new(40 * per_class, PolicyKind::Uniform,
                                      w as u64);
             for c in 0..40u32 {
                 for _ in 0..per_class {

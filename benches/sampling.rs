@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::config::{PolicyKind, SamplingScope};
 use dcl::net::{CostModel, Fabric};
 use dcl::sampling::GlobalSampler;
 use dcl::tensor::Sample;
@@ -24,7 +24,7 @@ fn fabric(workers: usize, classes: u32, per_class: usize) -> Arc<Fabric> {
     let buffers = (0..workers)
         .map(|w| {
             let b = LocalBuffer::new(classes as usize * per_class,
-                                     EvictionPolicy::Random, w as u64);
+                                     PolicyKind::Uniform, w as u64);
             for c in 0..classes {
                 for _ in 0..per_class {
                     b.insert(Sample::new(

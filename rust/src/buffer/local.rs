@@ -8,6 +8,13 @@
 //! per-class capacities are rebalanced to `S_max / K_seen` (the paper's
 //! even split that avoids selection bias).
 //!
+//! Insertion/eviction and selection weighting inside each class are
+//! delegated to the configured [`crate::buffer::policy::RehearsalPolicy`];
+//! the scored entry points (`insert_scored`, `update_with_batch_scored`)
+//! thread per-sample scores (last-seen training loss) down to it. The
+//! unscored wrappers feed 0.0 and are bit-identical to the pre-policy-plane
+//! behaviour under the default Uniform policy.
+//!
 //! `fetch_rows` is the RDMA-read analogue: any thread holding an
 //! `Arc<LocalBuffer>` can read rows directly, without involving the owning
 //! worker's compute thread; the wire cost is accounted by the
@@ -22,13 +29,15 @@ use std::sync::{Mutex, RwLock};
 
 use anyhow::{bail, Result};
 
-use crate::config::EvictionPolicy;
+use crate::config::PolicyKind;
 use crate::tensor::Sample;
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
 
 use super::class_buffer::{ClassBuffer, InsertOutcome};
 
-/// (class id, resident count) — the metadata unit the sampling planner uses.
+/// (class id, selectable resident count) — the metadata unit the sampling
+/// planner uses. Counts are the *selectable* window of each class, which
+/// equals the resident count for every policy except GRASP.
 pub type ClassCount = (u32, usize);
 
 /// Semantic wire size of one snapshot entry (class id + count + header
@@ -40,8 +49,12 @@ pub const SNAPSHOT_ENTRY_BYTES: usize = 12;
 pub struct BufferCounters {
     /// Candidates offered via Algorithm 1 (accepted coin flips).
     pub candidates_offered: AtomicU64,
+    /// Candidates appended while a sub-buffer was below capacity.
+    pub appends: AtomicU64,
     /// Candidates that evicted a resident.
     pub evictions: AtomicU64,
+    /// Candidates the policy rejected (reservoir-gated admission).
+    pub rejections: AtomicU64,
     /// Rows served to augmentations (local + remote).
     pub rows_served: AtomicU64,
 }
@@ -49,7 +62,7 @@ pub struct BufferCounters {
 pub struct LocalBuffer {
     /// Total sample capacity S_max for this worker.
     s_max: usize,
-    policy: EvictionPolicy,
+    policy: PolicyKind,
     /// class id → its sub-buffer. Outer lock: rare class-arrival writes.
     classes: RwLock<HashMap<u32, Mutex<ClassBuffer>>>,
     /// Base seed: each class sub-buffer derives its own eviction stream
@@ -61,12 +74,12 @@ pub struct LocalBuffer {
 }
 
 impl LocalBuffer {
-    pub fn new(s_max: usize, policy: EvictionPolicy, seed: u64) -> LocalBuffer {
+    pub fn new(s_max: usize, policy: PolicyKind, seed: u64) -> LocalBuffer {
         LocalBuffer {
             s_max,
             policy,
             classes: RwLock::new(HashMap::new()),
-            seed: seed ^ 0xB0FF,
+            seed: derive_seed(SeedDomain::BufferBase, &[seed]),
             counters: BufferCounters::default(),
         }
     }
@@ -74,7 +87,7 @@ impl LocalBuffer {
     /// Deterministic per-class eviction-stream seed (splitmix-style mix so
     /// nearby class ids give unrelated streams).
     fn class_seed(&self, class: u32) -> u64 {
-        self.seed ^ (class as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+        derive_seed(SeedDomain::ClassEvict, &[self.seed, class as u64])
     }
 
     pub fn s_max(&self) -> usize {
@@ -140,21 +153,39 @@ impl LocalBuffer {
             ClassBuffer::new(cap, self.policy, self.class_seed(class))));
     }
 
-    /// Algorithm 1: offer each sample of the mini-batch with probability
-    /// `c/b`; full sub-buffers evict per policy. Returns candidates offered.
+    /// Algorithm 1 without scores: every candidate carries score 0.0.
+    /// Bit-identical to `update_with_batch_scored` with an empty score
+    /// slice (same `rng.chance` stream, same eviction draws).
     pub fn update_with_batch(&self, batch: &[Sample], c: usize, b: usize,
                              rng: &mut Rng) -> usize {
+        self.update_with_batch_scored(batch, &[], c, b, rng)
+    }
+
+    /// Algorithm 1: offer each sample of the mini-batch with probability
+    /// `c/b`; full sub-buffers evict per policy. `scores[i]` is sample
+    /// `i`'s candidate score (the engine threads the trainer's last-seen
+    /// loss through here); a short or empty slice pads with 0.0. Returns
+    /// candidates offered.
+    pub fn update_with_batch_scored(&self, batch: &[Sample], scores: &[f32],
+                                    c: usize, b: usize, rng: &mut Rng)
+                                    -> usize {
         debug_assert!(c <= b, "candidate rate c={c} > batch b={b}");
         let p = c as f64 / b as f64;
         let mut offered = 0;
-        for sample in batch {
+        for (i, sample) in batch.iter().enumerate() {
             if !rng.chance(p) {
                 continue;
             }
             offered += 1;
-            self.insert(sample.clone());
+            let score = scores.get(i).copied().unwrap_or(0.0);
+            self.insert_scored(sample.clone(), score);
         }
         offered
+    }
+
+    /// Insert one unscored candidate (score 0.0).
+    pub fn insert(&self, sample: Sample) {
+        self.insert_scored(sample, 0.0);
     }
 
     /// Insert one candidate into its class buffer (creating/rebalancing the
@@ -162,25 +193,30 @@ impl LocalBuffer {
     /// draw comes from the sub-buffer's owned RNG stream, so concurrent
     /// inserts into different classes — and concurrent reads serving remote
     /// fetches — never serialize on a buffer-global lock.
-    pub fn insert(&self, sample: Sample) {
+    pub fn insert_scored(&self, sample: Sample, score: f32) {
         let class = sample.label;
         self.ensure_class(class);
         let map = self.classes.read().unwrap();
         let cb = map.get(&class).expect("ensure_class");
-        let outcome = cb.lock().unwrap().insert(sample);
+        let outcome = cb.lock().unwrap().insert(sample, score);
         self.counters.candidates_offered.fetch_add(1, Ordering::Relaxed);
-        if matches!(outcome, InsertOutcome::Replaced(_)) {
-            self.counters.evictions.fetch_add(1, Ordering::Relaxed);
-        }
+        let tally = match outcome {
+            InsertOutcome::Appended => &self.counters.appends,
+            InsertOutcome::Replaced(_) => &self.counters.evictions,
+            InsertOutcome::Rejected => &self.counters.rejections,
+        };
+        tally.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Metadata snapshot for the global sampling planner: (class, count)
-    /// sorted by class id for determinism.
+    /// Metadata snapshot for the global sampling planner: (class,
+    /// selectable count) sorted by class id for determinism. For the
+    /// default policies selectable == resident count; GRASP narrows it to
+    /// its easy→hard window so the planner only addresses servable rows.
     pub fn snapshot_counts(&self) -> Vec<ClassCount> {
         let map = self.classes.read().unwrap();
         let mut v: Vec<ClassCount> = map
             .iter()
-            .map(|(&c, cb)| (c, cb.lock().unwrap().len()))
+            .map(|(&c, cb)| (c, cb.lock().unwrap().selectable_len()))
             .collect();
         v.sort_unstable_by_key(|&(c, _)| c);
         v
@@ -194,14 +230,15 @@ impl LocalBuffer {
     /// Serve rows `(class, idx)` — the RDMA-read path. Indices may be
     /// stale (the planner snapshot races with inserts, and the metadata
     /// plane serves counts up to `meta_refresh_rounds` rounds old), so an
-    /// out-of-range index is remapped with `idx % len`: every resident of
-    /// the class stays (near-)equally likely to serve a stale pick, instead
-    /// of the old `min(idx, len − 1)` clamp that concentrated the entire
-    /// staleness mass on the newest resident. Fallible rather than
-    /// panicking: a pick naming a class the buffer doesn't hold rows for —
-    /// a hostile TCP request, a plan-construction bug, or a class
-    /// rebalanced down to empty between snapshot and fetch — errors
-    /// instead of taking down the serving thread.
+    /// out-of-range index is remapped with `idx % selectable` inside
+    /// `ClassBuffer::fetch`: every servable resident of the class stays
+    /// (near-)equally likely to serve a stale pick, instead of the old
+    /// `min(idx, len − 1)` clamp that concentrated the entire staleness
+    /// mass on the newest resident. Fallible rather than panicking: a pick
+    /// naming a class the buffer doesn't hold rows for — a hostile TCP
+    /// request, a plan-construction bug, or a class rebalanced down to
+    /// empty between snapshot and fetch — errors instead of taking down
+    /// the serving thread.
     pub fn fetch_rows(&self, picks: &[(u32, usize)]) -> Result<Vec<Sample>> {
         let map = self.classes.read().unwrap();
         let mut out = Vec::with_capacity(picks.len());
@@ -209,12 +246,11 @@ impl LocalBuffer {
             let Some(cb) = map.get(&class) else {
                 bail!("fetch of unknown class {class}");
             };
-            let cb = cb.lock().unwrap();
+            let mut cb = cb.lock().unwrap();
             if cb.is_empty() {
                 bail!("fetch from empty class {class}");
             }
-            let i = idx % cb.len();
-            out.push(cb.get(i).clone());
+            out.push(cb.fetch(idx).clone());
         }
         self.counters
             .rows_served
@@ -267,7 +303,7 @@ mod tests {
     }
 
     fn filled(s_max: usize, classes: u32, per_class: usize) -> LocalBuffer {
-        let buf = LocalBuffer::new(s_max, EvictionPolicy::Random, 1);
+        let buf = LocalBuffer::new(s_max, PolicyKind::Uniform, 1);
         for c in 0..classes {
             for i in 0..per_class {
                 buf.insert(s(c, i as f32));
@@ -289,7 +325,7 @@ mod tests {
 
     #[test]
     fn rebalances_when_new_class_arrives() {
-        let buf = LocalBuffer::new(12, EvictionPolicy::Random, 2);
+        let buf = LocalBuffer::new(12, PolicyKind::Uniform, 2);
         for i in 0..30 {
             buf.insert(s(0, i as f32));
         }
@@ -303,7 +339,7 @@ mod tests {
 
     #[test]
     fn algorithm1_offers_about_c_per_batch() {
-        let buf = LocalBuffer::new(10_000, EvictionPolicy::Random, 3);
+        let buf = LocalBuffer::new(10_000, PolicyKind::Uniform, 3);
         let batch: Vec<Sample> = (0..56).map(|i| s(i % 4, i as f32)).collect();
         let mut rng = Rng::new(9);
         let mut total = 0;
@@ -313,6 +349,70 @@ mod tests {
         }
         let mean = total as f64 / iters as f64;
         assert!((mean - 14.0).abs() < 0.5, "mean offers {mean}");
+    }
+
+    #[test]
+    fn scored_update_with_empty_scores_matches_unscored() {
+        // Same seed, same batch stream → identical buffer contents: the
+        // unscored path is a strict wrapper.
+        let batch: Vec<Sample> = (0..32).map(|i| s(i % 4, i as f32)).collect();
+        let contents = |buf: &LocalBuffer| -> Vec<(u32, Vec<f32>)> {
+            let counts = buf.snapshot_counts();
+            let mut v = Vec::new();
+            for &(class, n) in &counts {
+                let picks: Vec<(u32, usize)> =
+                    (0..n).map(|i| (class, i)).collect();
+                let rows = buf.fetch_rows(&picks).unwrap();
+                v.push((class, rows.iter().map(|s| s.features[0]).collect()));
+            }
+            v
+        };
+        let run = |scored: bool| {
+            let buf = LocalBuffer::new(16, PolicyKind::Uniform, 11);
+            let mut rng = Rng::new(4);
+            for _ in 0..100 {
+                if scored {
+                    buf.update_with_batch_scored(&batch, &[], 8, 32, &mut rng);
+                } else {
+                    buf.update_with_batch(&batch, 8, 32, &mut rng);
+                }
+            }
+            contents(&buf)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn insert_outcomes_are_tallied() {
+        let buf = LocalBuffer::new(4, PolicyKind::Reservoir, 13);
+        for i in 0..100 {
+            buf.insert_scored(s(0, i as f32), 0.5);
+        }
+        let offered = buf.counters.candidates_offered.load(Ordering::Relaxed);
+        let appends = buf.counters.appends.load(Ordering::Relaxed);
+        let evictions = buf.counters.evictions.load(Ordering::Relaxed);
+        let rejections = buf.counters.rejections.load(Ordering::Relaxed);
+        assert_eq!(offered, 100);
+        assert_eq!(appends, 4, "fills below capacity are appends");
+        assert!(rejections > 0, "reservoir must reject some candidates");
+        assert_eq!(appends + evictions + rejections, offered,
+                   "every offered candidate lands in exactly one tally");
+    }
+
+    #[test]
+    fn grasp_snapshot_reports_selectable_window() {
+        let buf = LocalBuffer::new(8, PolicyKind::Grasp, 17);
+        for i in 0..8 {
+            buf.insert_scored(s(0, i as f32), i as f32);
+        }
+        // nothing served yet → window is 1 of 8 residents
+        assert_eq!(buf.snapshot_counts(), vec![(0, 1)]);
+        assert_eq!(buf.len(), 8, "len still counts all residents");
+        // serve rows; the window widens (1 + served/4)
+        for _ in 0..8 {
+            buf.fetch_rows(&[(0, 0)]).unwrap();
+        }
+        assert_eq!(buf.snapshot_counts(), vec![(0, 3)]);
     }
 
     #[test]
@@ -351,7 +451,7 @@ mod tests {
         let small = filled(4, 2, 2);
         let got = small.sample_local(10, &mut rng).unwrap();
         assert_eq!(got.len(), 4);
-        let empty = LocalBuffer::new(10, EvictionPolicy::Random, 1);
+        let empty = LocalBuffer::new(10, PolicyKind::Uniform, 1);
         assert!(empty.sample_local(3, &mut rng).unwrap().is_empty());
     }
 
@@ -364,7 +464,7 @@ mod tests {
 
     #[test]
     fn concurrent_updates_and_reads() {
-        let buf = Arc::new(LocalBuffer::new(400, EvictionPolicy::Random, 7));
+        let buf = Arc::new(LocalBuffer::new(400, PolicyKind::Uniform, 7));
         for c in 0..4 {
             buf.insert(s(c, -1.0));
         }

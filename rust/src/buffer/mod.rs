@@ -1,18 +1,30 @@
-//! The rehearsal buffer (paper §IV-A/§IV-B).
+//! The rehearsal buffer (paper §IV-A/§IV-B) and its policy plane (PR 8).
 //!
+//! - [`policy`] — the [`policy::RehearsalPolicy`] trait: pluggable
+//!   insertion/eviction + selection weighting (uniform / FIFO / reservoir /
+//!   loss-aware / GRASP), dispatched per class sub-buffer.
 //! - [`class_buffer`] — one `R_n^i`: a bounded pool of representatives of a
-//!   single class with a pluggable eviction policy.
+//!   single class; admission and the selectable window are delegated to its
+//!   policy, scores ride in a parallel column.
 //! - [`local`] — one worker's `B_n`: the per-class map with fine-grain
 //!   locking, capacity rebalancing as new classes arrive, Algorithm 1
-//!   updates, and the row-fetch API the RPC fabric serves remote reads from.
+//!   updates (scored and unscored), and the row-fetch API the RPC fabric
+//!   serves remote reads from.
 //!
 //! The *distributed* buffer `B = ⊔ B_n` has no materialised object: it is
 //! the set of `Arc<LocalBuffer>` handles registered with the
 //! [`crate::net::Fabric`], exactly like the paper's RDMA-exposed pinned
 //! regions.
+//!
+//! Determinism contract: under the default `PolicyKind::Uniform`, every
+//! RNG stream (per-class eviction seeds included) is identical to the
+//! pre-policy-plane code, so fixed-seed default runs replay bit-identically
+//! across the refactor.
 
 pub mod class_buffer;
 pub mod local;
+pub mod policy;
 
 pub use class_buffer::{ClassBuffer, InsertOutcome};
 pub use local::{ClassCount, LocalBuffer};
+pub use policy::{AdmitDecision, RehearsalPolicy};

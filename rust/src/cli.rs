@@ -5,17 +5,22 @@
 //!              [--workers N] [--buffer-pct X] [--epochs-per-task E]
 //!              [--transport inproc|tcp] [--meta-refresh K]
 //!              [--reduce-chunks C] [--pin-workers true|false]
+//!              [--scenario K] [--policy P] [--blurry-mix X]
+//!              [--imbalance-ratio X] [--drift-strength X]
 //! dcl fig5a    [--epochs-per-task E] [--workers N]
 //! dcl fig5b    [--epochs-per-task E] [--workers N]
 //! dcl fig6     [--epochs-per-task E]
 //! dcl fig7     [--epochs-per-task E]
-//! dcl ablation --what policy|locality|sync|c|r|all [--epochs-per-task E]
+//! dcl ablation --what policy|locality|sync|c|r|grid|all
+//!              [--epochs-per-task E] [--workers N]
+//!              [--scenarios a,b,...] [--policies a,b,...]   (grid only)
 //! dcl calibrate [--variant V]
 //! ```
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{preset, ExperimentConfig, Strategy, TransportKind};
+use crate::config::{preset, ExperimentConfig, PolicyKind, ScenarioKind,
+                    Strategy, TransportKind};
 use crate::experiments;
 use crate::train::trainer::run_experiment;
 
@@ -96,6 +101,17 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
         args.bool_or("pin-workers", cfg.cluster.pin_workers)?;
     cfg.buffer.percent_of_dataset =
         args.f64_or("buffer-pct", cfg.buffer.percent_of_dataset)?;
+    if let Some(p) = args.get("policy") {
+        cfg.buffer.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(s) = args.get("scenario") {
+        cfg.data.scenario = ScenarioKind::parse(s)?;
+    }
+    cfg.data.blurry_mix = args.f64_or("blurry-mix", cfg.data.blurry_mix)?;
+    cfg.data.imbalance_ratio =
+        args.f64_or("imbalance-ratio", cfg.data.imbalance_ratio)?;
+    cfg.data.drift_strength =
+        args.f64_or("drift-strength", cfg.data.drift_strength)?;
     cfg.training.epochs_per_task =
         args.usize_or("epochs-per-task", cfg.training.epochs_per_task)?;
     if let Some(dir) = args.get("artifacts") {
@@ -109,10 +125,12 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = train_config(args)?;
-    println!("running {} / {} on N={} over {} (|B|={}%, {} epochs/task)",
+    println!("running {} / {} on N={} over {} (|B|={}%, {} epochs/task, \
+              scenario={}, policy={})",
              cfg.training.strategy.name(), cfg.training.variant,
              cfg.cluster.workers, cfg.cluster.transport.name(),
-             cfg.buffer.percent_of_dataset, cfg.training.epochs_per_task);
+             cfg.buffer.percent_of_dataset, cfg.training.epochs_per_task,
+             cfg.data.scenario.name(), cfg.buffer.policy.name());
     let report = run_experiment(&cfg)?;
     println!("{}", experiments::common::summarize(&report));
     for e in &report.epochs {
@@ -195,7 +213,9 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "ablation" => experiments::ablations::run(
             args.get("what").unwrap_or("all"),
             args.usize_or("epochs-per-task", 4)?,
-            args.usize_or("workers", 4)?),
+            args.usize_or("workers", 4)?,
+            args.get("scenarios"),
+            args.get("policies")),
         "calibrate" => cmd_calibrate(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");

@@ -46,34 +46,109 @@ impl Strategy {
     }
 }
 
-/// Eviction/selection policy for full per-class sub-buffers (§IV-B; random
-/// is the paper's choice, the others are ablations).
+/// Rehearsal-policy kind: insertion/eviction (and, for GRASP, selection
+/// ordering) of the per-class sub-buffers (§IV-B). `Uniform` — replace a
+/// uniformly random resident — is the paper's choice and the bit-identical
+/// default; the behavior behind each kind lives in `buffer::policy`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EvictionPolicy {
-    /// Replace a uniformly random resident (paper).
-    Random,
+pub enum PolicyKind {
+    /// Replace a uniformly random resident (paper; formerly named `random`).
+    Uniform,
     /// Replace the oldest resident.
     Fifo,
     /// Reservoir sampling over the class stream (unbiased over history).
     Reservoir,
+    /// Reservoir-rate acceptance, but evict the lowest-loss resident so the
+    /// buffer keeps the hardest examples ("Rethinking Experience Replay").
+    LossAware,
+    /// GRASP-style easy→hard selection: uniform insertion, but rehearsal
+    /// fetches draw from an expanding lowest-loss-first window.
+    Grasp,
 }
 
-impl EvictionPolicy {
-    pub fn parse(s: &str) -> Result<EvictionPolicy> {
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
         Ok(match s {
-            "random" => EvictionPolicy::Random,
-            "fifo" => EvictionPolicy::Fifo,
-            "reservoir" => EvictionPolicy::Reservoir,
-            other => bail!("unknown eviction policy `{other}`"),
+            // `random` is the historical name for the paper's policy;
+            // keep it parsing for existing configs.
+            "uniform" | "random" => PolicyKind::Uniform,
+            "fifo" => PolicyKind::Fifo,
+            "reservoir" => PolicyKind::Reservoir,
+            "loss_aware" | "loss-aware" => PolicyKind::LossAware,
+            "grasp" => PolicyKind::Grasp,
+            other => bail!("unknown rehearsal policy `{other}` \
+                            (want uniform|fifo|reservoir|loss_aware|grasp)"),
         })
     }
 
     pub fn name(&self) -> &'static str {
         match self {
-            EvictionPolicy::Random => "random",
-            EvictionPolicy::Fifo => "fifo",
-            EvictionPolicy::Reservoir => "reservoir",
+            PolicyKind::Uniform => "uniform",
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Reservoir => "reservoir",
+            PolicyKind::LossAware => "loss_aware",
+            PolicyKind::Grasp => "grasp",
         }
+    }
+
+    pub fn all() -> [PolicyKind; 5] {
+        [PolicyKind::Uniform, PolicyKind::Fifo, PolicyKind::Reservoir,
+         PolicyKind::LossAware, PolicyKind::Grasp]
+    }
+}
+
+/// Task-scenario kind: how classes and samples are laid out across the
+/// task axis. `ClassIncremental` is the paper's disjoint equal split and
+/// the bit-identical default; the stream geometry behind each kind lives
+/// in `data::scenario`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// T disjoint, near-equal class groups (paper §II).
+    #[default]
+    ClassIncremental,
+    /// Disjoint class groups with a ramped size imbalance
+    /// (`imbalance_ratio` = last/first task weight).
+    Imbalanced,
+    /// Task-free blurry boundaries: a `blurry_mix` fraction of every
+    /// class's samples leaks to the adjacent tasks' streams.
+    Blurry,
+    /// Domain-incremental: every task sees the full label set; a seeded
+    /// per-task feature drift (`drift_strength`) shifts the input domain.
+    DomainIncremental,
+    /// Online single-pass stream: the class-incremental split visited
+    /// exactly once (epochs_per_task is forced to 1).
+    Online,
+}
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> Result<ScenarioKind> {
+        Ok(match s {
+            "class_incremental" | "class-incremental" => {
+                ScenarioKind::ClassIncremental
+            }
+            "imbalanced" => ScenarioKind::Imbalanced,
+            "blurry" => ScenarioKind::Blurry,
+            "domain" | "domain_incremental" => ScenarioKind::DomainIncremental,
+            "online" => ScenarioKind::Online,
+            other => bail!("unknown scenario `{other}` (want \
+                            class_incremental|imbalanced|blurry|domain|online)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::ClassIncremental => "class_incremental",
+            ScenarioKind::Imbalanced => "imbalanced",
+            ScenarioKind::Blurry => "blurry",
+            ScenarioKind::DomainIncremental => "domain",
+            ScenarioKind::Online => "online",
+        }
+    }
+
+    pub fn all() -> [ScenarioKind; 5] {
+        [ScenarioKind::ClassIncremental, ScenarioKind::Imbalanced,
+         ScenarioKind::Blurry, ScenarioKind::DomainIncremental,
+         ScenarioKind::Online]
     }
 }
 
@@ -132,6 +207,17 @@ pub struct DataConfig {
     pub augment: bool,
     /// Dataset generation seed.
     pub seed: u64,
+    /// Task-scenario shape (see `data::scenario`).
+    pub scenario: ScenarioKind,
+    /// Blurry scenario: fraction of each class's samples leaking to the
+    /// adjacent tasks (half to each side). In [0, 1).
+    pub blurry_mix: f64,
+    /// Imbalanced scenario: last-task/first-task class-count weight ratio
+    /// (>= 1; 1 degenerates to the equal split).
+    pub imbalance_ratio: f64,
+    /// Domain scenario: scale of the per-task feature drift (0 disables
+    /// the shift; task 0 is always the undrifted domain).
+    pub drift_strength: f64,
 }
 
 impl Default for DataConfig {
@@ -148,6 +234,10 @@ impl Default for DataConfig {
             noise_std: 4.0,
             augment: true,
             seed: 1234,
+            scenario: ScenarioKind::ClassIncremental,
+            blurry_mix: 0.2,
+            imbalance_ratio: 3.0,
+            drift_strength: 1.0,
         }
     }
 }
@@ -206,7 +296,7 @@ pub struct BufferConfig {
     /// Global buffer size |B| as a percent of the training set (paper sweeps
     /// 2.5–30). Translated to a per-worker S_max at runtime.
     pub percent_of_dataset: f64,
-    pub policy: EvictionPolicy,
+    pub policy: PolicyKind,
     pub scope: SamplingScope,
     /// If false the engine degenerates to the blocking ablation.
     pub async_updates: bool,
@@ -216,7 +306,7 @@ impl Default for BufferConfig {
     fn default() -> Self {
         BufferConfig {
             percent_of_dataset: 30.0,
-            policy: EvictionPolicy::Random,
+            policy: PolicyKind::Uniform,
             scope: SamplingScope::Global,
             async_updates: true,
         }
@@ -324,6 +414,15 @@ impl ExperimentConfig {
         if d.train_per_class == 0 || d.input_dim == 0 {
             bail!("empty dataset geometry");
         }
+        if !(0.0..1.0).contains(&d.blurry_mix) {
+            bail!("blurry_mix out of [0, 1): {}", d.blurry_mix);
+        }
+        if !d.imbalance_ratio.is_finite() || d.imbalance_ratio < 1.0 {
+            bail!("imbalance_ratio must be >= 1: {}", d.imbalance_ratio);
+        }
+        if !d.drift_strength.is_finite() || d.drift_strength < 0.0 {
+            bail!("drift_strength must be >= 0: {}", d.drift_strength);
+        }
         let t = &self.training;
         if t.batch == 0 {
             bail!("batch must be positive");
@@ -394,6 +493,14 @@ impl ExperimentConfig {
         d.noise_std = doc.get_or("data", "noise_std", d.noise_std as f64, f)? as f32;
         d.augment = doc.get_or("data", "augment", d.augment, |v| v.as_bool())?;
         d.seed = doc.get_or("data", "seed", d.seed as i64, |v| v.as_i64())? as u64;
+        if let Some(v) = doc.tables.get("data").and_then(|t| t.get("scenario")) {
+            d.scenario = ScenarioKind::parse(v.as_str()?)?;
+        }
+        d.blurry_mix = doc.get_or("data", "blurry_mix", d.blurry_mix, f)?;
+        d.imbalance_ratio =
+            doc.get_or("data", "imbalance_ratio", d.imbalance_ratio, f)?;
+        d.drift_strength =
+            doc.get_or("data", "drift_strength", d.drift_strength, f)?;
 
         let t = &mut cfg.training;
         t.variant = doc.get_or("training", "variant", t.variant.clone(),
@@ -416,7 +523,7 @@ impl ExperimentConfig {
         b.percent_of_dataset = doc.get_or("buffer", "percent_of_dataset",
                                           b.percent_of_dataset, f)?;
         if let Some(v) = doc.tables.get("buffer").and_then(|t| t.get("policy")) {
-            b.policy = EvictionPolicy::parse(v.as_str()?)?;
+            b.policy = PolicyKind::parse(v.as_str()?)?;
         }
         if let Some(v) = doc.tables.get("buffer").and_then(|t| t.get("scope")) {
             b.scope = match v.as_str()? {
@@ -543,16 +650,65 @@ mod tests {
         assert_eq!(cfg.cluster.meta_refresh_rounds, 4);
         assert_eq!(cfg.cluster.reduce_chunks, 8);
         assert!(cfg.cluster.pin_workers);
-        assert_eq!(cfg.buffer.policy, EvictionPolicy::Fifo);
+        assert_eq!(cfg.buffer.policy, PolicyKind::Fifo);
         assert_eq!(cfg.buffer.scope, SamplingScope::LocalOnly);
+    }
+
+    #[test]
+    fn scenario_and_policy_toml_overrides() {
+        let doc = TomlTable::parse(
+            r#"
+            preset = "tiny"
+            [data]
+            scenario = "blurry"
+            blurry_mix = 0.3
+            imbalance_ratio = 4.0
+            drift_strength = 0.5
+            [buffer]
+            policy = "loss_aware"
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.data.scenario, ScenarioKind::Blurry);
+        assert_eq!(cfg.data.blurry_mix, 0.3);
+        assert_eq!(cfg.data.imbalance_ratio, 4.0);
+        assert_eq!(cfg.data.drift_strength, 0.5);
+        assert_eq!(cfg.buffer.policy, PolicyKind::LossAware);
+    }
+
+    #[test]
+    fn scenario_param_validation() {
+        let mut cfg = preset("default").unwrap();
+        cfg.data.blurry_mix = 1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("default").unwrap();
+        cfg.data.imbalance_ratio = 0.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = preset("default").unwrap();
+        cfg.data.drift_strength = -1.0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
     fn strategy_and_policy_parse() {
         assert_eq!(Strategy::parse("scratch").unwrap(), Strategy::FromScratch);
         assert!(Strategy::parse("bogus").is_err());
-        assert_eq!(EvictionPolicy::parse("reservoir").unwrap(), EvictionPolicy::Reservoir);
-        assert!(EvictionPolicy::parse("lru").is_err());
+        assert_eq!(PolicyKind::parse("reservoir").unwrap(), PolicyKind::Reservoir);
+        // `random` is the pre-PR-8 name for the paper's policy.
+        assert_eq!(PolicyKind::parse("random").unwrap(), PolicyKind::Uniform);
+        assert_eq!(PolicyKind::parse("grasp").unwrap(), PolicyKind::Grasp);
+        assert_eq!(PolicyKind::parse("loss_aware").unwrap(),
+                   PolicyKind::LossAware);
+        assert!(PolicyKind::parse("lru").is_err());
+        for k in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(k.name()).unwrap(), k);
+        }
+        for k in ScenarioKind::all() {
+            assert_eq!(ScenarioKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ScenarioKind::parse("bogus").is_err());
+        assert_eq!(ScenarioKind::default(), ScenarioKind::ClassIncremental);
         assert_eq!(TransportKind::parse("tcp").unwrap(), TransportKind::Tcp);
         assert_eq!(TransportKind::parse("inproc").unwrap(), TransportKind::Inproc);
         assert!(TransportKind::parse("rdma").is_err());

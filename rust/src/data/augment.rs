@@ -61,6 +61,60 @@ pub fn augment_sample(features: &mut Vec<f32>, rng: &mut Rng) {
     }
 }
 
+/// A fixed per-task input-domain shift for the domain-incremental scenario
+/// (`data::scenario`): a deterministic spatial translation plus a
+/// per-channel affine (gain, bias). Unlike [`augment_sample`] this is NOT
+/// stochastic per sample — every sample of a task sees the same transform,
+/// which is what makes it a domain shift rather than augmentation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftParams {
+    pub dy: isize,
+    pub dx: isize,
+    pub gain: [f32; CHANNELS],
+    pub bias: [f32; CHANNELS],
+}
+
+impl DriftParams {
+    /// Derive the drift for one task from a seeded stream (the caller
+    /// passes an Rng seeded via `SeedDomain::ScenarioDrift`). `strength`
+    /// scales every component; 0 yields the identity transform.
+    pub fn derive(rng: &mut Rng, strength: f64) -> DriftParams {
+        let span = 2 * MAX_SHIFT + 1;
+        let dy = (rng.below(span) as isize - MAX_SHIFT as isize)
+            * (strength.ceil() as isize).min(4);
+        let dx = (rng.below(span) as isize - MAX_SHIFT as isize)
+            * (strength.ceil() as isize).min(4);
+        let mut gain = [1.0f32; CHANNELS];
+        let mut bias = [0.0f32; CHANNELS];
+        for c in 0..CHANNELS {
+            gain[c] = 1.0 + (strength * 0.3 * rng.normal()) as f32;
+            bias[c] = (strength * 0.2 * rng.normal()) as f32;
+        }
+        DriftParams { dy, dx, gain, bias }
+    }
+
+    /// Apply the shift in place (spatial translation, then the per-channel
+    /// affine).
+    pub fn apply(&self, features: &mut Vec<f32>) {
+        if self.dy != 0 || self.dx != 0 {
+            *features = shift(features, self.dy, self.dx);
+        }
+        for h in 0..HEIGHT {
+            for w in 0..WIDTH {
+                for c in 0..CHANNELS {
+                    let i = at(h, w, c);
+                    features[i] = features[i] * self.gain[c] + self.bias[c];
+                }
+            }
+        }
+    }
+
+    /// The do-nothing transform (task 0 of a domain sequence).
+    pub fn identity() -> DriftParams {
+        DriftParams { dy: 0, dx: 0, gain: [1.0; CHANNELS], bias: [0.0; CHANNELS] }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +168,39 @@ mod tests {
                 assert_eq!(s[at(1, w, c)], x[at(0, w, c)]);
             }
         }
+    }
+
+    #[test]
+    fn drift_is_deterministic_and_identity_at_zero_strength() {
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let a = DriftParams::derive(&mut r1, 1.0);
+        let b = DriftParams::derive(&mut r2, 1.0);
+        assert_eq!(a, b);
+
+        let mut r3 = Rng::new(21);
+        let z = DriftParams::derive(&mut r3, 0.0);
+        let mut x = ramp();
+        z.apply(&mut x);
+        assert_eq!(x, ramp(), "zero strength must be the identity");
+        let mut y = ramp();
+        DriftParams::identity().apply(&mut y);
+        assert_eq!(y, ramp());
+    }
+
+    #[test]
+    fn drift_applies_channel_affine() {
+        let p = DriftParams {
+            dy: 0, dx: 0,
+            gain: [2.0, 1.0, 1.0],
+            bias: [0.0, 0.5, 0.0],
+        };
+        let x = ramp();
+        let mut y = x.clone();
+        p.apply(&mut y);
+        assert_eq!(y[at(0, 0, 0)], x[at(0, 0, 0)] * 2.0);
+        assert_eq!(y[at(0, 0, 1)], x[at(0, 0, 1)] + 0.5);
+        assert_eq!(y[at(0, 0, 2)], x[at(0, 0, 2)]);
     }
 
     #[test]

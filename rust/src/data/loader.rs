@@ -13,10 +13,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::data::augment::augment_sample;
+use crate::data::augment::{augment_sample, DriftParams};
 use crate::data::synthetic::Dataset;
 use crate::tensor::{Batch, Sample};
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
 
 /// Prefetch queue depth (batches buffered ahead of the consumer).
 pub const PREFETCH_DEPTH: usize = 2;
@@ -43,23 +43,38 @@ impl Loader {
     /// this epoch, from `ShardPlan`.
     pub fn new(dataset: Dataset, plan: Vec<Vec<usize>>, augment: bool,
                seed: u64) -> Loader {
+        Self::with_drift(dataset, plan, augment, seed, None)
+    }
+
+    /// Like [`Loader::new`], plus an optional fixed input-domain shift
+    /// applied to every sample before augmentation — the domain-incremental
+    /// scenario's per-task transform. `None` is byte-identical to `new`
+    /// (the zero-copy non-augment path stays zero-copy).
+    pub fn with_drift(dataset: Dataset, plan: Vec<Vec<usize>>, augment: bool,
+                      seed: u64, drift: Option<DriftParams>) -> Loader {
         let (tx, rx) = sync_channel::<Batch>(PREFETCH_DEPTH);
         let stats = Arc::new(LoaderStats::default());
         let pstats = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name("dcl-loader".into())
             .spawn(move || {
-                let mut rng = Rng::new(seed ^ 0xDA7A);
+                let mut rng =
+                    Rng::new(derive_seed(SeedDomain::LoaderStream, &[seed]));
                 let train = &dataset.train;
                 for batch_idx in plan {
                     let t0 = Instant::now();
                     let mut samples = Vec::with_capacity(batch_idx.len());
                     for idx in batch_idx {
                         let base: &Sample = &train[idx];
-                        if augment {
-                            // augmentation writes, so materialise a copy
+                        if augment || drift.is_some() {
+                            // transforms write, so materialise a copy
                             let mut features = base.features.to_vec();
-                            augment_sample(&mut features, &mut rng);
+                            if let Some(d) = &drift {
+                                d.apply(&mut features);
+                            }
+                            if augment {
+                                augment_sample(&mut features, &mut rng);
+                            }
                             samples.push(Sample::new(base.label, features));
                         } else {
                             // zero-copy: share the dataset's feature slab
@@ -115,6 +130,7 @@ mod tests {
             augment: false,
             seed: 3,
             input_dim: 3072,
+            ..DataConfig::default()
         })
     }
 
@@ -158,6 +174,37 @@ mod tests {
         let mut loader = Loader::new(ds, plan, false, 1);
         let _ = loader.next_batch();
         drop(loader); // must not deadlock on the blocked producer
+    }
+
+    #[test]
+    fn drift_applies_fixed_transform_per_sample() {
+        let ds = dataset();
+        let plan = vec![vec![0, 1]];
+        let drift = DriftParams {
+            dy: 0,
+            dx: 0,
+            gain: [2.0, 2.0, 2.0],
+            bias: [0.0, 0.0, 0.0],
+        };
+        let mut loader =
+            Loader::with_drift(ds.clone(), plan, false, 1, Some(drift));
+        let b = loader.next_batch().unwrap();
+        for (si, s) in b.samples.iter().enumerate() {
+            assert_eq!(s.label, ds.train[si].label);
+            for (got, want) in s.features.iter().zip(ds.train[si].features.iter()) {
+                assert_eq!(*got, want * 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn no_drift_is_bit_identical_to_new() {
+        let ds = dataset();
+        let plan = vec![vec![0, 1, 2]];
+        let mut a = Loader::new(ds.clone(), plan.clone(), true, 4);
+        let mut b = Loader::with_drift(ds, plan, true, 4, None);
+        assert_eq!(a.next_batch().unwrap().samples,
+                   b.next_batch().unwrap().samples);
     }
 
     #[test]

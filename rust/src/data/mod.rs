@@ -1,14 +1,18 @@
-//! Training data: synthetic class-incremental dataset, task sequencing,
-//! sharding, loader-side augmentation, and the background prefetching
-//! loader (the NVIDIA-DALI stand-in of the paper's pipeline).
+//! Training data: synthetic dataset, the scenario plane (task sequencing
+//! across class-incremental / imbalanced / blurry / domain-incremental /
+//! online shapes — see `scenario`), sharding, loader-side augmentation,
+//! and the background prefetching loader (the NVIDIA-DALI stand-in of the
+//! paper's pipeline).
 
 pub mod augment;
 pub mod loader;
+pub mod scenario;
 pub mod shard;
 pub mod synthetic;
 pub mod tasks;
 
 pub use loader::{Loader, LoaderStats};
+pub use scenario::Scenario;
 pub use shard::ShardPlan;
 pub use synthetic::Dataset;
 pub use tasks::TaskSequence;

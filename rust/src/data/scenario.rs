@@ -1,0 +1,418 @@
+//! The scenario plane: pluggable task-stream shapes (PR 8).
+//!
+//! A [`Scenario`] answers the questions the trainer, evaluator and loaders
+//! used to hard-wire to the disjoint equal split: *which classes does task
+//! `t` comprise*, *which training samples stream during task `t`*, *how
+//! many passes over them*, and *is the input domain shifted*. Five kinds
+//! (enum-dispatched — the variants are closed and the dispatch sites are
+//! hot-adjacent):
+//!
+//! - **ClassIncremental** (default): T disjoint near-equal class groups via
+//!   [`TaskSequence::new`]. This path is **bit-identical** to the
+//!   pre-scenario code: same shuffle stream, same pools, no extra RNG
+//!   consumption — pinned by `default_scenario_matches_task_sequence`.
+//! - **Imbalanced**: same disjoint shuffle, but per-task class counts ramp
+//!   from first to last task with weight ratio `imbalance_ratio`
+//!   ([`TaskSequence::with_sizes`]).
+//! - **Blurry**: task-free boundaries — a `blurry_mix` fraction of every
+//!   class's samples (half to each side, seeded per-class partition) leaks
+//!   into the *adjacent* tasks' streams. Class ownership stays disjoint;
+//!   sample pools overlap class boundaries. Pools still partition the
+//!   training set (each sample streams in exactly one task).
+//! - **DomainIncremental**: every task sees the full label set and the full
+//!   training pool; tasks differ by a seeded per-task feature drift
+//!   ([`DriftParams`], strength `drift_strength`, task 0 undrifted).
+//! - **Online**: the class-incremental split visited in a single pass —
+//!   [`Scenario::epochs_per_task`] forces 1 epoch regardless of config.
+//!
+//! RNG streams: the blurry partition and the per-task drifts draw from the
+//! dedicated `SeedDomain::ScenarioBlurry` / `SeedDomain::ScenarioDrift`
+//! streams, so adding a scenario can never perturb the task shuffle, the
+//! shard shuffles, or any buffer/engine stream.
+
+use anyhow::Result;
+
+use crate::config::{DataConfig, ScenarioKind};
+use crate::data::augment::DriftParams;
+use crate::data::synthetic::Dataset;
+use crate::data::tasks::TaskSequence;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
+
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    kind: ScenarioKind,
+    /// Disjoint class→task split. `None` only for DomainIncremental,
+    /// where every task carries the full label set.
+    split: Option<TaskSequence>,
+    /// Full label set (the per-task class view of DomainIncremental).
+    all_classes: Vec<usize>,
+    num_tasks: usize,
+    num_classes: usize,
+    seed: u64,
+    blurry_mix: f64,
+    drift_strength: f64,
+}
+
+impl Scenario {
+    /// Build the scenario a config describes.
+    pub fn from_config(d: &DataConfig) -> Result<Scenario> {
+        Self::build(d.scenario, d.num_classes, d.num_tasks, d.seed,
+                    d.blurry_mix, d.imbalance_ratio, d.drift_strength)
+    }
+
+    /// The default disjoint equal split (test fixtures; equivalent to a
+    /// `ClassIncremental` config).
+    pub fn class_incremental(num_classes: usize, num_tasks: usize, seed: u64)
+                             -> Result<Scenario> {
+        Self::build(ScenarioKind::ClassIncremental, num_classes, num_tasks,
+                    seed, 0.0, 1.0, 0.0)
+    }
+
+    fn build(kind: ScenarioKind, num_classes: usize, num_tasks: usize,
+             seed: u64, blurry_mix: f64, imbalance_ratio: f64,
+             drift_strength: f64) -> Result<Scenario> {
+        let split = match kind {
+            ScenarioKind::ClassIncremental
+            | ScenarioKind::Blurry
+            | ScenarioKind::Online => {
+                Some(TaskSequence::new(num_classes, num_tasks, seed)?)
+            }
+            ScenarioKind::Imbalanced => {
+                let sizes = ramp_sizes(num_classes, num_tasks, imbalance_ratio)?;
+                Some(TaskSequence::with_sizes(num_classes, &sizes, seed)?)
+            }
+            ScenarioKind::DomainIncremental => {
+                if num_tasks == 0 {
+                    anyhow::bail!("scenario needs at least one task");
+                }
+                None
+            }
+        };
+        Ok(Scenario {
+            kind,
+            split,
+            all_classes: (0..num_classes).collect(),
+            num_tasks,
+            num_classes,
+            seed,
+            blurry_mix,
+            drift_strength,
+        })
+    }
+
+    pub fn kind(&self) -> ScenarioKind {
+        self.kind
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.num_tasks
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Classes composing task `t` (the evaluator's per-task val view).
+    pub fn classes(&self, t: usize) -> &[usize] {
+        match &self.split {
+            Some(s) => s.classes(t),
+            None => {
+                assert!(t < self.num_tasks, "task {t} out of range");
+                &self.all_classes
+            }
+        }
+    }
+
+    /// All classes seen up to and including task `t`, deduplicated.
+    pub fn classes_up_to(&self, t: usize) -> Vec<usize> {
+        match &self.split {
+            Some(s) => s.classes_up_to(t),
+            None => {
+                assert!(t < self.num_tasks, "task {t} out of range");
+                self.all_classes.clone()
+            }
+        }
+    }
+
+    /// The disjoint split, when the scenario has one (everything but
+    /// DomainIncremental).
+    pub fn task_sequence(&self) -> Option<&TaskSequence> {
+        self.split.as_ref()
+    }
+
+    /// Dataset indices streaming during task `t`'s training phase.
+    pub fn train_pool(&self, dataset: &Dataset, t: usize) -> Vec<usize> {
+        match self.kind {
+            ScenarioKind::ClassIncremental
+            | ScenarioKind::Imbalanced
+            | ScenarioKind::Online => {
+                dataset.train_indices_of_classes(self.classes(t))
+            }
+            ScenarioKind::DomainIncremental => {
+                assert!(t < self.num_tasks, "task {t} out of range");
+                (0..dataset.train_len()).collect()
+            }
+            ScenarioKind::Blurry => self.blurry_pool(dataset, t),
+        }
+    }
+
+    /// Effective passes over task `t`'s pool: the online stream is
+    /// single-pass by definition, every other scenario keeps the
+    /// configured count.
+    pub fn epochs_per_task(&self, configured: usize) -> usize {
+        match self.kind {
+            ScenarioKind::Online => 1,
+            _ => configured,
+        }
+    }
+
+    /// The per-task input-domain shift, when the scenario has one. Task 0
+    /// is always the undrifted reference domain.
+    pub fn drift(&self, t: usize) -> Option<DriftParams> {
+        if self.kind != ScenarioKind::DomainIncremental || t == 0
+            || self.drift_strength == 0.0
+        {
+            return None;
+        }
+        let mut rng = Rng::new(derive_seed(
+            SeedDomain::ScenarioDrift, &[self.seed, t as u64]));
+        Some(DriftParams::derive(&mut rng, self.drift_strength))
+    }
+
+    /// Blurry pool for task `t`: the home shares of `t`'s own classes plus
+    /// the leaked shares of the adjacent tasks' classes.
+    fn blurry_pool(&self, dataset: &Dataset, t: usize) -> Vec<usize> {
+        let split = self.split.as_ref().expect("blurry scenario has a split");
+        let mut pool = Vec::new();
+        for &c in split.classes(t) {
+            pool.extend(self.class_partition(dataset, c).home);
+        }
+        if t > 0 {
+            // previous task's classes leak their "next-side" share forward
+            for &c in split.classes(t - 1) {
+                pool.extend(self.class_partition(dataset, c).to_next);
+            }
+        }
+        if t + 1 < self.num_tasks {
+            // next task's classes leak their "prev-side" share backward
+            for &c in split.classes(t + 1) {
+                pool.extend(self.class_partition(dataset, c).to_prev);
+            }
+        }
+        pool
+    }
+
+    /// Deterministic three-way partition of class `c`'s sample indices:
+    /// `⌊mix/2·L⌋` to each *existing* adjacent task, the rest home. Seeded
+    /// per class, independent of everything else.
+    fn class_partition(&self, dataset: &Dataset, c: usize) -> ClassShares {
+        let split = self.split.as_ref().expect("blurry scenario has a split");
+        let mut idx = dataset.train_indices_of_classes(&[c]);
+        let mut rng = Rng::new(derive_seed(
+            SeedDomain::ScenarioBlurry, &[self.seed, c as u64]));
+        rng.shuffle(&mut idx);
+        let home_task = split.task_of_class(c);
+        let leak = ((self.blurry_mix / 2.0) * idx.len() as f64) as usize;
+        let leak_prev = if home_task > 0 { leak } else { 0 };
+        let leak_next = if home_task + 1 < self.num_tasks { leak } else { 0 };
+        let to_prev = idx[..leak_prev].to_vec();
+        let to_next = idx[leak_prev..leak_prev + leak_next].to_vec();
+        let home = idx[leak_prev + leak_next..].to_vec();
+        ClassShares { home, to_prev, to_next }
+    }
+}
+
+struct ClassShares {
+    home: Vec<usize>,
+    to_prev: Vec<usize>,
+    to_next: Vec<usize>,
+}
+
+/// Per-task class counts ramping linearly in weight from 1 (first task) to
+/// `ratio` (last task), each task keeping at least one class; the K−T
+/// non-mandatory classes distribute by largest remainder (ties to the later
+/// task). Deterministic — no RNG.
+fn ramp_sizes(num_classes: usize, num_tasks: usize, ratio: f64)
+              -> Result<Vec<usize>> {
+    if num_tasks == 0 || num_classes < num_tasks {
+        anyhow::bail!("{num_classes} classes cannot fill {num_tasks} tasks");
+    }
+    if num_tasks == 1 {
+        return Ok(vec![num_classes]);
+    }
+    let weights: Vec<f64> = (0..num_tasks)
+        .map(|t| 1.0 + (ratio - 1.0) * t as f64 / (num_tasks - 1) as f64)
+        .collect();
+    let total: f64 = weights.iter().sum();
+    let spare = num_classes - num_tasks;
+    let raw: Vec<f64> = weights.iter().map(|w| spare as f64 * w / total).collect();
+    let mut sizes: Vec<usize> = raw.iter().map(|&r| 1 + r as usize).collect();
+    let mut assigned: usize = sizes.iter().sum();
+    // largest-remainder rounding; ties resolve toward the later task
+    let mut order: Vec<usize> = (0..num_tasks).collect();
+    order.sort_by(|&a, &b| {
+        let fa = raw[a] - raw[a].floor();
+        let fb = raw[b] - raw[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(b.cmp(&a))
+    });
+    let mut i = 0;
+    while assigned < num_classes {
+        sizes[order[i % num_tasks]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    Ok(sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+
+    fn data_cfg(kind: ScenarioKind) -> DataConfig {
+        DataConfig {
+            num_classes: 8,
+            num_tasks: 4,
+            train_per_class: 12,
+            val_per_class: 2,
+            noise_std: 0.4,
+            augment: false,
+            seed: 9,
+            scenario: kind,
+            ..DataConfig::default()
+        }
+    }
+
+    /// Default-pair parity pin (ISSUE 8): the ClassIncremental scenario
+    /// must reproduce the legacy `TaskSequence::new` +
+    /// `train_indices_of_classes` construction exactly — classes, pools,
+    /// epoch count, no drift.
+    #[test]
+    fn default_scenario_matches_task_sequence() {
+        let d = data_cfg(ScenarioKind::ClassIncremental);
+        let ds = Dataset::generate(&d);
+        let sc = Scenario::from_config(&d).unwrap();
+        let ts = TaskSequence::new(d.num_classes, d.num_tasks, d.seed).unwrap();
+        assert_eq!(sc.num_tasks(), ts.num_tasks());
+        for t in 0..ts.num_tasks() {
+            assert_eq!(sc.classes(t), ts.classes(t));
+            assert_eq!(sc.classes_up_to(t), ts.classes_up_to(t));
+            assert_eq!(sc.train_pool(&ds, t),
+                       ds.train_indices_of_classes(ts.classes(t)));
+            assert!(sc.drift(t).is_none());
+        }
+        assert_eq!(sc.epochs_per_task(30), 30);
+    }
+
+    #[test]
+    fn every_split_scenario_covers_all_classes() {
+        for kind in [ScenarioKind::ClassIncremental, ScenarioKind::Imbalanced,
+                     ScenarioKind::Blurry, ScenarioKind::Online] {
+            let d = data_cfg(kind);
+            let sc = Scenario::from_config(&d).unwrap();
+            let mut all: Vec<usize> = (0..sc.num_tasks())
+                .flat_map(|t| sc.classes(t).to_vec())
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..d.num_classes).collect::<Vec<_>>(),
+                       "{kind:?} lost classes");
+        }
+    }
+
+    #[test]
+    fn pools_partition_training_set_for_partitioning_scenarios() {
+        for kind in [ScenarioKind::ClassIncremental, ScenarioKind::Imbalanced,
+                     ScenarioKind::Blurry, ScenarioKind::Online] {
+            let mut d = data_cfg(kind);
+            d.blurry_mix = 0.4;
+            let ds = Dataset::generate(&d);
+            let sc = Scenario::from_config(&d).unwrap();
+            let mut all: Vec<usize> = (0..sc.num_tasks())
+                .flat_map(|t| sc.train_pool(&ds, t))
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..ds.train_len()).collect::<Vec<_>>(),
+                       "{kind:?} pools must partition the training set");
+        }
+    }
+
+    #[test]
+    fn imbalanced_sizes_ramp_and_sum() {
+        let sizes = ramp_sizes(40, 4, 3.0).unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 40);
+        assert!(sizes.windows(2).all(|w| w[0] <= w[1]), "{sizes:?}");
+        assert!(sizes[3] > sizes[0], "{sizes:?}");
+        assert_eq!(ramp_sizes(5, 5, 10.0).unwrap(), vec![1; 5]);
+        assert_eq!(ramp_sizes(7, 1, 3.0).unwrap(), vec![7]);
+        // ratio 1 degenerates to (near-)equal sizes
+        let even = ramp_sizes(10, 4, 1.0).unwrap();
+        assert_eq!(even.iter().sum::<usize>(), 10);
+        assert!(even.iter().all(|&s| s == 2 || s == 3), "{even:?}");
+    }
+
+    #[test]
+    fn blurry_leaks_exactly_mix_over_two_per_side() {
+        let mut d = data_cfg(ScenarioKind::Blurry);
+        d.blurry_mix = 0.5;
+        let ds = Dataset::generate(&d);
+        let sc = Scenario::from_config(&d).unwrap();
+        let split = sc.task_sequence().unwrap();
+        // an interior task's class leaks ⌊mix/2·L⌋ to each side
+        let c = split.classes(1)[0];
+        let shares = sc.class_partition(&ds, c);
+        let l = ds.train_indices_of_classes(&[c]).len();
+        let want = (d.blurry_mix / 2.0 * l as f64) as usize;
+        assert_eq!(shares.to_prev.len(), want);
+        assert_eq!(shares.to_next.len(), want);
+        assert_eq!(shares.home.len(), l - 2 * want);
+        // edge tasks leak only inward
+        let first = split.classes(0)[0];
+        assert!(sc.class_partition(&ds, first).to_prev.is_empty());
+        let last = split.classes(sc.num_tasks() - 1)[0];
+        assert!(sc.class_partition(&ds, last).to_next.is_empty());
+        // zero mix degenerates to the disjoint pools
+        let mut d0 = data_cfg(ScenarioKind::Blurry);
+        d0.blurry_mix = 0.0;
+        let sc0 = Scenario::from_config(&d0).unwrap();
+        for t in 0..sc0.num_tasks() {
+            let mut a = sc0.train_pool(&ds, t);
+            a.sort_unstable();
+            let mut b = ds.train_indices_of_classes(sc0.classes(t));
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn domain_scenario_full_label_set_and_seeded_drift() {
+        let mut d = data_cfg(ScenarioKind::DomainIncremental);
+        d.drift_strength = 1.0;
+        let ds = Dataset::generate(&d);
+        let sc = Scenario::from_config(&d).unwrap();
+        for t in 0..sc.num_tasks() {
+            assert_eq!(sc.classes(t),
+                       (0..d.num_classes).collect::<Vec<_>>().as_slice());
+            assert_eq!(sc.train_pool(&ds, t).len(), ds.train_len());
+        }
+        assert!(sc.drift(0).is_none(), "task 0 is the reference domain");
+        let d1 = sc.drift(1).unwrap();
+        assert_eq!(sc.drift(1).unwrap(), d1, "drift must be deterministic");
+        assert_ne!(Some(d1), sc.drift(2), "tasks drift differently");
+        // zero strength disables the shift entirely
+        let mut dz = data_cfg(ScenarioKind::DomainIncremental);
+        dz.drift_strength = 0.0;
+        let scz = Scenario::from_config(&dz).unwrap();
+        assert!(scz.drift(1).is_none());
+    }
+
+    #[test]
+    fn online_scenario_is_single_pass() {
+        let d = data_cfg(ScenarioKind::Online);
+        let sc = Scenario::from_config(&d).unwrap();
+        assert_eq!(sc.epochs_per_task(30), 1);
+        assert_eq!(sc.epochs_per_task(1), 1);
+        let ci = Scenario::from_config(
+            &data_cfg(ScenarioKind::ClassIncremental)).unwrap();
+        assert_eq!(ci.epochs_per_task(30), 30);
+    }
+}

@@ -8,7 +8,9 @@
 //! how Horovod-style training keeps loaders in lockstep without
 //! communication.
 
-use crate::util::rng::Rng;
+use crate::data::scenario::Scenario;
+use crate::data::synthetic::Dataset;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
 
 #[derive(Clone, Debug)]
 pub struct ShardPlan {
@@ -18,13 +20,21 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
+    /// Shard whatever pool the scenario streams for `task` — the pool need
+    /// not be an equal class split (imbalanced/blurry/domain pools all ride
+    /// through here unchanged).
+    pub fn for_task(scenario: &Scenario, dataset: &Dataset, task: usize,
+                    workers: usize, batch: usize, base_seed: u64,
+                    epoch: usize) -> ShardPlan {
+        Self::new(scenario.train_pool(dataset, task), workers, batch,
+                  base_seed, task, epoch)
+    }
+
     pub fn new(mut indices: Vec<usize>, workers: usize, batch: usize,
                base_seed: u64, task: usize, epoch: usize) -> ShardPlan {
         assert!(workers > 0 && batch > 0);
-        let seed = base_seed
-            .wrapping_mul(0x9E3779B97F4A7C15)
-            .wrapping_add((task as u64) << 32)
-            .wrapping_add(epoch as u64);
+        let seed = derive_seed(SeedDomain::ShardEpoch,
+                               &[base_seed, task as u64, epoch as u64]);
         Rng::new(seed).shuffle(&mut indices);
         // equal shards: truncate to a multiple of workers*batch so every
         // worker sees the same number of full batches (keeps all-reduce in
@@ -94,6 +104,31 @@ mod tests {
         let a2 = ShardPlan::new((0..64).collect(), 2, 8, 7, 0, 0);
         assert_ne!(a.batch(0, 0), b.batch(0, 0));
         assert_eq!(a.batch(0, 0), a2.batch(0, 0));
+    }
+
+    #[test]
+    fn for_task_shards_the_scenario_pool() {
+        use crate::config::DataConfig;
+        let d = DataConfig {
+            num_classes: 4,
+            num_tasks: 2,
+            train_per_class: 20,
+            val_per_class: 2,
+            noise_std: 0.3,
+            augment: false,
+            seed: 5,
+            ..DataConfig::default()
+        };
+        let ds = Dataset::generate(&d);
+        let sc = Scenario::from_config(&d).unwrap();
+        let a = ShardPlan::for_task(&sc, &ds, 1, 2, 4, 7, 3);
+        let b = ShardPlan::new(sc.train_pool(&ds, 1), 2, 4, 7, 1, 3);
+        assert_eq!(a.iterations(), b.iterations());
+        for n in 0..2 {
+            for i in 0..a.iterations() {
+                assert_eq!(a.batch(n, i), b.batch(n, i));
+            }
+        }
     }
 
     #[test]

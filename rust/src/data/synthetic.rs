@@ -158,6 +158,7 @@ mod tests {
             noise_std: 0.5,
             augment: false,
             seed: 7,
+            ..DataConfig::default()
         }
     }
 

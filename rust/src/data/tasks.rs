@@ -1,17 +1,25 @@
-//! Class-incremental task sequence (paper §II, §VI-A).
+//! Class→task split for class-incremental sequences (paper §II, §VI-A).
 //!
-//! T disjoint tasks; the model visits tasks in order and can never revisit
-//! earlier tasks' training data (except through the rehearsal buffer). The
-//! class→task assignment is a seeded shuffle so task difficulty is
-//! exchangeable across seeds. `K` classes need not divide evenly into `T`
-//! tasks: sizes differ by at most one, with the first `K mod T` tasks
-//! taking `⌈K/T⌉` classes and the rest `⌊K/T⌋` — degenerate geometries
-//! (zero tasks, fewer classes than tasks) are rejected with an error
-//! instead of a panic.
+//! `TaskSequence` is the *disjoint split* primitive: T tasks, each owning a
+//! distinct set of class ids, assigned from a seeded shuffle so task
+//! difficulty is exchangeable across seeds. Since PR 8 it is one building
+//! block of the wider scenario plane (`data/scenario.rs`): the default
+//! class-incremental scenario uses the equal split below verbatim (so
+//! fixed-seed runs stay bit-identical to pre-scenario PRs), the imbalanced
+//! scenario feeds [`TaskSequence::with_sizes`] a ramped size vector, and
+//! the blurry scenario reuses the split but leaks samples across adjacent
+//! task boundaries at the pool level — class *ownership* stays disjoint
+//! here in all cases.
+//!
+//! The equal split: `K` classes need not divide evenly into `T` tasks;
+//! sizes differ by at most one, with the first `K mod T` tasks taking
+//! `⌈K/T⌉` classes and the rest `⌊K/T⌋`. Degenerate geometries (zero
+//! tasks, fewer classes than tasks, sizes that don't sum to `K`) are
+//! rejected with an error instead of a panic.
 
 use anyhow::{bail, Result};
 
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
 
 #[derive(Clone, Debug)]
 pub struct TaskSequence {
@@ -22,6 +30,7 @@ pub struct TaskSequence {
 }
 
 impl TaskSequence {
+    /// Equal split: sizes differ by at most one.
     pub fn new(num_classes: usize, num_tasks: usize, seed: u64)
                -> Result<TaskSequence> {
         if num_tasks == 0 {
@@ -31,15 +40,35 @@ impl TaskSequence {
             bail!("{num_classes} classes cannot fill {num_tasks} tasks \
                    (every task needs at least one class)");
         }
-        let mut ids: Vec<usize> = (0..num_classes).collect();
-        Rng::new(seed ^ 0x7A5C5).shuffle(&mut ids);
         let base = num_classes / num_tasks;
         let extra = num_classes % num_tasks;
-        let mut classes = Vec::with_capacity(num_tasks);
+        let sizes: Vec<usize> =
+            (0..num_tasks).map(|t| base + usize::from(t < extra)).collect();
+        Self::with_sizes(num_classes, &sizes, seed)
+    }
+
+    /// Split with caller-chosen per-task class counts (the imbalanced
+    /// scenario's entry point). The class shuffle consumes the exact same
+    /// RNG stream as [`TaskSequence::new`], so `with_sizes` with the
+    /// equal-split size vector reproduces `new` bit-for-bit.
+    pub fn with_sizes(num_classes: usize, sizes: &[usize], seed: u64)
+                      -> Result<TaskSequence> {
+        if sizes.is_empty() {
+            bail!("task sequence needs at least one task");
+        }
+        if sizes.iter().any(|&s| s == 0) {
+            bail!("every task needs at least one class (sizes {sizes:?})");
+        }
+        if sizes.iter().sum::<usize>() != num_classes {
+            bail!("task sizes {sizes:?} do not sum to {num_classes} classes");
+        }
+        let mut ids: Vec<usize> = (0..num_classes).collect();
+        Rng::new(derive_seed(SeedDomain::TaskShuffle, &[seed]))
+            .shuffle(&mut ids);
+        let mut classes = Vec::with_capacity(sizes.len());
         let mut task_of = vec![0usize; num_classes];
         let mut at = 0usize;
-        for t in 0..num_tasks {
-            let take = base + usize::from(t < extra);
+        for (t, &take) in sizes.iter().enumerate() {
             let group: Vec<usize> = ids[at..at + take].to_vec();
             at += take;
             for &c in &group {
@@ -125,10 +154,38 @@ mod tests {
     }
 
     #[test]
+    fn with_sizes_equal_split_matches_new() {
+        // `new` is now a thin wrapper over `with_sizes`; pin that the
+        // equal-split size vector reproduces it exactly (same shuffle
+        // stream, same grouping).
+        let a = TaskSequence::new(10, 4, 7).unwrap();
+        let b = TaskSequence::with_sizes(10, &[3, 3, 2, 2], 7).unwrap();
+        for t in 0..4 {
+            assert_eq!(a.classes(t), b.classes(t));
+        }
+    }
+
+    #[test]
+    fn with_sizes_respects_requested_sizes() {
+        let ts = TaskSequence::with_sizes(10, &[1, 2, 3, 4], 5).unwrap();
+        let sizes: Vec<usize> = (0..4).map(|t| ts.classes(t).len()).collect();
+        assert_eq!(sizes, vec![1, 2, 3, 4]);
+        let mut all: Vec<usize> =
+            (0..4).flat_map(|t| ts.classes(t).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn degenerate_geometries_rejected() {
         assert!(TaskSequence::new(10, 0, 0).is_err(), "zero tasks");
         assert!(TaskSequence::new(3, 4, 0).is_err(),
                 "fewer classes than tasks");
         assert!(TaskSequence::new(4, 4, 1).is_ok(), "one class per task");
+        assert!(TaskSequence::with_sizes(10, &[], 0).is_err(), "no tasks");
+        assert!(TaskSequence::with_sizes(10, &[5, 0, 5], 0).is_err(),
+                "empty task");
+        assert!(TaskSequence::with_sizes(10, &[5, 6], 0).is_err(),
+                "sizes must sum to K");
     }
 }

@@ -58,7 +58,7 @@ use crate::config::SamplingScope;
 use crate::net::Fabric;
 use crate::sampling::GlobalSampler;
 use crate::tensor::{Batch, Sample};
-use crate::util::rng::Rng;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
 
 /// Engine parameters (a view over the experiment config).
 #[derive(Clone, Copy, Debug)]
@@ -71,8 +71,9 @@ pub struct EngineParams {
 }
 
 enum Job {
-    /// Populate with this batch, then sample reps for the next iteration.
-    Update(Vec<Sample>),
+    /// Populate with this batch (+ per-sample candidate scores), then
+    /// sample reps for the next iteration.
+    Update(Vec<Sample>, Vec<f32>),
     /// Drain without sampling (end of stream).
     Flush,
 }
@@ -111,7 +112,7 @@ impl RehearsalEngine {
             params,
             fabric,
             sampler,
-            rng: Rng::new(seed ^ 0xE791E),
+            rng: Rng::new(derive_seed(SeedDomain::EngineForeground, &[seed])),
             timings,
             job_tx: None,
             res_rx: None,
@@ -132,16 +133,17 @@ impl RehearsalEngine {
         let params = self.params;
         let worker = self.worker;
         let sampler = GlobalSampler::new(worker, params.scope);
-        let mut rng = Rng::new(seed ^ 0xBA0C6);
+        let mut rng =
+            Rng::new(derive_seed(SeedDomain::EngineBackground, &[seed]));
         let handle = std::thread::Builder::new()
             .name(format!("dcl-engine-{worker}"))
             .spawn(move || {
                 while let Ok(job) = job_rx.recv() {
                     match job {
-                        Job::Update(batch) => {
+                        Job::Update(batch, scores) => {
                             let reps = background_round(
                                 worker, &fabric, &sampler, &params, &batch,
-                                &timings, &mut rng);
+                                &scores, &timings, &mut rng);
                             let failed = reps.is_err();
                             if res_tx.send(FetchResult { reps }).is_err() || failed {
                                 return;
@@ -157,9 +159,19 @@ impl RehearsalEngine {
         self.bg = Some(handle);
     }
 
+    /// The Listing-1 primitive without candidate scores (every candidate
+    /// carries 0.0 — bit-identical to `update_scored` with an empty slice).
+    pub fn update(&mut self, batch: &Batch) -> Result<Vec<Sample>> {
+        self.update_scored(batch, &[])
+    }
+
     /// The Listing-1 primitive. Returns the representatives to concatenate
     /// with `batch` for this iteration (possibly empty on warm-up).
-    pub fn update(&mut self, batch: &Batch) -> Result<Vec<Sample>> {
+    /// `scores[i]` is sample `i`'s candidate score for the buffer's
+    /// rehearsal policy (the trainer threads its last-seen loss through
+    /// here); short/empty slices pad with 0.0.
+    pub fn update_scored(&mut self, batch: &Batch, scores: &[f32])
+                         -> Result<Vec<Sample>> {
         self.timings.iterations.fetch_add(1, Ordering::Relaxed);
         if self.params.async_updates {
             // 1. wait for the reps requested during the previous iteration
@@ -183,7 +195,7 @@ impl RehearsalEngine {
             self.job_tx
                 .as_ref()
                 .expect("async engine has job_tx")
-                .send(Job::Update(batch.samples.clone()))
+                .send(Job::Update(batch.samples.clone(), scores.to_vec()))
                 .map_err(|_| anyhow::anyhow!("engine thread died"))?;
             self.pending = true;
             Ok(reps)
@@ -193,7 +205,7 @@ impl RehearsalEngine {
             // (keeps "reps never drawn from the batch being trained on").
             blocking_round(
                 self.worker, &self.fabric, &self.sampler, &self.params,
-                &batch.samples, &self.timings, &mut self.rng)
+                &batch.samples, scores, &self.timings, &mut self.rng)
         }
     }
 
@@ -251,12 +263,12 @@ impl Drop for RehearsalEngine {
 /// Background half of one iteration: populate B_n, then sample the next r.
 /// Fallible: the fabric's transport can fail mid-run (e.g. a lost TCP peer).
 fn background_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
-                    params: &EngineParams, batch: &[Sample],
+                    params: &EngineParams, batch: &[Sample], scores: &[f32],
                     timings: &EngineTimings, rng: &mut Rng) -> Result<Vec<Sample>> {
     // Populate (Algorithm 1).
     let t0 = Instant::now();
-    fabric.buffer(worker).update_with_batch(
-        batch, params.candidates, params.batch, rng);
+    fabric.buffer(worker).update_with_batch_scored(
+        batch, scores, params.candidates, params.batch, rng);
     timings
         .populate_ns
         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -288,7 +300,7 @@ fn background_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
 /// span to both `augment` and `wait`, and its second `elapsed()` even
 /// included the first counter update).
 fn blocking_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
-                  params: &EngineParams, batch: &[Sample],
+                  params: &EngineParams, batch: &[Sample], scores: &[f32],
                   timings: &EngineTimings, rng: &mut Rng) -> Result<Vec<Sample>> {
     let t1 = Instant::now();
     let counts = fabric.gather_counts(worker)?;
@@ -308,8 +320,8 @@ fn blocking_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
         .fetch_add(reps.len() as u64, Ordering::Relaxed);
 
     let t0 = Instant::now();
-    fabric.buffer(worker).update_with_batch(
-        batch, params.candidates, params.batch, rng);
+    fabric.buffer(worker).update_with_batch_scored(
+        batch, scores, params.candidates, params.batch, rng);
     timings
         .populate_ns
         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -319,12 +331,12 @@ fn blocking_round(worker: usize, fabric: &Fabric, sampler: &GlobalSampler,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{EvictionPolicy, SamplingScope};
+    use crate::config::{PolicyKind, SamplingScope};
     use crate::net::CostModel;
 
     fn make_fabric(n: usize, s_max: usize) -> Arc<Fabric> {
         let buffers = (0..n)
-            .map(|w| Arc::new(LocalBuffer::new(s_max, EvictionPolicy::Random, w as u64)))
+            .map(|w| Arc::new(LocalBuffer::new(s_max, PolicyKind::Uniform, w as u64)))
             .collect();
         Arc::new(Fabric::new(buffers, CostModel::default(), false))
     }
@@ -447,7 +459,7 @@ mod tests {
     #[test]
     fn engine_runs_unmodified_over_tcp() {
         let buffers = (0..2)
-            .map(|w| Arc::new(LocalBuffer::new(100, EvictionPolicy::Random, w as u64)))
+            .map(|w| Arc::new(LocalBuffer::new(100, PolicyKind::Uniform, w as u64)))
             .collect();
         let fabric = Arc::new(
             Fabric::over_tcp(buffers, CostModel::default(), false).unwrap());
@@ -460,6 +472,30 @@ mod tests {
         e.shutdown().unwrap();
         drop(e);
         fabric.shutdown().unwrap();
+    }
+
+    #[test]
+    fn scored_update_matches_unscored_under_uniform() {
+        // Default-policy parity: threading scores through the engine must
+        // not perturb any RNG stream, so the fetched reps are identical.
+        let run = |scored: bool| -> Vec<Vec<f32>> {
+            let fabric = make_fabric(1, 64);
+            let mut e = RehearsalEngine::new(
+                0, Arc::clone(&fabric), params(false), 31);
+            let mut out = Vec::new();
+            for i in 0..12 {
+                let b = batch_of(i % 3, 8);
+                let reps = if scored {
+                    let scores = vec![0.7f32; 8];
+                    e.update_scored(&b, &scores).unwrap()
+                } else {
+                    e.update(&b).unwrap()
+                };
+                out.push(reps.iter().map(|s| s.features[0]).collect());
+            }
+            out
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

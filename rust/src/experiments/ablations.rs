@@ -1,7 +1,8 @@
 //! Design-choice ablations (DESIGN.md §4, abl-*): quantify each mechanism
 //! the paper motivates but does not sweep directly.
 //!
-//! - `policy`   — eviction policy: random (paper) vs FIFO vs reservoir.
+//! - `policy`   — rehearsal policy: uniform (paper) vs FIFO vs reservoir
+//!   vs loss-aware vs GRASP (`buffer::policy`).
 //! - `locality` — global sampling (paper) vs local-only (the biased
 //!   "embarrassingly parallel" strawman of §IV-C).
 //! - `sync`     — async engine (paper) vs blocking buffer management
@@ -9,13 +10,19 @@
 //! - `c`        — candidate rate c ∈ {7, 14, 28} (§VI-C).
 //! - `r`        — representative count r ∈ {3, 7, 14} (§VI-C
 //!   plasticity/stability trade-off; needs matching AOT artifacts).
+//! - `grid`     — scenario × policy cross product: every task scenario
+//!   (`data::scenario`) against a policy subset, reporting accuracy,
+//!   runtime, and rehearsal wire bytes per cell. Also emits a
+//!   bench-schema CSV so CI can track the default cell's accuracy.
 //!
 //! All ablations run resnet18_sim (the fast variant) on the default
 //! geometry so the full set completes in minutes.
 
+use std::path::PathBuf;
+
 use anyhow::Result;
 
-use crate::config::{EvictionPolicy, SamplingScope, Strategy};
+use crate::config::{PolicyKind, SamplingScope, ScenarioKind, Strategy};
 use crate::metrics::csv::{f, CsvWriter};
 
 use super::common::{harness_config, results_dir, summarize, Session};
@@ -47,8 +54,7 @@ pub fn run_policy(session: &Session, epochs: usize, workers: usize) -> Result<()
     let mut w = csv("abl_policy.csv")?;
     let mut cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
     let exec = session.executor(VARIANT, cfg.training.reps)?;
-    for policy in [EvictionPolicy::Random, EvictionPolicy::Fifo,
-                   EvictionPolicy::Reservoir] {
+    for policy in PolicyKind::all() {
         cfg.buffer.policy = policy;
         let report = session.run(&cfg, &exec)?;
         push(&mut w, policy.name(), &report)?;
@@ -114,22 +120,102 @@ pub fn run_r(session: &Session, epochs: usize, workers: usize) -> Result<()> {
     Ok(())
 }
 
-pub fn run(what: &str, epochs: usize, workers: usize) -> Result<()> {
+/// Default policy subset for the grid: the paper's choice plus the two
+/// score-driven policies (the full five-policy axis is `run_policy`'s job).
+const GRID_POLICIES: [PolicyKind; 3] =
+    [PolicyKind::Uniform, PolicyKind::LossAware, PolicyKind::Grasp];
+
+fn parse_list<T>(spec: Option<&str>, default: &[T],
+                 parse: fn(&str) -> Result<T>) -> Result<Vec<T>>
+where
+    T: Copy,
+{
+    match spec {
+        None => Ok(default.to_vec()),
+        Some(s) => s.split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(parse)
+            .collect(),
+    }
+}
+
+/// Scenario × policy cross product. Every cell is reproducible from
+/// config/CLI alone: `dcl train --scenario S --policy P` replays it.
+pub fn run_grid(session: &Session, epochs: usize, workers: usize,
+                scenarios: &[ScenarioKind], policies: &[PolicyKind])
+                -> Result<()> {
+    println!("== ablation: scenario x policy grid ({} cells) ==",
+             scenarios.len() * policies.len());
+    let mut w = CsvWriter::new(
+        &results_dir().join("abl_grid.csv"),
+        &["scenario", "policy", "top5_accuracy_T", "top1_accuracy_T",
+          "wall_s", "wire_bytes"],
+    )?;
+    // Bench-schema mirror: CI's merge step folds this into BENCH_ci.json
+    // alongside the criterion-style benches (throughput = top-5 acc_T).
+    let mut bench = CsvWriter::new(
+        &PathBuf::from("target/bench_results/ablations_smoke.csv"),
+        &["name", "mean_s", "p50_s", "p95_s", "p99_s", "throughput"],
+    )?;
+    let exec = {
+        let cfg = harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+        session.executor(VARIANT, cfg.training.reps)?
+    };
+    for &scenario in scenarios {
+        for &policy in policies {
+            let mut cfg =
+                harness_config(VARIANT, Strategy::Rehearsal, epochs, workers);
+            cfg.data.scenario = scenario;
+            cfg.buffer.policy = policy;
+            let report = session.run(&cfg, &exec)?;
+            println!("{}", summarize(&report));
+            let wall = report.total_wall.as_secs_f64();
+            w.row(&[
+                scenario.name().into(),
+                policy.name().into(),
+                f(report.final_accuracy_t),
+                f(report.final_top1_accuracy_t),
+                f(wall),
+                report.rehearsal_wire_bytes.to_string(),
+            ])?;
+            bench.row(&[
+                format!("grid_{}_{}", scenario.name(), policy.name()),
+                f(wall), f(wall), f(wall), f(wall),
+                f(report.final_accuracy_t),
+            ])?;
+        }
+    }
+    println!("wrote {}", w.finish()?.display());
+    println!("wrote {}", bench.finish()?.display());
+    Ok(())
+}
+
+pub fn run(what: &str, epochs: usize, workers: usize,
+           scenarios: Option<&str>, policies: Option<&str>) -> Result<()> {
     let session = Session::open()?;
+    let grid = |session: &Session| -> Result<()> {
+        let s = parse_list(scenarios, &ScenarioKind::all(),
+                           ScenarioKind::parse)?;
+        let p = parse_list(policies, &GRID_POLICIES, PolicyKind::parse)?;
+        run_grid(session, epochs, workers, &s, &p)
+    };
     match what {
         "policy" => run_policy(&session, epochs, workers),
         "locality" => run_locality(&session, epochs, workers),
         "sync" => run_sync(&session, epochs, workers),
         "c" => run_c(&session, epochs, workers),
         "r" => run_r(&session, epochs, workers),
+        "grid" => grid(&session),
         "all" => {
             run_policy(&session, epochs, workers)?;
             run_locality(&session, epochs, workers)?;
             run_sync(&session, epochs, workers)?;
             run_c(&session, epochs, workers)?;
-            run_r(&session, epochs, workers)
+            run_r(&session, epochs, workers)?;
+            grid(&session)
         }
         other => anyhow::bail!("unknown ablation `{other}` \
-                                (policy|locality|sync|c|r|all)"),
+                                (policy|locality|sync|c|r|grid|all)"),
     }
 }

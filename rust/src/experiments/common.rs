@@ -7,7 +7,7 @@ use std::sync::Mutex;
 use anyhow::{bail, Result};
 
 use crate::config::{preset, ExperimentConfig, Strategy};
-use crate::data::{Dataset, TaskSequence};
+use crate::data::{Dataset, Scenario};
 use crate::metrics::report::RunReport;
 use crate::runtime::{Manifest, ModelExecutor};
 use crate::train::Trainer;
@@ -89,9 +89,8 @@ impl Session {
                   cfg.data.num_classes, cfg.training.batch);
         }
         let dataset = self.dataset(cfg);
-        let tasks = TaskSequence::new(cfg.data.num_classes, cfg.data.num_tasks,
-                                      cfg.data.seed)?;
-        Trainer::new(cfg, exec, &dataset, &tasks).run()
+        let scenario = Scenario::from_config(&cfg.data)?;
+        Trainer::new(cfg, exec, &dataset, &scenario).run()
     }
 }
 
@@ -100,9 +99,11 @@ pub fn results_dir() -> PathBuf {
     PathBuf::from("results")
 }
 
-/// One-line human summary of a run, printed as harnesses go.
+/// One-line human summary of a run, printed as harnesses go. Rehearsal
+/// runs (buffer candidates were offered) append the InsertOutcome tallies
+/// and the rehearsal wire traffic.
 pub fn summarize(report: &RunReport) -> String {
-    format!(
+    let mut line = format!(
         "{:<11} {:<15} N={:<3} {:<6} |B|={:>5.1}%  top5 acc_T={:.4}  top1={:.4}  wall={:.1}s  it={} (train {:.1} ms, wait {:.2} ms | bg pop {:.2} + aug {:.2} ms)",
         report.strategy, report.variant, report.workers, report.transport,
         report.buffer_percent,
@@ -110,5 +111,13 @@ pub fn summarize(report: &RunReport) -> String {
         report.total_wall.as_secs_f64(), report.iterations,
         report.breakdown_ms.1, report.breakdown_ms.2,
         report.background_ms.0, report.background_ms.1,
-    )
+    );
+    if report.buffer.offered > 0 {
+        let b = &report.buffer;
+        line.push_str(&format!(
+            "  [buf off={} app={} evict={} rej={} served={} wire={}B]",
+            b.offered, b.appended, b.evicted, b.rejected, b.rows_served,
+            report.rehearsal_wire_bytes));
+    }
+    line
 }

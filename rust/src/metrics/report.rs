@@ -37,6 +37,23 @@ pub struct EpochRecord {
     pub eval: Option<EvalRecord>,
 }
 
+/// Aggregate `InsertOutcome` tallies across all worker buffers plus the
+/// rows they served — every candidate offered lands in exactly one of
+/// appended / evicted / rejected. All-zero for non-rehearsal strategies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BufferTally {
+    /// Candidates offered via Algorithm 1 (accepted coin flips).
+    pub offered: u64,
+    /// Offered candidates appended while a sub-buffer had room.
+    pub appended: u64,
+    /// Offered candidates that evicted a resident.
+    pub evicted: u64,
+    /// Offered candidates the policy rejected.
+    pub rejected: u64,
+    /// Rows served to rehearsal augmentations (local + remote).
+    pub rows_served: u64,
+}
+
 /// A complete run (one strategy, one config).
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -62,6 +79,10 @@ pub struct RunReport {
     pub allreduce_bytes: usize,
     /// Total iterations executed (per worker).
     pub iterations: usize,
+    /// Rehearsal-buffer insert/serve tallies (zeros outside rehearsal).
+    pub buffer: BufferTally,
+    /// Total rehearsal wire traffic (row fetches + metadata), bytes.
+    pub rehearsal_wire_bytes: u64,
 }
 
 impl RunReport {
@@ -126,6 +147,8 @@ mod tests {
             train_step_ms: 5.0,
             allreduce_bytes: 1024,
             iterations: 10,
+            buffer: BufferTally::default(),
+            rehearsal_wire_bytes: 0,
         };
         assert_eq!(report.accuracy_curve(), vec![(1, 0.8)]);
         let tc = report.time_curve();

@@ -126,7 +126,7 @@ impl GlobalSampler {
 mod tests {
     use super::*;
     use crate::buffer::LocalBuffer;
-    use crate::config::EvictionPolicy;
+    use crate::config::PolicyKind;
     use crate::net::CostModel;
     use crate::util::stats::chi_square_uniform;
     use std::sync::Arc;
@@ -234,7 +234,7 @@ mod tests {
     fn execute_assembles_rows_and_counts_rpcs() {
         let buffers: Vec<Arc<LocalBuffer>> = (0..3)
             .map(|w| {
-                let b = LocalBuffer::new(50, EvictionPolicy::Random, w as u64);
+                let b = LocalBuffer::new(50, PolicyKind::Uniform, w as u64);
                 for class in 0..2u32 {
                     for i in 0..10 {
                         b.insert(Sample::new(class, vec![w as f32, i as f32]));

@@ -46,11 +46,11 @@ pub fn tiny_config() -> Option<crate::config::ExperimentConfig> {
 pub fn filled_buffers(n: usize, per_class: usize, dim: usize)
                       -> Vec<std::sync::Arc<crate::buffer::LocalBuffer>> {
     use crate::buffer::LocalBuffer;
-    use crate::config::EvictionPolicy;
+    use crate::config::PolicyKind;
     use crate::tensor::Sample;
     (0..n)
         .map(|w| {
-            let b = LocalBuffer::new(100, EvictionPolicy::Random, w as u64);
+            let b = LocalBuffer::new(100, PolicyKind::Uniform, w as u64);
             for class in 0..4u32 {
                 for i in 0..per_class {
                     let feats: Vec<f32> = (0..dim)

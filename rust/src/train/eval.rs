@@ -15,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::data::{Dataset, TaskSequence};
+use crate::data::{Dataset, Scenario};
 use crate::runtime::Literal;
 use crate::metrics::report::EvalRecord;
 use crate::runtime::ModelExecutor;
@@ -23,13 +23,13 @@ use crate::runtime::ModelExecutor;
 pub struct Evaluator<'a> {
     exec: &'a ModelExecutor,
     dataset: &'a Dataset,
-    tasks: &'a TaskSequence,
+    scenario: &'a Scenario,
 }
 
 impl<'a> Evaluator<'a> {
     pub fn new(exec: &'a ModelExecutor, dataset: &'a Dataset,
-               tasks: &'a TaskSequence) -> Evaluator<'a> {
-        Evaluator { exec, dataset, tasks }
+               scenario: &'a Scenario) -> Evaluator<'a> {
+        Evaluator { exec, dataset, scenario }
     }
 
     /// Evaluate the model on the validation sets of tasks `0..=upto_task`.
@@ -41,7 +41,7 @@ impl<'a> Evaluator<'a> {
         let mut loss_total = 0.0f64;
         let mut n_total = 0usize;
         for j in 0..=upto_task {
-            let samples = self.dataset.val_of_classes(self.tasks.classes(j));
+            let samples = self.dataset.val_of_classes(self.scenario.classes(j));
             if samples.is_empty() {
                 bail!("task {j} has an empty validation set");
             }
@@ -74,7 +74,7 @@ mod tests {
     use crate::config::DataConfig;
     use crate::runtime::Manifest;
 
-    fn fixture(eval_batch: usize) -> (ModelExecutor, Dataset, TaskSequence) {
+    fn fixture(eval_batch: usize) -> (ModelExecutor, Dataset, Scenario) {
         // 4 classes x 2 tasks, 5 val samples per class → 10 per task: a
         // set size that 7 does NOT divide (chunks of 7 + 3) and 5 does.
         let m = Manifest::synthetic(48, 4, 8, vec![2], eval_batch);
@@ -88,9 +88,10 @@ mod tests {
             noise_std: 0.4,
             augment: false,
             seed: 17,
+            ..DataConfig::default()
         });
-        let tasks = TaskSequence::new(4, 2, 17).unwrap();
-        (exec, dataset, tasks)
+        let scenario = Scenario::class_incremental(4, 2, 17).unwrap();
+        (exec, dataset, scenario)
     }
 
     #[test]

@@ -79,14 +79,16 @@ use anyhow::{anyhow, bail, Result};
 use crate::buffer::LocalBuffer;
 use crate::cluster::GradAccumulator;
 use crate::config::{ExperimentConfig, Strategy};
-use crate::data::{Dataset, Loader, ShardPlan, TaskSequence};
+use crate::data::augment::DriftParams;
+use crate::data::{Dataset, Loader, Scenario, ShardPlan};
 use crate::engine::{EngineParams, EngineTimings, RehearsalEngine};
 use crate::metrics::breakdown::{TrainMetrics, WorkerBreakdown};
-use crate::metrics::report::{EpochRecord, RunReport};
+use crate::metrics::report::{BufferTally, EpochRecord, RunReport};
 use crate::net::{CostModel, Fabric};
 use crate::optim::LrSchedule;
 use crate::runtime::{affinity, Literal, ModelExecutor};
 use crate::tensor::Batch;
+use crate::util::rng::{derive_seed, SeedDomain};
 
 use super::eval::Evaluator;
 
@@ -94,7 +96,9 @@ pub struct Trainer<'a> {
     pub cfg: &'a ExperimentConfig,
     pub exec: &'a ModelExecutor,
     pub dataset: &'a Dataset,
-    pub tasks: &'a TaskSequence,
+    /// The task scenario: per-task class compositions, training pools and
+    /// (for domain-incremental) per-task input drift (`data::scenario`).
+    pub scenario: &'a Scenario,
     /// Evaluate every `eval_every` epochs (always at task boundaries).
     pub eval_every: usize,
 }
@@ -190,6 +194,9 @@ enum WorkerCmd {
         batches: Vec<Vec<usize>>,
         loader_seed: u64,
         lr: f64,
+        /// The task's fixed input-domain shift (domain-incremental
+        /// scenario); `None` everywhere else.
+        drift: Option<DriftParams>,
     },
     Stop,
 }
@@ -245,8 +252,8 @@ fn poison_on_failure(shared: &Shared<'_>, what: &str,
 
 impl<'a> Trainer<'a> {
     pub fn new(cfg: &'a ExperimentConfig, exec: &'a ModelExecutor,
-               dataset: &'a Dataset, tasks: &'a TaskSequence) -> Trainer<'a> {
-        Trainer { cfg, exec, dataset, tasks, eval_every: 1 }
+               dataset: &'a Dataset, scenario: &'a Scenario) -> Trainer<'a> {
+        Trainer { cfg, exec, dataset, scenario, eval_every: 1 }
     }
 
     fn schedule(&self) -> LrSchedule {
@@ -282,7 +289,9 @@ impl<'a> Trainer<'a> {
         let s_max = cfg.per_worker_capacity();
         let buffers: Vec<Arc<LocalBuffer>> = (0..n)
             .map(|w| Arc::new(LocalBuffer::new(
-                s_max, cfg.buffer.policy, cfg.training.seed ^ (w as u64) << 8)))
+                s_max, cfg.buffer.policy,
+                derive_seed(SeedDomain::WorkerBuffer,
+                            &[cfg.training.seed, w as u64]))))
             .collect();
         let fabric = Arc::new(Fabric::for_kind(
             cfg.cluster.transport, buffers, self.cost_model(),
@@ -297,20 +306,38 @@ impl<'a> Trainer<'a> {
         };
         let engines: Vec<RehearsalEngine> = (0..n)
             .map(|w| RehearsalEngine::new(
-                w, Arc::clone(&fabric), params, cfg.training.seed ^ (w as u64) << 16))
+                w, Arc::clone(&fabric), params,
+                derive_seed(SeedDomain::WorkerEngine,
+                            &[cfg.training.seed, w as u64])))
             .collect();
 
         let out = self.drive(Some(engines), |task| {
-            // rehearsal trains on the current task's data only; old tasks
-            // come back through the buffer.
-            self.dataset.train_indices_of_classes(self.tasks.classes(task))
+            // rehearsal trains on the current task's scenario pool only;
+            // old tasks come back through the buffer.
+            self.scenario.train_pool(self.dataset, task)
         }, false);
         // Workers and engines are joined by the time drive() returns; tear
         // down the fabric's transport (listener/connection threads on tcp)
         // before handing the report back, success or not.
         let teardown = fabric.shutdown();
-        let report = out?;
+        let mut report = out?;
         teardown?;
+        // InsertOutcome tallies + rehearsal wire bytes (satellite metrics):
+        // summed across worker buffers / the shared fabric after all
+        // threads have quiesced.
+        let mut tally = BufferTally::default();
+        for w in 0..n {
+            let c = &fabric.buffer(w).counters;
+            tally.offered += c.candidates_offered.load(Ordering::Relaxed);
+            tally.appended += c.appends.load(Ordering::Relaxed);
+            tally.evicted += c.evictions.load(Ordering::Relaxed);
+            tally.rejected += c.rejections.load(Ordering::Relaxed);
+            tally.rows_served += c.rows_served.load(Ordering::Relaxed);
+        }
+        report.buffer = tally;
+        report.rehearsal_wire_bytes =
+            fabric.counters.bytes.load(Ordering::Relaxed)
+            + fabric.counters.meta_bytes.load(Ordering::Relaxed);
         Ok(report)
     }
 
@@ -318,14 +345,14 @@ impl<'a> Trainer<'a> {
 
     fn run_incremental(&self) -> Result<RunReport> {
         self.drive(None, |task| {
-            self.dataset.train_indices_of_classes(self.tasks.classes(task))
+            self.scenario.train_pool(self.dataset, task)
         }, false)
     }
 
     fn run_from_scratch(&self) -> Result<RunReport> {
         self.drive(None, |task| {
             self.dataset
-                .train_indices_of_classes(&self.tasks.classes_up_to(task))
+                .train_indices_of_classes(&self.scenario.classes_up_to(task))
         }, true)
     }
 
@@ -343,7 +370,7 @@ impl<'a> Trainer<'a> {
         let cfg = self.cfg;
         let n = cfg.cluster.workers;
         let schedule = self.schedule();
-        let evaluator = Evaluator::new(self.exec, self.dataset, self.tasks);
+        let evaluator = Evaluator::new(self.exec, self.dataset, self.scenario);
 
         let rehearsal = engines.is_some();
         let engine_timings: Vec<Arc<EngineTimings>> = engines
@@ -486,6 +513,10 @@ impl<'a> Trainer<'a> {
             train_step_ms: self.exec.stats.train_step_ms(),
             allreduce_bytes,
             iterations: iterations_done.load(Ordering::Relaxed),
+            // Filled by run_rehearsal after the fabric quiesces; the
+            // baselines have no rehearsal buffer to tally.
+            buffer: BufferTally::default(),
+            rehearsal_wire_bytes: 0,
         })
     }
 
@@ -507,8 +538,12 @@ impl<'a> Trainer<'a> {
         let b = cfg.training.batch;
         let mut epochs: Vec<EpochRecord> = Vec::new();
         let mut global_epoch = 0usize;
+        // Online scenarios force a single pass per task regardless of the
+        // configured epoch count.
+        let epochs_per_task =
+            self.scenario.epochs_per_task(cfg.training.epochs_per_task);
 
-        for task in 0..self.tasks.num_tasks() {
+        for task in 0..self.scenario.num_tasks() {
             if reset_each_task {
                 // Overwrite IN PLACE: the workers' captured slab views
                 // must stay valid for the whole run (see ParamSlabs), so
@@ -527,7 +562,8 @@ impl<'a> Trainer<'a> {
                 bail!("task {task} pool of {} too small for {n} workers x batch {b}",
                       pool.len());
             }
-            for epoch_in_task in 0..cfg.training.epochs_per_task {
+            let drift = self.scenario.drift(task);
+            for epoch_in_task in 0..epochs_per_task {
                 let lr = schedule.lr_at(epoch_in_task);
                 let epoch_t0 = Instant::now();
                 let plan = ShardPlan::new(
@@ -537,10 +573,11 @@ impl<'a> Trainer<'a> {
                     let batches: Vec<Vec<usize>> = (0..plan.iterations())
                         .map(|i| plan.batch(w, i).to_vec())
                         .collect();
-                    let loader_seed = cfg.training.seed
-                        ^ ((global_epoch as u64) << 20)
-                        ^ (w as u64);
-                    tx.send(WorkerCmd::Epoch { batches, loader_seed, lr })
+                    let loader_seed = derive_seed(
+                        SeedDomain::WorkerLoader,
+                        &[cfg.training.seed, global_epoch as u64, w as u64]);
+                    tx.send(WorkerCmd::Epoch { batches, loader_seed, lr,
+                                               drift })
                         .map_err(|_| anyhow!("worker {w} hung up"))?;
                 }
 
@@ -561,8 +598,7 @@ impl<'a> Trainer<'a> {
                     return Err(e);
                 }
 
-                let is_task_end =
-                    epoch_in_task + 1 == cfg.training.epochs_per_task;
+                let is_task_end = epoch_in_task + 1 == epochs_per_task;
                 let eval = if is_task_end
                     || (global_epoch + 1) % self.eval_every.max(1) == 0
                 {
@@ -612,22 +648,28 @@ fn worker_loop(w: usize,
     // One step workspace per worker thread, reused for every iteration of
     // every epoch: the steady-state train path allocates nothing.
     let mut ws = shared.exec.make_workspace();
+    // Candidate-score feed for the rehearsal policy: each batch's samples
+    // carry the previous step's mean loss (the freshest difficulty signal
+    // available without a second forward pass). The vec is reused across
+    // iterations — scored hand-off adds no steady-state allocation here.
+    let mut last_loss = 0.0f32;
+    let mut score_feed: Vec<f32> = Vec::new();
     while let Ok(cmd) = cmd_rx.recv() {
-        let (batches, loader_seed, lr) = match cmd {
+        let (batches, loader_seed, lr, drift) = match cmd {
             WorkerCmd::Stop => break,
-            WorkerCmd::Epoch { batches, loader_seed, lr } => {
-                (batches, loader_seed, lr)
+            WorkerCmd::Epoch { batches, loader_seed, lr, drift } => {
+                (batches, loader_seed, lr, drift)
             }
         };
         let iterations = batches.len();
-        let mut loader = Loader::new(dataset.clone(), batches, augment,
-                                     loader_seed);
+        let mut loader = Loader::with_drift(dataset.clone(), batches, augment,
+                                            loader_seed, drift);
         let mut metrics = TrainMetrics::default();
         for _ in 0..iterations {
             if !shared.poisoned.load(Ordering::SeqCst) {
                 poison_on_failure(shared, "worker", || worker_iteration(
                     w, shared, &mut loader, engine.as_mut(), &mut ws,
-                    &mut metrics));
+                    &mut metrics, &mut last_loss, &mut score_feed));
             }
             // Rendezvous: all gradients submitted (or the run poisoned).
             let leader = shared.barrier.wait().is_leader();
@@ -668,12 +710,15 @@ fn worker_loop(w: usize,
 /// streamed train step (against this worker's reusable workspace) whose
 /// bucket sink submits each layer's gradients and eagerly folds whatever
 /// owned regions became ready — the PR 6 overlap window.
+#[allow(clippy::too_many_arguments)]
 fn worker_iteration(w: usize,
                     shared: &Shared<'_>,
                     loader: &mut Loader,
                     engine: Option<&mut RehearsalEngine>,
                     ws: &mut crate::runtime::StepWorkspace,
-                    metrics: &mut TrainMetrics) -> Result<()> {
+                    metrics: &mut TrainMetrics,
+                    last_loss: &mut f32,
+                    score_feed: &mut Vec<f32>) -> Result<()> {
     // Load (prefetched; wait only).
     let t0 = Instant::now();
     let batch = loader
@@ -681,9 +726,16 @@ fn worker_iteration(w: usize,
         .ok_or_else(|| anyhow!("loader underrun"))?;
     shared.breakdown[w].add_load(t0.elapsed());
 
-    // Rehearsal: the Listing-1 update() primitive.
+    // Rehearsal: the Listing-1 update() primitive. Candidates carry the
+    // previous step's mean loss as their policy score (loss-aware /
+    // GRASP); the default Uniform policy ignores scores entirely, so the
+    // scored hand-off is bit-identical to the unscored one there.
     let reps = match engine {
-        Some(e) => e.update(&batch)?,
+        Some(e) => {
+            score_feed.clear();
+            score_feed.resize(batch.len(), *last_loss);
+            e.update_scored(&batch, score_feed)?
+        }
         None => Vec::new(),
     };
 
@@ -727,6 +779,7 @@ fn worker_iteration(w: usize,
     // arrived from a peer after our own backward finished.
     let rows = batch.len() + reps_len;
     metrics.add_step(out.loss as f64, out.top5 as f64, rows as f64);
+    *last_loss = out.loss;
     shared.acc.fold_ready(w)?;
     Ok(())
 }
@@ -795,9 +848,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunReport> {
     let exec = ModelExecutor::new(&manifest, &cfg.training.variant,
                                   &[cfg.training.reps])?;
     let dataset = Dataset::generate(&cfg.data);
-    let tasks = TaskSequence::new(cfg.data.num_classes, cfg.data.num_tasks,
-                                  cfg.data.seed)?;
-    let trainer = Trainer::new(cfg, &exec, &dataset, &tasks);
+    let scenario = Scenario::from_config(&cfg.data)?;
+    let trainer = Trainer::new(cfg, &exec, &dataset, &scenario);
     trainer.run()
 }
 
@@ -876,9 +928,8 @@ mod tests {
         let exec = ModelExecutor::new(&manifest, &cfg.training.variant,
                                       &[cfg.training.reps]).unwrap();
         let dataset = crate::data::Dataset::generate(&cfg.data);
-        let tasks = crate::data::TaskSequence::new(
-            cfg.data.num_classes, cfg.data.num_tasks, cfg.data.seed).unwrap();
-        let trainer = Trainer::new(&cfg, &exec, &dataset, &tasks);
+        let scenario = Scenario::from_config(&cfg.data).unwrap();
+        let trainer = Trainer::new(&cfg, &exec, &dataset, &scenario);
         let report = trainer.run().expect("partial-rep rehearsal run");
         assert!(report.iterations > 2);
         let aug = exec.stats.train_aug_steps.load(Ordering::Relaxed);
@@ -910,6 +961,65 @@ mod tests {
             for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
                 assert_eq!(ea.train_loss, eb.train_loss);
                 assert_eq!(ea.train_top5, eb.train_top5);
+            }
+        }
+    }
+
+    #[test]
+    fn default_scenario_policy_pair_reproduces_itself_exactly() {
+        // Satellite 3: the default (class_incremental, uniform) pair —
+        // stated explicitly rather than by omission — must replay
+        // bit-identically under a fixed seed, and report the new
+        // InsertOutcome tallies consistently.
+        use crate::config::{PolicyKind, ScenarioKind};
+        let mut cfg = tiny_cfg();
+        cfg.cluster.workers = 1;
+        cfg.training.strategy = Strategy::Rehearsal;
+        cfg.data.scenario = ScenarioKind::ClassIncremental;
+        cfg.buffer.policy = PolicyKind::Uniform;
+        cfg.validate().unwrap();
+        let a = run_experiment(&cfg).expect("run a");
+        let b = run_experiment(&cfg).expect("run b");
+        assert_eq!(a.final_accuracy_t, b.final_accuracy_t);
+        assert_eq!(a.final_top1_accuracy_t, b.final_top1_accuracy_t);
+        for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(ea.train_loss, eb.train_loss);
+            assert_eq!(ea.train_top5, eb.train_top5);
+        }
+        // the tallies are deterministic too, and they add up
+        assert_eq!(a.buffer.offered, b.buffer.offered);
+        assert_eq!(a.buffer.appended + a.buffer.evicted + a.buffer.rejected,
+                   a.buffer.offered);
+        assert!(a.buffer.offered > 0, "rehearsal must offer candidates");
+    }
+
+    #[test]
+    fn nondefault_scenarios_and_policies_complete() {
+        // Smoke over the non-default planes: each pair below exercises a
+        // distinct code path (blurry pools, loss-aware eviction, domain
+        // drift, GRASP windows, online single-pass).
+        use crate::config::{PolicyKind, ScenarioKind};
+        for (scenario, policy) in [
+            (ScenarioKind::Blurry, PolicyKind::LossAware),
+            (ScenarioKind::Imbalanced, PolicyKind::Uniform),
+            (ScenarioKind::DomainIncremental, PolicyKind::Grasp),
+            (ScenarioKind::Online, PolicyKind::Reservoir),
+        ] {
+            let mut cfg = tiny_cfg();
+            cfg.cluster.workers = 1;
+            cfg.training.strategy = Strategy::Rehearsal;
+            cfg.data.scenario = scenario;
+            cfg.buffer.policy = policy;
+            cfg.validate().unwrap();
+            let report = run_experiment(&cfg).unwrap_or_else(|e| {
+                panic!("{}/{} failed: {e}", scenario.name(), policy.name())
+            });
+            assert!(report.iterations > 0);
+            assert!(report.epochs.iter().all(|e| e.train_loss.is_finite()),
+                    "{}/{} diverged", scenario.name(), policy.name());
+            if scenario == ScenarioKind::Online {
+                assert_eq!(report.epochs.len(), cfg.data.num_tasks,
+                           "online must run one pass per task");
             }
         }
     }

@@ -128,9 +128,156 @@ impl Rng {
     }
 }
 
+/// Golden-ratio multiplier shared by the seed-derivation formulas below
+/// (the same constant splitmix64 advances by).
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// Named RNG stream domains. Every subsystem that derives a seed from the
+/// experiment seed goes through [`derive_seed`] with one of these, so the
+/// full map of streams is auditable in one place and new domains cannot
+/// silently collide with existing ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedDomain {
+    /// Class→task shuffle in `TaskSequence` — ids: `[seed]`.
+    TaskShuffle,
+    /// Per-(task, epoch) shard shuffle in `ShardPlan` — ids:
+    /// `[base_seed, task, epoch]`.
+    ShardEpoch,
+    /// Loader prefetch/augment stream — ids: `[seed]` (the per-worker
+    /// loader seed, already mixed by [`SeedDomain::WorkerLoader`]).
+    LoaderStream,
+    /// Per-(epoch, worker) loader seed in the trainer — ids:
+    /// `[seed, global_epoch, worker]`.
+    WorkerLoader,
+    /// Per-worker rehearsal-buffer seed in the trainer — ids: `[seed, worker]`.
+    WorkerBuffer,
+    /// Per-worker engine seed in the trainer — ids: `[seed, worker]`.
+    WorkerEngine,
+    /// `LocalBuffer` base stream (input seed → buffer-internal base) —
+    /// ids: `[seed]`.
+    BufferBase,
+    /// Per-class eviction stream inside a `LocalBuffer` — ids:
+    /// `[buffer_base_seed, class]`.
+    ClassEvict,
+    /// Engine foreground (candidate-selection) stream — ids: `[seed]`.
+    EngineForeground,
+    /// Engine background (global-sampling) stream — ids: `[seed]`.
+    EngineBackground,
+    /// Blurry-boundary per-class leak partition (PR 8) — ids: `[seed, class]`.
+    ScenarioBlurry,
+    /// Domain-incremental per-task feature drift (PR 8) — ids: `[seed, task]`.
+    ScenarioDrift,
+}
+
+/// Derive the seed for a named RNG stream from the experiment seed plus
+/// the domain's identifying integers.
+///
+/// The per-domain formulas are **frozen**: the first ten domains reproduce
+/// the ad-hoc expressions that were previously inlined at each call site
+/// (`seed ^ 0x7A5C5`, the golden-ratio shard mix, `seed ^ 0xDA7A`, …)
+/// byte-for-byte, because fixed-seed runs are pinned bit-identical across
+/// PRs (`workers1_reproduces_itself_exactly` and friends). New domains must
+/// pick a fresh XOR constant not used by any existing domain; every
+/// derived value is then whitened through splitmix64 by `Rng::new`, so
+/// distinct (domain, ids) pairs yield unrelated streams.
+///
+/// Panics if `ids` has the wrong arity for the domain — the arity is part
+/// of the stream's identity.
+pub fn derive_seed(domain: SeedDomain, ids: &[u64]) -> u64 {
+    use SeedDomain::*;
+    let arity = |n: usize| {
+        assert!(ids.len() == n,
+                "derive_seed({domain:?}) wants {n} ids, got {}", ids.len());
+    };
+    match domain {
+        TaskShuffle => { arity(1); ids[0] ^ 0x7A5C5 }
+        ShardEpoch => {
+            arity(3);
+            ids[0].wrapping_mul(GOLDEN)
+                .wrapping_add(ids[1] << 32)
+                .wrapping_add(ids[2])
+        }
+        LoaderStream => { arity(1); ids[0] ^ 0xDA7A }
+        WorkerLoader => { arity(3); ids[0] ^ (ids[1] << 20) ^ ids[2] }
+        WorkerBuffer => { arity(2); ids[0] ^ (ids[1] << 8) }
+        WorkerEngine => { arity(2); ids[0] ^ (ids[1] << 16) }
+        BufferBase => { arity(1); ids[0] ^ 0xB0FF }
+        ClassEvict => {
+            arity(2);
+            ids[0] ^ ids[1].wrapping_add(1).wrapping_mul(GOLDEN)
+        }
+        EngineForeground => { arity(1); ids[0] ^ 0xE791E }
+        EngineBackground => { arity(1); ids[0] ^ 0xBA0C6 }
+        ScenarioBlurry => {
+            arity(2);
+            ids[0] ^ 0xB1A2_7EED ^ ids[1].wrapping_add(1).wrapping_mul(GOLDEN)
+        }
+        ScenarioDrift => {
+            arity(2);
+            ids[0] ^ 0xD21F_7A5E ^ ids[1].wrapping_add(1).wrapping_mul(GOLDEN)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn derive_seed_reproduces_frozen_formulas() {
+        // The historical inline expressions, spelled out: changing any of
+        // these breaks fixed-seed reproducibility across PRs.
+        let s = 0xDEAD_BEEF_u64;
+        assert_eq!(derive_seed(SeedDomain::TaskShuffle, &[s]), s ^ 0x7A5C5);
+        assert_eq!(
+            derive_seed(SeedDomain::ShardEpoch, &[s, 3, 7]),
+            s.wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(3u64 << 32)
+                .wrapping_add(7)
+        );
+        assert_eq!(derive_seed(SeedDomain::LoaderStream, &[s]), s ^ 0xDA7A);
+        assert_eq!(derive_seed(SeedDomain::WorkerLoader, &[s, 5, 2]),
+                   s ^ (5u64 << 20) ^ 2);
+        assert_eq!(derive_seed(SeedDomain::WorkerBuffer, &[s, 3]),
+                   s ^ (3u64 << 8));
+        assert_eq!(derive_seed(SeedDomain::WorkerEngine, &[s, 3]),
+                   s ^ (3u64 << 16));
+        assert_eq!(derive_seed(SeedDomain::BufferBase, &[s]), s ^ 0xB0FF);
+        assert_eq!(
+            derive_seed(SeedDomain::ClassEvict, &[s, 9]),
+            s ^ 10u64.wrapping_mul(0x9E3779B97F4A7C15)
+        );
+        assert_eq!(derive_seed(SeedDomain::EngineForeground, &[s]),
+                   s ^ 0xE791E);
+        assert_eq!(derive_seed(SeedDomain::EngineBackground, &[s]),
+                   s ^ 0xBA0C6);
+    }
+
+    #[test]
+    fn new_scenario_domains_do_not_collide_with_existing_streams() {
+        // For a fixed experiment seed, every domain (at representative ids)
+        // must yield a distinct derived seed — a collision would make two
+        // subsystems consume the same stream.
+        let s = 1234u64;
+        let all = [
+            derive_seed(SeedDomain::TaskShuffle, &[s]),
+            derive_seed(SeedDomain::ShardEpoch, &[s, 0, 0]),
+            derive_seed(SeedDomain::LoaderStream, &[s]),
+            derive_seed(SeedDomain::WorkerLoader, &[s, 0, 1]),
+            derive_seed(SeedDomain::WorkerBuffer, &[s, 1]),
+            derive_seed(SeedDomain::WorkerEngine, &[s, 1]),
+            derive_seed(SeedDomain::BufferBase, &[s]),
+            derive_seed(SeedDomain::ClassEvict, &[s, 0]),
+            derive_seed(SeedDomain::EngineForeground, &[s]),
+            derive_seed(SeedDomain::EngineBackground, &[s]),
+            derive_seed(SeedDomain::ScenarioBlurry, &[s, 0]),
+            derive_seed(SeedDomain::ScenarioDrift, &[s, 0]),
+        ];
+        let mut dedup = all.to_vec();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "colliding streams: {all:?}");
+    }
 
     #[test]
     fn deterministic_across_clones() {

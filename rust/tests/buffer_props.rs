@@ -2,7 +2,7 @@
 //! in-repo `testkit::prop` harness.
 
 use dcl::buffer::{ClassBuffer, InsertOutcome, LocalBuffer};
-use dcl::config::EvictionPolicy;
+use dcl::config::PolicyKind;
 use dcl::tensor::Sample;
 use dcl::testkit::prop::{forall, usize_in};
 use dcl::util::rng::Rng;
@@ -11,12 +11,9 @@ fn sample(class: u32, tag: f32) -> Sample {
     Sample::new(class, vec![tag])
 }
 
-fn any_policy(rng: &mut Rng) -> EvictionPolicy {
-    match rng.below(3) {
-        0 => EvictionPolicy::Random,
-        1 => EvictionPolicy::Fifo,
-        _ => EvictionPolicy::Reservoir,
-    }
+fn any_policy(rng: &mut Rng) -> PolicyKind {
+    let all = PolicyKind::all();
+    all[rng.below(all.len())]
 }
 
 #[test]
@@ -27,7 +24,7 @@ fn class_buffer_never_exceeds_capacity() {
         let inserts = usize_in(rng, 0, 300);
         let mut cb = ClassBuffer::new(cap, policy, rng.next_u64());
         for i in 0..inserts {
-            cb.insert(sample(0, i as f32));
+            cb.insert(sample(0, i as f32), rng.f32());
             if cb.len() > cap {
                 return Err(format!("len {} > cap {cap} ({policy:?})", cb.len()));
             }
@@ -46,7 +43,7 @@ fn class_buffer_fills_before_evicting() {
         let policy = any_policy(rng);
         let mut cb = ClassBuffer::new(cap, policy, rng.next_u64());
         for i in 0..cap {
-            match cb.insert(sample(0, i as f32)) {
+            match cb.insert(sample(0, i as f32), rng.f32()) {
                 InsertOutcome::Appended => {}
                 o => return Err(format!("unexpected {o:?} before full")),
             }
@@ -82,7 +79,7 @@ fn per_class_capacity_is_even_split() {
     forall(40, |rng| {
         let s_max = usize_in(rng, 1, 300);
         let classes = usize_in(rng, 1, 20) as u32;
-        let buf = LocalBuffer::new(s_max, EvictionPolicy::Random, rng.next_u64());
+        let buf = LocalBuffer::new(s_max, PolicyKind::Uniform, rng.next_u64());
         // saturate every class
         for round in 0..(s_max + 50) {
             for c in 0..classes {
@@ -105,7 +102,7 @@ fn per_class_capacity_is_even_split() {
 fn eviction_competes_within_class_only() {
     // Filling class B never reduces class A's count below its cap share.
     forall(30, |rng| {
-        let buf = LocalBuffer::new(100, EvictionPolicy::Random, rng.next_u64());
+        let buf = LocalBuffer::new(100, PolicyKind::Uniform, rng.next_u64());
         for i in 0..50 {
             buf.insert(sample(0, i as f32));
         }
@@ -127,7 +124,7 @@ fn eviction_competes_within_class_only() {
 fn fetch_rows_returns_requested_classes() {
     forall(40, |rng| {
         let classes = usize_in(rng, 1, 8) as u32;
-        let buf = LocalBuffer::new(400, EvictionPolicy::Random, rng.next_u64());
+        let buf = LocalBuffer::new(400, PolicyKind::Uniform, rng.next_u64());
         for c in 0..classes {
             for i in 0..usize_in(rng, 1, 20) {
                 buf.insert(sample(c, i as f32));
@@ -151,11 +148,81 @@ fn fetch_rows_returns_requested_classes() {
 }
 
 #[test]
+fn loss_aware_max_resident_score_never_decreases() {
+    // LossAware evicts the argmin score, so once a hard (high-loss) sample
+    // is resident the class maximum can only go up.
+    forall(40, |rng| {
+        let cap = usize_in(rng, 2, 20);
+        let mut cb = ClassBuffer::new(cap, PolicyKind::LossAware,
+                                      rng.next_u64());
+        let mut prev_max = f32::NEG_INFINITY;
+        for i in 0..usize_in(rng, cap, 200) {
+            cb.insert(sample(0, i as f32), rng.f32());
+            let max = (0..cb.len())
+                .map(|j| cb.score(j))
+                .fold(f32::NEG_INFINITY, f32::max);
+            if cb.len() == cap && max < prev_max {
+                return Err(format!("max score fell {prev_max} -> {max}"));
+            }
+            prev_max = max;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grasp_selectable_window_is_monotone_and_bounded() {
+    forall(40, |rng| {
+        let cap = usize_in(rng, 1, 24);
+        let mut cb = ClassBuffer::new(cap, PolicyKind::Grasp, rng.next_u64());
+        for i in 0..usize_in(rng, 1, 3 * cap) {
+            cb.insert(sample(0, i as f32), rng.f32());
+        }
+        let mut prev = 0usize;
+        for fetches in 0..40 {
+            let sel = cb.selectable_len();
+            if sel == 0 || sel > cb.len() {
+                return Err(format!("window {sel} outside (0, len={}] \
+                                    after {fetches} fetches", cb.len()));
+            }
+            if sel < prev {
+                return Err(format!("window shrank {prev} -> {sel}"));
+            }
+            prev = sel;
+            cb.fetch(rng.below(1 << 20));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn insert_outcome_tallies_partition_the_offers() {
+    // Every candidate offered lands in exactly one of append / evict /
+    // reject, whatever the policy.
+    forall(30, |rng| {
+        use std::sync::atomic::Ordering::Relaxed;
+        let buf = LocalBuffer::new(usize_in(rng, 1, 80), any_policy(rng),
+                                   rng.next_u64());
+        for i in 0..usize_in(rng, 0, 300) {
+            buf.insert(sample(rng.below(4) as u32, i as f32));
+        }
+        let c = &buf.counters;
+        let offered = c.candidates_offered.load(Relaxed);
+        let split = c.appends.load(Relaxed) + c.evictions.load(Relaxed)
+            + c.rejections.load(Relaxed);
+        if offered != split {
+            return Err(format!("offered {offered} != tally sum {split}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn algorithm1_offer_rate_is_c_over_b() {
     forall(10, |rng| {
         let b = usize_in(rng, 8, 64);
         let c = usize_in(rng, 0, b);
-        let buf = LocalBuffer::new(100_000, EvictionPolicy::Random, 1);
+        let buf = LocalBuffer::new(100_000, PolicyKind::Uniform, 1);
         let batch: Vec<Sample> =
             (0..b).map(|i| sample((i % 4) as u32, i as f32)).collect();
         let mut urng = Rng::new(rng.next_u64());

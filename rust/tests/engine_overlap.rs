@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::config::{PolicyKind, SamplingScope};
 use dcl::engine::{EngineParams, RehearsalEngine};
 use dcl::net::{CostModel, Fabric};
 use dcl::tensor::{Batch, Sample};
@@ -17,7 +17,7 @@ use dcl::util::rng::Rng;
 
 fn make_fabric(n: usize, s_max: usize) -> Arc<Fabric> {
     let buffers = (0..n)
-        .map(|w| Arc::new(LocalBuffer::new(s_max, EvictionPolicy::Random, w as u64)))
+        .map(|w| Arc::new(LocalBuffer::new(s_max, PolicyKind::Uniform, w as u64)))
         .collect();
     Arc::new(Fabric::new(buffers, CostModel::default(), false))
 }

@@ -14,14 +14,14 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope};
+use dcl::config::{PolicyKind, SamplingScope};
 use dcl::engine::{EngineParams, RehearsalEngine};
 use dcl::net::{CostModel, Fabric};
 use dcl::tensor::{Batch, Sample};
 
 fn make_fabric(n: usize, s_max: usize) -> Arc<Fabric> {
     let buffers = (0..n)
-        .map(|w| Arc::new(LocalBuffer::new(s_max, EvictionPolicy::Random, w as u64)))
+        .map(|w| Arc::new(LocalBuffer::new(s_max, PolicyKind::Uniform, w as u64)))
         .collect();
     Arc::new(Fabric::new(buffers, CostModel::default(), false))
 }

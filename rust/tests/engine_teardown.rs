@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope, Strategy, TransportKind};
+use dcl::config::{PolicyKind, SamplingScope, Strategy, TransportKind};
 use dcl::engine::{EngineParams, RehearsalEngine};
 use dcl::net::{CostModel, Fabric};
 use dcl::tensor::{Batch, Sample};
@@ -48,7 +48,7 @@ fn no_thread_outlives_its_owner() {
     // --- engines: spawn, drive, shutdown ---------------------------------
     {
         let buffers = (0..4)
-            .map(|w| Arc::new(LocalBuffer::new(100, EvictionPolicy::Random, w as u64)))
+            .map(|w| Arc::new(LocalBuffer::new(100, PolicyKind::Uniform, w as u64)))
             .collect();
         let fabric = Arc::new(Fabric::new(buffers, CostModel::default(), false));
         let params = EngineParams {
@@ -105,7 +105,7 @@ fn no_thread_outlives_its_owner() {
     // a TCP fabric torn down by Drop alone must also reap its threads
     {
         let buffers = (0..3)
-            .map(|w| Arc::new(LocalBuffer::new(50, EvictionPolicy::Random, w as u64)))
+            .map(|w| Arc::new(LocalBuffer::new(50, PolicyKind::Uniform, w as u64)))
             .collect();
         let fabric = dcl::net::Fabric::over_tcp(
             buffers, CostModel::default(), false).expect("loopback fabric");
@@ -123,7 +123,7 @@ fn no_thread_outlives_its_owner() {
     // dropping with a round in flight must also tear down cleanly
     {
         let buffers = (0..2)
-            .map(|w| Arc::new(LocalBuffer::new(50, EvictionPolicy::Random, w as u64)))
+            .map(|w| Arc::new(LocalBuffer::new(50, PolicyKind::Uniform, w as u64)))
             .collect();
         let fabric = Arc::new(Fabric::new(buffers, CostModel::default(), false));
         let params = EngineParams {

@@ -14,7 +14,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope, TransportKind};
+use dcl::config::{PolicyKind, SamplingScope, TransportKind};
 use dcl::net::{CostModel, Fabric};
 use dcl::sampling::GlobalSampler;
 use dcl::tensor::Sample;
@@ -110,7 +110,7 @@ fn plans_from_k_stale_counts_stay_location_uniform() {
     let per = 8usize;
     let buffers: Vec<Arc<LocalBuffer>> = (0..2)
         .map(|w| {
-            let b = LocalBuffer::new(per, EvictionPolicy::Random, w as u64);
+            let b = LocalBuffer::new(per, PolicyKind::Uniform, w as u64);
             for i in 0..per {
                 b.insert(Sample::new(w as u32, vec![i as f32]));
             }

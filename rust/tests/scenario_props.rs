@@ -1,0 +1,121 @@
+//! Property tests on task-scenario invariants (ISSUE 8): whatever the
+//! geometry, no scenario may lose classes or training samples, and the
+//! blurry leak stays bounded by the configured mix.
+
+use dcl::config::{DataConfig, ScenarioKind};
+use dcl::data::{Dataset, Scenario};
+use dcl::testkit::prop::{forall, usize_in};
+use dcl::util::rng::Rng;
+
+fn any_cfg(rng: &mut Rng, kind: ScenarioKind) -> DataConfig {
+    let num_tasks = usize_in(rng, 1, 6);
+    DataConfig {
+        num_classes: usize_in(rng, num_tasks, 16),
+        num_tasks,
+        train_per_class: usize_in(rng, 2, 12),
+        val_per_class: 1,
+        noise_std: 0.4,
+        augment: false,
+        seed: rng.next_u64(),
+        scenario: kind,
+        blurry_mix: rng.f64() * 0.9,
+        imbalance_ratio: 1.0 + rng.f64() * 5.0,
+        drift_strength: rng.f64() * 2.0,
+        ..DataConfig::default()
+    }
+}
+
+fn split_kinds() -> [ScenarioKind; 4] {
+    [ScenarioKind::ClassIncremental, ScenarioKind::Imbalanced,
+     ScenarioKind::Blurry, ScenarioKind::Online]
+}
+
+#[test]
+fn split_scenarios_never_lose_classes() {
+    forall(40, |rng| {
+        for kind in split_kinds() {
+            let d = any_cfg(rng, kind);
+            let sc = Scenario::from_config(&d).map_err(|e| e.to_string())?;
+            let mut all: Vec<usize> = (0..sc.num_tasks())
+                .flat_map(|t| sc.classes(t).to_vec())
+                .collect();
+            all.sort_unstable();
+            if all != (0..d.num_classes).collect::<Vec<_>>() {
+                return Err(format!(
+                    "{kind:?} K={} T={} lost or duplicated classes: {all:?}",
+                    d.num_classes, d.num_tasks));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn train_pools_partition_every_split_scenario() {
+    // Union of the per-task pools must be each training index exactly
+    // once — blurry leaks move samples between streams, never drop them.
+    forall(25, |rng| {
+        for kind in split_kinds() {
+            let d = any_cfg(rng, kind);
+            let ds = Dataset::generate(&d);
+            let sc = Scenario::from_config(&d).map_err(|e| e.to_string())?;
+            let mut all: Vec<usize> = (0..sc.num_tasks())
+                .flat_map(|t| sc.train_pool(&ds, t))
+                .collect();
+            all.sort_unstable();
+            if all != (0..ds.train_len()).collect::<Vec<_>>() {
+                return Err(format!(
+                    "{kind:?} K={} T={} pools are not a partition",
+                    d.num_classes, d.num_tasks));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blurry_leak_is_bounded_by_the_mix() {
+    // Each task keeps at least (1 - mix) of its own classes' samples.
+    forall(25, |rng| {
+        let d = any_cfg(rng, ScenarioKind::Blurry);
+        let ds = Dataset::generate(&d);
+        let sc = Scenario::from_config(&d).map_err(|e| e.to_string())?;
+        for t in 0..sc.num_tasks() {
+            let home = ds.train_indices_of_classes(sc.classes(t)).len();
+            let pool = sc.train_pool(&ds, t);
+            let kept = pool.iter()
+                .filter(|&&i| sc.classes(t)
+                    .contains(&(ds.train[i].label as usize)))
+                .count();
+            let min_kept = ((1.0 - d.blurry_mix) * home as f64).floor() as usize;
+            if kept < min_kept {
+                return Err(format!(
+                    "task {t} kept {kept}/{home} own-class samples, \
+                     mix {} allows no fewer than {min_kept}",
+                    d.blurry_mix));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn domain_scenario_sees_all_classes_each_task() {
+    forall(25, |rng| {
+        let d = any_cfg(rng, ScenarioKind::DomainIncremental);
+        let ds = Dataset::generate(&d);
+        let sc = Scenario::from_config(&d).map_err(|e| e.to_string())?;
+        for t in 0..sc.num_tasks() {
+            if sc.classes(t).len() != d.num_classes {
+                return Err(format!("task {t} sees a partial label set"));
+            }
+            if sc.train_pool(&ds, t).len() != ds.train_len() {
+                return Err(format!("task {t} pool misses samples"));
+            }
+            if t > 0 && d.drift_strength > 0.0 && sc.drift(t).is_none() {
+                return Err(format!("task {t} lost its drift"));
+            }
+        }
+        Ok(())
+    });
+}

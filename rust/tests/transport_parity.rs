@@ -16,7 +16,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use dcl::buffer::LocalBuffer;
-use dcl::config::{EvictionPolicy, SamplingScope, Strategy, TransportKind};
+use dcl::config::{PolicyKind, SamplingScope, Strategy, TransportKind};
 use dcl::engine::{EngineParams, RehearsalEngine};
 use dcl::net::{wire, CostModel, Fabric};
 use dcl::sampling::GlobalSampler;
@@ -105,7 +105,7 @@ fn fixed_seed_sampling_round_is_backend_identical() {
 fn run_mode(kind: TransportKind, iters: u32) -> Vec<Vec<(u32, usize)>> {
     let (b, r) = (8usize, 4usize);
     let buffers = (0..2)
-        .map(|w| Arc::new(LocalBuffer::new(60, EvictionPolicy::Random, w as u64)))
+        .map(|w| Arc::new(LocalBuffer::new(60, PolicyKind::Uniform, w as u64)))
         .collect();
     let fabric = Arc::new(
         Fabric::for_kind(kind, buffers, CostModel::default(), false).unwrap());
