@@ -1,0 +1,103 @@
+//! Checkpoint serialization cost (PR 9): the save runs at epoch boundaries
+//! on the training critical path, so encode/decode must stay cheap next to
+//! an epoch of training. The geometry below is a scaled version of the
+//! experiment profile: a few MB of parameters + momentum, two workers'
+//! engine state and warm rehearsal buffers.
+
+use std::path::PathBuf;
+
+use dcl::bench_harness::{black_box, Runner};
+use dcl::ckpt::{BufferCkpt, Checkpoint, ClassCkpt, EngineCkpt, WorkerCkpt};
+use dcl::tensor::Sample;
+use dcl::util::rng::Rng;
+
+const DIM: usize = 3072; // 32x32x3 like the experiments
+
+fn sample(rng: &mut Rng, class: u32) -> Sample {
+    Sample::new(class, (0..DIM).map(|_| rng.f32()).collect())
+}
+
+/// A run-shaped snapshot: ~1.3M parameters in four tensors, matching
+/// momentum, two rehearsal workers with 8 warm classes x 16 residents.
+fn rich_checkpoint() -> Checkpoint {
+    let mut rng = Rng::new(17);
+    let shapes = [1_048_576usize, 262_144, 16_384, 4_096];
+    let tensor = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.f32()).collect()
+    };
+    let params: Vec<Vec<f32>> =
+        shapes.iter().map(|&n| tensor(&mut rng, n)).collect();
+    let moms: Vec<Vec<f32>> =
+        shapes.iter().map(|&n| tensor(&mut rng, n)).collect();
+    let worker_state = (0..2)
+        .map(|w| WorkerCkpt {
+            last_loss: 0.5 + w as f32,
+            engine: Some(EngineCkpt {
+                fg_rng: [w + 1, 2, 3, 4],
+                bg_rng: Some([5, 6, 7, w + 8]),
+                pending: Some((0..7).map(|i| sample(&mut rng, i % 8)).collect()),
+            }),
+        })
+        .collect();
+    let buffers = (0..2u64)
+        .map(|w| BufferCkpt {
+            classes: (0..8u32)
+                .map(|class| ClassCkpt {
+                    class,
+                    samples: (0..16).map(|_| sample(&mut rng, class)).collect(),
+                    scores: (0..16).map(|i| i as f32 * 0.25).collect(),
+                    seen: 400 + w,
+                    served: 90,
+                    policy_cursor: 3,
+                    rng: [w + 13, 14, 15, 16],
+                })
+                .collect(),
+            counters: [400, 128, 60, 212, 900],
+        })
+        .collect();
+    Checkpoint {
+        seed: 42,
+        workers: 2,
+        task: 1,
+        global_epoch: 3,
+        iterations: 1234,
+        params,
+        moms,
+        worker_state,
+        buffers,
+        fabric: [1, 2, 3, 4, 5, 6],
+    }
+}
+
+fn main() {
+    let mut r = Runner::from_args();
+    let ck = rich_checkpoint();
+    let dir: PathBuf = std::env::temp_dir()
+        .join(format!("dcl-bench-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Full save -> load cycle through the filesystem: encode + crc + atomic
+    // publish, then read + verify + decode. This is the epoch-boundary cost
+    // the trainer pays (record-only in ci/bench_baseline.json).
+    r.bench("roundtrip", || {
+        ck.save(&dir).unwrap();
+        black_box(Checkpoint::load(&dir).unwrap());
+    });
+
+    // Decode alone (the resume-time cost): one on-disk image, parsed
+    // repeatedly.
+    ck.save(&dir).unwrap();
+    let bytes = std::fs::read(Checkpoint::path_in(&dir)).unwrap();
+    r.bench("decode", || {
+        black_box(Checkpoint::decode(&bytes).unwrap());
+    });
+
+    // Integrity check alone: the crc32 pass over the body dominates small
+    // snapshots, so keep an eye on its throughput (bytes/s via items).
+    r.bench_items("crc32_body", bytes.len(), || {
+        black_box(dcl::ckpt::crc32(&bytes));
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+    r.write_csv("ckpt.csv");
+}

@@ -16,6 +16,9 @@
 //! vectors are reserved to capacity up front, and the lazy rank refresh
 //! sorts in place.
 
+use anyhow::{bail, Result};
+
+use crate::ckpt::ClassCkpt;
 use crate::config::PolicyKind;
 use crate::tensor::Sample;
 use crate::util::rng::Rng;
@@ -189,6 +192,48 @@ impl ClassBuffer {
         }
         self.ranks_dirty = true;
         self.policy.on_resize(new_capacity);
+    }
+
+    /// Export this sub-buffer's complete restorable state (PR 9): residents
+    /// with their scores, the policy clocks (`seen`, `served`, the policy's
+    /// private cursor) and the raw eviction-stream state, tagged with the
+    /// owning class id.
+    pub fn export_state(&self, class: u32) -> ClassCkpt {
+        ClassCkpt {
+            class,
+            samples: self.samples.clone(),
+            scores: self.scores.clone(),
+            seen: self.seen,
+            served: self.served,
+            policy_cursor: self.policy.cursor(),
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Restore state exported by [`ClassBuffer::export_state`] into this
+    /// freshly-built (empty) sub-buffer. The rank table is marked dirty so
+    /// GRASP rebuilds it lazily from the restored scores — rank order is a
+    /// pure function of (scores, slot order), so laziness loses nothing.
+    pub fn restore_state(&mut self, ck: &ClassCkpt) -> Result<()> {
+        if !self.samples.is_empty() {
+            bail!("restore into a non-empty class buffer");
+        }
+        if ck.samples.len() > self.capacity {
+            bail!("checkpointed class {} holds {} residents, capacity here \
+                   is {}", ck.class, ck.samples.len(), self.capacity);
+        }
+        if ck.scores.len() != ck.samples.len() {
+            bail!("class {}: {} scores for {} samples", ck.class,
+                  ck.scores.len(), ck.samples.len());
+        }
+        self.samples.extend(ck.samples.iter().cloned());
+        self.scores.extend_from_slice(&ck.scores);
+        self.seen = ck.seen;
+        self.served = ck.served;
+        self.policy.restore_cursor(ck.policy_cursor);
+        self.rng = Rng::from_state(ck.rng);
+        self.ranks_dirty = true;
+        Ok(())
     }
 
     /// Grow capacity (no eviction needed).
@@ -382,6 +427,85 @@ mod tests {
         let mut b = ClassBuffer::new(0, PolicyKind::Uniform, 6);
         assert_eq!(b.insert(s(1.0), 0.0), InsertOutcome::Rejected);
         assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn export_restore_continues_identically() {
+        // Two FIFO buffers: one runs 0..N straight; the other runs 0..k,
+        // exports, restores into a fresh buffer, then runs k..N. Contents,
+        // clocks and the next eviction draw must match exactly.
+        let n = 60;
+        let k = 37;
+        let mut straight = ClassBuffer::new(4, PolicyKind::Fifo, 5);
+        for i in 0..n {
+            straight.insert(s(i as f32), i as f32 * 0.1);
+        }
+        let mut first = ClassBuffer::new(4, PolicyKind::Fifo, 5);
+        for i in 0..k {
+            first.insert(s(i as f32), i as f32 * 0.1);
+        }
+        let ck = first.export_state(0);
+        let mut resumed = ClassBuffer::new(4, PolicyKind::Fifo, 999);
+        resumed.restore_state(&ck).unwrap();
+        for i in k..n {
+            resumed.insert(s(i as f32), i as f32 * 0.1);
+        }
+        assert_eq!(resumed.seen(), straight.seen());
+        for i in 0..straight.len() {
+            assert_eq!(resumed.get(i).features[0], straight.get(i).features[0]);
+            assert_eq!(resumed.score(i), straight.score(i));
+        }
+    }
+
+    #[test]
+    fn export_restore_preserves_eviction_stream() {
+        // Uniform policy: the eviction draws after a restore must continue
+        // the exported RNG stream, not restart it.
+        let mut straight = ClassBuffer::new(3, PolicyKind::Uniform, 21);
+        let mut first = ClassBuffer::new(3, PolicyKind::Uniform, 21);
+        for i in 0..40 {
+            straight.insert(s(i as f32), 0.0);
+            first.insert(s(i as f32), 0.0);
+        }
+        let ck = first.export_state(9);
+        assert_eq!(ck.class, 9);
+        let mut resumed = ClassBuffer::new(3, PolicyKind::Uniform, 0);
+        resumed.restore_state(&ck).unwrap();
+        for i in 40..120 {
+            let a = straight.insert(s(i as f32), 0.0);
+            let b = resumed.insert(s(i as f32), 0.0);
+            assert_eq!(a, b, "insert {i} diverged after restore");
+        }
+    }
+
+    #[test]
+    fn restore_rejects_bad_shapes() {
+        let mut full = ClassBuffer::new(2, PolicyKind::Uniform, 1);
+        full.insert(s(1.0), 0.0);
+        let ck = full.export_state(0);
+        assert!(full.restore_state(&ck).is_err(), "non-empty target");
+        let mut donor = ClassBuffer::new(8, PolicyKind::Uniform, 1);
+        for i in 0..8 {
+            donor.insert(s(i as f32), 0.0);
+        }
+        let big = donor.export_state(0);
+        let mut small = ClassBuffer::new(2, PolicyKind::Uniform, 1);
+        assert!(small.restore_state(&big).is_err(), "over capacity");
+    }
+
+    #[test]
+    fn grasp_ranks_rebuild_after_restore() {
+        let mut b = ClassBuffer::new(4, PolicyKind::Grasp, 8);
+        for (v, score) in [(10.0, 3.0), (20.0, 1.0), (30.0, 4.0), (40.0, 2.0)] {
+            b.insert(s(v), score);
+        }
+        let ck = b.export_state(0);
+        let mut r = ClassBuffer::new(4, PolicyKind::Grasp, 0);
+        r.restore_state(&ck).unwrap();
+        // served == 0 → window 1 → easiest resident (score 1.0 → 20.0)
+        assert_eq!(r.selectable_len(), 1);
+        assert_eq!(r.fetch(0).features[0], 20.0,
+                   "restored GRASP must re-derive ranks from scores");
     }
 
     #[test]

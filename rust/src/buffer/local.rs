@@ -29,6 +29,7 @@ use std::sync::{Mutex, RwLock};
 
 use anyhow::{bail, Result};
 
+use crate::ckpt::BufferCkpt;
 use crate::config::PolicyKind;
 use crate::tensor::Sample;
 use crate::util::rng::{derive_seed, Rng, SeedDomain};
@@ -57,6 +58,29 @@ pub struct BufferCounters {
     pub rejections: AtomicU64,
     /// Rows served to augmentations (local + remote).
     pub rows_served: AtomicU64,
+}
+
+impl BufferCounters {
+    /// Export the tallies for checkpointing (PR 9), in the fixed order
+    /// `[candidates_offered, appends, evictions, rejections, rows_served]`.
+    pub fn export(&self) -> [u64; 5] {
+        [
+            self.candidates_offered.load(Ordering::Relaxed),
+            self.appends.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+            self.rejections.load(Ordering::Relaxed),
+            self.rows_served.load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Restore tallies exported by [`BufferCounters::export`].
+    pub fn restore(&self, t: [u64; 5]) {
+        self.candidates_offered.store(t[0], Ordering::Relaxed);
+        self.appends.store(t[1], Ordering::Relaxed);
+        self.evictions.store(t[2], Ordering::Relaxed);
+        self.rejections.store(t[3], Ordering::Relaxed);
+        self.rows_served.store(t[4], Ordering::Relaxed);
+    }
 }
 
 pub struct LocalBuffer {
@@ -256,6 +280,42 @@ impl LocalBuffer {
             .rows_served
             .fetch_add(picks.len() as u64, Ordering::Relaxed);
         Ok(out)
+    }
+
+    /// Export the buffer's complete restorable state (PR 9): every class's
+    /// residents/scores/clocks/eviction stream (ascending class id for a
+    /// deterministic encoding) plus the counter tallies.
+    pub fn export_state(&self) -> BufferCkpt {
+        let map = self.classes.read().unwrap();
+        let mut classes: Vec<_> = map
+            .iter()
+            .map(|(&c, cb)| cb.lock().unwrap().export_state(c))
+            .collect();
+        classes.sort_unstable_by_key(|c| c.class);
+        BufferCkpt { classes, counters: self.counters.export() }
+    }
+
+    /// Restore state exported by [`LocalBuffer::export_state`] into this
+    /// freshly-built (empty) buffer. All classes are created first — so
+    /// per-class capacities settle at the final `S_max / K` split without
+    /// evicting anything — then each sub-buffer's residents, clocks and
+    /// eviction stream are injected.
+    pub fn restore_state(&self, ck: &BufferCkpt) -> Result<()> {
+        if self.num_classes() != 0 {
+            bail!("restore into a non-empty buffer");
+        }
+        for cls in &ck.classes {
+            self.ensure_class(cls.class);
+        }
+        let map = self.classes.read().unwrap();
+        for cls in &ck.classes {
+            let Some(cb) = map.get(&cls.class) else {
+                bail!("class {} vanished during restore", cls.class);
+            };
+            cb.lock().unwrap().restore_state(cls)?;
+        }
+        self.counters.restore(ck.counters);
+        Ok(())
     }
 
     /// Draw `r` representatives uniformly from this buffer only (the
@@ -460,6 +520,52 @@ mod tests {
         let counts = vec![(2u32, 3usize), (5, 2), (9, 4)];
         let picks = flat_to_picks(&counts, &[0, 2, 3, 4, 5, 8]);
         assert_eq!(picks, vec![(2, 0), (2, 2), (5, 0), (5, 1), (9, 0), (9, 3)]);
+    }
+
+    #[test]
+    fn export_restore_replays_the_run_exactly() {
+        // Straight run vs checkpoint-at-k + resume: identical contents,
+        // counters and subsequent eviction behaviour.
+        let batch: Vec<Sample> = (0..32).map(|i| s(i % 4, i as f32)).collect();
+        let straight = LocalBuffer::new(16, PolicyKind::Uniform, 11);
+        let first = LocalBuffer::new(16, PolicyKind::Uniform, 11);
+        let mut srng = Rng::new(4);
+        let mut frng = Rng::new(4);
+        for _ in 0..60 {
+            straight.update_with_batch(&batch, 8, 32, &mut srng);
+            first.update_with_batch(&batch, 8, 32, &mut frng);
+        }
+        let ck = first.export_state();
+        // the restore target is built with a DIFFERENT seed: every stream
+        // must come from the checkpoint, not the constructor
+        let resumed = LocalBuffer::new(16, PolicyKind::Uniform, 999);
+        resumed.restore_state(&ck).unwrap();
+        for _ in 60..140 {
+            straight.update_with_batch(&batch, 8, 32, &mut srng);
+            resumed.update_with_batch(&batch, 8, 32, &mut frng);
+        }
+        assert_eq!(resumed.snapshot_counts(), straight.snapshot_counts());
+        assert_eq!(resumed.counters.export(), straight.counters.export());
+        let contents = |buf: &LocalBuffer| -> Vec<(u32, Vec<f32>)> {
+            buf.snapshot_counts().iter().map(|&(class, n)| {
+                let picks: Vec<(u32, usize)> =
+                    (0..n).map(|i| (class, i)).collect();
+                (class, buf.fetch_rows(&picks).unwrap()
+                    .iter().map(|s| s.features[0]).collect())
+            }).collect()
+        };
+        assert_eq!(contents(&resumed), contents(&straight),
+                   "restored buffer must continue bit-identically");
+    }
+
+    #[test]
+    fn restore_rejects_non_empty_target() {
+        let buf = filled(16, 2, 4);
+        let ck = buf.export_state();
+        assert!(buf.restore_state(&ck).is_err());
+        let fresh = LocalBuffer::new(16, PolicyKind::Uniform, 1);
+        fresh.restore_state(&ck).unwrap();
+        assert_eq!(fresh.len(), buf.len());
     }
 
     #[test]

@@ -72,6 +72,17 @@ pub trait RehearsalPolicy: Send + std::fmt::Debug {
     /// Capacity changed (class-arrival rebalance). Policies holding slot
     /// cursors clamp them here.
     fn on_resize(&mut self, _new_capacity: usize) {}
+
+    /// Policy-private cursor for checkpointing (PR 9). Stateless policies
+    /// export 0; FIFO exports its next-slot cursor. Paired with
+    /// [`RehearsalPolicy::restore_cursor`] so a restored sub-buffer evicts
+    /// in exactly the order the checkpointed one would have.
+    fn cursor(&self) -> u64 {
+        0
+    }
+
+    /// Restore a cursor previously exported by [`RehearsalPolicy::cursor`].
+    fn restore_cursor(&mut self, _cursor: u64) {}
 }
 
 /// Uniform-random replacement — the paper's policy and the repo default.
@@ -105,6 +116,14 @@ impl RehearsalPolicy for FifoPolicy {
         if self.next >= new_capacity.max(1) {
             self.next = 0;
         }
+    }
+
+    fn cursor(&self) -> u64 {
+        self.next as u64
+    }
+
+    fn restore_cursor(&mut self, cursor: u64) {
+        self.next = cursor as usize;
     }
 }
 
@@ -296,5 +315,24 @@ mod tests {
             let _ = p.admit(&scores, 0.5, 8, &mut rng);
             assert!(p.selectable(4, 0) >= 1);
         }
+    }
+
+    #[test]
+    fn cursor_roundtrip_restores_fifo_order() {
+        let mut p = FifoPolicy::default();
+        let mut rng = Rng::new(1);
+        let scores = vec![0.0f32; 4];
+        p.admit(&scores, 0.0, 5, &mut rng);
+        p.admit(&scores, 0.0, 6, &mut rng);
+        assert_eq!(p.cursor(), 2);
+        let mut q = FifoPolicy::default();
+        q.restore_cursor(p.cursor());
+        assert_eq!(q.admit(&scores, 0.0, 7, &mut rng),
+                   AdmitDecision::Replace(2),
+                   "restored FIFO must continue at the exported slot");
+        // stateless policies export 0 and ignore restores
+        assert_eq!(UniformPolicy.cursor(), 0);
+        let mut u = UniformPolicy;
+        u.restore_cursor(7);
     }
 }

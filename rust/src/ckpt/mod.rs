@@ -1,0 +1,730 @@
+//! Deterministic checkpoint/restore for the elastic fault domain (PR 9).
+//!
+//! A checkpoint freezes *everything* a fixed-seed run needs to continue
+//! bit-for-bit: model parameters and momentum, every live RNG clock (the
+//! raw xoshiro256** state of the engine foreground/background streams and
+//! each per-class eviction stream), the rehearsal-buffer residents with
+//! their full policy state (scores, FIFO cursors, reservoir `seen`, GRASP
+//! `served`), the trainer's task/epoch/iteration cursors, each worker's
+//! carried candidate-score feed, any in-flight background-fetch result,
+//! and the `FabricCounters`/`BufferCounters` tallies. Restore happens **in
+//! place**: the trainer copies parameter/momentum payloads into the live
+//! `Literal`s through its captured `ParamSlabs` views (`copy_from_slice`),
+//! never replacing a `Vec<Literal>` mid-run — the PR 5 slab invariant.
+//!
+//! # On-disk format
+//!
+//! Same idioms as `net/wire.rs` (little-endian, length-prefixed, bounds-
+//! checked decode), wrapped in an integrity header:
+//!
+//! ```text
+//! file := magic[8] "DCLCKPT\0" | u32 version | u64 body_len
+//!       | u32 crc32(body) | body
+//! ```
+//!
+//! Writers emit to `<dir>/ckpt.tmp`, fsync, then atomically rename to
+//! `<dir>/dcl.ckpt` — a crash mid-write can never leave a half-written
+//! checkpoint under the live name. Readers verify magic, version,
+//! body length and CRC before decoding a single field, and every decode is
+//! bounds-checked: a corrupted or truncated file is a clean `Err`, never a
+//! panic or a wild allocation.
+//!
+//! # Versioning rules
+//!
+//! `VERSION` bumps on ANY change to the body layout — there are no
+//! in-place format extensions. A reader rejects any version other than its
+//! own (forward and backward): checkpoints are deterministic-run artifacts,
+//! not archival interchange, so cross-version restore would silently break
+//! the bit-exactness contract it exists to provide.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Sample;
+
+/// File magic: identifies a dcl checkpoint before any parsing happens.
+pub const MAGIC: [u8; 8] = *b"DCLCKPT\0";
+
+/// Body-layout version. Bump on any layout change; readers accept only
+/// their own version (see module docs).
+pub const VERSION: u32 = 1;
+
+/// Fixed live file name inside the checkpoint directory.
+pub const FILE_NAME: &str = "dcl.ckpt";
+
+/// Temp name the atomic write stages through.
+pub const TMP_NAME: &str = "ckpt.tmp";
+
+/// Upper bound on a checkpoint body — far above any legitimate run state,
+/// low enough that a corrupt length field cannot drive a huge allocation.
+pub const MAX_BODY_BYTES: u64 = 4 << 30;
+
+/// One engine's restorable state: both RNG clocks plus the in-flight
+/// background round's representatives (the async pipeline keeps one round
+/// in flight *across* epoch boundaries, so exactness requires carrying it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineCkpt {
+    /// Foreground (candidate-selection) stream state.
+    pub fg_rng: [u64; 4],
+    /// Background (global-sampling) stream state; `None` in blocking mode
+    /// (no background thread exists).
+    pub bg_rng: Option<[u64; 4]>,
+    /// Representatives of the drained in-flight round, if one was pending.
+    pub pending: Option<Vec<Sample>>,
+}
+
+/// One worker's cross-epoch trainer state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerCkpt {
+    /// Carried candidate-score feed (last-seen training loss).
+    pub last_loss: f32,
+    /// Engine state; `None` for non-rehearsal strategies.
+    pub engine: Option<EngineCkpt>,
+}
+
+/// One per-class sub-buffer: residents, parallel scores, policy clocks and
+/// the class's own eviction-stream state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassCkpt {
+    pub class: u32,
+    pub samples: Vec<Sample>,
+    pub scores: Vec<f32>,
+    /// Candidates ever offered (reservoir denominator).
+    pub seen: u64,
+    /// Rows ever served (GRASP window clock).
+    pub served: u64,
+    /// Policy-private cursor (FIFO's next slot; 0 for stateless policies).
+    pub policy_cursor: u64,
+    /// The class's eviction RNG state.
+    pub rng: [u64; 4],
+}
+
+/// One worker's rehearsal buffer: per-class state (ascending class id) plus
+/// the `BufferCounters` tallies
+/// `[candidates_offered, appends, evictions, rejections, rows_served]`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BufferCkpt {
+    pub classes: Vec<ClassCkpt>,
+    pub counters: [u64; 5],
+}
+
+/// `FabricCounters` tallies:
+/// `[rpcs, bytes, meta_rpcs, meta_bytes, wire_ns, degraded_fetches]`.
+pub type FabricTallies = [u64; 6];
+
+/// A complete run snapshot at an epoch boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    /// Training seed of the run — restore refuses a mismatch.
+    pub seed: u64,
+    /// Worker count of the run — restore refuses a mismatch.
+    pub workers: u32,
+    /// Task cursor at the boundary.
+    pub task: u32,
+    /// Global epochs fully completed (resume starts at this epoch index).
+    pub global_epoch: u32,
+    /// Iterations completed across all workers.
+    pub iterations: u64,
+    /// Per-tensor parameter payloads (manifest order).
+    pub params: Vec<Vec<f32>>,
+    /// Per-tensor momentum payloads (manifest order).
+    pub moms: Vec<Vec<f32>>,
+    /// Per-worker trainer/engine state (index = worker id).
+    pub worker_state: Vec<WorkerCkpt>,
+    /// Per-worker rehearsal buffers (empty for non-rehearsal strategies).
+    pub buffers: Vec<BufferCkpt>,
+    /// Fabric counters (zeroed when the run has no fabric).
+    pub fabric: FabricTallies,
+}
+
+impl Checkpoint {
+    /// Live checkpoint path under `dir`.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(FILE_NAME)
+    }
+
+    /// Serialize and atomically publish under `dir` (create the directory
+    /// if needed; write `ckpt.tmp`, fsync, rename over `dcl.ckpt`).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}",
+                                     dir.display()))?;
+        let body = self.encode_body();
+        let mut file = Vec::with_capacity(24 + body.len());
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&VERSION.to_le_bytes());
+        file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        file.extend_from_slice(&crc32(&body).to_le_bytes());
+        file.extend_from_slice(&body);
+        let tmp = dir.join(TMP_NAME);
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&file)?;
+            f.sync_all()?;
+        }
+        let live = Self::path_in(dir);
+        fs::rename(&tmp, &live)
+            .with_context(|| format!("publishing {}", live.display()))?;
+        Ok(())
+    }
+
+    /// Load and fully validate the checkpoint under `dir`. Clean errors on
+    /// missing file, bad magic, version mismatch, length mismatch, CRC
+    /// mismatch or any truncated/overlong field — never a panic.
+    pub fn load(dir: &Path) -> Result<Checkpoint> {
+        let path = Self::path_in(dir);
+        let bytes = fs::read(&path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes)
+            .with_context(|| format!("decoding checkpoint {}", path.display()))
+    }
+
+    /// Decode a complete checkpoint file image (header + body).
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 24 {
+            bail!("checkpoint truncated: {} bytes, header needs 24",
+                  bytes.len());
+        }
+        if bytes[..8] != MAGIC {
+            bail!("not a dcl checkpoint (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("checkpoint version {version} unsupported (this build \
+                   reads only version {VERSION}; see ckpt module docs)");
+        }
+        let body_len = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        if body_len > MAX_BODY_BYTES {
+            bail!("checkpoint claims a {body_len}-byte body, cap is \
+                   {MAX_BODY_BYTES}");
+        }
+        let crc = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+        let body = &bytes[24..];
+        if body.len() as u64 != body_len {
+            bail!("checkpoint body length mismatch: header says {body_len}, \
+                   file holds {}", body.len());
+        }
+        let actual = crc32(body);
+        if actual != crc {
+            bail!("checkpoint CRC mismatch (stored {crc:#010x}, computed \
+                   {actual:#010x}): file is corrupt");
+        }
+        Self::decode_body(body)
+    }
+
+    fn encode_body(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&self.seed.to_le_bytes());
+        b.extend_from_slice(&self.workers.to_le_bytes());
+        b.extend_from_slice(&self.task.to_le_bytes());
+        b.extend_from_slice(&self.global_epoch.to_le_bytes());
+        b.extend_from_slice(&self.iterations.to_le_bytes());
+        put_tensor_list(&mut b, &self.params);
+        put_tensor_list(&mut b, &self.moms);
+        b.extend_from_slice(&(self.worker_state.len() as u32).to_le_bytes());
+        for w in &self.worker_state {
+            b.extend_from_slice(&w.last_loss.to_le_bytes());
+            match &w.engine {
+                None => b.push(0),
+                Some(e) => {
+                    b.push(1);
+                    put_rng(&mut b, &e.fg_rng);
+                    match &e.bg_rng {
+                        None => b.push(0),
+                        Some(s) => {
+                            b.push(1);
+                            put_rng(&mut b, s);
+                        }
+                    }
+                    match &e.pending {
+                        None => b.push(0),
+                        Some(reps) => {
+                            b.push(1);
+                            put_samples(&mut b, reps);
+                        }
+                    }
+                }
+            }
+        }
+        b.extend_from_slice(&(self.buffers.len() as u32).to_le_bytes());
+        for buf in &self.buffers {
+            for c in buf.counters {
+                b.extend_from_slice(&c.to_le_bytes());
+            }
+            b.extend_from_slice(&(buf.classes.len() as u32).to_le_bytes());
+            for cls in &buf.classes {
+                b.extend_from_slice(&cls.class.to_le_bytes());
+                b.extend_from_slice(&cls.seen.to_le_bytes());
+                b.extend_from_slice(&cls.served.to_le_bytes());
+                b.extend_from_slice(&cls.policy_cursor.to_le_bytes());
+                put_rng(&mut b, &cls.rng);
+                put_samples(&mut b, &cls.samples);
+                b.extend_from_slice(&(cls.scores.len() as u32).to_le_bytes());
+                for &s in &cls.scores {
+                    b.extend_from_slice(&s.to_le_bytes());
+                }
+            }
+        }
+        for c in self.fabric {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+        b
+    }
+
+    fn decode_body(body: &[u8]) -> Result<Checkpoint> {
+        let mut c = Cursor::new(body);
+        let seed = c.u64()?;
+        let workers = c.u32()?;
+        let task = c.u32()?;
+        let global_epoch = c.u32()?;
+        let iterations = c.u64()?;
+        let params = get_tensor_list(&mut c)?;
+        let moms = get_tensor_list(&mut c)?;
+        let n_workers = c.u32()? as usize;
+        // every worker record is at least 5 bytes (loss + engine tag)
+        if n_workers > c.remaining() / 5 {
+            bail!("checkpoint claims {n_workers} worker records, body holds \
+                   at most {}", c.remaining() / 5);
+        }
+        let mut worker_state = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let last_loss = c.f32()?;
+            let engine = match c.u8()? {
+                0 => None,
+                1 => {
+                    let fg_rng = get_rng(&mut c)?;
+                    let bg_rng = match c.u8()? {
+                        0 => None,
+                        1 => Some(get_rng(&mut c)?),
+                        t => bail!("bad bg-rng tag {t}"),
+                    };
+                    let pending = match c.u8()? {
+                        0 => None,
+                        1 => Some(get_samples(&mut c)?),
+                        t => bail!("bad pending tag {t}"),
+                    };
+                    Some(EngineCkpt { fg_rng, bg_rng, pending })
+                }
+                t => bail!("bad engine tag {t}"),
+            };
+            worker_state.push(WorkerCkpt { last_loss, engine });
+        }
+        let n_buffers = c.u32()? as usize;
+        // every buffer record is at least 44 bytes (5 counters + count)
+        if n_buffers > c.remaining() / 44 {
+            bail!("checkpoint claims {n_buffers} buffer records, body holds \
+                   at most {}", c.remaining() / 44);
+        }
+        let mut buffers = Vec::with_capacity(n_buffers);
+        for _ in 0..n_buffers {
+            let mut counters = [0u64; 5];
+            for slot in counters.iter_mut() {
+                *slot = c.u64()?;
+            }
+            let n_classes = c.u32()? as usize;
+            // every class record is at least 68 bytes (header + rng + counts)
+            if n_classes > c.remaining() / 68 {
+                bail!("checkpoint claims {n_classes} class records, body \
+                       holds at most {}", c.remaining() / 68);
+            }
+            let mut classes = Vec::with_capacity(n_classes);
+            for _ in 0..n_classes {
+                let class = c.u32()?;
+                let seen = c.u64()?;
+                let served = c.u64()?;
+                let policy_cursor = c.u64()?;
+                let rng = get_rng(&mut c)?;
+                let samples = get_samples(&mut c)?;
+                let n_scores = c.u32()? as usize;
+                if n_scores > c.remaining() / 4 {
+                    bail!("class claims {n_scores} scores, body holds {}",
+                          c.remaining() / 4);
+                }
+                let mut scores = Vec::with_capacity(n_scores);
+                for _ in 0..n_scores {
+                    scores.push(c.f32()?);
+                }
+                if scores.len() != samples.len() {
+                    bail!("class {class}: {} scores for {} samples",
+                          scores.len(), samples.len());
+                }
+                classes.push(ClassCkpt { class, samples, scores, seen,
+                                         served, policy_cursor, rng });
+            }
+            buffers.push(BufferCkpt { classes, counters });
+        }
+        let mut fabric = [0u64; 6];
+        for slot in fabric.iter_mut() {
+            *slot = c.u64()?;
+        }
+        c.done()?;
+        Ok(Checkpoint { seed, workers, task, global_epoch, iterations,
+                        params, moms, worker_state, buffers, fabric })
+    }
+
+    /// Guard a restore against the wrong run shape: the checkpoint must
+    /// come from the same seed, worker count and parameter geometry.
+    pub fn validate_shape(&self, seed: u64, workers: usize,
+                          param_numels: &[usize]) -> Result<()> {
+        if self.seed != seed {
+            bail!("checkpoint was taken with seed {}, run uses {seed}",
+                  self.seed);
+        }
+        if self.workers as usize != workers {
+            bail!("checkpoint was taken with {} workers, run uses {workers}",
+                  self.workers);
+        }
+        let got: Vec<usize> = self.params.iter().map(Vec::len).collect();
+        if got != param_numels {
+            bail!("checkpoint parameter geometry {got:?} does not match the \
+                   model's {param_numels:?}");
+        }
+        if self.moms.iter().map(Vec::len).collect::<Vec<_>>() != param_numels {
+            bail!("checkpoint momentum geometry does not match the model");
+        }
+        if self.worker_state.len() != workers {
+            bail!("checkpoint holds {} worker records for {workers} workers",
+                  self.worker_state.len());
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- primitives
+
+fn put_rng(b: &mut Vec<u8>, s: &[u64; 4]) {
+    for &w in s {
+        b.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+fn get_rng(c: &mut Cursor) -> Result<[u64; 4]> {
+    Ok([c.u64()?, c.u64()?, c.u64()?, c.u64()?])
+}
+
+fn put_samples(b: &mut Vec<u8>, rows: &[Sample]) {
+    b.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for row in rows {
+        b.extend_from_slice(&row.label.to_le_bytes());
+        b.extend_from_slice(&(row.features.len() as u32).to_le_bytes());
+        for &f in row.features.iter() {
+            b.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+}
+
+fn get_samples(c: &mut Cursor) -> Result<Vec<Sample>> {
+    let n = c.u32()? as usize;
+    if n > c.remaining() / 8 {
+        bail!("sample list claims {n} rows, body holds at most {}",
+              c.remaining() / 8);
+    }
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = c.u32()?;
+        let dim = c.u32()? as usize;
+        if dim > c.remaining() / 4 {
+            bail!("sample claims {dim} features, body holds {}",
+                  c.remaining() / 4);
+        }
+        let mut feats = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            feats.push(c.f32()?);
+        }
+        rows.push(Sample::new(label, feats));
+    }
+    Ok(rows)
+}
+
+fn put_tensor_list(b: &mut Vec<u8>, tensors: &[Vec<f32>]) {
+    b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        b.extend_from_slice(&(t.len() as u64).to_le_bytes());
+        for &f in t {
+            b.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+}
+
+fn get_tensor_list(c: &mut Cursor) -> Result<Vec<Vec<f32>>> {
+    let n = c.u32()? as usize;
+    if n > c.remaining() / 8 {
+        bail!("tensor list claims {n} tensors, body holds at most {}",
+              c.remaining() / 8);
+    }
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let numel = c.u64()? as usize;
+        if numel > c.remaining() / 4 {
+            bail!("tensor claims {numel} elements, body holds {}",
+                  c.remaining() / 4);
+        }
+        let mut t = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            t.push(c.f32()?);
+        }
+        tensors.push(t);
+    }
+    Ok(tensors)
+}
+
+// ------------------------------------------------------------------- crc32
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes` — implemented in-module
+/// because the offline registry ships no checksum crate. Table built once
+/// at first use.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ------------------------------------------------------------------ cursor
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(chunk) = self.buf.get(self.pos..self.pos + n) else {
+            bail!("truncated checkpoint body at offset {}", self.pos);
+        };
+        self.pos += n;
+        Ok(chunk)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} stray bytes after checkpoint body",
+                  self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(label: u32, v: f32) -> Sample {
+        Sample::new(label, vec![v, v + 0.5, -v])
+    }
+
+    fn rich_checkpoint() -> Checkpoint {
+        Checkpoint {
+            seed: 99,
+            workers: 2,
+            task: 1,
+            global_epoch: 3,
+            iterations: 1234,
+            params: vec![vec![1.0, -2.5, f32::MIN_POSITIVE], vec![0.0; 4]],
+            moms: vec![vec![0.25, 0.0, 9.0], vec![1.0; 4]],
+            worker_state: vec![
+                WorkerCkpt {
+                    last_loss: 0.75,
+                    engine: Some(EngineCkpt {
+                        fg_rng: [1, 2, 3, 4],
+                        bg_rng: Some([5, 6, 7, 8]),
+                        pending: Some(vec![sample(3, 1.0), sample(0, 2.0)]),
+                    }),
+                },
+                WorkerCkpt {
+                    last_loss: 0.0,
+                    engine: Some(EngineCkpt {
+                        fg_rng: [9, 10, 11, 12],
+                        bg_rng: None,
+                        pending: None,
+                    }),
+                },
+            ],
+            buffers: vec![
+                BufferCkpt {
+                    classes: vec![ClassCkpt {
+                        class: 7,
+                        samples: vec![sample(7, 4.0)],
+                        scores: vec![0.5],
+                        seen: 42,
+                        served: 9,
+                        policy_cursor: 3,
+                        rng: [13, 14, 15, 16],
+                    }],
+                    counters: [10, 4, 3, 3, 99],
+                },
+                BufferCkpt::default(),
+            ],
+            fabric: [1, 2, 3, 4, 5, 6],
+        }
+    }
+
+    fn encode_file(ck: &Checkpoint) -> Vec<u8> {
+        let body = ck.encode_body();
+        let mut file = Vec::new();
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&VERSION.to_le_bytes());
+        file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        file.extend_from_slice(&crc32(&body).to_le_bytes());
+        file.extend_from_slice(&body);
+        file
+    }
+
+    #[test]
+    fn body_roundtrip_is_lossless() {
+        let ck = rich_checkpoint();
+        let back = Checkpoint::decode(&encode_file(&ck)).unwrap();
+        assert_eq!(back, ck);
+        // a minimal checkpoint (no engines, no buffers) also roundtrips
+        let ck = Checkpoint { seed: 1, workers: 1, ..Default::default() };
+        assert_eq!(Checkpoint::decode(&encode_file(&ck)).unwrap(), ck);
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_atomic_publish() {
+        let dir = std::env::temp_dir()
+            .join(format!("dcl-ckpt-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let ck = rich_checkpoint();
+        ck.save(&dir).unwrap();
+        assert!(Checkpoint::path_in(&dir).exists());
+        assert!(!dir.join(TMP_NAME).exists(), "tmp must be renamed away");
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back, ck);
+        // a second save overwrites atomically
+        let mut ck2 = ck.clone();
+        ck2.global_epoch = 4;
+        ck2.save(&dir).unwrap();
+        assert_eq!(Checkpoint::load(&dir).unwrap().global_epoch, 4);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_and_truncated_files_are_rejected_cleanly() {
+        let ck = rich_checkpoint();
+        let file = encode_file(&ck);
+
+        // bad magic
+        let mut bad = file.clone();
+        bad[0] ^= 0xFF;
+        assert!(Checkpoint::decode(&bad).unwrap_err()
+                .to_string().contains("magic"));
+
+        // future version
+        let mut bad = file.clone();
+        bad[8..12].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert!(Checkpoint::decode(&bad).unwrap_err()
+                .to_string().contains("version"));
+
+        // flipped body bit → CRC mismatch
+        let mut bad = file.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(Checkpoint::decode(&bad).unwrap_err()
+                .to_string().contains("CRC"));
+
+        // truncation at every prefix length is an error, never a panic
+        for cut in [0, 7, 23, 24, file.len() / 2, file.len() - 1] {
+            assert!(Checkpoint::decode(&file[..cut]).is_err(),
+                    "truncation to {cut} bytes must fail");
+        }
+
+        // hostile body length field
+        let mut bad = file.clone();
+        bad[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Checkpoint::decode(&bad).is_err());
+
+        // stray trailing bytes are rejected (CRC covers only the claimed
+        // body, so the length check must catch it)
+        let mut bad = file.clone();
+        bad.push(0);
+        assert!(Checkpoint::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn hostile_interior_counts_do_not_allocate() {
+        // Corrupt the tensor-list count inside the body, refresh the CRC so
+        // only the bounds checks stand between us and a huge allocation.
+        let ck = rich_checkpoint();
+        let mut body = ck.encode_body();
+        // tensor-list count lives right after the 28-byte cursor prefix
+        body[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut file = Vec::new();
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&VERSION.to_le_bytes());
+        file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        file.extend_from_slice(&crc32(&body).to_le_bytes());
+        file.extend_from_slice(&body);
+        assert!(Checkpoint::decode(&file).is_err());
+    }
+
+    #[test]
+    fn shape_validation_guards_restore() {
+        let ck = rich_checkpoint();
+        ck.validate_shape(99, 2, &[3, 4]).unwrap();
+        assert!(ck.validate_shape(98, 2, &[3, 4]).is_err(), "seed");
+        assert!(ck.validate_shape(99, 3, &[3, 4]).is_err(), "workers");
+        assert!(ck.validate_shape(99, 2, &[3, 5]).is_err(), "geometry");
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE reference vectors ("check" value of the CRC catalogue).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"),
+                   0x414F_A339);
+    }
+
+    #[test]
+    fn nan_and_subnormal_payloads_roundtrip_bitwise() {
+        let mut ck = rich_checkpoint();
+        ck.params[0] = vec![f32::NAN, -0.0, f32::INFINITY, 1e-40];
+        let back = Checkpoint::decode(&encode_file(&ck)).unwrap();
+        let a: Vec<u32> = ck.params[0].iter().map(|f| f.to_bits()).collect();
+        let b: Vec<u32> = back.params[0].iter().map(|f| f.to_bits()).collect();
+        assert_eq!(a, b, "f32 payloads must survive bit-exactly");
+    }
+}

@@ -7,6 +7,8 @@
 //!              [--reduce-chunks C] [--pin-workers true|false]
 //!              [--scenario K] [--policy P] [--blurry-mix X]
 //!              [--imbalance-ratio X] [--drift-strength X]
+//!              [--ckpt-dir DIR] [--ckpt-every I] [--resume true|false]
+//!              [--elastic true|false] [--fault-plan SPEC]
 //! dcl fig5a    [--epochs-per-task E] [--workers N]
 //! dcl fig5b    [--epochs-per-task E] [--workers N]
 //! dcl fig6     [--epochs-per-task E]
@@ -114,6 +116,17 @@ fn train_config(args: &Args) -> Result<ExperimentConfig> {
         args.f64_or("drift-strength", cfg.data.drift_strength)?;
     cfg.training.epochs_per_task =
         args.usize_or("epochs-per-task", cfg.training.epochs_per_task)?;
+    // Elastic fault domain (PR 9): checkpoint/restore + chaos knobs.
+    if let Some(dir) = args.get("ckpt-dir") {
+        cfg.training.ckpt_dir = Some(dir.into());
+    }
+    cfg.training.ckpt_every_iters =
+        args.usize_or("ckpt-every", cfg.training.ckpt_every_iters)?;
+    cfg.training.resume = args.bool_or("resume", cfg.training.resume)?;
+    cfg.cluster.elastic = args.bool_or("elastic", cfg.cluster.elastic)?;
+    if let Some(plan) = args.get("fault-plan") {
+        cfg.cluster.fault_plan = plan.to_string();
+    }
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = dir.into();
     } else if let Some(dir) = crate::testkit::artifacts_dir() {

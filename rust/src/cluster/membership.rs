@@ -1,0 +1,258 @@
+//! Membership epochs for the elastic fault domain (PR 9).
+//!
+//! A [`Membership`] tracks which rehearsal-fabric peers the cluster still
+//! considers reachable. Transport failures against a peer accumulate
+//! *strikes* (reset by any success); once a peer's strikes cross the retry
+//! budget it becomes a **pending loss** — during this degraded window the
+//! fabric keeps the run alive by falling back to whatever peers still
+//! answer (counted in `FabricCounters::degraded_fetches`, never silent).
+//! At the next **epoch boundary** the coordinator calls
+//! [`Membership::advance_epoch`], which commits every pending loss at
+//! once: the membership epoch bumps, the lost peers leave the alive set,
+//! and from then on survivors skip them entirely (no probe traffic, no
+//! degraded counts — the loss is agreed, not being rediscovered per RPC).
+//!
+//! The gradient plane is unaffected by design: workers are in-process
+//! threads, so a "lost" peer is a lost *rehearsal buffer*, not a lost
+//! trainer. What survivors must rebuild after a commit is the sampling
+//! view (fewer peers) and — in a multi-process deployment — the
+//! [`ChunkPlan`](crate::cluster::ChunkPlan) owner map for the survivor
+//! count. Rebuilding the plan for N−1 workers is bitwise invisible to the
+//! reduction (pinned by the tests below): the fold runs in ascending slot
+//! order per element whatever the worker count, so re-sharding after a
+//! loss cannot perturb the surviving replicas' arithmetic.
+//!
+//! All methods are callable from any thread: strikes and liveness are
+//! atomics, and the commit point is a single mutex held only inside
+//! `advance_epoch` (epoch boundaries are coordinator-only, so it is
+//! uncontended).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default transport-failure budget before a peer is declared pending-lost.
+pub const DEFAULT_RETRY_BUDGET: u32 = 3;
+
+/// The cluster's view of which rehearsal peers are reachable, versioned by
+/// a monotonically increasing membership epoch.
+pub struct Membership {
+    /// Bumped once per committed loss batch (never per strike).
+    epoch: AtomicU64,
+    /// Strikes before a peer is declared pending-lost.
+    retry_budget: u32,
+    /// Committed liveness, indexed by worker.
+    alive: Vec<AtomicBool>,
+    /// Consecutive transport failures since the last success, per worker.
+    strikes: Vec<AtomicU32>,
+    /// Serialises `advance_epoch` commits (coordinator-only in practice).
+    commit: Mutex<()>,
+}
+
+impl Membership {
+    pub fn new(workers: usize, retry_budget: u32) -> Membership {
+        Membership {
+            epoch: AtomicU64::new(0),
+            retry_budget: retry_budget.max(1),
+            alive: (0..workers).map(|_| AtomicBool::new(true)).collect(),
+            strikes: (0..workers).map(|_| AtomicU32::new(0)).collect(),
+            commit: Mutex::new(()),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// The current committed membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    pub fn retry_budget(&self) -> u32 {
+        self.retry_budget
+    }
+
+    /// Committed liveness (pending losses are still alive until the next
+    /// epoch boundary commits them).
+    pub fn is_alive(&self, worker: usize) -> bool {
+        self.alive[worker].load(Ordering::SeqCst)
+    }
+
+    /// Record one transport failure against `worker`. Returns `true`
+    /// exactly when this failure crossed the retry budget (the moment the
+    /// peer became a pending loss) — callers can log the transition once
+    /// instead of once per subsequent failure.
+    pub fn record_failure(&self, worker: usize) -> bool {
+        if !self.is_alive(worker) {
+            return false; // already committed lost
+        }
+        let before = self.strikes[worker].fetch_add(1, Ordering::SeqCst);
+        before + 1 == self.retry_budget
+    }
+
+    /// Record a successful exchange with `worker`: an alive peer's strikes
+    /// reset (transient hiccups below the budget are forgiven).
+    pub fn record_success(&self, worker: usize) {
+        if self.is_alive(worker) {
+            self.strikes[worker].store(0, Ordering::SeqCst);
+        }
+    }
+
+    /// Peers that have crossed the retry budget but are not yet committed
+    /// lost — the set the next `advance_epoch` will commit. Ascending.
+    pub fn pending_losses(&self) -> Vec<usize> {
+        (0..self.workers())
+            .filter(|&w| self.is_alive(w)
+                && self.strikes[w].load(Ordering::SeqCst) >= self.retry_budget)
+            .collect()
+    }
+
+    /// Epoch-boundary commit: declare every pending loss dead, bump the
+    /// membership epoch, and return the newly lost peers (ascending).
+    /// Returns `None` — and leaves the epoch untouched — when membership
+    /// did not change, so the caller can rebuild plans only on transitions.
+    pub fn advance_epoch(&self) -> Option<Vec<usize>> {
+        let _g = self.commit.lock().unwrap_or_else(|p| p.into_inner());
+        let lost = self.pending_losses();
+        if lost.is_empty() {
+            return None;
+        }
+        for &w in &lost {
+            self.alive[w].store(false, Ordering::SeqCst);
+        }
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        Some(lost)
+    }
+
+    /// The committed alive set, ascending.
+    pub fn survivors(&self) -> Vec<usize> {
+        (0..self.workers()).filter(|&w| self.is_alive(w)).collect()
+    }
+
+    pub fn num_alive(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ChunkPlan, GradAccumulator};
+    use crate::net::CostModel;
+    use crate::runtime::{literal_to_vec, make_literal, Literal};
+
+    #[test]
+    fn strikes_below_budget_are_forgiven_by_success() {
+        let m = Membership::new(3, 3);
+        assert!(!m.record_failure(1));
+        assert!(!m.record_failure(1));
+        m.record_success(1);
+        // the reset means two fresh failures still sit below the budget
+        assert!(!m.record_failure(1));
+        assert!(!m.record_failure(1));
+        assert!(m.pending_losses().is_empty());
+        assert_eq!(m.advance_epoch(), None);
+        assert_eq!(m.epoch(), 0, "no change, no epoch bump");
+    }
+
+    #[test]
+    fn crossing_the_budget_commits_at_the_next_epoch_boundary() {
+        let m = Membership::new(4, 2);
+        assert!(!m.record_failure(2));
+        assert!(m.record_failure(2), "second strike crosses budget 2");
+        assert!(!m.record_failure(2), "the transition reports only once");
+        // pending, but still alive until the boundary
+        assert_eq!(m.pending_losses(), vec![2]);
+        assert!(m.is_alive(2));
+        assert_eq!(m.advance_epoch(), Some(vec![2]));
+        assert_eq!(m.epoch(), 1);
+        assert!(!m.is_alive(2));
+        assert_eq!(m.survivors(), vec![0, 1, 3]);
+        assert_eq!(m.num_alive(), 3);
+        // a committed loss never re-commits, and successes do not revive it
+        assert!(!m.record_failure(2));
+        m.record_success(2);
+        assert!(!m.is_alive(2));
+        assert_eq!(m.advance_epoch(), None);
+        assert_eq!(m.epoch(), 1);
+    }
+
+    #[test]
+    fn zero_budget_clamps_to_one() {
+        let m = Membership::new(2, 0);
+        assert!(m.record_failure(0), "budget 1: first failure crosses");
+        assert_eq!(m.advance_epoch(), Some(vec![0]));
+    }
+
+    /// Rebuilding the ChunkPlan for the survivor count after a loss must
+    /// still partition the whole flattened space: every element covered
+    /// exactly once, every chunk owned by a live worker index, every
+    /// survivor owning at least one chunk.
+    #[test]
+    fn rebuilt_plan_for_survivors_partitions_the_space() {
+        let shapes: Vec<Vec<usize>> =
+            vec![vec![4, 3], vec![3], vec![3, 5], vec![5]];
+        let total: usize = shapes.iter()
+            .map(|s| s.iter().product::<usize>()).sum();
+        for workers in [3usize, 2] { // before and after losing one of 3
+            let plan = ChunkPlan::new(&shapes, workers, workers * 4);
+            let mut covered = vec![0u32; total];
+            for c in 0..plan.num_chunks() {
+                assert!(plan.owner(c) < workers);
+                for flat in plan.range(c) {
+                    covered[flat] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&n| n == 1),
+                    "{workers}-worker rebuild must cover each element once");
+            for w in 0..workers {
+                assert!(plan.owned_by(w).count() >= 1,
+                        "survivor {w} owns no chunks");
+            }
+        }
+    }
+
+    /// The post-loss reduction over the survivors' rebuilt accumulator is
+    /// bitwise identical to the sequential mean of the survivors'
+    /// gradients — losing a peer re-shards the fold but cannot perturb
+    /// the surviving replicas' arithmetic.
+    #[test]
+    fn post_loss_fold_is_bitwise_exact_over_survivors() {
+        let shapes: Vec<Vec<usize>> = vec![vec![2, 3], vec![3]];
+        let grads = |w: usize| -> Vec<Literal> {
+            shapes.iter().enumerate().map(|(t, s)| {
+                let n: usize = s.iter().product();
+                let v: Vec<f32> = (0..n)
+                    .map(|i| ((w * 31 + t * 7 + i) as f32).sin())
+                    .collect();
+                make_literal(&v, s).unwrap()
+            }).collect()
+        };
+        // worker 1 of {0, 1, 2} is lost; survivors re-shard to a 2-slot
+        // accumulator with an off-worker-count chunk setting.
+        let survivors = [0usize, 2];
+        let acc = GradAccumulator::with_chunks(shapes.clone(), 2, 5);
+        for (slot, &w) in survivors.iter().enumerate() {
+            acc.submit(slot, &grads(w)).unwrap();
+        }
+        let folded = acc
+            .reduce_with(&CostModel::default(), |means, _| {
+                means.iter().map(literal_to_vec).collect::<Result<Vec<_>, _>>()
+            })
+            .unwrap();
+        // sequential reference: ascending survivor order, f64 fold,
+        // one rounding to f32 — the accumulator's documented arithmetic.
+        for (t, s) in shapes.iter().enumerate() {
+            let n: usize = s.iter().product();
+            for i in 0..n {
+                let mut sum = 0.0f64;
+                for &w in &survivors {
+                    sum += literal_to_vec(&grads(w)[t]).unwrap()[i] as f64;
+                }
+                let want = (sum * (1.0 / survivors.len() as f64)) as f32;
+                assert_eq!(folded[t][i].to_bits(), want.to_bits(),
+                           "tensor {t} elem {i} diverged after re-shard");
+            }
+        }
+    }
+}

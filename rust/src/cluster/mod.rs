@@ -26,8 +26,15 @@
 //! Bucket arrival order is bitwise invisible for the same reason chunking
 //! is: elements are independent and each is still folded in ascending
 //! slot order.
+//!
+//! [`membership`] adds the elastic fault domain (PR 9): strike-counted
+//! peer liveness with epoch-boundary loss commits, so the rehearsal
+//! fabric can degrade gracefully — and the chunk plan re-shard for a
+//! survivor set stays bitwise exact (pinned there).
 
 pub mod allreduce;
+pub mod membership;
 
 pub use allreduce::{ring_allreduce_cost, ChunkPlan, GradAccumulator, Region,
                     Segment};
+pub use membership::Membership;

@@ -269,6 +269,15 @@ pub struct TrainingConfig {
     pub eval_batch: usize,
     /// Seed for training-time randomness (shuffles, candidate draws).
     pub seed: u64,
+    /// Checkpoint directory (PR 9). `None` — the default — disables
+    /// checkpointing entirely: no I/O, no RNG perturbation, bit-identical
+    /// to the pre-PR-9 trainer.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Snapshot once at least this many iterations accumulated since the
+    /// last checkpoint (evaluated at epoch boundaries; 1 ≈ every epoch).
+    pub ckpt_every_iters: usize,
+    /// Resume from `ckpt_dir`'s checkpoint instead of starting fresh.
+    pub resume: bool,
 }
 
 impl Default for TrainingConfig {
@@ -286,6 +295,9 @@ impl Default for TrainingConfig {
             max_lr_scale: 64.0,
             eval_batch: 50,
             seed: 99,
+            ckpt_dir: None,
+            ckpt_every_iters: 1,
+            resume: false,
         }
     }
 }
@@ -349,6 +361,18 @@ pub struct ClusterConfig {
     /// (`sched_setaffinity`); a silent no-op on other platforms. Default
     /// off: a purely locality/throughput knob, never a semantic one.
     pub pin_workers: bool,
+    /// Elastic fault domain (PR 9): tolerate rehearsal-fabric peer loss.
+    /// Transport failures against a peer strike it (`cluster::membership`);
+    /// during the degraded window remote fetches fall back to local-only
+    /// rehearsal (counted in `degraded_fetches`, never silent), and the
+    /// loss commits at the next epoch boundary. Default off: a peer
+    /// failure poisons the run exactly as before.
+    pub elastic: bool,
+    /// Seeded fault-injection plan for the chaos harness (test-only):
+    /// `kill:<peer>@<op>;err:<rate>;delay:<us>@<rate>` — see
+    /// `net::transport::FaultPlan::parse`. Empty (default) disables
+    /// injection; the decorator is never constructed.
+    pub fault_plan: String,
 }
 
 impl Default for ClusterConfig {
@@ -362,6 +386,8 @@ impl Default for ClusterConfig {
             meta_refresh_rounds: 1,
             reduce_chunks: 0,
             pin_workers: false,
+            elastic: false,
+            fault_plan: String::new(),
         }
     }
 }
@@ -453,6 +479,18 @@ impl ExperimentConfig {
                    reduce",
                   self.cluster.reduce_chunks, self.cluster.workers);
         }
+        if t.resume && t.ckpt_dir.is_none() {
+            bail!("resume = true needs ckpt_dir (nothing to resume from)");
+        }
+        if t.ckpt_every_iters == 0 {
+            bail!("ckpt_every_iters must be >= 1 (checkpoints are taken at \
+                   epoch boundaries once that many iterations accumulated)");
+        }
+        if !self.cluster.fault_plan.is_empty() {
+            // Parse eagerly so a typo'd plan fails at config time, not
+            // mid-run; the parsed value is rebuilt by the trainer.
+            crate::net::FaultPlan::parse(&self.cluster.fault_plan)?;
+        }
         if t.strategy == Strategy::Rehearsal
             && self.per_worker_capacity() < d.num_classes
         {
@@ -518,6 +556,13 @@ impl ExperimentConfig {
         t.warmup_epochs = doc.get_or("training", "warmup_epochs", t.warmup_epochs, usz)?;
         t.eval_batch = doc.get_or("training", "eval_batch", t.eval_batch, usz)?;
         t.seed = doc.get_or("training", "seed", t.seed as i64, |v| v.as_i64())? as u64;
+        if let Some(v) = doc.tables.get("training").and_then(|t| t.get("ckpt_dir")) {
+            t.ckpt_dir = Some(PathBuf::from(v.as_str()?));
+        }
+        t.ckpt_every_iters = doc.get_or("training", "ckpt_every_iters",
+                                        t.ckpt_every_iters, usz)?;
+        t.resume = doc.get_or("training", "resume", t.resume,
+                              |v| v.as_bool())?;
 
         let b = &mut cfg.buffer;
         b.percent_of_dataset = doc.get_or("buffer", "percent_of_dataset",
@@ -550,6 +595,11 @@ impl ExperimentConfig {
                                      c.reduce_chunks, usz)?;
         c.pin_workers = doc.get_or("cluster", "pin_workers", c.pin_workers,
                                    |v| v.as_bool())?;
+        c.elastic = doc.get_or("cluster", "elastic", c.elastic,
+                               |v| v.as_bool())?;
+        c.fault_plan = doc.get_or("cluster", "fault_plan",
+                                  c.fault_plan.clone(),
+                                  |v| Ok(v.as_str()?.to_string()))?;
 
         if let Some(v) = doc.tables.get("paths").and_then(|t| t.get("artifacts_dir")) {
             cfg.artifacts_dir = PathBuf::from(v.as_str()?);
@@ -687,6 +737,51 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = preset("default").unwrap();
         cfg.data.drift_strength = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn ckpt_and_fault_knobs_parse_and_validate() {
+        let doc = TomlTable::parse(
+            r#"
+            preset = "tiny"
+            [training]
+            ckpt_dir = "/tmp/dcl-ckpt"
+            ckpt_every_iters = 5
+            [cluster]
+            elastic = true
+            fault_plan = "kill:1@20;err:0.01"
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.training.ckpt_dir,
+                   Some(PathBuf::from("/tmp/dcl-ckpt")));
+        assert_eq!(cfg.training.ckpt_every_iters, 5);
+        assert!(!cfg.training.resume);
+        assert!(cfg.cluster.elastic);
+        assert_eq!(cfg.cluster.fault_plan, "kill:1@20;err:0.01");
+
+        // defaults: checkpointing fully off, non-elastic
+        let cfg = preset("tiny").unwrap();
+        assert_eq!(cfg.training.ckpt_dir, None);
+        assert!(!cfg.cluster.elastic);
+        assert!(cfg.cluster.fault_plan.is_empty());
+
+        // resume without a dir is a config error, not a mid-run surprise
+        let mut cfg = preset("tiny").unwrap();
+        cfg.training.resume = true;
+        assert!(cfg.validate().is_err());
+        cfg.training.ckpt_dir = Some(PathBuf::from("/tmp/x"));
+        cfg.validate().unwrap();
+
+        // a typo'd fault plan fails at config time
+        let mut cfg = preset("tiny").unwrap();
+        cfg.cluster.fault_plan = "kil:1@2".into();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = preset("tiny").unwrap();
+        cfg.training.ckpt_every_iters = 0;
         assert!(cfg.validate().is_err());
     }
 

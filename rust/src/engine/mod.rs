@@ -54,6 +54,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::buffer::LocalBuffer;
+use crate::ckpt::EngineCkpt;
 use crate::config::SamplingScope;
 use crate::net::Fabric;
 use crate::sampling::GlobalSampler;
@@ -74,6 +75,11 @@ enum Job {
     /// Populate with this batch (+ per-sample candidate scores), then
     /// sample reps for the next iteration.
     Update(Vec<Sample>, Vec<f32>),
+    /// Report the background stream's raw RNG state (checkpoint export,
+    /// PR 9; only ever sent between epochs, with no round in flight).
+    ExportRng(Sender<[u64; 4]>),
+    /// Replace the background stream's RNG state (checkpoint restore).
+    SetRng([u64; 4]),
     /// Drain without sampling (end of stream).
     Flush,
 }
@@ -99,6 +105,11 @@ pub struct RehearsalEngine {
     res_rx: Option<Receiver<FetchResult>>,
     bg: Option<JoinHandle<()>>,
     pending: bool,
+    /// Reps drained out of the in-flight round by a checkpoint export (or
+    /// injected by a restore); the next `update_scored` serves them exactly
+    /// as if the round were still in flight, so checkpointing never
+    /// perturbs the run that took the checkpoint.
+    restored: Option<Vec<Sample>>,
 }
 
 impl RehearsalEngine {
@@ -118,6 +129,7 @@ impl RehearsalEngine {
             res_rx: None,
             bg: None,
             pending: false,
+            restored: None,
         };
         if params.async_updates {
             engine.spawn_background(seed);
@@ -149,6 +161,12 @@ impl RehearsalEngine {
                                 return;
                             }
                         }
+                        Job::ExportRng(tx) => {
+                            let _ = tx.send(rng.state());
+                        }
+                        Job::SetRng(s) => {
+                            rng = Rng::from_state(s);
+                        }
                         Job::Flush => return,
                     }
                 }
@@ -175,7 +193,11 @@ impl RehearsalEngine {
         self.timings.iterations.fetch_add(1, Ordering::Relaxed);
         if self.params.async_updates {
             // 1. wait for the reps requested during the previous iteration
-            let reps = if self.pending {
+            // (or serve the round a checkpoint export drained / a restore
+            // injected — indistinguishable from an in-flight round).
+            let reps = if let Some(r) = self.restored.take() {
+                r
+            } else if self.pending {
                 let t0 = Instant::now();
                 let res = self
                     .res_rx
@@ -251,6 +273,54 @@ impl RehearsalEngine {
     /// as in blocking mode) — the teardown invariant tests assert on.
     pub fn is_shut_down(&self) -> bool {
         self.bg.is_none()
+    }
+
+    /// Snapshot the engine for a checkpoint (PR 9). Called only between
+    /// epochs. Drains the in-flight round into the `restored` slot first, so
+    /// the run that took the checkpoint continues bit-identically: the next
+    /// `update_scored` serves those reps exactly as if the round were still
+    /// in flight. A failed in-flight round surfaces here instead of being
+    /// silently frozen into the snapshot.
+    pub fn export_state(&mut self) -> Result<EngineCkpt> {
+        if self.pending {
+            let res = self
+                .res_rx
+                .as_ref()
+                .expect("async engine has res_rx")
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine thread died"))?;
+            self.pending = false;
+            self.restored = Some(res.reps?);
+        }
+        let bg_rng = if let Some(tx) = &self.job_tx {
+            let (state_tx, state_rx) = channel::<[u64; 4]>();
+            tx.send(Job::ExportRng(state_tx))
+                .map_err(|_| anyhow::anyhow!("engine thread died"))?;
+            Some(state_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine thread died"))?)
+        } else {
+            None
+        };
+        Ok(EngineCkpt {
+            fg_rng: self.rng.state(),
+            bg_rng,
+            pending: self.restored.clone(),
+        })
+    }
+
+    /// Restore a checkpointed engine state into this (freshly built,
+    /// quiescent) engine: both RNG clocks and the drained in-flight round.
+    pub fn restore_state(&mut self, ck: &EngineCkpt) -> Result<()> {
+        self.rng = Rng::from_state(ck.fg_rng);
+        if let Some(s) = ck.bg_rng {
+            if let Some(tx) = &self.job_tx {
+                tx.send(Job::SetRng(s))
+                    .map_err(|_| anyhow::anyhow!("engine thread died"))?;
+            }
+        }
+        self.restored = ck.pending.clone();
+        Ok(())
     }
 }
 
@@ -505,6 +575,74 @@ mod tests {
         e.update(&batch_of(0, 8)).unwrap();
         e.finish().unwrap();
         drop(e); // no deadlock, no panic
+    }
+
+    /// Run `iters` iterations, optionally exporting a checkpoint at
+    /// `export_at` (mid-run), and return every rep's first feature plus the
+    /// checkpoint (if taken). The fabric is rebuilt per call so the buffer
+    /// streams are independent across runs.
+    fn drive(asynchronous: bool, iters: usize, export_at: Option<usize>)
+             -> (Vec<Vec<f32>>, Option<(EngineCkpt, crate::ckpt::BufferCkpt)>) {
+        let fabric = make_fabric(1, 64);
+        let mut e =
+            RehearsalEngine::new(0, Arc::clone(&fabric), params(asynchronous), 41);
+        let mut out = Vec::new();
+        let mut ck = None;
+        for i in 0..iters {
+            if export_at == Some(i) {
+                ck = Some((e.export_state().unwrap(),
+                           fabric.buffer(0).export_state()));
+            }
+            let reps = e.update(&batch_of((i % 3) as u32, 8)).unwrap();
+            out.push(reps.iter().map(|s| s.features[0]).collect());
+        }
+        if export_at == Some(iters) {
+            ck = Some((e.export_state().unwrap(),
+                       fabric.buffer(0).export_state()));
+        }
+        e.finish().unwrap();
+        (out, ck)
+    }
+
+    #[test]
+    fn export_mid_run_does_not_perturb_the_run() {
+        // Taking a checkpoint drains the in-flight round and re-serves it,
+        // so the exporting run's reps match an uninterrupted run exactly.
+        for asynchronous in [true, false] {
+            let (clean, _) = drive(asynchronous, 12, None);
+            let (exported, ck) = drive(asynchronous, 12, Some(6));
+            assert!(ck.is_some());
+            assert_eq!(clean, exported,
+                       "async={asynchronous}: export perturbed the run");
+        }
+    }
+
+    #[test]
+    fn restore_continues_the_interrupted_run_exactly() {
+        // checkpoint at iteration 6, rebuild engine+buffer from the
+        // snapshot, run the tail → identical to the uninterrupted tail.
+        for asynchronous in [true, false] {
+            let (clean, _) = drive(asynchronous, 12, None);
+            let (_, ck) = drive(asynchronous, 6, Some(6));
+            let (eck, bck) = ck.unwrap();
+
+            let fabric = make_fabric(1, 64);
+            fabric.buffer(0).restore_state(&bck).unwrap();
+            // a deliberately different seed: every RNG clock must come from
+            // the checkpoint, not from construction.
+            let mut e = RehearsalEngine::new(
+                0, Arc::clone(&fabric), params(asynchronous), 999);
+            e.restore_state(&eck).unwrap();
+            let mut tail = Vec::new();
+            for i in 6..12 {
+                let reps = e.update(&batch_of((i % 3) as u32, 8)).unwrap();
+                tail.push(reps.iter().map(|s| s.features[0])
+                    .collect::<Vec<f32>>());
+            }
+            e.finish().unwrap();
+            assert_eq!(&clean[6..], &tail[..],
+                       "async={asynchronous}: resumed tail diverged");
+        }
     }
 
     #[test]

@@ -119,5 +119,11 @@ pub fn summarize(report: &RunReport) -> String {
             b.offered, b.appended, b.evicted, b.rejected, b.rows_served,
             report.rehearsal_wire_bytes));
     }
+    // Elastic fault domain (PR 9): a degraded run says so out loud.
+    if report.degraded_fetches > 0 || report.lost_workers > 0 {
+        line.push_str(&format!(
+            "  [degraded fetches={} lost_workers={}]",
+            report.degraded_fetches, report.lost_workers));
+    }
     line
 }

@@ -23,6 +23,9 @@
 //!   sharding, and the background prefetching loader (DALI stand-in).
 //! - [`buffer`] — the rehearsal buffer: per-class sub-buffers, eviction
 //!   policies, Algorithm 1 updates, fine-grain locking.
+//! - [`ckpt`] — deterministic checkpoint/restore: versioned, CRC-guarded
+//!   on-disk snapshots of params, momentum, RNG clocks, buffer residents
+//!   and trainer cursors, restored in place at epoch boundaries.
 //! - [`net`] — the RDMA/RPC fabric (Mochi/Thallium stand-in) with
 //!   pluggable transports: zero-copy in-process (default) or real TCP
 //!   sockets with a length-prefixed wire protocol (`[cluster] transport`),
@@ -48,6 +51,7 @@
 
 pub mod bench_harness;
 pub mod buffer;
+pub mod ckpt;
 pub mod cli;
 pub mod cluster;
 pub mod config;

@@ -83,6 +83,12 @@ pub struct RunReport {
     pub buffer: BufferTally,
     /// Total rehearsal wire traffic (row fetches + metadata), bytes.
     pub rehearsal_wire_bytes: u64,
+    /// Remote fetches that fell back to a degraded (local-only / stale)
+    /// view because a peer was failing — elastic mode only, never silent
+    /// (PR 9). Zero on healthy or non-elastic runs.
+    pub degraded_fetches: u64,
+    /// Rehearsal peers committed lost by the membership plane over the run.
+    pub lost_workers: u64,
 }
 
 impl RunReport {
@@ -149,6 +155,8 @@ mod tests {
             iterations: 10,
             buffer: BufferTally::default(),
             rehearsal_wire_bytes: 0,
+            degraded_fetches: 0,
+            lost_workers: 0,
         };
         assert_eq!(report.accuracy_curve(), vec![(1, 0.8)]);
         let tc = report.time_curve();

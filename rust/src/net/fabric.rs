@@ -34,11 +34,13 @@ use anyhow::{bail, Result};
 
 use crate::buffer::local::{ClassCount, SNAPSHOT_ENTRY_BYTES};
 use crate::buffer::LocalBuffer;
+use crate::cluster::membership::{Membership, DEFAULT_RETRY_BUDGET};
 use crate::config::TransportKind;
 use crate::tensor::Sample;
 
 use super::cost::CostModel;
-use super::transport::{InprocTransport, TcpTransport, Transport};
+use super::transport::{FaultPlan, FaultyTransport, InprocTransport,
+                       TcpTransport, Transport};
 
 /// Fabric-wide traffic counters (all workers).
 #[derive(Debug, Default)]
@@ -59,6 +61,12 @@ pub struct FabricCounters {
     /// *semantic* payload on every backend, so projections are
     /// backend-independent.
     pub wire_ns: AtomicU64,
+    /// Remote exchanges that degraded instead of failing the run (elastic
+    /// mode, PR 9): a peer RPC errored or targeted a committed-lost peer,
+    /// and the fabric served what it still could — empty rows, stale or
+    /// empty counts. Never incremented with `elastic = false`, where the
+    /// same errors poison the run.
+    pub degraded_fetches: AtomicU64,
 }
 
 impl FabricCounters {
@@ -71,6 +79,33 @@ impl FabricCounters {
             self.meta_bytes.load(Ordering::Relaxed),
             Duration::from_nanos(self.wire_ns.load(Ordering::Relaxed)),
         )
+    }
+
+    pub fn degraded(&self) -> u64 {
+        self.degraded_fetches.load(Ordering::Relaxed)
+    }
+
+    /// All six tallies in checkpoint order (`ckpt::FabricTallies`):
+    /// `[rpcs, bytes, meta_rpcs, meta_bytes, wire_ns, degraded_fetches]`.
+    pub fn export(&self) -> [u64; 6] {
+        [
+            self.rpcs.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+            self.meta_rpcs.load(Ordering::Relaxed),
+            self.meta_bytes.load(Ordering::Relaxed),
+            self.wire_ns.load(Ordering::Relaxed),
+            self.degraded_fetches.load(Ordering::Relaxed),
+        ]
+    }
+
+    /// Restore the tallies from a checkpoint (same order as `export`).
+    pub fn restore(&self, t: [u64; 6]) {
+        self.rpcs.store(t[0], Ordering::Relaxed);
+        self.bytes.store(t[1], Ordering::Relaxed);
+        self.meta_rpcs.store(t[2], Ordering::Relaxed);
+        self.meta_bytes.store(t[3], Ordering::Relaxed);
+        self.wire_ns.store(t[4], Ordering::Relaxed);
+        self.degraded_fetches.store(t[5], Ordering::Relaxed);
     }
 }
 
@@ -126,6 +161,14 @@ pub struct Fabric {
     emulate_delays: bool,
     meta: MetaPlane,
     pub counters: FabricCounters,
+    /// Elastic fault domain (PR 9, `[cluster] elastic`): when set, a
+    /// failed peer exchange degrades (strike + fallback + counted in
+    /// `degraded_fetches`) instead of erroring the round; committed-lost
+    /// peers are skipped. Default `false` — errors poison as before.
+    elastic: bool,
+    /// Peer liveness, shared with anyone holding the fabric (the trainer
+    /// reads it at epoch boundaries to commit losses).
+    membership: Arc<Membership>,
 }
 
 impl Fabric {
@@ -140,8 +183,47 @@ impl Fabric {
     pub fn with_transport(transport: Box<dyn Transport>, cost: CostModel,
                           emulate_delays: bool) -> Fabric {
         let meta = MetaPlane::new(transport.workers());
+        let membership = Arc::new(Membership::new(transport.workers(),
+                                                  DEFAULT_RETRY_BUDGET));
         Fabric { transport, cost, emulate_delays, meta,
-                 counters: FabricCounters::default() }
+                 counters: FabricCounters::default(),
+                 elastic: false, membership }
+    }
+
+    /// Enable the elastic fault domain: failed peer exchanges degrade
+    /// (recorded against [`Membership`], counted in `degraded_fetches`,
+    /// served with whatever is still reachable) instead of erroring the
+    /// round, and committed-lost peers are skipped entirely.
+    pub fn with_elastic(mut self, on: bool) -> Fabric {
+        self.elastic = on;
+        self
+    }
+
+    pub fn is_elastic(&self) -> bool {
+        self.elastic
+    }
+
+    /// The fabric's peer-liveness view (strike counts, committed losses).
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
+    }
+
+    /// Epoch-boundary commit of pending peer losses (see
+    /// [`Membership::advance_epoch`]); returns the newly lost peers.
+    pub fn advance_membership_epoch(&self) -> Option<Vec<usize>> {
+        self.membership.advance_epoch()
+    }
+
+    /// Wrap the transport in a seeded [`FaultyTransport`] (test-only fault
+    /// injection, `[cluster] fault_plan`). The wrapper is deterministic for
+    /// a fixed plan + seed; counters and the metadata plane carry over.
+    pub fn with_fault_injection(self, plan: FaultPlan, seed: u64) -> Fabric {
+        let Fabric { transport, cost, emulate_delays, meta, counters,
+                     elastic, membership } = self;
+        Fabric {
+            transport: Box::new(FaultyTransport::new(transport, plan, seed)),
+            cost, emulate_delays, meta, counters, elastic, membership,
+        }
     }
 
     /// Set the metadata refresh cadence `k` (rounds a cached peer snapshot
@@ -224,7 +306,15 @@ impl Fabric {
                 // call patterns where a fetch preceded the first gather)
                 // and no per-peer lock/clone on the default hot path.
                 let (counts, moved) =
-                    self.transport.remote_counts(requester, target)?;
+                    match self.counts_exchange(requester, target)? {
+                        Some(ok) => ok,
+                        None => {
+                            // degraded/lost peer: the planner sees an
+                            // empty buffer there and plans around it
+                            all.push(Vec::new());
+                            continue;
+                        }
+                    };
                 self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
                 self.counters.meta_bytes.fetch_add(moved as u64,
                                                    Ordering::Relaxed);
@@ -238,15 +328,23 @@ impl Fabric {
             let fresh = entry.valid
                 && round.saturating_sub(entry.refreshed_round) < k;
             if !fresh {
-                let (counts, moved) =
-                    self.transport.remote_counts(requester, target)?;
-                self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
-                self.counters.meta_bytes.fetch_add(moved as u64,
-                                                   Ordering::Relaxed);
-                wire += self.cost.cost(counts.len() * SNAPSHOT_ENTRY_BYTES);
-                entry.counts = counts;
-                entry.refreshed_round = round;
-                entry.valid = true;
+                match self.counts_exchange(requester, target)? {
+                    Some((counts, moved)) => {
+                        self.counters.meta_rpcs.fetch_add(1, Ordering::Relaxed);
+                        self.counters.meta_bytes.fetch_add(moved as u64,
+                                                           Ordering::Relaxed);
+                        wire += self.cost
+                            .cost(counts.len() * SNAPSHOT_ENTRY_BYTES);
+                        entry.counts = counts;
+                        entry.refreshed_round = round;
+                        entry.valid = true;
+                    }
+                    // Degraded: serve the stale cached view if there is
+                    // one (better than pretending the peer is empty while
+                    // it may come back before the loss commits); an
+                    // invalid entry serves its empty default.
+                    None => {}
+                }
             }
             all.push(entry.counts.clone());
         }
@@ -276,8 +374,32 @@ impl Fabric {
         if picks.is_empty() {
             return Ok((Vec::new(), Duration::ZERO));
         }
+        if self.elastic && !self.membership.is_alive(target) {
+            // Committed loss: the planner's view of this peer is already
+            // empty, so picks naming it are a plan/commit race — serve the
+            // local-only fallback (no rows) rather than probe a dead peer.
+            return Ok((Vec::new(), Duration::ZERO));
+        }
         let (rows, peer_counts, moved) =
-            self.transport.remote_fetch(requester, target, picks)?;
+            match self.transport.remote_fetch(requester, target, picks) {
+                Ok(ok) => {
+                    if self.elastic {
+                        self.membership.record_success(target);
+                    }
+                    ok
+                }
+                Err(_) if self.elastic => {
+                    // Degraded window: strike the peer, count the
+                    // fallback, and let the round continue with the rows
+                    // it got from everyone else (partial representative
+                    // sets already train augmented).
+                    self.membership.record_failure(target);
+                    self.counters.degraded_fetches
+                        .fetch_add(1, Ordering::Relaxed);
+                    return Ok((Vec::new(), Duration::ZERO));
+                }
+                Err(e) => return Err(e),
+            };
         let semantic: usize = rows.iter().map(Sample::wire_bytes).sum::<usize>()
             + peer_counts.len() * SNAPSHOT_ENTRY_BYTES;
         self.counters.rpcs.fetch_add(1, Ordering::Relaxed);
@@ -301,6 +423,33 @@ impl Fabric {
         let wire = self.cost.cost(semantic);
         self.charge(wire);
         Ok((rows, wire))
+    }
+
+    /// Elastic-aware metadata exchange: `Ok(Some(..))` on success,
+    /// `Ok(None)` when elastic mode absorbed a lost/failing peer (live
+    /// failures strike the peer and count as degraded; committed losses
+    /// are skipped silently — the membership already agreed on them),
+    /// `Err` when `elastic = false` (the error poisons the round,
+    /// exactly the pre-PR-9 behavior).
+    fn counts_exchange(&self, requester: usize, target: usize)
+                       -> Result<Option<(Vec<ClassCount>, usize)>> {
+        if self.elastic && !self.membership.is_alive(target) {
+            return Ok(None);
+        }
+        match self.transport.remote_counts(requester, target) {
+            Ok(ok) => {
+                if self.elastic {
+                    self.membership.record_success(target);
+                }
+                Ok(Some(ok))
+            }
+            Err(_) if self.elastic => {
+                self.membership.record_failure(target);
+                self.counters.degraded_fetches.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
     }
 
     fn charge(&self, wire: Duration) {
@@ -446,6 +595,58 @@ mod tests {
     fn zero_cadence_clamps_to_one() {
         let f = fabric(2, 1).with_meta_refresh_rounds(0);
         assert_eq!(f.meta_refresh_rounds(), 1);
+    }
+
+    #[test]
+    fn elastic_fabric_degrades_and_commits_the_loss_at_the_boundary() {
+        // Peer 1 dead from op 0. Elastic mode: rounds keep succeeding
+        // (empty/stale views of the dead peer), every live failure is
+        // counted, and the epoch-boundary commit turns the pending loss
+        // into agreed membership — after which the peer is skipped
+        // silently (no probe traffic, no further degraded counts).
+        let t = FaultyTransport::new(
+            Box::new(InprocTransport::new(buffers(3, 4))),
+            FaultPlan::parse("kill:1@0").unwrap(), 5);
+        let f = Fabric::with_transport(Box::new(t), CostModel::default(),
+                                       false)
+            .with_elastic(true);
+        let all = f.gather_counts(0).unwrap();
+        assert_eq!(all.len(), 3);
+        assert!(all[1].is_empty(), "dead peer must look empty to the planner");
+        assert!(!all[2].is_empty(), "live peer unaffected");
+        let (rows, wire) = f.fetch_bulk(0, 1, &[(0, 0)]).unwrap();
+        assert!(rows.is_empty() && wire.is_zero(),
+                "fetch from the dying peer degrades to the local fallback");
+        assert_eq!(f.counters.degraded(), 2);
+        assert!(f.membership().is_alive(1), "loss is pending, not committed");
+        f.gather_counts(0).unwrap(); // third strike crosses the budget
+        assert_eq!(f.membership().pending_losses(), vec![1]);
+        assert_eq!(f.advance_membership_epoch(), Some(vec![1]));
+        assert_eq!(f.membership().epoch(), 1);
+        assert_eq!(f.membership().survivors(), vec![0, 2]);
+        let before = f.counters.degraded();
+        let all = f.gather_counts(0).unwrap();
+        assert!(all[1].is_empty());
+        let (rows, _) = f.fetch_bulk(0, 1, &[(0, 0)]).unwrap();
+        assert!(rows.is_empty());
+        assert_eq!(f.counters.degraded(), before,
+                   "a committed loss is skipped, not re-discovered");
+        assert_eq!(f.advance_membership_epoch(), None);
+    }
+
+    #[test]
+    fn non_elastic_fabric_still_poisons_on_peer_failure() {
+        // Default (elastic = false): the PR-9 machinery must be inert —
+        // a peer failure surfaces as an error exactly as before.
+        let t = FaultyTransport::new(
+            Box::new(InprocTransport::new(buffers(2, 2))),
+            FaultPlan::parse("kill:1@0").unwrap(), 5);
+        let f = Fabric::with_transport(Box::new(t), CostModel::default(),
+                                       false);
+        assert!(!f.is_elastic());
+        assert!(f.gather_counts(0).is_err());
+        assert!(f.fetch_bulk(0, 1, &[(0, 0)]).is_err());
+        assert_eq!(f.counters.degraded(), 0);
     }
 
     #[test]

@@ -50,4 +50,5 @@ pub mod wire;
 
 pub use cost::CostModel;
 pub use fabric::{Fabric, FabricCounters};
-pub use transport::{InprocTransport, TcpTransport, Transport};
+pub use transport::{FaultPlan, FaultyTransport, InprocTransport,
+                    TcpTransport, Transport};

@@ -34,9 +34,10 @@
 //! `engine_teardown` integration test).
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -44,6 +45,7 @@ use crate::buffer::local::{ClassCount, SNAPSHOT_ENTRY_BYTES};
 use crate::buffer::LocalBuffer;
 use crate::config::TransportKind;
 use crate::tensor::Sample;
+use crate::util::rng::{derive_seed, Rng, SeedDomain};
 
 use super::wire;
 
@@ -137,6 +139,18 @@ impl Transport for InprocTransport {
 
 // ===================================================================== tcp
 
+/// Bound on a client connect (a dead peer's SYN can otherwise hang for
+/// the kernel's full backoff, minutes on Linux).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// Bound on the client's wait for a response frame. Generous: a loaded
+/// CI box can legitimately stall a peer's serving thread for a while.
+const RPC_READ_TIMEOUT: Duration = Duration::from_secs(10);
+/// Total attempts per exchange (1 original + 1 retry on a fresh stream).
+const EXCHANGE_ATTEMPTS: usize = 2;
+/// Pause before the retry — long enough for a restarting listener or a
+/// descheduled serving thread, short enough not to stall the engine.
+const RETRY_BACKOFF: Duration = Duration::from_millis(25);
+
 /// Real-socket backend: one listener thread per worker serving its local
 /// buffer, one pooled client connection per (requester, target) pair.
 pub struct TcpTransport {
@@ -197,38 +211,63 @@ impl TcpTransport {
     /// stream. Returns the response body and the total frame bytes moved
     /// (request + response, length prefixes included). A failed exchange
     /// drops the pooled stream so the next call reconnects.
+    ///
+    /// Robustness (PR 9): connects are bounded by [`CONNECT_TIMEOUT`], the
+    /// client read by [`RPC_READ_TIMEOUT`] (a silent peer can no longer
+    /// hang the engine forever), and the whole exchange retries **once**
+    /// on a fresh connection after a short backoff — both RPCs are
+    /// idempotent reads, so a retry after a half-completed exchange cannot
+    /// corrupt peer state. A second failure surfaces as before.
     fn exchange(&self, requester: usize, target: usize, request: &[u8])
                 -> Result<(Vec<u8>, usize)> {
         let n = self.buffers.len();
         let mut slot = self.pool[requester * n + target]
             .lock()
             .unwrap_or_else(|p| p.into_inner());
-        if slot.is_none() {
-            let stream = TcpStream::connect(self.addrs[target])
-                .with_context(|| format!(
-                    "worker {requester} connecting to worker {target} at {}",
-                    self.addrs[target]))?;
-            stream.set_nodelay(true)?;
-            *slot = Some(stream);
-        }
-        let stream = slot.as_mut().expect("pooled stream just ensured");
-        let round = (|| {
-            wire::write_frame(stream, request)?;
-            wire::read_frame(stream)?
-                .ok_or_else(|| anyhow!("worker {target} closed the connection"))
-        })();
-        match round {
-            Ok(body) => {
-                let bytes = wire::FRAME_HEADER_BYTES + request.len()
-                    + wire::FRAME_HEADER_BYTES + body.len();
-                Ok((body, bytes))
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..EXCHANGE_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(RETRY_BACKOFF);
             }
-            Err(e) => {
-                *slot = None;
-                Err(e.context(format!(
-                    "fabric rpc from worker {requester} to worker {target}")))
+            if slot.is_none() {
+                match TcpStream::connect_timeout(&self.addrs[target],
+                                                 CONNECT_TIMEOUT) {
+                    Ok(stream) => {
+                        stream.set_nodelay(true)?;
+                        stream.set_read_timeout(Some(RPC_READ_TIMEOUT))?;
+                        *slot = Some(stream);
+                    }
+                    Err(e) => {
+                        last_err = Some(anyhow::Error::new(e).context(format!(
+                            "worker {requester} connecting to worker {target} \
+                             at {} (attempt {})",
+                            self.addrs[target], attempt + 1)));
+                        continue;
+                    }
+                }
+            }
+            let stream = slot.as_mut().expect("pooled stream just ensured");
+            let round = (|| {
+                wire::write_frame(stream, request)?;
+                wire::read_frame(stream)?.ok_or_else(|| {
+                    anyhow!("worker {target} closed the connection")
+                })
+            })();
+            match round {
+                Ok(body) => {
+                    let bytes = wire::FRAME_HEADER_BYTES + request.len()
+                        + wire::FRAME_HEADER_BYTES + body.len();
+                    return Ok((body, bytes));
+                }
+                Err(e) => {
+                    *slot = None; // next attempt reconnects
+                    last_err = Some(e.context(format!(
+                        "fabric rpc from worker {requester} to worker \
+                         {target} (attempt {})", attempt + 1)));
+                }
             }
         }
+        Err(last_err.expect("every failed attempt records an error"))
     }
 }
 
@@ -436,12 +475,233 @@ fn serve_connection(mut stream: TcpStream, buffer: Arc<LocalBuffer>,
     }
 }
 
+// ================================================================== faults
+
+/// Seeded fault-injection schedule for [`FaultyTransport`] (PR 9,
+/// `[cluster] fault_plan` — test/chaos harness only, never a production
+/// path). Parsed from a compact string so chaos runs are reproducible
+/// from a CLI flag:
+///
+/// ```text
+/// kill:<peer>@<op>;err:<rate>;delay:<us>@<rate>
+/// ```
+///
+/// Any subset of components, `;`-separated; the empty string injects
+/// nothing. `kill:1@40` makes every remote op targeting peer 1 fail from
+/// global op 40 onward (a permanent peer death); `err:0.05` fails ops
+/// with probability 0.05 (transient errors); `delay:500@0.2` sleeps
+/// 500 µs before 20 % of ops (tail-latency jitter).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Kill `(peer, from_op)`: ops targeting `peer` fail once the global
+    /// remote-op counter reaches `from_op`.
+    pub kill: Option<(usize, u64)>,
+    /// Per-op probability of an injected transient error, in `[0, 1]`.
+    pub err_rate: f64,
+    /// `(micros, rate)`: sleep `micros` before an op with probability
+    /// `rate`.
+    pub delay: Option<(u64, f64)>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.kill.is_none() && self.err_rate == 0.0 && self.delay.is_none()
+    }
+
+    /// Parse the plan string (see type docs for the grammar). Unknown
+    /// components and out-of-range rates are rejected loudly — a typo'd
+    /// chaos plan that silently injects nothing would make a chaos suite
+    /// vacuously green.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        fn rate(spec: &str, what: &str) -> Result<f64> {
+            let r: f64 = spec.trim().parse()
+                .with_context(|| format!("fault plan {what} rate {spec:?}"))?;
+            if !(0.0..=1.0).contains(&r) {
+                bail!("fault plan {what} rate {r} outside [0, 1]");
+            }
+            Ok(r)
+        }
+        let mut plan = FaultPlan::default();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, spec) = part.split_once(':').ok_or_else(|| anyhow!(
+                "fault plan component {part:?} is not <kind>:<spec>"))?;
+            match kind.trim() {
+                "kill" => {
+                    let (peer, op) = spec.split_once('@').ok_or_else(|| {
+                        anyhow!("kill spec {spec:?} is not <peer>@<op>")
+                    })?;
+                    plan.kill = Some((
+                        peer.trim().parse().with_context(|| format!(
+                            "kill peer {peer:?}"))?,
+                        op.trim().parse().with_context(|| format!(
+                            "kill op {op:?}"))?,
+                    ));
+                }
+                "err" => plan.err_rate = rate(spec, "err")?,
+                "delay" => {
+                    let (us, r) = spec.split_once('@').ok_or_else(|| {
+                        anyhow!("delay spec {spec:?} is not <us>@<rate>")
+                    })?;
+                    plan.delay = Some((
+                        us.trim().parse().with_context(|| format!(
+                            "delay micros {us:?}"))?,
+                        rate(r, "delay")?,
+                    ));
+                }
+                other => bail!("unknown fault plan component {other:?} \
+                                (want kill/err/delay)"),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// Decorator injecting scheduled faults into any [`Transport`]: peer
+/// death from a fixed op, seeded transient errors, seeded delays. The
+/// chaos harness's only knob — the wrapped backend is untouched, so the
+/// same schedule runs over `inproc` and `tcp`.
+///
+/// The error/delay draws come from one seeded stream
+/// ([`SeedDomain::FaultPlan`]); with concurrent engines the interleaving
+/// of draws is scheduling-dependent, so chaos tests assert *outcomes*
+/// (run completes, degraded counts > 0), not exact fault positions. The
+/// kill schedule is exact on the global op counter regardless.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    /// Global remote-op counter (counts + fetches) — the kill clock.
+    ops: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+impl FaultyTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan,
+               seed: u64) -> FaultyTransport {
+        FaultyTransport {
+            inner,
+            plan,
+            ops: AtomicU64::new(0),
+            rng: Mutex::new(Rng::new(derive_seed(SeedDomain::FaultPlan,
+                                                 &[seed]))),
+        }
+    }
+
+    /// Remote ops attempted so far (for test assertions).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::SeqCst)
+    }
+
+    fn inject(&self, target: usize, what: &str) -> Result<()> {
+        let op = self.ops.fetch_add(1, Ordering::SeqCst);
+        if let Some((peer, from)) = self.plan.kill {
+            if target == peer && op >= from {
+                bail!("injected fault: peer {peer} is dead \
+                       ({what} op {op}, killed at op {from})");
+            }
+        }
+        if self.plan.err_rate > 0.0 || self.plan.delay.is_some() {
+            let mut rng = self.rng.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some((us, rate)) = self.plan.delay {
+                if rng.chance(rate) {
+                    std::thread::sleep(Duration::from_micros(us));
+                }
+            }
+            if self.plan.err_rate > 0.0 && rng.chance(self.plan.err_rate) {
+                bail!("injected fault: transient {what} error \
+                       (op {op} to peer {target})");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn kind(&self) -> TransportKind {
+        self.inner.kind()
+    }
+
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+
+    fn buffer(&self, worker: usize) -> &Arc<LocalBuffer> {
+        self.inner.buffer(worker)
+    }
+
+    fn remote_counts(&self, requester: usize, target: usize)
+                     -> Result<(Vec<ClassCount>, usize)> {
+        self.inject(target, "counts")?;
+        self.inner.remote_counts(requester, target)
+    }
+
+    fn remote_fetch(&self, requester: usize, target: usize,
+                    picks: &[(u32, usize)])
+                    -> Result<(Vec<Sample>, Vec<ClassCount>, usize)> {
+        self.inject(target, "fetch")?;
+        self.inner.remote_fetch(requester, target, picks)
+    }
+
+    /// Faults never block teardown: a chaos run must still join every
+    /// thread on the way out.
+    fn shutdown(&self) -> Result<()> {
+        self.inner.shutdown()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn buffers(n: usize, per_class: usize) -> Vec<Arc<LocalBuffer>> {
         crate::testkit::filled_buffers(n, per_class, 2)
+    }
+
+    #[test]
+    fn fault_plan_parser_accepts_the_grammar_and_rejects_typos() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        let p = FaultPlan::parse("kill:1@40; err:0.05; delay:500@0.2").unwrap();
+        assert_eq!(p.kill, Some((1, 40)));
+        assert_eq!(p.err_rate, 0.05);
+        assert_eq!(p.delay, Some((500, 0.2)));
+        let only_kill = FaultPlan::parse("kill:2@0").unwrap();
+        assert_eq!(only_kill.kill, Some((2, 0)));
+        assert_eq!(only_kill.err_rate, 0.0);
+        assert!(FaultPlan::parse("drop:0.5").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("err:1.5").is_err(), "rate > 1");
+        assert!(FaultPlan::parse("kill:1").is_err(), "missing @op");
+        assert!(FaultPlan::parse("delay:abc@0.1").is_err(), "bad micros");
+    }
+
+    #[test]
+    fn killed_peer_fails_exactly_from_the_scheduled_op() {
+        let t = FaultyTransport::new(
+            Box::new(InprocTransport::new(buffers(3, 2))),
+            FaultPlan::parse("kill:1@2").unwrap(), 7);
+        // ops 0, 1 target peer 1 and predate the kill
+        t.remote_counts(0, 1).unwrap();
+        t.remote_counts(0, 1).unwrap();
+        // op 2 onward: peer 1 is dead, peer 2 unaffected
+        let err = t.remote_counts(0, 1).unwrap_err().to_string();
+        assert!(err.contains("peer 1 is dead"), "{err}");
+        assert!(t.remote_fetch(0, 1, &[(0, 0)]).is_err());
+        t.remote_counts(0, 2).unwrap();
+        t.remote_fetch(0, 2, &[(0, 0)]).unwrap();
+        assert_eq!(t.ops(), 6);
+        t.shutdown().unwrap();
+    }
+
+    #[test]
+    fn error_rate_one_fails_everything_zero_fails_nothing() {
+        let always = FaultyTransport::new(
+            Box::new(InprocTransport::new(buffers(2, 1))),
+            FaultPlan::parse("err:1.0").unwrap(), 9);
+        assert!(always.remote_counts(0, 1).is_err());
+        assert!(always.remote_fetch(0, 1, &[(0, 0)]).is_err());
+        let never = FaultyTransport::new(
+            Box::new(InprocTransport::new(buffers(2, 1))),
+            FaultPlan::parse("err:0.0; delay:1@1.0").unwrap(), 9);
+        never.remote_counts(0, 1).unwrap();
+        never.remote_fetch(0, 1, &[(0, 0)]).unwrap();
     }
 
     #[test]

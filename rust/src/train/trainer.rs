@@ -77,6 +77,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::buffer::LocalBuffer;
+use crate::ckpt::{Checkpoint, WorkerCkpt};
 use crate::cluster::GradAccumulator;
 use crate::config::{ExperimentConfig, Strategy};
 use crate::data::augment::DriftParams;
@@ -84,7 +85,7 @@ use crate::data::{Dataset, Loader, Scenario, ShardPlan};
 use crate::engine::{EngineParams, EngineTimings, RehearsalEngine};
 use crate::metrics::breakdown::{TrainMetrics, WorkerBreakdown};
 use crate::metrics::report::{BufferTally, EpochRecord, RunReport};
-use crate::net::{CostModel, Fabric};
+use crate::net::{CostModel, Fabric, FaultPlan};
 use crate::optim::LrSchedule;
 use crate::runtime::{affinity, Literal, ModelExecutor};
 use crate::tensor::Batch;
@@ -198,6 +199,16 @@ enum WorkerCmd {
         /// scenario); `None` everywhere else.
         drift: Option<DriftParams>,
     },
+    /// Epoch-boundary state export: drain the in-flight engine round,
+    /// capture both RNG clocks and the carried score feed, reply over the
+    /// provided channel. The worker ALWAYS replies (a failed export poisons
+    /// the run and replies with a default), so the coordinator's recv
+    /// cannot hang.
+    Checkpoint(Sender<WorkerCkpt>),
+    /// Epoch-boundary state restore (resume): re-arm the engine RNG clocks
+    /// and re-inject the checkpointed in-flight round before the first
+    /// epoch command arrives (channel FIFO order guarantees the sequencing).
+    Restore(WorkerCkpt),
     Stop,
 }
 
@@ -212,6 +223,10 @@ struct Shared<'a> {
     iterations_done: &'a AtomicUsize,
     poisoned: &'a AtomicBool,
     first_error: &'a Mutex<Option<anyhow::Error>>,
+    /// Worker errors swallowed because `first_error` was already taken —
+    /// surfaced as a `(+k more worker errors)` suffix, never dropped
+    /// silently (satellite 1).
+    suppressed: &'a AtomicUsize,
     /// Pin each worker thread to one allowed CPU (`[cluster] pin_workers`).
     pin_workers: bool,
 }
@@ -226,8 +241,27 @@ impl Shared<'_> {
             .unwrap_or_else(|p| p.into_inner());
         if slot.is_none() {
             *slot = Some(e);
+        } else {
+            self.suppressed.fetch_add(1, Ordering::SeqCst);
         }
         self.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    /// Take the first recorded error, folding in the count of errors that
+    /// arrived after it (a poisoned epoch usually fails on several workers
+    /// at once; reporting only one understates the blast radius).
+    fn take_error(&self) -> Option<anyhow::Error> {
+        let e = self
+            .first_error
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()?;
+        let k = self.suppressed.swap(0, Ordering::SeqCst);
+        Some(if k > 0 {
+            anyhow!("{e:#} (+{k} more worker errors)")
+        } else {
+            e
+        })
     }
 }
 
@@ -293,10 +327,18 @@ impl<'a> Trainer<'a> {
                 derive_seed(SeedDomain::WorkerBuffer,
                             &[cfg.training.seed, w as u64]))))
             .collect();
-        let fabric = Arc::new(Fabric::for_kind(
+        let mut fabric = Fabric::for_kind(
             cfg.cluster.transport, buffers, self.cost_model(),
             cfg.cluster.emulate_delays)?
-            .with_meta_refresh_rounds(cfg.cluster.meta_refresh_rounds));
+            .with_meta_refresh_rounds(cfg.cluster.meta_refresh_rounds)
+            .with_elastic(cfg.cluster.elastic);
+        if !cfg.cluster.fault_plan.is_empty() {
+            // Test-only chaos harness: wrap the transport in the seeded
+            // fault decorator. Same seed, same plan → same fault schedule.
+            let plan = FaultPlan::parse(&cfg.cluster.fault_plan)?;
+            fabric = fabric.with_fault_injection(plan, cfg.training.seed);
+        }
+        let fabric = Arc::new(fabric);
         let params = EngineParams {
             batch: cfg.training.batch,
             reps: cfg.training.reps,
@@ -311,7 +353,7 @@ impl<'a> Trainer<'a> {
                             &[cfg.training.seed, w as u64])))
             .collect();
 
-        let out = self.drive(Some(engines), |task| {
+        let out = self.drive(Some(engines), Some(&fabric), |task| {
             // rehearsal trains on the current task's scenario pool only;
             // old tasks come back through the buffer.
             self.scenario.train_pool(self.dataset, task)
@@ -338,19 +380,22 @@ impl<'a> Trainer<'a> {
         report.rehearsal_wire_bytes =
             fabric.counters.bytes.load(Ordering::Relaxed)
             + fabric.counters.meta_bytes.load(Ordering::Relaxed);
+        report.degraded_fetches = fabric.counters.degraded();
+        report.lost_workers =
+            (n - fabric.membership().num_alive()) as u64;
         Ok(report)
     }
 
     // ---------------------------------------------------------------- baselines
 
     fn run_incremental(&self) -> Result<RunReport> {
-        self.drive(None, |task| {
+        self.drive(None, None, |task| {
             self.scenario.train_pool(self.dataset, task)
         }, false)
     }
 
     fn run_from_scratch(&self) -> Result<RunReport> {
-        self.drive(None, |task| {
+        self.drive(None, None, |task| {
             self.dataset
                 .train_indices_of_classes(&self.scenario.classes_up_to(task))
         }, true)
@@ -362,9 +407,12 @@ impl<'a> Trainer<'a> {
     /// `reset_each_task` re-initialises parameters at task boundaries
     /// (from-scratch). `engines` enables rehearsal augmentation; they are
     /// moved into the worker threads (one each) and torn down — background
-    /// threads joined — before this function returns.
+    /// threads joined — before this function returns. `fabric` (rehearsal
+    /// only) lets the coordinator checkpoint/restore the buffers + fabric
+    /// counters and commit membership epochs in elastic mode.
     fn drive(&self,
              engines: Option<Vec<RehearsalEngine>>,
+             fabric: Option<&Arc<Fabric>>,
              indices_for_task: impl Fn(usize) -> Vec<usize>,
              reset_each_task: bool) -> Result<RunReport> {
         let cfg = self.cfg;
@@ -411,6 +459,7 @@ impl<'a> Trainer<'a> {
         let iterations_done = AtomicUsize::new(0);
         let poisoned = AtomicBool::new(false);
         let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let suppressed = AtomicUsize::new(0);
         let shared = Shared {
             exec: self.exec,
             state: &state,
@@ -421,6 +470,7 @@ impl<'a> Trainer<'a> {
             iterations_done: &iterations_done,
             poisoned: &poisoned,
             first_error: &first_error,
+            suppressed: &suppressed,
             pin_workers: cfg.cluster.pin_workers,
         };
 
@@ -457,7 +507,7 @@ impl<'a> Trainer<'a> {
 
             // ---- coordinator ------------------------------------------------
             let out = self.coordinate(&cmd_txs, &res_rx, &state, &shared,
-                                      &evaluator, &schedule,
+                                      fabric, &evaluator, &schedule,
                                       &indices_for_task, reset_each_task);
             // Always release the workers so the scope can join them, even
             // when coordination failed.
@@ -517,18 +567,26 @@ impl<'a> Trainer<'a> {
             // baselines have no rehearsal buffer to tally.
             buffer: BufferTally::default(),
             rehearsal_wire_bytes: 0,
+            degraded_fetches: 0,
+            lost_workers: 0,
         })
     }
 
     /// Main-thread side of the protocol: plans epochs, hands them to the
     /// workers, collects per-worker metric shards, evaluates, and surfaces
-    /// the first worker error at the epoch boundary.
+    /// the first worker error at the epoch boundary. With `[train]
+    /// ckpt_dir` set it also snapshots the whole run at epoch boundaries
+    /// (and on `--resume` fast-forwards past the checkpointed epochs —
+    /// every epoch with `global_epoch < resume_start` is skipped without
+    /// touching a single RNG, so the tail of a resumed run replays the
+    /// uninterrupted run bit-for-bit).
     #[allow(clippy::too_many_arguments)]
     fn coordinate(&self,
                   cmd_txs: &[Sender<WorkerCmd>],
                   res_rx: &Receiver<(usize, TrainMetrics)>,
                   state: &RwLock<ParamState>,
                   shared: &Shared<'_>,
+                  fabric: Option<&Arc<Fabric>>,
                   evaluator: &Evaluator<'_>,
                   schedule: &LrSchedule,
                   indices_for_task: &impl Fn(usize) -> Vec<usize>,
@@ -543,8 +601,54 @@ impl<'a> Trainer<'a> {
         let epochs_per_task =
             self.scenario.epochs_per_task(cfg.training.epochs_per_task);
 
+        // ---- resume: restore everything in place, then fast-forward ----
+        let mut resume_start = 0usize; // global epochs already completed
+        let mut resume_task = 0usize;
+        if cfg.training.resume {
+            let dir = cfg.training.ckpt_dir.as_deref().ok_or_else(
+                || anyhow!("resume requested but no checkpoint dir set"))?;
+            let ck = Checkpoint::load(dir)?;
+            let numels: Vec<usize> = state.read().unwrap()
+                .params.iter().map(|l| l.numel()).collect();
+            ck.validate_shape(cfg.training.seed, n, &numels)?;
+            {
+                // In place through the live literals: the captured slab
+                // views must stay valid (ParamSlabs contract).
+                let mut st = state.write().unwrap();
+                for (dst, src) in st.params.iter_mut().zip(&ck.params) {
+                    dst.data_mut().copy_from_slice(src);
+                }
+                for (dst, src) in st.moms.iter_mut().zip(&ck.moms) {
+                    dst.data_mut().copy_from_slice(src);
+                }
+            }
+            if let Some(f) = fabric {
+                if ck.buffers.len() != n {
+                    bail!("checkpoint holds {} buffers for {n} workers",
+                          ck.buffers.len());
+                }
+                for (w, buf) in ck.buffers.iter().enumerate() {
+                    f.buffer(w).restore_state(buf)?;
+                }
+                f.counters.restore(ck.fabric);
+            }
+            for (w, tx) in cmd_txs.iter().enumerate() {
+                tx.send(WorkerCmd::Restore(ck.worker_state[w].clone()))
+                    .map_err(|_| anyhow!("worker {w} hung up"))?;
+            }
+            shared.iterations_done
+                .store(ck.iterations as usize, Ordering::SeqCst);
+            resume_start = ck.global_epoch as usize;
+            resume_task = ck.task as usize;
+        }
+        let mut iters_at_last_ckpt =
+            shared.iterations_done.load(Ordering::SeqCst);
+
         for task in 0..self.scenario.num_tasks() {
-            if reset_each_task {
+            // Skip the from-scratch reset for tasks the checkpoint already
+            // entered: the restored parameters carry the post-reset
+            // training, and a fresh init here would clobber them.
+            if reset_each_task && global_epoch >= resume_start {
                 // Overwrite IN PLACE: the workers' captured slab views
                 // must stay valid for the whole run (see ParamSlabs), so
                 // the literals are refilled, never swapped.
@@ -564,6 +668,12 @@ impl<'a> Trainer<'a> {
             }
             let drift = self.scenario.drift(task);
             for epoch_in_task in 0..epochs_per_task {
+                if global_epoch < resume_start {
+                    // Already completed before the checkpoint. Nothing ran,
+                    // so no RNG advanced and no record is (re-)emitted.
+                    global_epoch += 1;
+                    continue;
+                }
                 let lr = schedule.lr_at(epoch_in_task);
                 let epoch_t0 = Instant::now();
                 let plan = ShardPlan::new(
@@ -594,8 +704,17 @@ impl<'a> Trainer<'a> {
                     metrics.merge(shard);
                 }
 
-                if let Some(e) = shared.first_error.lock().unwrap().take() {
+                if let Some(e) = shared.take_error() {
                     return Err(e);
+                }
+
+                // Elastic membership: the epoch boundary is the commit
+                // point — pending losses become agreed membership here,
+                // after which survivors stop probing the dead peers.
+                if let Some(f) = fabric {
+                    if f.is_elastic() {
+                        f.advance_membership_epoch();
+                    }
                 }
 
                 let is_task_end = epoch_in_task + 1 == epochs_per_task;
@@ -618,9 +737,97 @@ impl<'a> Trainer<'a> {
                     eval,
                 });
                 global_epoch += 1;
+
+                // Checkpoint cadence: snapshot once at least
+                // `ckpt_every_iters` iterations have accumulated since the
+                // last one (default 1 ≈ every epoch boundary). The save
+                // happens OUTSIDE the measured iteration window — workers
+                // are parked between epochs — so the zero-alloc steady
+                // state is untouched.
+                if let Some(dir) = cfg.training.ckpt_dir.as_deref() {
+                    let done = shared.iterations_done.load(Ordering::SeqCst);
+                    if done - iters_at_last_ckpt
+                        >= cfg.training.ckpt_every_iters.max(1)
+                    {
+                        self.save_checkpoint(dir, cmd_txs, state, shared,
+                                             fabric, task, global_epoch)?;
+                        iters_at_last_ckpt = done;
+                    }
+                }
             }
         }
+
+        if epochs.is_empty() && cfg.training.resume {
+            // The checkpoint already covered the whole schedule: nothing
+            // left to train, but the report contract still wants a final
+            // evaluation of the restored model.
+            let task = resume_task.min(self.scenario.num_tasks() - 1);
+            let st = state.read().unwrap();
+            let eval = evaluator.eval_upto(&st.params, task)?;
+            epochs.push(EpochRecord {
+                epoch: global_epoch.saturating_sub(1),
+                task,
+                lr: 0.0,
+                train_loss: 0.0,
+                train_top5: 0.0,
+                wall: std::time::Duration::ZERO,
+                virtual_time: None,
+                eval: Some(eval),
+            });
+        }
         Ok(epochs)
+    }
+
+    /// Snapshot the complete run state at an epoch boundary (workers are
+    /// parked on their command channels, so every RNG clock is quiescent
+    /// and the parameter lock is free).
+    #[allow(clippy::too_many_arguments)]
+    fn save_checkpoint(&self,
+                       dir: &std::path::Path,
+                       cmd_txs: &[Sender<WorkerCmd>],
+                       state: &RwLock<ParamState>,
+                       shared: &Shared<'_>,
+                       fabric: Option<&Arc<Fabric>>,
+                       task: usize,
+                       global_epoch: usize) -> Result<()> {
+        let cfg = self.cfg;
+        let n = cfg.cluster.workers;
+        let mut worker_state = Vec::with_capacity(n);
+        for (w, tx) in cmd_txs.iter().enumerate() {
+            let (ck_tx, ck_rx) = channel::<WorkerCkpt>();
+            tx.send(WorkerCmd::Checkpoint(ck_tx))
+                .map_err(|_| anyhow!("worker {w} hung up"))?;
+            worker_state.push(ck_rx.recv()
+                .map_err(|_| anyhow!("worker {w} died during checkpoint"))?);
+        }
+        // A failed engine export poisons the run and replies with a
+        // default; refuse to publish that half-empty snapshot.
+        if let Some(e) = shared.take_error() {
+            return Err(e.context("checkpoint export failed"));
+        }
+        let (params, moms) = {
+            let st = state.read().unwrap();
+            (st.params.iter().map(|l| l.data().to_vec()).collect(),
+             st.moms.iter().map(|l| l.data().to_vec()).collect())
+        };
+        let (buffers, fabric_tallies) = match fabric {
+            Some(f) => ((0..n).map(|w| f.buffer(w).export_state()).collect(),
+                        f.counters.export()),
+            None => (Vec::new(), [0u64; 6]),
+        };
+        Checkpoint {
+            seed: cfg.training.seed,
+            workers: n as u32,
+            task: task as u32,
+            global_epoch: global_epoch as u32,
+            iterations: shared.iterations_done.load(Ordering::SeqCst) as u64,
+            params,
+            moms,
+            worker_state,
+            buffers,
+            fabric: fabric_tallies,
+        }
+        .save(dir)
     }
 }
 
@@ -657,6 +864,34 @@ fn worker_loop(w: usize,
     while let Ok(cmd) = cmd_rx.recv() {
         let (batches, loader_seed, lr, drift) = match cmd {
             WorkerCmd::Stop => break,
+            WorkerCmd::Checkpoint(reply) => {
+                // Export between epochs: the engine drains its in-flight
+                // round (carried inside the EngineCkpt) and hands out both
+                // RNG clocks. Always reply — even after a failed export the
+                // coordinator must not hang on recv; the poison carries
+                // the real error to the epoch boundary.
+                let mut ck = WorkerCkpt { last_loss, engine: None };
+                poison_on_failure(shared, "worker checkpoint export", || {
+                    if let Some(e) = engine.as_mut() {
+                        ck.engine = Some(e.export_state()?);
+                    }
+                    Ok(())
+                });
+                let _ = reply.send(ck);
+                continue;
+            }
+            WorkerCmd::Restore(st) => {
+                last_loss = st.last_loss;
+                poison_on_failure(shared, "worker checkpoint restore", || {
+                    if let (Some(e), Some(eck)) =
+                        (engine.as_mut(), st.engine.as_ref())
+                    {
+                        e.restore_state(eck)?;
+                    }
+                    Ok(())
+                });
+                continue;
+            }
             WorkerCmd::Epoch { batches, loader_seed, lr, drift } => {
                 (batches, loader_seed, lr, drift)
             }
@@ -1022,6 +1257,63 @@ mod tests {
                            "online must run one pass per task");
             }
         }
+    }
+
+    #[test]
+    fn resume_from_midrun_checkpoint_matches_uninterrupted_run() {
+        // The tentpole pin at N = 2 (inproc, async rehearsal): run A is
+        // uninterrupted; run B checkpoints exactly once mid-run (the
+        // cadence is sized so the second half never re-triggers it); run C
+        // resumes from that snapshot. C's tail epochs and final accuracies
+        // must be bitwise identical to A's — the checkpoint carried every
+        // RNG clock, buffer resident and in-flight engine round.
+        let dir = std::env::temp_dir()
+            .join(format!("dcl-trainer-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tiny_cfg();
+        cfg.cluster.workers = 2;
+        cfg.training.strategy = Strategy::Rehearsal;
+        // 2 tasks x 2 epochs: enough boundaries that the halfway cadence
+        // below lands strictly inside the run.
+        cfg.training.epochs_per_task = 2;
+        cfg.validate().unwrap();
+        let a = run_experiment(&cfg).expect("uninterrupted run");
+
+        let mut cfg_b = cfg.clone();
+        cfg_b.training.ckpt_dir = Some(dir.clone());
+        // One save at the first boundary past the halfway point, none
+        // after (remaining iterations < the cadence).
+        cfg_b.training.ckpt_every_iters = a.iterations / 2 + 1;
+        cfg_b.validate().unwrap();
+        let b = run_experiment(&cfg_b).expect("checkpointing run");
+        assert_eq!(a.final_accuracy_t, b.final_accuracy_t,
+                   "checkpoint I/O must not perturb the run");
+        let ck = crate::ckpt::Checkpoint::load(&dir).expect("snapshot");
+        assert!(ck.global_epoch > 0
+                && (ck.global_epoch as usize) < a.epochs.len(),
+                "cadence must land the snapshot mid-run, got epoch {}",
+                ck.global_epoch);
+
+        let mut cfg_c = cfg_b.clone();
+        cfg_c.training.resume = true;
+        cfg_c.validate().unwrap();
+        let c = run_experiment(&cfg_c).expect("resumed run");
+        assert_eq!(a.final_accuracy_t, c.final_accuracy_t);
+        assert_eq!(a.final_top1_accuracy_t, c.final_top1_accuracy_t);
+        assert_eq!(a.iterations, c.iterations,
+                   "resume restores the iteration cursor");
+        // the resumed run re-emits exactly the post-checkpoint epochs,
+        // with bitwise-identical metrics
+        let tail: Vec<_> = a.epochs.iter()
+            .filter(|e| e.epoch >= ck.global_epoch as usize).collect();
+        assert_eq!(c.epochs.len(), tail.len());
+        for (ec, ea) in c.epochs.iter().zip(tail) {
+            assert_eq!(ec.epoch, ea.epoch);
+            assert_eq!(ec.train_loss, ea.train_loss,
+                       "epoch {} loss diverged after resume", ec.epoch);
+            assert_eq!(ec.train_top5, ea.train_top5);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

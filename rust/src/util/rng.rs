@@ -37,6 +37,21 @@ impl Rng {
                   splitmix64(&mut sm), splitmix64(&mut sm)] }
     }
 
+    /// The raw xoshiro256** state — the stream's complete clock. Paired
+    /// with [`Rng::from_state`] for checkpoint/restore: a restored stream
+    /// continues bit-for-bit where the exported one stopped.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a stream from a previously exported [`Rng::state`]. The
+    /// caller owns the guarantee that the state came from `state()` (an
+    /// all-zero state would be a fixed point of xoshiro; `new()` can never
+    /// produce one).
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -167,6 +182,9 @@ pub enum SeedDomain {
     ScenarioBlurry,
     /// Domain-incremental per-task feature drift (PR 8) — ids: `[seed, task]`.
     ScenarioDrift,
+    /// Fault-injection schedule of the chaos harness (PR 9) — ids: `[seed]`.
+    /// Test-only: drives `FaultyTransport`'s drop/delay/error draws.
+    FaultPlan,
 }
 
 /// Derive the seed for a named RNG stream from the experiment seed plus
@@ -216,6 +234,7 @@ pub fn derive_seed(domain: SeedDomain, ids: &[u64]) -> u64 {
             arity(2);
             ids[0] ^ 0xD21F_7A5E ^ ids[1].wrapping_add(1).wrapping_mul(GOLDEN)
         }
+        FaultPlan => { arity(1); ids[0] ^ 0xFA17_1A7E }
     }
 }
 
@@ -272,11 +291,25 @@ mod tests {
             derive_seed(SeedDomain::EngineBackground, &[s]),
             derive_seed(SeedDomain::ScenarioBlurry, &[s, 0]),
             derive_seed(SeedDomain::ScenarioDrift, &[s, 0]),
+            derive_seed(SeedDomain::FaultPlan, &[s]),
         ];
         let mut dedup = all.to_vec();
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(dedup.len(), all.len(), "colliding streams: {all:?}");
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut a = Rng::new(21);
+        for _ in 0..37 {
+            a.next_u64();
+        }
+        let snap = a.state();
+        let tail: Vec<u64> = (0..64).map(|_| a.next_u64()).collect();
+        let mut b = Rng::from_state(snap);
+        let replay: Vec<u64> = (0..64).map(|_| b.next_u64()).collect();
+        assert_eq!(tail, replay, "restored stream must continue exactly");
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Seeded fault-injection suite for the elastic fault domain (PR 9).
+//!
+//! Three scenarios the unit tests cannot cover end-to-end:
+//!
+//! 1. a peer dying mid-run under `elastic = true` — the run must complete
+//!    with the degradation *counted* (never silent) and the loss committed
+//!    by the membership plane at an epoch boundary;
+//! 2. checkpoint → kill → resume at workers = 1 — the resumed run must be
+//!    bit-identical to an uninterrupted one, and the snapshot itself must
+//!    be byte-deterministic (same seed → same file bytes), which is what
+//!    makes the atomic-rename publish equivalent to surviving a real kill;
+//! 3. a corrupted or truncated snapshot — resume must fail with a clean
+//!    error (CRC/magic/truncation named), never a panic or a wild alloc.
+//!
+//! All faults come from `[cluster] fault_plan`, a seeded test-only
+//! schedule, so every scenario replays identically under the same seed.
+
+use std::path::PathBuf;
+
+use dcl::ckpt::Checkpoint;
+use dcl::config::{ExperimentConfig, Strategy};
+use dcl::train::trainer::run_experiment;
+
+/// Tiny 2-task geometry shared by all scenarios (synthetic manifest when
+/// the AOT artifacts are absent, same as the trainer's own e2e tests).
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = dcl::testkit::tiny_config().expect("tiny preset");
+    cfg.training.epochs_per_task = 1;
+    cfg.data.num_tasks = 2;
+    cfg.data.num_classes = 8;
+    cfg.training.strategy = Strategy::Rehearsal;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("dcl-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn elastic_run_survives_peer_death_and_counts_it() {
+    // Worker 1's transport endpoint is dead from the very first remote op.
+    // Elastic mode: every failed fetch/gather falls back to the local-only
+    // view (counted as degraded), strikes accrue, and the membership plane
+    // commits the loss at the next epoch boundary. The run completes.
+    let mut cfg = tiny_cfg();
+    cfg.cluster.workers = 3;
+    cfg.cluster.elastic = true;
+    cfg.cluster.fault_plan = "kill:1@0".to_string();
+    cfg.validate().unwrap();
+    let report = run_experiment(&cfg).expect(
+        "elastic run must survive a dead rehearsal peer");
+    assert!(report.iterations > 0);
+    assert!(report.epochs.iter().all(|e| e.train_loss.is_finite()),
+            "degraded rehearsal must still train");
+    assert!(report.degraded_fetches > 0,
+            "fallbacks to the local-only view must be counted, not silent");
+    assert_eq!(report.lost_workers, 1,
+               "peer 1 must be committed lost at an epoch boundary");
+    // the degradation is visible in the human summary line too
+    let line = dcl::experiments::common::summarize(&report);
+    assert!(line.contains("degraded"),
+            "summary must say the run was degraded: {line}");
+
+    // Same fault without elastic mode: the error must propagate (the
+    // pre-elastic contract), not be silently absorbed.
+    let mut cfg = tiny_cfg();
+    cfg.cluster.workers = 3;
+    cfg.cluster.fault_plan = "kill:1@0".to_string();
+    cfg.validate().unwrap();
+    let err = run_experiment(&cfg).expect_err(
+        "non-elastic run must fail when a peer dies");
+    let chain = format!("{err:#}");
+    assert!(!chain.is_empty());
+}
+
+#[test]
+fn workers1_checkpoint_kill_resume_is_bit_identical() {
+    // Run A: uninterrupted. Run B: checkpoints exactly once mid-run — its
+    // post-snapshot work is then *discarded*, exactly what a kill after the
+    // atomic publish would leave on disk. Run C: resumes from the snapshot
+    // and must replay A's tail bit-for-bit.
+    let dir = tmp_dir("resume");
+    let mut cfg = tiny_cfg();
+    cfg.cluster.workers = 1;
+    cfg.training.epochs_per_task = 2; // 4 boundaries: cadence lands inside
+    cfg.validate().unwrap();
+    let a = run_experiment(&cfg).expect("uninterrupted run");
+
+    let mut cfg_b = cfg.clone();
+    cfg_b.training.ckpt_dir = Some(dir.clone());
+    cfg_b.training.ckpt_every_iters = a.iterations / 2 + 1;
+    cfg_b.validate().unwrap();
+    let b = run_experiment(&cfg_b).expect("checkpointing run");
+    assert_eq!(a.final_accuracy_t, b.final_accuracy_t,
+               "checkpoint I/O must not perturb the run");
+    let ck = Checkpoint::load(&dir).expect("published snapshot");
+    assert!(ck.global_epoch > 0 && (ck.global_epoch as usize) < a.epochs.len(),
+            "cadence must land the snapshot mid-run, got epoch {}",
+            ck.global_epoch);
+
+    // The snapshot is byte-deterministic: a second identically-seeded run
+    // publishes the exact same file. Combined with write-to-temp + atomic
+    // rename, this is why "the process was killed after the save" and "the
+    // run went on to finish" leave indistinguishable snapshots.
+    let dir2 = tmp_dir("resume-again");
+    let mut cfg_b2 = cfg_b.clone();
+    cfg_b2.training.ckpt_dir = Some(dir2.clone());
+    run_experiment(&cfg_b2).expect("second checkpointing run");
+    let bytes1 = std::fs::read(Checkpoint::path_in(&dir)).unwrap();
+    let bytes2 = std::fs::read(Checkpoint::path_in(&dir2)).unwrap();
+    assert_eq!(bytes1, bytes2, "snapshot bytes must be deterministic");
+    std::fs::remove_dir_all(&dir2).unwrap();
+
+    let mut cfg_c = cfg_b.clone();
+    cfg_c.training.resume = true;
+    cfg_c.validate().unwrap();
+    let c = run_experiment(&cfg_c).expect("resumed run");
+    assert_eq!(a.final_accuracy_t, c.final_accuracy_t);
+    assert_eq!(a.final_top1_accuracy_t, c.final_top1_accuracy_t);
+    assert_eq!(a.iterations, c.iterations,
+               "resume restores the iteration cursor");
+    let tail: Vec<_> = a.epochs.iter()
+        .filter(|e| e.epoch >= ck.global_epoch as usize).collect();
+    assert_eq!(c.epochs.len(), tail.len());
+    for (ec, ea) in c.epochs.iter().zip(tail) {
+        assert_eq!(ec.epoch, ea.epoch);
+        assert_eq!(ec.train_loss, ea.train_loss,
+                   "epoch {} diverged after kill/resume", ec.epoch);
+        assert_eq!(ec.train_top5, ea.train_top5);
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_or_truncated_checkpoint_is_rejected_cleanly() {
+    // Publish a real snapshot, then resume from progressively mangled
+    // copies of it. Every failure mode is a clean Err naming the defect —
+    // no panic, no giant allocation, no half-restored run.
+    let dir = tmp_dir("corrupt");
+    let mut cfg = tiny_cfg();
+    cfg.cluster.workers = 1;
+    cfg.training.ckpt_dir = Some(dir.clone());
+    cfg.training.ckpt_every_iters = 1; // save at every boundary
+    cfg.validate().unwrap();
+    run_experiment(&cfg).expect("checkpointing run");
+    let path = Checkpoint::path_in(&dir);
+    let good = std::fs::read(&path).unwrap();
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.training.resume = true;
+    resume_cfg.validate().unwrap();
+
+    // flipped body bit -> CRC mismatch
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x01;
+    std::fs::write(&path, &bad).unwrap();
+    let err = run_experiment(&resume_cfg).expect_err("corrupt snapshot");
+    assert!(format!("{err:#}").contains("CRC"), "got: {err:#}");
+
+    // truncated file -> clean truncation/length error
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    let err = run_experiment(&resume_cfg).expect_err("truncated snapshot");
+    assert!(format!("{err:#}").contains("checkpoint"), "got: {err:#}");
+
+    // not a checkpoint at all -> bad magic
+    std::fs::write(&path, b"definitely not a checkpoint file").unwrap();
+    let err = run_experiment(&resume_cfg).expect_err("garbage snapshot");
+    assert!(format!("{err:#}").contains("magic"), "got: {err:#}");
+
+    // and a missing file is an error too, not a silent fresh start
+    std::fs::remove_file(&path).unwrap();
+    let err = run_experiment(&resume_cfg).expect_err("missing snapshot");
+    assert!(format!("{err:#}").contains("checkpoint"), "got: {err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -102,6 +102,22 @@ fn no_thread_outlives_its_owner() {
             "tcp fabric threads (listener/serve) leaked: {:?} > baseline \
              {baseline}", thread_count());
 
+    // a *failing* TCP run must also reap everything: kill peer 1's
+    // transport endpoint from the first op (non-elastic, so the error
+    // poisons the run mid-epoch) and check the error path joins every
+    // worker, loader, engine and fabric thread it spawned (PR 9)
+    let mut cfg = dcl::testkit::tiny_config().expect("tiny config");
+    cfg.training.epochs_per_task = 1;
+    cfg.training.strategy = Strategy::Rehearsal;
+    cfg.cluster.workers = 2;
+    cfg.cluster.transport = TransportKind::Tcp;
+    cfg.cluster.fault_plan = "kill:1@0".to_string();
+    cfg.validate().unwrap();
+    run_experiment(&cfg).expect_err("dead peer without elastic mode must fail");
+    assert!(settles_to(baseline),
+            "poisoned tcp run leaked a thread: {:?} > baseline {baseline}",
+            thread_count());
+
     // a TCP fabric torn down by Drop alone must also reap its threads
     {
         let buffers = (0..3)

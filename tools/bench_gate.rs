@@ -139,6 +139,12 @@ struct Metric {
     metric: String,
     better_higher: bool,
     value: Option<f64>,
+    /// Optional `recorded_at` stamp (UTC date): when the entry's value was
+    /// last measured — or, for a record-only entry, when it was added.
+    /// `check` prints it for every null entry so a baseline that has been
+    /// disarmed for months is visibly stale, and `update`/`record` refresh
+    /// it to the run date.
+    recorded_at: Option<String>,
 }
 
 fn read_baseline(path: &Path) -> Result<(f64, usize, Vec<Metric>)> {
@@ -176,6 +182,9 @@ fn read_baseline(path: &Path) -> Result<(f64, usize, Vec<Metric>)> {
                 Json::Null => None,
                 v => Some(v.as_f64()?),
             },
+            recorded_at: m.get("recorded_at").ok()
+                .and_then(|v| v.as_str().ok())
+                .map(|s| s.to_string()),
         });
     }
     Ok((tol, max_record_only, metrics))
@@ -208,6 +217,25 @@ fn regression(m: &Metric, baseline: f64, measured: f64) -> Option<f64> {
     (loss > 0.0).then_some(loss)
 }
 
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days, no date crate in the
+/// offline registry).
+fn utc_date_string() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
 /// Ids of baseline entries that are still record-only (`value: null`) — a
 /// bootstrap entry left null never gates anything, so `check` summarizes
 /// them at the end of the job log where stale ones get noticed.
@@ -227,8 +255,10 @@ fn check(current: &Path, baseline: &Path) -> Result<()> {
         let measured = current_value(&cur, m)?;
         let id = format!("{}/{}.{}", m.bench, m.name, m.metric);
         match m.value {
-            None => println!("RECORD {id} = {measured:.6e} (baseline null; \
-                              run `bench_gate update` and commit)"),
+            None => println!(
+                "RECORD {id} = {measured:.6e} (baseline null, recorded \
+                 {}; run `bench_gate update` and commit)",
+                m.recorded_at.as_deref().unwrap_or("at an unknown date")),
             Some(base) => match regression(m, base, measured) {
                 Some(loss) if loss > tol => {
                     println!("FAIL   {id}: {measured:.6e} vs baseline \
@@ -287,6 +317,9 @@ fn refreshed_metrics(cur: &Json, metrics: &[Metric]) -> Result<Json> {
         entry.insert("better".to_string(), Json::Str(
             if m.better_higher { "higher" } else { "lower" }.to_string()));
         entry.insert("value".to_string(), Json::Float(measured));
+        // Every refreshed value is stamped with the measurement date, so
+        // `check` can show how fresh (or stale) a baseline entry is.
+        entry.insert("recorded_at".to_string(), Json::Str(utc_date_string()));
         out.push(Json::Object(entry));
     }
     Ok(Json::Array(out))
@@ -346,6 +379,7 @@ mod tests {
             metric: "m".into(),
             better_higher,
             value: Some(100.0),
+            recorded_at: None,
         }
     }
 
@@ -445,6 +479,34 @@ mod tests {
         assert!(check(&cur, &within).is_ok());
         std::fs::remove_file(&within).unwrap();
         std::fs::remove_file(&cur).unwrap();
+    }
+
+    #[test]
+    fn recorded_at_stamp_parses_and_refresh_restamps() {
+        // Optional on read: present -> carried into the Metric, absent -> None.
+        let p = write_temp("stamp.json",
+            r#"{"tolerance":0.25,"max_record_only":1,"metrics":[
+                {"bench":"b","name":"n","metric":"m","better":"lower",
+                 "value":null,"recorded_at":"2026-08-01"},
+                {"bench":"b","name":"o","metric":"m","better":"lower",
+                 "value":2.0}]}"#);
+        let (_, _, metrics) = read_baseline(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(metrics[0].recorded_at.as_deref(), Some("2026-08-01"));
+        assert!(metrics[1].recorded_at.is_none());
+        // update/record stamp every refreshed entry with a YYYY-MM-DD date.
+        let cur = Json::parse(r#"{"benches":{"b":{"n":{"m":1.0}}}}"#).unwrap();
+        let out = refreshed_metrics(&cur, &metrics[..1]).unwrap();
+        let stamp = out.as_array().unwrap()[0]
+            .get("recorded_at").unwrap().as_str().unwrap().to_string();
+        assert_eq!(stamp.len(), 10, "stamp `{stamp}` is not YYYY-MM-DD");
+        assert_eq!(stamp.as_bytes()[4], b'-');
+        assert_eq!(stamp.as_bytes()[7], b'-');
+        assert!(stamp[..4].parse::<i64>().unwrap() >= 2026);
+        // The date helper itself is sane on a known epoch offset: the
+        // algorithm is pure in days, so day 0 is 1970-01-01.
+        // (utc_date_string reads the real clock; the format pin above is
+        // the portable part of the contract.)
     }
 
     #[test]
