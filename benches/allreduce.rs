@@ -3,7 +3,8 @@
 //! sharded submit path the threaded worker runtime uses, the PR-5
 //! chunk-parallel reduce-scatter + update against the old leader fold,
 //! the PR-6 layer-streamed overlap step against the barrier-synchronous
-//! step, and the ring cost model across scales.
+//! step, the elastic plan-swap re-arm (loss-commit boundary work), and
+//! the ring cost model across scales.
 
 use dcl::bench_harness::{black_box, Runner};
 use dcl::cluster::{ring_allreduce_cost, GradAccumulator};
@@ -226,6 +227,19 @@ fn main() {
             });
         }
     }
+
+    // Elastic plan swap + re-arm (the loss-commit boundary work): rebuild
+    // the chunk plan, slots, scratch and readiness guards of a dirtied
+    // 4-worker accumulator at the 3-survivor geometry — the cost the
+    // trainer pays once per loss commit, outside the iteration window.
+    // Record-only: boundary work, not on the per-iteration critical path.
+    let acc_swap = GradAccumulator::with_chunks(shapes.clone(), 4, 16);
+    for (w, g) in grads.iter().enumerate() {
+        acc_swap.submit(w, g).unwrap(); // dirty the slots like a live run
+    }
+    r.bench("plan_swap_rearm_n4to3", || {
+        black_box(acc_swap.rearmed(3, 12));
+    });
 
     // Ring cost model across scales (pure arithmetic).
     let cm = CostModel::default();

@@ -24,7 +24,7 @@
 //! both backends serve concurrent reads during updates.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, RwLock};
 
 use anyhow::{bail, Result};
@@ -84,26 +84,31 @@ impl BufferCounters {
 }
 
 pub struct LocalBuffer {
-    /// Total sample capacity S_max for this worker.
-    s_max: usize,
+    /// Total sample capacity S_max for this worker. Atomic because the
+    /// elastic rebalance (PR 10) grows it mid-run from the coordinator
+    /// while reader threads consult it through `per_class_cap`.
+    s_max: AtomicUsize,
     policy: PolicyKind,
     /// class id → its sub-buffer. Outer lock: rare class-arrival writes.
     classes: RwLock<HashMap<u32, Mutex<ClassBuffer>>>,
     /// Base seed: each class sub-buffer derives its own eviction stream
     /// from it, so inserts never serialize on a buffer-global RNG lock
     /// (the N background engines vs. the TCP serving threads) while a
-    /// fixed seed still replays exactly.
-    seed: u64,
+    /// fixed seed still replays exactly. Atomic only for checkpoint
+    /// restore (PR 10): a resumed buffer adopts the snapshot's base seed
+    /// so classes created *after* the restore derive the streams the
+    /// original run would have.
+    seed: AtomicU64,
     pub counters: BufferCounters,
 }
 
 impl LocalBuffer {
     pub fn new(s_max: usize, policy: PolicyKind, seed: u64) -> LocalBuffer {
         LocalBuffer {
-            s_max,
+            s_max: AtomicUsize::new(s_max),
             policy,
             classes: RwLock::new(HashMap::new()),
-            seed: derive_seed(SeedDomain::BufferBase, &[seed]),
+            seed: AtomicU64::new(derive_seed(SeedDomain::BufferBase, &[seed])),
             counters: BufferCounters::default(),
         }
     }
@@ -111,11 +116,12 @@ impl LocalBuffer {
     /// Deterministic per-class eviction-stream seed (splitmix-style mix so
     /// nearby class ids give unrelated streams).
     fn class_seed(&self, class: u32) -> u64 {
-        derive_seed(SeedDomain::ClassEvict, &[self.seed, class as u64])
+        derive_seed(SeedDomain::ClassEvict,
+                    &[self.seed.load(Ordering::Relaxed), class as u64])
     }
 
     pub fn s_max(&self) -> usize {
-        self.s_max
+        self.s_max.load(Ordering::Relaxed)
     }
 
     /// Number of distinct classes currently tracked.
@@ -146,7 +152,37 @@ impl LocalBuffer {
         if k == 0 {
             return 0;
         }
-        self.s_max / k
+        self.s_max() / k
+    }
+
+    /// Grow the buffer's total capacity to `new_s_max` and rebalance every
+    /// class up to the new even split — the elastic rehearsal rebalance
+    /// (PR 10): after a peer loss commits, each survivor absorbs its share
+    /// of the lost capacity (`ceil(S_global / n_live)`) so the global
+    /// rehearsal pool keeps its size and the policy's `on_resize` hook
+    /// fires exactly as it would in a fresh survivor-count run. Growth
+    /// only — a shrink mid-run would have to evict residents and is not a
+    /// recovery operation.
+    pub fn grow_capacity(&self, new_s_max: usize) -> Result<()> {
+        // The write lock excludes concurrent class arrival, so the new
+        // split is computed against a stable class count.
+        let map = self.classes.write().unwrap();
+        let old = self.s_max();
+        if new_s_max < old {
+            bail!("grow_capacity({new_s_max}) below current S_max {old}");
+        }
+        self.s_max.store(new_s_max, Ordering::Relaxed);
+        let k = map.len();
+        if k == 0 {
+            return Ok(());
+        }
+        let cap = new_s_max / k;
+        for cb in map.values() {
+            let mut cb = cb.lock().unwrap();
+            let target = cap.max(cb.capacity());
+            cb.grow_to(target);
+        }
+        Ok(())
     }
 
     /// Ensure `class` exists; on first arrival rebalance all capacities to
@@ -292,7 +328,8 @@ impl LocalBuffer {
             .map(|(&c, cb)| cb.lock().unwrap().export_state(c))
             .collect();
         classes.sort_unstable_by_key(|c| c.class);
-        BufferCkpt { classes, counters: self.counters.export() }
+        BufferCkpt { seed: self.seed.load(Ordering::Relaxed), classes,
+                     counters: self.counters.export() }
     }
 
     /// Restore state exported by [`LocalBuffer::export_state`] into this
@@ -304,6 +341,11 @@ impl LocalBuffer {
         if self.num_classes() != 0 {
             bail!("restore into a non-empty buffer");
         }
+        // Adopt the snapshot's base seed first: classes created below (and
+        // any created later in the resumed run) must derive the original
+        // run's eviction streams, even when this buffer was constructed at
+        // a different worker index (dense survivor remap, PR 10).
+        self.seed.store(ck.seed, Ordering::Relaxed);
         for cls in &ck.classes {
             self.ensure_class(cls.class);
         }
@@ -556,6 +598,52 @@ mod tests {
         };
         assert_eq!(contents(&resumed), contents(&straight),
                    "restored buffer must continue bit-identically");
+    }
+
+    #[test]
+    fn grow_capacity_raises_the_even_split_without_evicting() {
+        let buf = filled(9, 3, 10); // 3 classes, cap 3 each, all full
+        assert_eq!(buf.len(), 9);
+        let before = buf.snapshot_counts();
+        // 4-worker share → 3-worker share after a loss: 9 → 12
+        buf.grow_capacity(12).unwrap();
+        assert_eq!(buf.s_max(), 12);
+        assert_eq!(buf.snapshot_counts(), before,
+                   "growth must not disturb residents");
+        let evictions = buf.counters.evictions.load(Ordering::Relaxed);
+        // each class now has one free slot: the next insert per class
+        // appends instead of evicting
+        for c in 0..3 {
+            buf.insert(s(c, 99.0));
+        }
+        assert_eq!(buf.len(), 12);
+        assert_eq!(buf.counters.evictions.load(Ordering::Relaxed), evictions,
+                   "grown slots must absorb inserts without eviction");
+        assert!(buf.grow_capacity(5).is_err(), "shrink is refused");
+    }
+
+    #[test]
+    fn restored_buffer_spawns_new_class_streams_from_the_snapshot_seed() {
+        // A class that first arrives AFTER the restore must derive its
+        // eviction stream from the snapshot's base seed, not the restoring
+        // constructor's — otherwise a dense-remapped resume (PR 10)
+        // diverges from the live run at the next task boundary.
+        let feed = |buf: &LocalBuffer| {
+            for i in 0..200 {
+                buf.insert(s(7, i as f32)); // new class, forces evictions
+            }
+            let picks: Vec<(u32, usize)> = (0..buf.snapshot_counts()
+                .iter().find(|&&(c, _)| c == 7).unwrap().1)
+                .map(|i| (7u32, i)).collect();
+            buf.fetch_rows(&picks).unwrap()
+                .iter().map(|r| r.features[0]).collect::<Vec<f32>>()
+        };
+        let live = filled(8, 2, 4);
+        let ck = live.export_state();
+        let resumed = LocalBuffer::new(8, PolicyKind::Uniform, 424242);
+        resumed.restore_state(&ck).unwrap();
+        assert_eq!(feed(&live), feed(&resumed),
+                   "post-restore class 7 must evict bit-identically");
     }
 
     #[test]

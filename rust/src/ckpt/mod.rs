@@ -49,8 +49,10 @@ use crate::tensor::Sample;
 pub const MAGIC: [u8; 8] = *b"DCLCKPT\0";
 
 /// Body-layout version. Bump on any layout change; readers accept only
-/// their own version (see module docs).
-pub const VERSION: u32 = 1;
+/// their own version (see module docs). Version 2 (PR 10) adds the
+/// membership plane: the active plan's worker count, the committed
+/// lost-peer set with per-peer strike counts, and each buffer's base seed.
+pub const VERSION: u32 = 2;
 
 /// Fixed live file name inside the checkpoint directory.
 pub const FILE_NAME: &str = "dcl.ckpt";
@@ -107,8 +109,27 @@ pub struct ClassCkpt {
 /// `[candidates_offered, appends, evictions, rejections, rows_served]`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct BufferCkpt {
+    /// The buffer's base seed (`SeedDomain::BufferBase` output): classes
+    /// created *after* restore derive their eviction streams from it, so a
+    /// resumed run keeps spawning the same streams the live run would —
+    /// even when the restoring buffer sits at a different worker index
+    /// (the dense survivor remap of a degraded resume, PR 10).
+    pub seed: u64,
     pub classes: Vec<ClassCkpt>,
     pub counters: [u64; 5],
+}
+
+/// The membership plane at the snapshot boundary (PR 10): committed lost
+/// peers and per-peer strikes, both indexed by *original* worker id.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembershipCkpt {
+    /// Membership epoch (one bump per committed loss batch).
+    pub epoch: u64,
+    /// Committed-lost peers, ascending original ids.
+    pub lost: Vec<u32>,
+    /// Per-peer consecutive-failure counts (`len == original workers`);
+    /// empty when the run has no fabric.
+    pub strikes: Vec<u32>,
 }
 
 /// `FabricCounters` tallies:
@@ -120,8 +141,13 @@ pub type FabricTallies = [u64; 6];
 pub struct Checkpoint {
     /// Training seed of the run — restore refuses a mismatch.
     pub seed: u64,
-    /// Worker count of the run — restore refuses a mismatch.
+    /// Worker count the run was *launched* with.
     pub workers: u32,
+    /// Worker count of the plan active at the snapshot (`== workers` until
+    /// an elastic loss commits; `< workers` in a degraded run, PR 10).
+    /// Restore accepts a run configured for this count — the per-worker
+    /// records below are dense over the active plan's slots.
+    pub active_workers: u32,
     /// Task cursor at the boundary.
     pub task: u32,
     /// Global epochs fully completed (resume starts at this epoch index).
@@ -138,6 +164,8 @@ pub struct Checkpoint {
     pub buffers: Vec<BufferCkpt>,
     /// Fabric counters (zeroed when the run has no fabric).
     pub fabric: FabricTallies,
+    /// Membership plane (original-id indexed; default when no fabric).
+    pub membership: MembershipCkpt,
 }
 
 impl Checkpoint {
@@ -252,6 +280,7 @@ impl Checkpoint {
         }
         b.extend_from_slice(&(self.buffers.len() as u32).to_le_bytes());
         for buf in &self.buffers {
+            b.extend_from_slice(&buf.seed.to_le_bytes());
             for c in buf.counters {
                 b.extend_from_slice(&c.to_le_bytes());
             }
@@ -271,6 +300,18 @@ impl Checkpoint {
         }
         for c in self.fabric {
             b.extend_from_slice(&c.to_le_bytes());
+        }
+        b.extend_from_slice(&self.active_workers.to_le_bytes());
+        b.extend_from_slice(&self.membership.epoch.to_le_bytes());
+        b.extend_from_slice(&(self.membership.lost.len() as u32)
+            .to_le_bytes());
+        for &w in &self.membership.lost {
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.membership.strikes.len() as u32)
+            .to_le_bytes());
+        for &s in &self.membership.strikes {
+            b.extend_from_slice(&s.to_le_bytes());
         }
         b
     }
@@ -314,13 +355,14 @@ impl Checkpoint {
             worker_state.push(WorkerCkpt { last_loss, engine });
         }
         let n_buffers = c.u32()? as usize;
-        // every buffer record is at least 44 bytes (5 counters + count)
-        if n_buffers > c.remaining() / 44 {
+        // every buffer record is at least 52 bytes (seed + 5 counters + count)
+        if n_buffers > c.remaining() / 52 {
             bail!("checkpoint claims {n_buffers} buffer records, body holds \
-                   at most {}", c.remaining() / 44);
+                   at most {}", c.remaining() / 52);
         }
         let mut buffers = Vec::with_capacity(n_buffers);
         for _ in 0..n_buffers {
+            let buf_seed = c.u64()?;
             let mut counters = [0u64; 5];
             for slot in counters.iter_mut() {
                 *slot = c.u64()?;
@@ -355,28 +397,72 @@ impl Checkpoint {
                 classes.push(ClassCkpt { class, samples, scores, seen,
                                          served, policy_cursor, rng });
             }
-            buffers.push(BufferCkpt { classes, counters });
+            buffers.push(BufferCkpt { seed: buf_seed, classes, counters });
         }
         let mut fabric = [0u64; 6];
         for slot in fabric.iter_mut() {
             *slot = c.u64()?;
         }
+        let active_workers = c.u32()?;
+        let mem_epoch = c.u64()?;
+        let n_lost = c.u32()? as usize;
+        if n_lost > c.remaining() / 4 {
+            bail!("checkpoint claims {n_lost} lost peers, body holds at \
+                   most {}", c.remaining() / 4);
+        }
+        let mut lost = Vec::with_capacity(n_lost);
+        for _ in 0..n_lost {
+            lost.push(c.u32()?);
+        }
+        let n_strikes = c.u32()? as usize;
+        if n_strikes > c.remaining() / 4 {
+            bail!("checkpoint claims {n_strikes} strike counts, body holds \
+                   at most {}", c.remaining() / 4);
+        }
+        let mut strikes = Vec::with_capacity(n_strikes);
+        for _ in 0..n_strikes {
+            strikes.push(c.u32()?);
+        }
         c.done()?;
-        Ok(Checkpoint { seed, workers, task, global_epoch, iterations,
-                        params, moms, worker_state, buffers, fabric })
+        Ok(Checkpoint { seed, workers, active_workers, task, global_epoch,
+                        iterations, params, moms, worker_state, buffers,
+                        fabric,
+                        membership: MembershipCkpt { epoch: mem_epoch, lost,
+                                                     strikes } })
+    }
+
+    /// The worker count of the plan active at the snapshot: per-worker
+    /// records are dense over these slots. Falls back to `workers` for a
+    /// snapshot that never set the field (hand-built test fixtures).
+    pub fn active(&self) -> usize {
+        match self.active_workers {
+            0 => self.workers as usize,
+            a => a as usize,
+        }
     }
 
     /// Guard a restore against the wrong run shape: the checkpoint must
-    /// come from the same seed, worker count and parameter geometry.
+    /// come from the same seed and parameter geometry, and the run's
+    /// worker count must match the **active** plan — a degraded snapshot
+    /// (PR 10) restores into a run configured for the survivor count, not
+    /// the launch count.
     pub fn validate_shape(&self, seed: u64, workers: usize,
                           param_numels: &[usize]) -> Result<()> {
         if self.seed != seed {
             bail!("checkpoint was taken with seed {}, run uses {seed}",
                   self.seed);
         }
-        if self.workers as usize != workers {
-            bail!("checkpoint was taken with {} workers, run uses {workers}",
-                  self.workers);
+        let active = self.active();
+        if active != workers {
+            if active != self.workers as usize
+                && workers == self.workers as usize
+            {
+                bail!("checkpoint was taken mid-degraded run ({active} of \
+                       {} workers live): resume with workers = {active}, \
+                       not the launch count {workers}", self.workers);
+            }
+            bail!("checkpoint was taken with {} workers ({active} active), \
+                   run uses {workers}", self.workers);
         }
         let got: Vec<usize> = self.params.iter().map(Vec::len).collect();
         if got != param_numels {
@@ -386,9 +472,9 @@ impl Checkpoint {
         if self.moms.iter().map(Vec::len).collect::<Vec<_>>() != param_numels {
             bail!("checkpoint momentum geometry does not match the model");
         }
-        if self.worker_state.len() != workers {
-            bail!("checkpoint holds {} worker records for {workers} workers",
-                  self.worker_state.len());
+        if self.worker_state.len() != active {
+            bail!("checkpoint holds {} worker records for {active} active \
+                   workers", self.worker_state.len());
         }
         Ok(())
     }
@@ -559,6 +645,7 @@ mod tests {
         Checkpoint {
             seed: 99,
             workers: 2,
+            active_workers: 2,
             task: 1,
             global_epoch: 3,
             iterations: 1234,
@@ -584,6 +671,7 @@ mod tests {
             ],
             buffers: vec![
                 BufferCkpt {
+                    seed: 0xB0FF_1234,
                     classes: vec![ClassCkpt {
                         class: 7,
                         samples: vec![sample(7, 4.0)],
@@ -598,6 +686,11 @@ mod tests {
                 BufferCkpt::default(),
             ],
             fabric: [1, 2, 3, 4, 5, 6],
+            membership: MembershipCkpt {
+                epoch: 1,
+                lost: vec![1],
+                strikes: vec![0, 3],
+            },
         }
     }
 
@@ -707,6 +800,35 @@ mod tests {
         assert!(ck.validate_shape(98, 2, &[3, 4]).is_err(), "seed");
         assert!(ck.validate_shape(99, 3, &[3, 4]).is_err(), "workers");
         assert!(ck.validate_shape(99, 2, &[3, 5]).is_err(), "geometry");
+    }
+
+    #[test]
+    fn degraded_snapshot_restores_at_the_survivor_count() {
+        // A 4-worker run that committed one loss snapshots active = 3 with
+        // three dense per-worker records: the survivor-count resume is
+        // accepted, the launch-count resume is refused with advice.
+        let mut ck = rich_checkpoint();
+        ck.workers = 4;
+        ck.active_workers = 3;
+        ck.worker_state.push(ck.worker_state[0].clone());
+        ck.membership = MembershipCkpt {
+            epoch: 1,
+            lost: vec![2],
+            strikes: vec![0, 0, 3, 0],
+        };
+        ck.validate_shape(99, 3, &[3, 4]).unwrap();
+        let err = ck.validate_shape(99, 4, &[3, 4]).unwrap_err().to_string();
+        assert!(err.contains("mid-degraded"), "{err}");
+        assert!(err.contains("workers = 3"), "advice missing: {err}");
+        assert!(ck.validate_shape(99, 2, &[3, 4]).is_err(),
+                "an unrelated count is still refused");
+        // the degraded shape roundtrips the wire format losslessly
+        let back = Checkpoint::decode(&encode_file(&ck)).unwrap();
+        assert_eq!(back, ck);
+        // a fixture that never set active_workers falls back to workers
+        let legacy = Checkpoint { seed: 7, workers: 2,
+                                  ..Default::default() };
+        assert_eq!(legacy.active(), 2);
     }
 
     #[test]

@@ -426,6 +426,18 @@ impl GradAccumulator {
         }
     }
 
+    /// Rebuild this accumulator for a new worker count over the same
+    /// tensor shapes — the live plan swap of the elastic recovery path
+    /// (PR 10). Returns a *fresh* accumulator (new [`ChunkPlan`], new
+    /// slots, new scratch, readiness counters at zero): the swap happens
+    /// only at epoch boundaries with every survivor parked outside a
+    /// round, so no in-flight state needs migrating and the zero-alloc
+    /// steady state is untouched (the rebuild cost lives outside the
+    /// measured window; `benches/allreduce.rs` records it).
+    pub fn rearmed(&self, workers: usize, chunks: usize) -> GradAccumulator {
+        GradAccumulator::with_chunks(self.shapes.clone(), workers, chunks)
+    }
+
     /// Payload bytes one replica contributes (the all-reduce message size).
     pub fn payload_bytes(&self) -> usize {
         self.bytes
@@ -1255,6 +1267,60 @@ mod tests {
             });
             assert_eq!(*out.lock().unwrap(), want, "round {round} diverged");
         }
+    }
+
+    #[test]
+    fn rearmed_accumulator_matches_fresh_construction() {
+        // The live-swap rebuild (PR 10): re-arming an N-slot accumulator
+        // for N−1 survivors must behave exactly like constructing the
+        // survivor-count accumulator from scratch — same plan geometry,
+        // same fold bits.
+        let shapes = layered_shapes();
+        let old = GradAccumulator::with_chunks(shapes.clone(), 4, 16);
+        // dirty the old accumulator mid-round; the rebuild must not care
+        let g: Vec<Literal> = shapes.iter().map(|s| Literal::zeros(s)).collect();
+        old.submit(1, &g).unwrap();
+        let swapped = old.rearmed(3, 12);
+        let fresh = GradAccumulator::with_chunks(shapes.clone(), 3, 12);
+        assert_eq!(swapped.workers(), 3);
+        assert_eq!(swapped.replicas(), 0, "rebuild starts clean");
+        assert_eq!(swapped.plan().num_chunks(), fresh.plan().num_chunks());
+        assert_eq!(swapped.plan().total_len(), fresh.plan().total_len());
+        for c in 0..swapped.plan().num_chunks() {
+            assert_eq!(swapped.plan().range(c), fresh.plan().range(c));
+            assert_eq!(swapped.plan().owner(c), fresh.plan().owner(c));
+        }
+        // identical replicas fold to identical bits on both accumulators
+        let mut rng = Rng::new(31);
+        let mk = |rng: &mut Rng| -> Vec<Literal> {
+            shapes.iter().map(|s| {
+                let n: usize = s.iter().product();
+                let v: Vec<f32> =
+                    (0..n).map(|_| rng.normal() as f32 * 0.23 + 0.002).collect();
+                make_literal(&v, s).unwrap()
+            }).collect()
+        };
+        let gs: Vec<Vec<Literal>> = (0..3).map(|_| mk(&mut rng)).collect();
+        let run = |a: &GradAccumulator| -> Vec<f32> {
+            for (w, g) in gs.iter().enumerate() {
+                a.submit(w, g).unwrap();
+            }
+            let plan = a.plan();
+            let mut out = vec![0.0f32; plan.total_len()];
+            for c in 0..plan.num_chunks() {
+                let r = plan.range(c);
+                a.reduce_chunk_with(c, a.replicas(), |mean| {
+                    out[r.clone()].copy_from_slice(mean);
+                    Ok(())
+                }).unwrap();
+            }
+            for w in 0..3 {
+                a.end_round(w).unwrap();
+            }
+            out
+        };
+        assert_eq!(run(&swapped), run(&fresh),
+                   "rearmed fold must be bitwise fresh-construction");
     }
 
     #[test]

@@ -12,15 +12,26 @@
 //! and from then on survivors skip them entirely (no probe traffic, no
 //! degraded counts — the loss is agreed, not being rediscovered per RPC).
 //!
-//! The gradient plane is unaffected by design: workers are in-process
-//! threads, so a "lost" peer is a lost *rehearsal buffer*, not a lost
-//! trainer. What survivors must rebuild after a commit is the sampling
-//! view (fewer peers) and — in a multi-process deployment — the
-//! [`ChunkPlan`](crate::cluster::ChunkPlan) owner map for the survivor
-//! count. Rebuilding the plan for N−1 workers is bitwise invisible to the
-//! reduction (pinned by the tests below): the fold runs in ascending slot
-//! order per element whatever the worker count, so re-sharding after a
-//! loss cannot perturb the surviving replicas' arithmetic.
+//! The commit is also where the gradient plane recovers (PR 10): the
+//! trainer treats the newly lost set returned by `advance_epoch` as a
+//! **live plan swap** — it retires the lost workers' threads (parked
+//! between epochs, holding no barrier), rebuilds the
+//! [`ChunkPlan`](crate::cluster::ChunkPlan) and re-arms the
+//! `GradAccumulator` for the survivor count, folds the lost loader shards
+//! back into the survivors' epoch-indexed shard plans, and grows the
+//! survivors' rehearsal capacity to absorb the lost share. Rebuilding the
+//! plan for N−1 workers is bitwise invisible to the reduction (pinned by
+//! the tests below): the fold runs in ascending slot order per element
+//! whatever the worker count, so re-sharding after a loss cannot perturb
+//! the surviving replicas' arithmetic — which is what makes the swapped
+//! run's post-commit epochs bit-identical to a fresh survivor-count run
+//! resumed from the commit-point checkpoint (pinned in `tests/chaos.rs`).
+//!
+//! The plane is checkpointable ([`Membership::export`] /
+//! [`Membership::restore`], snapshot VERSION 2): the lost set, per-peer
+//! strike counts, and the membership epoch survive a kill/resume, so a
+//! degraded run restores as degraded instead of silently reviving dead
+//! peers.
 //!
 //! All methods are callable from any thread: strikes and liveness are
 //! atomics, and the commit point is a single mutex held only inside
@@ -132,6 +143,53 @@ impl Membership {
     pub fn num_alive(&self) -> usize {
         self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
     }
+
+    /// Snapshot the membership plane for a checkpoint: the committed lost
+    /// set (ascending), per-peer strike counts, and the membership epoch.
+    pub fn export(&self) -> crate::ckpt::MembershipCkpt {
+        let _g = self.commit.lock().unwrap_or_else(|p| p.into_inner());
+        crate::ckpt::MembershipCkpt {
+            epoch: self.epoch(),
+            lost: (0..self.workers())
+                .filter(|&w| !self.is_alive(w))
+                .map(|w| w as u32)
+                .collect(),
+            strikes: self.strikes.iter()
+                .map(|s| s.load(Ordering::SeqCst))
+                .collect(),
+        }
+    }
+
+    /// Restore the plane from a checkpoint into a freshly built membership
+    /// (epoch 0, everyone alive) of the same worker count. Refuses a used
+    /// membership or a shape mismatch — restore happens before any traffic,
+    /// so a mismatch is a caller bug, not a race.
+    pub fn restore(&self, ck: &crate::ckpt::MembershipCkpt)
+                   -> anyhow::Result<()> {
+        let _g = self.commit.lock().unwrap_or_else(|p| p.into_inner());
+        if ck.strikes.len() != self.workers() {
+            anyhow::bail!(
+                "membership restore: snapshot covers {} workers, fabric has {}",
+                ck.strikes.len(), self.workers());
+        }
+        if self.epoch() != 0 || self.num_alive() != self.workers() {
+            anyhow::bail!("membership restore into a used membership");
+        }
+        for &w in &ck.lost {
+            if w as usize >= self.workers() {
+                anyhow::bail!("membership restore: lost peer {w} out of \
+                               range for {} workers", self.workers());
+            }
+        }
+        for (i, &s) in ck.strikes.iter().enumerate() {
+            self.strikes[i].store(s, Ordering::SeqCst);
+        }
+        for &w in &ck.lost {
+            self.alive[w as usize].store(false, Ordering::SeqCst);
+        }
+        self.epoch.store(ck.epoch, Ordering::SeqCst);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +233,35 @@ mod tests {
         assert!(!m.is_alive(2));
         assert_eq!(m.advance_epoch(), None);
         assert_eq!(m.epoch(), 1);
+    }
+
+    #[test]
+    fn export_restore_roundtrips_the_degraded_plane() {
+        let m = Membership::new(4, 2);
+        m.record_failure(1);
+        m.record_failure(1); // crosses budget 2
+        m.record_failure(3); // one strike, below budget
+        assert_eq!(m.advance_epoch(), Some(vec![1]));
+        let ck = m.export();
+        assert_eq!(ck.epoch, 1);
+        assert_eq!(ck.lost, vec![1]);
+        assert_eq!(ck.strikes, vec![0, 2, 0, 1]);
+
+        let fresh = Membership::new(4, 2);
+        fresh.restore(&ck).unwrap();
+        assert_eq!(fresh.epoch(), 1);
+        assert!(!fresh.is_alive(1), "restored loss must stay committed");
+        assert_eq!(fresh.survivors(), vec![0, 2, 3]);
+        // the sub-budget strike survives: one more failure crosses
+        assert!(fresh.record_failure(3));
+
+        // guard rails: wrong shape, used membership, out-of-range peer
+        assert!(Membership::new(3, 2).restore(&ck).is_err());
+        assert!(fresh.restore(&ck).is_err(), "used membership refused");
+        let bad = crate::ckpt::MembershipCkpt {
+            epoch: 1, lost: vec![9], strikes: vec![0; 4],
+        };
+        assert!(Membership::new(4, 2).restore(&bad).is_err());
     }
 
     #[test]

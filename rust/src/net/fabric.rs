@@ -241,19 +241,33 @@ impl Fabric {
     }
 
     /// Fabric whose remote traffic rides real loopback TCP sockets (one
-    /// listener thread per worker; see [`TcpTransport`]).
+    /// listener thread per worker; see [`TcpTransport`]). Backoff jitter
+    /// uses seed 0; runs that need replayable retry timing go through
+    /// [`Fabric::for_kind_seeded`].
     pub fn over_tcp(buffers: Vec<Arc<LocalBuffer>>, cost: CostModel,
                     emulate_delays: bool) -> Result<Fabric> {
         Ok(Fabric::with_transport(Box::new(TcpTransport::new(buffers)?), cost,
                                   emulate_delays))
     }
 
-    /// Build the backend selected by `kind`.
+    /// Build the backend selected by `kind` (backoff jitter seed 0).
     pub fn for_kind(kind: TransportKind, buffers: Vec<Arc<LocalBuffer>>,
                     cost: CostModel, emulate_delays: bool) -> Result<Fabric> {
+        Fabric::for_kind_seeded(kind, buffers, cost, emulate_delays, 0)
+    }
+
+    /// Build the backend selected by `kind`, threading the experiment seed
+    /// into the TCP retry-backoff jitter stream
+    /// ([`crate::util::rng::SeedDomain::TcpBackoff`]) so chaos runs replay
+    /// their retry timing. `inproc` has no retries; the seed is unused.
+    pub fn for_kind_seeded(kind: TransportKind, buffers: Vec<Arc<LocalBuffer>>,
+                           cost: CostModel, emulate_delays: bool, seed: u64)
+                           -> Result<Fabric> {
         match kind {
             TransportKind::Inproc => Ok(Fabric::new(buffers, cost, emulate_delays)),
-            TransportKind::Tcp => Fabric::over_tcp(buffers, cost, emulate_delays),
+            TransportKind::Tcp => Ok(Fabric::with_transport(
+                Box::new(TcpTransport::with_seed(buffers, seed)?), cost,
+                emulate_delays)),
         }
     }
 

@@ -145,11 +145,30 @@ const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 /// Bound on the client's wait for a response frame. Generous: a loaded
 /// CI box can legitimately stall a peer's serving thread for a while.
 const RPC_READ_TIMEOUT: Duration = Duration::from_secs(10);
-/// Total attempts per exchange (1 original + 1 retry on a fresh stream).
-const EXCHANGE_ATTEMPTS: usize = 2;
-/// Pause before the retry — long enough for a restarting listener or a
-/// descheduled serving thread, short enough not to stall the engine.
-const RETRY_BACKOFF: Duration = Duration::from_millis(25);
+/// Total attempts per exchange (1 original + up to 3 retries on fresh
+/// streams, each preceded by a capped exponential backoff).
+const EXCHANGE_ATTEMPTS: usize = 4;
+/// Backoff before retry `r` (1-based): `BASE << (r - 1)` capped at
+/// [`RETRY_BACKOFF_CAP`], then scaled by seeded jitter in `[0.5, 1.0)` —
+/// long enough for a restarting listener or a descheduled serving thread,
+/// short enough not to stall the engine, and decorrelated across pairs so
+/// N−1 survivors probing a dead peer don't retry in lockstep.
+const RETRY_BACKOFF_BASE: Duration = Duration::from_millis(5);
+/// Upper bound on a single backoff pause (before jitter scaling).
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(40);
+
+/// The backoff before retry attempt `attempt` (attempt ≥ 1): capped
+/// exponential scaled by a jitter factor in `[0.5, 1.0)` drawn from the
+/// transport's seeded [`SeedDomain::TcpBackoff`] stream. Deterministic for
+/// a fixed seed and draw order, so chaos runs replay their retry timing.
+fn backoff_delay(attempt: usize, rng: &mut Rng) -> Duration {
+    debug_assert!(attempt >= 1, "attempt 0 never backs off");
+    let exp = (attempt - 1).min(31) as u32;
+    let base = RETRY_BACKOFF_BASE
+        .saturating_mul(1u32 << exp)
+        .min(RETRY_BACKOFF_CAP);
+    base.mul_f64(0.5 + 0.5 * rng.f64())
+}
 
 /// Real-socket backend: one listener thread per worker serving its local
 /// buffer, one pooled client connection per (requester, target) pair.
@@ -162,6 +181,8 @@ pub struct TcpTransport {
     pool: Vec<Mutex<Option<TcpStream>>>,
     stop: Arc<AtomicBool>,
     listeners: Mutex<Vec<JoinHandle<()>>>,
+    /// Seeded jitter stream for retry backoff ([`SeedDomain::TcpBackoff`]).
+    backoff_rng: Mutex<Rng>,
 }
 
 impl TcpTransport {
@@ -171,6 +192,14 @@ impl TcpTransport {
     /// reaps the listeners already spawned before surfacing the error, so
     /// a failed `new` never leaks a thread.
     pub fn new(buffers: Vec<Arc<LocalBuffer>>) -> Result<TcpTransport> {
+        TcpTransport::with_seed(buffers, 0)
+    }
+
+    /// Like [`TcpTransport::new`], with the experiment seed feeding the
+    /// retry-backoff jitter stream (the trainer passes `training.seed` so
+    /// chaos runs replay their retry timing; `new` uses seed 0).
+    pub fn with_seed(buffers: Vec<Arc<LocalBuffer>>, seed: u64)
+                     -> Result<TcpTransport> {
         let n = buffers.len();
         let stop = Arc::new(AtomicBool::new(false));
         let mut addrs = Vec::with_capacity(n);
@@ -199,6 +228,8 @@ impl TcpTransport {
             pool: (0..n * n).map(|_| Mutex::new(None)).collect(),
             stop,
             listeners: Mutex::new(handles),
+            backoff_rng: Mutex::new(Rng::new(derive_seed(
+                SeedDomain::TcpBackoff, &[seed]))),
         })
     }
 
@@ -212,12 +243,14 @@ impl TcpTransport {
     /// (request + response, length prefixes included). A failed exchange
     /// drops the pooled stream so the next call reconnects.
     ///
-    /// Robustness (PR 9): connects are bounded by [`CONNECT_TIMEOUT`], the
-    /// client read by [`RPC_READ_TIMEOUT`] (a silent peer can no longer
-    /// hang the engine forever), and the whole exchange retries **once**
-    /// on a fresh connection after a short backoff — both RPCs are
-    /// idempotent reads, so a retry after a half-completed exchange cannot
-    /// corrupt peer state. A second failure surfaces as before.
+    /// Robustness (PR 9/10): connects are bounded by [`CONNECT_TIMEOUT`],
+    /// the client read by [`RPC_READ_TIMEOUT`] (a silent peer can no longer
+    /// hang the engine forever), and the whole exchange retries on a fresh
+    /// connection up to [`EXCHANGE_ATTEMPTS`] times, each retry preceded by
+    /// a capped exponential backoff with seeded jitter (see
+    /// [`backoff_delay`]) — both RPCs are idempotent reads, so a retry
+    /// after a half-completed exchange cannot corrupt peer state. An
+    /// exhausted budget surfaces the last error as before.
     fn exchange(&self, requester: usize, target: usize, request: &[u8])
                 -> Result<(Vec<u8>, usize)> {
         let n = self.buffers.len();
@@ -227,7 +260,13 @@ impl TcpTransport {
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..EXCHANGE_ATTEMPTS {
             if attempt > 0 {
-                std::thread::sleep(RETRY_BACKOFF);
+                let pause = {
+                    let mut rng = self.backoff_rng
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner());
+                    backoff_delay(attempt, &mut rng)
+                };
+                std::thread::sleep(pause);
             }
             if slot.is_none() {
                 match TcpStream::connect_timeout(&self.addrs[target],
@@ -702,6 +741,33 @@ mod tests {
             FaultPlan::parse("err:0.0; delay:1@1.0").unwrap(), 9);
         never.remote_counts(0, 1).unwrap();
         never.remote_fetch(0, 1, &[(0, 0)]).unwrap();
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_with_seeded_jitter() {
+        // Deterministic: the same TcpBackoff-seeded stream replays the
+        // exact pause sequence (chaos-run replayability).
+        let seed = derive_seed(SeedDomain::TcpBackoff, &[42]);
+        let mut a = Rng::new(seed);
+        let mut b = Rng::new(seed);
+        for attempt in 1..6 {
+            assert_eq!(backoff_delay(attempt, &mut a),
+                       backoff_delay(attempt, &mut b));
+        }
+        // Envelope: base << (attempt-1), capped, scaled by [0.5, 1.0).
+        let mut r = Rng::new(seed);
+        for attempt in 1..8 {
+            let exp = (attempt - 1).min(31) as u32;
+            let base = RETRY_BACKOFF_BASE
+                .saturating_mul(1u32 << exp)
+                .min(RETRY_BACKOFF_CAP);
+            let d = backoff_delay(attempt, &mut r);
+            assert!(d >= base / 2, "attempt {attempt}: {d:?} < {base:?}/2");
+            assert!(d <= base, "attempt {attempt}: {d:?} > cap {base:?}");
+        }
+        // The cap binds: attempt 10 pauses no longer than the cap.
+        let mut r = Rng::new(seed);
+        assert!(backoff_delay(10, &mut r) <= RETRY_BACKOFF_CAP);
     }
 
     #[test]

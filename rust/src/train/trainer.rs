@@ -68,6 +68,32 @@
 //! instead of abandoning the barrier, so the remaining workers drain the
 //! epoch and the error is reported at the epoch boundary; every worker,
 //! loader and engine thread is joined before `drive()` returns.
+//!
+//! # Elastic recovery
+//!
+//! In elastic mode the epoch boundary doubles as the **membership commit
+//! point**: pending peer losses observed by the rehearsal fabric become
+//! agreed membership there, and a non-empty commit triggers a **live
+//! plan swap** instead of a permanently degraded run. The boundary is
+//! the one safe point in a protocol whose invariant is "never abandon a
+//! barrier": every worker is parked on its command channel, holding no
+//! barrier and no gradient slot. The coordinator then retires the lost
+//! workers' threads (`Stop` — each drains its engine against the
+//! surviving fabric and exits), re-arms the reduce plane (a rebuilt
+//! [`ChunkPlan`](crate::cluster::ChunkPlan)/`GradAccumulator` and a
+//! fresh `Barrier`, all sized to the survivor count), folds the lost
+//! loader shards back into the survivors' epoch-indexed `ShardPlan`s,
+//! rebuilds the LR schedule for the new replica count (linear scaling
+//! follows the workers down), and grows the survivors' rehearsal
+//! buffers to `ceil(G / N_live)` so the global capacity — and the
+//! sampling plane's chi-square-pinned uniformity — survives the loss.
+//! From the next epoch on, survivors are addressed by **dense rank**
+//! (shard plans, loader seeds, accumulator slots, metric shards), so
+//! the post-swap tail is bit-identical to a fresh run launched at the
+//! survivor count and resumed from the commit-point snapshot. The
+//! parameter slabs are untouched throughout: chunk ownership is
+//! remapped through the same captured [`ParamSlabs`] views (the
+//! "never replace the Literals" invariant holds).
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -191,6 +217,14 @@ impl ParamSlabs {
 /// One epoch of work for one worker.
 enum WorkerCmd {
     Epoch {
+        /// This worker's **dense rank** in the current plan — equal to
+        /// its worker id until an elastic loss commits, after which the
+        /// survivors are renumbered `0..N_live` so accumulator slots,
+        /// shard plans, loader seeds and metric shards match a fresh
+        /// run launched at the survivor count. The engine and its
+        /// fabric peer id keep the ORIGINAL worker id: buffers never
+        /// migrate, only the reduce/loader planes are renumbered.
+        rank: usize,
         /// This worker's mini-batches (dataset indices) for the epoch.
         batches: Vec<Vec<usize>>,
         loader_seed: u64,
@@ -212,26 +246,38 @@ enum WorkerCmd {
     Stop,
 }
 
-/// Everything a worker thread shares with its peers and the coordinator.
-struct Shared<'a> {
-    exec: &'a ModelExecutor,
-    state: &'a RwLock<ParamState>,
-    slabs: &'a ParamSlabs,
-    acc: &'a GradAccumulator,
-    barrier: &'a Barrier,
-    breakdown: &'a [WorkerBreakdown],
-    iterations_done: &'a AtomicUsize,
-    poisoned: &'a AtomicBool,
-    first_error: &'a Mutex<Option<anyhow::Error>>,
-    /// Worker errors swallowed because `first_error` was already taken —
-    /// surfaced as a `(+k more worker errors)` suffix, never dropped
-    /// silently (satellite 1).
-    suppressed: &'a AtomicUsize,
-    /// Pin each worker thread to one allowed CPU (`[cluster] pin_workers`).
-    pin_workers: bool,
+/// The swappable half of the reduce machinery: the gradient accumulator
+/// (chunk plan + slots + fold scratch) and the iteration barrier, both
+/// sized to the **currently live** worker count. Lives behind
+/// `RwLock<Arc<..>>` in [`Shared`]: each worker re-reads it once per
+/// epoch command (boundary work — the per-iteration path just derefs the
+/// Arc, no lock, no allocation), and the coordinator replaces it at an
+/// elastic loss commit while every survivor is parked between epochs.
+/// The old plane dies with the last epoch that used it.
+struct ReducePlane {
+    acc: GradAccumulator,
+    barrier: Barrier,
 }
 
-impl Shared<'_> {
+/// Run-wide error collector shared by the workers and the coordinator.
+/// Workers never abandon a barrier on failure — they poison the run here
+/// and keep rendezvousing; the coordinator drains the collector at every
+/// epoch boundary, and `drive` drains it once more after the threads are
+/// joined so errors raised in the **drain/retire window** (a worker
+/// retired at a loss commit, or the end-of-run engine teardowns — both
+/// poison *after* the last boundary check) surface instead of vanishing.
+#[derive(Default)]
+struct RunErrors {
+    poisoned: AtomicBool,
+    first_error: Mutex<Option<anyhow::Error>>,
+    /// Errors swallowed because `first_error` was already occupied —
+    /// surfaced as a `(+k more worker errors)` suffix, never dropped
+    /// silently. Incremented under the `first_error` lock so the count
+    /// stays attached to the right first error across a concurrent take.
+    suppressed: AtomicUsize,
+}
+
+impl RunErrors {
     fn poison(&self, e: anyhow::Error) {
         // Recover from std-lock poisoning: this path must never panic, or
         // the barrier protocol loses a participant.
@@ -249,20 +295,41 @@ impl Shared<'_> {
 
     /// Take the first recorded error, folding in the count of errors that
     /// arrived after it (a poisoned epoch usually fails on several workers
-    /// at once; reporting only one understates the blast radius).
-    fn take_error(&self) -> Option<anyhow::Error> {
-        let e = self
+    /// at once; reporting only one understates the blast radius). The
+    /// suppressed count is swapped while the slot lock is still held:
+    /// an error poisoned concurrently (the drain/retire window) either
+    /// lands in the now-empty slot as the next first error or is counted
+    /// against it by a later take — never double-counted here and never
+    /// lost between the take and the swap.
+    fn take(&self) -> Option<anyhow::Error> {
+        let mut slot = self
             .first_error
             .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .take()?;
+            .unwrap_or_else(|p| p.into_inner());
+        let e = slot.take()?;
         let k = self.suppressed.swap(0, Ordering::SeqCst);
+        drop(slot);
         Some(if k > 0 {
             anyhow!("{e:#} (+{k} more worker errors)")
         } else {
             e
         })
     }
+}
+
+/// Everything a worker thread shares with its peers and the coordinator.
+struct Shared<'a> {
+    exec: &'a ModelExecutor,
+    state: &'a RwLock<ParamState>,
+    slabs: &'a ParamSlabs,
+    /// Current reduce plane; swapped at elastic loss commits only (see
+    /// [`ReducePlane`] for the contract).
+    plane: &'a RwLock<Arc<ReducePlane>>,
+    breakdown: &'a [WorkerBreakdown],
+    iterations_done: &'a AtomicUsize,
+    errors: &'a RunErrors,
+    /// Pin each worker thread to one allowed CPU (`[cluster] pin_workers`).
+    pin_workers: bool,
 }
 
 /// Run a fallible, possibly-panicking step and poison the run on failure —
@@ -272,14 +339,14 @@ fn poison_on_failure(shared: &Shared<'_>, what: &str,
                      f: impl FnOnce() -> Result<()>) {
     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
         Ok(Ok(())) => {}
-        Ok(Err(e)) => shared.poison(e),
+        Ok(Err(e)) => shared.errors.poison(e),
         Err(panic) => {
             let msg = panic
                 .downcast_ref::<String>()
                 .cloned()
                 .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            shared.poison(anyhow!("{what} panicked: {msg}"));
+            shared.errors.poison(anyhow!("{what} panicked: {msg}"));
         }
     }
 }
@@ -290,11 +357,15 @@ impl<'a> Trainer<'a> {
         Trainer { cfg, exec, dataset, scenario, eval_every: 1 }
     }
 
-    fn schedule(&self) -> LrSchedule {
+    /// LR schedule for a given replica count. Linear scaling makes the
+    /// peak LR a function of the worker count, so an elastic loss commit
+    /// rebuilds the schedule at the survivor count — exactly the schedule
+    /// a fresh `workers`-worker run would use.
+    fn schedule_for(&self, workers: usize) -> LrSchedule {
         let base = self.cfg.training.base_lr.unwrap_or(self.exec.meta.base_lr);
         LrSchedule::new(
             base,
-            self.cfg.cluster.workers,
+            workers,
             self.cfg.training.max_lr_scale,
             self.cfg.training.warmup_epochs,
             self.cfg.training.decay_points.clone(),
@@ -327,9 +398,12 @@ impl<'a> Trainer<'a> {
                 derive_seed(SeedDomain::WorkerBuffer,
                             &[cfg.training.seed, w as u64]))))
             .collect();
-        let mut fabric = Fabric::for_kind(
+        // Seeded transport construction: the tcp transport derives its
+        // retry-backoff jitter stream from the run seed, so chaos runs
+        // over real sockets stay replayable (inproc ignores the seed).
+        let mut fabric = Fabric::for_kind_seeded(
             cfg.cluster.transport, buffers, self.cost_model(),
-            cfg.cluster.emulate_delays)?
+            cfg.cluster.emulate_delays, cfg.training.seed)?
             .with_meta_refresh_rounds(cfg.cluster.meta_refresh_rounds)
             .with_elastic(cfg.cluster.elastic);
         if !cfg.cluster.fault_plan.is_empty() {
@@ -417,7 +491,6 @@ impl<'a> Trainer<'a> {
              reset_each_task: bool) -> Result<RunReport> {
         let cfg = self.cfg;
         let n = cfg.cluster.workers;
-        let schedule = self.schedule();
         let evaluator = Evaluator::new(self.exec, self.dataset, self.scenario);
 
         let rehearsal = engines.is_some();
@@ -453,24 +526,25 @@ impl<'a> Trainer<'a> {
         // for the whole run (see ParamSlabs — the slabs are never
         // reallocated, only overwritten in place).
         let slabs = ParamSlabs::capture(&mut state.write().unwrap());
-        let barrier = Barrier::new(n);
+        // The reduce plane starts sized to the full worker count; an
+        // elastic loss commit swaps in a survivor-sized rebuild while
+        // every worker is parked between epochs (see ReducePlane).
+        let plane = RwLock::new(Arc::new(ReducePlane {
+            acc,
+            barrier: Barrier::new(n),
+        }));
         let breakdown: Vec<WorkerBreakdown> =
             (0..n).map(|_| WorkerBreakdown::default()).collect();
         let iterations_done = AtomicUsize::new(0);
-        let poisoned = AtomicBool::new(false);
-        let first_error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        let suppressed = AtomicUsize::new(0);
+        let errors = RunErrors::default();
         let shared = Shared {
             exec: self.exec,
             state: &state,
             slabs: &slabs,
-            acc: &acc,
-            barrier: &barrier,
+            plane: &plane,
             breakdown: &breakdown,
             iterations_done: &iterations_done,
-            poisoned: &poisoned,
-            first_error: &first_error,
-            suppressed: &suppressed,
+            errors: &errors,
             pin_workers: cfg.cluster.pin_workers,
         };
 
@@ -507,15 +581,25 @@ impl<'a> Trainer<'a> {
 
             // ---- coordinator ------------------------------------------------
             let out = self.coordinate(&cmd_txs, &res_rx, &state, &shared,
-                                      fabric, &evaluator, &schedule,
+                                      fabric, &evaluator,
                                       &indices_for_task, reset_each_task);
             // Always release the workers so the scope can join them, even
-            // when coordination failed.
+            // when coordination failed. Workers already retired at a loss
+            // commit have hung up their channel — ignore those sends.
             for tx in &cmd_txs {
                 let _ = tx.send(WorkerCmd::Stop);
             }
             out
         })?;
+
+        // Drain/retire window accounting: a worker retired at a loss
+        // commit — and every worker's end-of-run engine teardown — poisons
+        // AFTER the coordinator's last boundary check. Surface those
+        // errors (with the suppressed count folded in) now that every
+        // thread is joined, instead of dropping them on the floor.
+        if let Some(e) = errors.take() {
+            return Err(e);
+        }
 
         // Aggregate breakdown across workers.
         let mut fg = (0.0, 0.0, 0.0);
@@ -579,7 +663,10 @@ impl<'a> Trainer<'a> {
     /// (and on `--resume` fast-forwards past the checkpointed epochs —
     /// every epoch with `global_epoch < resume_start` is skipped without
     /// touching a single RNG, so the tail of a resumed run replays the
-    /// uninterrupted run bit-for-bit).
+    /// uninterrupted run bit-for-bit). In elastic mode the boundary is
+    /// also the loss commit point: a non-empty commit retires the lost
+    /// workers and swaps the run onto the survivor-count plan in place
+    /// (see `commit_plan_swap`).
     #[allow(clippy::too_many_arguments)]
     fn coordinate(&self,
                   cmd_txs: &[Sender<WorkerCmd>],
@@ -588,12 +675,16 @@ impl<'a> Trainer<'a> {
                   shared: &Shared<'_>,
                   fabric: Option<&Arc<Fabric>>,
                   evaluator: &Evaluator<'_>,
-                  schedule: &LrSchedule,
                   indices_for_task: &impl Fn(usize) -> Vec<usize>,
                   reset_each_task: bool) -> Result<Vec<EpochRecord>> {
         let cfg = self.cfg;
         let n = cfg.cluster.workers;
         let b = cfg.training.batch;
+        // Original worker ids of the live plan's participants, ascending;
+        // a worker's position in this vec is its dense rank. Starts as
+        // the identity and shrinks at elastic loss commits.
+        let mut live: Vec<usize> = (0..n).collect();
+        let mut schedule = self.schedule_for(n);
         let mut epochs: Vec<EpochRecord> = Vec::new();
         let mut global_epoch = 0usize;
         // Online scenarios force a single pass per task regardless of the
@@ -631,6 +722,16 @@ impl<'a> Trainer<'a> {
                     f.buffer(w).restore_state(buf)?;
                 }
                 f.counters.restore(ck.fabric);
+                // Same-topology resume: carry the strike counts (half-
+                // struck peers keep their spent budget) across the
+                // restart. A *degraded* snapshot (active < workers at
+                // save time) resumes as a dense survivor-count run
+                // instead — its membership plane describes the old
+                // topology (strike vec sized to the original N) and
+                // deliberately stays behind.
+                if f.is_elastic() && ck.membership.strikes.len() == n {
+                    f.membership().restore(&ck.membership)?;
+                }
             }
             for (w, tx) in cmd_txs.iter().enumerate() {
                 tx.send(WorkerCmd::Restore(ck.worker_state[w].clone()))
@@ -662,9 +763,9 @@ impl<'a> Trainer<'a> {
                 }
             }
             let pool = indices_for_task(task);
-            if pool.len() < n * b {
-                bail!("task {task} pool of {} too small for {n} workers x batch {b}",
-                      pool.len());
+            if pool.len() < live.len() * b {
+                bail!("task {task} pool of {} too small for {} workers x batch {b}",
+                      pool.len(), live.len());
             }
             let drift = self.scenario.drift(task);
             for epoch_in_task in 0..epochs_per_task {
@@ -674,47 +775,47 @@ impl<'a> Trainer<'a> {
                     global_epoch += 1;
                     continue;
                 }
+                let n_live = live.len();
                 let lr = schedule.lr_at(epoch_in_task);
                 let epoch_t0 = Instant::now();
+                // Shard the pool over the LIVE workers only: after a loss
+                // commit the retired worker's task share folds back into
+                // the survivors' plans, and dense ranks keep the plan —
+                // and the per-rank loader seed stream — identical to a
+                // fresh run at the survivor count.
                 let plan = ShardPlan::new(
-                    pool.clone(), n, b,
+                    pool.clone(), n_live, b,
                     cfg.training.seed, task, global_epoch);
-                for (w, tx) in cmd_txs.iter().enumerate() {
+                for (rank, &w) in live.iter().enumerate() {
                     let batches: Vec<Vec<usize>> = (0..plan.iterations())
-                        .map(|i| plan.batch(w, i).to_vec())
+                        .map(|i| plan.batch(rank, i).to_vec())
                         .collect();
                     let loader_seed = derive_seed(
                         SeedDomain::WorkerLoader,
-                        &[cfg.training.seed, global_epoch as u64, w as u64]);
-                    tx.send(WorkerCmd::Epoch { batches, loader_seed, lr,
-                                               drift })
+                        &[cfg.training.seed, global_epoch as u64,
+                          rank as u64]);
+                    cmd_txs[w]
+                        .send(WorkerCmd::Epoch { rank, batches, loader_seed,
+                                                 lr, drift })
                         .map_err(|_| anyhow!("worker {w} hung up"))?;
                 }
 
-                // Per-worker metric shards, merged in worker order so the
+                // Per-rank metric shards, merged in rank order so the
                 // aggregate is deterministic for a fixed seed.
-                let mut shards: Vec<TrainMetrics> = vec![TrainMetrics::default(); n];
-                for _ in 0..n {
-                    let (w, m) = res_rx.recv()
+                let mut shards: Vec<TrainMetrics> =
+                    vec![TrainMetrics::default(); n_live];
+                for _ in 0..n_live {
+                    let (rank, m) = res_rx.recv()
                         .map_err(|_| anyhow!("all workers hung up"))?;
-                    shards[w] = m;
+                    shards[rank] = m;
                 }
                 let mut metrics = TrainMetrics::default();
                 for shard in &shards {
                     metrics.merge(shard);
                 }
 
-                if let Some(e) = shared.take_error() {
+                if let Some(e) = shared.errors.take() {
                     return Err(e);
-                }
-
-                // Elastic membership: the epoch boundary is the commit
-                // point — pending losses become agreed membership here,
-                // after which survivors stop probing the dead peers.
-                if let Some(f) = fabric {
-                    if f.is_elastic() {
-                        f.advance_membership_epoch();
-                    }
                 }
 
                 let is_task_end = epoch_in_task + 1 == epochs_per_task;
@@ -738,19 +839,46 @@ impl<'a> Trainer<'a> {
                 });
                 global_epoch += 1;
 
+                // Elastic membership: the epoch boundary is the commit
+                // point — pending losses become agreed membership here,
+                // after which survivors stop probing the dead peers. A
+                // non-empty commit triggers the live plan swap: retire
+                // the lost workers' threads, re-arm the reduce plane and
+                // LR schedule at the survivor count, and rebalance the
+                // rehearsal capacity (see `commit_plan_swap`). Runs after
+                // the epoch record so the forced snapshot below marks
+                // this epoch as completed.
+                let mut swapped = false;
+                if let Some(f) = fabric {
+                    if f.is_elastic() {
+                        if let Some(lost) = f.advance_membership_epoch() {
+                            self.commit_plan_swap(&lost, &mut live, cmd_txs,
+                                                  shared, f)?;
+                            schedule = self.schedule_for(live.len());
+                            swapped = true;
+                        }
+                    }
+                }
+
                 // Checkpoint cadence: snapshot once at least
                 // `ckpt_every_iters` iterations have accumulated since the
                 // last one (default 1 ≈ every epoch boundary). The save
                 // happens OUTSIDE the measured iteration window — workers
                 // are parked between epochs — so the zero-alloc steady
-                // state is untouched.
+                // state is untouched. A loss commit forces a snapshot
+                // regardless of cadence: the commit point is the resume
+                // anchor for the degraded run (the post-swap tail is
+                // bit-identical to a fresh survivor-count run resumed
+                // from exactly here).
                 if let Some(dir) = cfg.training.ckpt_dir.as_deref() {
                     let done = shared.iterations_done.load(Ordering::SeqCst);
-                    if done - iters_at_last_ckpt
-                        >= cfg.training.ckpt_every_iters.max(1)
+                    if swapped
+                        || done - iters_at_last_ckpt
+                            >= cfg.training.ckpt_every_iters.max(1)
                     {
-                        self.save_checkpoint(dir, cmd_txs, state, shared,
-                                             fabric, task, global_epoch)?;
+                        self.save_checkpoint(dir, cmd_txs, &live, state,
+                                             shared, fabric, task,
+                                             global_epoch)?;
                         iters_at_last_ckpt = done;
                     }
                 }
@@ -778,31 +906,102 @@ impl<'a> Trainer<'a> {
         Ok(epochs)
     }
 
+    /// Live plan swap at an elastic loss commit — the recovery tentpole.
+    /// Runs with every worker parked between epochs: no barrier held, no
+    /// gradient slot in flight, so the lost workers can be drained from
+    /// the two-barrier protocol without abandoning a barrier.
+    ///
+    /// The swap leaves the run indistinguishable from a fresh run
+    /// launched at the survivor count and resumed from this boundary:
+    /// survivors are addressed by dense rank from the next epoch on
+    /// (shard plans, loader seeds, accumulator slots, metric shards),
+    /// the chunk plan and barrier are rebuilt exactly as `drive` would
+    /// build them for `N_live`, and per-worker buffer capacity matches
+    /// `per_worker_capacity()` at the survivor count. The parameter and
+    /// momentum slabs are untouched — chunk ownership is remapped
+    /// through the same captured `ParamSlabs` views.
+    fn commit_plan_swap(&self,
+                        lost: &[usize],
+                        live: &mut Vec<usize>,
+                        cmd_txs: &[Sender<WorkerCmd>],
+                        shared: &Shared<'_>,
+                        fabric: &Arc<Fabric>) -> Result<()> {
+        let cfg = self.cfg;
+        // Retire: the lost workers are parked on their command channels,
+        // so Stop drains each one cleanly — the thread tears its engine
+        // down against the surviving fabric and exits. Errors raised in
+        // this window poison the run and surface at the next boundary
+        // (or drive's post-join drain) with the suppressed count intact.
+        for &w in lost {
+            let _ = cmd_txs[w].send(WorkerCmd::Stop);
+        }
+        live.retain(|w| !lost.contains(w));
+        let n_live = live.len();
+        if n_live == 0 {
+            bail!("all {} workers lost — nothing left to train on",
+                  cfg.cluster.workers);
+        }
+        // Re-arm the reduce plane with the same auto-chunk rule drive()
+        // used, so the degraded plan is bitwise the plan a fresh
+        // N_live-worker run would build. A configured `reduce_chunks`
+        // stays valid: config validation pinned it ≥ the original N,
+        // and ChunkPlan accepts any C ≥ workers.
+        let chunks = match cfg.cluster.reduce_chunks {
+            0 => n_live * AUTO_CHUNKS_PER_WORKER,
+            c => c,
+        };
+        {
+            let mut plane = shared.plane.write()
+                .unwrap_or_else(|p| p.into_inner());
+            let acc = plane.acc.rearmed(n_live, chunks);
+            *plane = Arc::new(ReducePlane {
+                acc,
+                barrier: Barrier::new(n_live),
+            });
+        }
+        // Rehearsal rebalance: survivors grow to absorb the lost share,
+        // preserving the global capacity G with the same ceil(G / N)
+        // split a fresh N_live-worker run computes (per_worker_capacity).
+        // Growth never evicts; per-class caps re-even out as the classes
+        // stream in (policy on_resize).
+        let new_cap =
+            (cfg.global_buffer_capacity() + n_live - 1) / n_live;
+        for &w in live.iter() {
+            fabric.buffer(w).grow_capacity(new_cap)?;
+        }
+        Ok(())
+    }
+
     /// Snapshot the complete run state at an epoch boundary (workers are
     /// parked on their command channels, so every RNG clock is quiescent
-    /// and the parameter lock is free).
+    /// and the parameter lock is free). Per-worker records are DENSE over
+    /// the live plan: after a loss commit the snapshot carries
+    /// `active_workers < workers` survivor records (ascending original
+    /// id), the membership plane rides along, and the run resumes as a
+    /// fresh `active_workers`-count run (`Checkpoint::validate_shape`
+    /// points a wrong-count resume at the right one).
     #[allow(clippy::too_many_arguments)]
     fn save_checkpoint(&self,
                        dir: &std::path::Path,
                        cmd_txs: &[Sender<WorkerCmd>],
+                       live: &[usize],
                        state: &RwLock<ParamState>,
                        shared: &Shared<'_>,
                        fabric: Option<&Arc<Fabric>>,
                        task: usize,
                        global_epoch: usize) -> Result<()> {
         let cfg = self.cfg;
-        let n = cfg.cluster.workers;
-        let mut worker_state = Vec::with_capacity(n);
-        for (w, tx) in cmd_txs.iter().enumerate() {
+        let mut worker_state = Vec::with_capacity(live.len());
+        for &w in live {
             let (ck_tx, ck_rx) = channel::<WorkerCkpt>();
-            tx.send(WorkerCmd::Checkpoint(ck_tx))
+            cmd_txs[w].send(WorkerCmd::Checkpoint(ck_tx))
                 .map_err(|_| anyhow!("worker {w} hung up"))?;
             worker_state.push(ck_rx.recv()
                 .map_err(|_| anyhow!("worker {w} died during checkpoint"))?);
         }
         // A failed engine export poisons the run and replies with a
         // default; refuse to publish that half-empty snapshot.
-        if let Some(e) = shared.take_error() {
+        if let Some(e) = shared.errors.take() {
             return Err(e.context("checkpoint export failed"));
         }
         let (params, moms) = {
@@ -811,13 +1010,16 @@ impl<'a> Trainer<'a> {
              st.moms.iter().map(|l| l.data().to_vec()).collect())
         };
         let (buffers, fabric_tallies) = match fabric {
-            Some(f) => ((0..n).map(|w| f.buffer(w).export_state()).collect(),
+            Some(f) => (live.iter()
+                            .map(|&w| f.buffer(w).export_state())
+                            .collect(),
                         f.counters.export()),
             None => (Vec::new(), [0u64; 6]),
         };
         Checkpoint {
             seed: cfg.training.seed,
-            workers: n as u32,
+            workers: cfg.cluster.workers as u32,
+            active_workers: live.len() as u32,
             task: task as u32,
             global_epoch: global_epoch as u32,
             iterations: shared.iterations_done.load(Ordering::SeqCst) as u64,
@@ -826,6 +1028,9 @@ impl<'a> Trainer<'a> {
             worker_state,
             buffers,
             fabric: fabric_tallies,
+            membership: fabric
+                .map(|f| f.membership().export())
+                .unwrap_or_default(),
         }
         .save(dir)
     }
@@ -862,7 +1067,7 @@ fn worker_loop(w: usize,
     let mut last_loss = 0.0f32;
     let mut score_feed: Vec<f32> = Vec::new();
     while let Ok(cmd) = cmd_rx.recv() {
-        let (batches, loader_seed, lr, drift) = match cmd {
+        let (rank, batches, loader_seed, lr, drift) = match cmd {
             WorkerCmd::Stop => break,
             WorkerCmd::Checkpoint(reply) => {
                 // Export between epochs: the engine drains its in-flight
@@ -892,28 +1097,39 @@ fn worker_loop(w: usize,
                 });
                 continue;
             }
-            WorkerCmd::Epoch { batches, loader_seed, lr, drift } => {
-                (batches, loader_seed, lr, drift)
+            WorkerCmd::Epoch { rank, batches, loader_seed, lr, drift } => {
+                (rank, batches, loader_seed, lr, drift)
             }
         };
+        // Re-read the reduce plane once per epoch: an elastic loss
+        // commit swaps it between epochs, while every survivor is
+        // parked right here on its command channel. Boundary-only work —
+        // the steady-state iteration below just derefs the Arc (no
+        // lock, no allocation).
+        let plane = shared.plane
+            .read()
+            .unwrap_or_else(|p| p.into_inner())
+            .clone();
         let iterations = batches.len();
         let mut loader = Loader::with_drift(dataset.clone(), batches, augment,
                                             loader_seed, drift);
         let mut metrics = TrainMetrics::default();
         for _ in 0..iterations {
-            if !shared.poisoned.load(Ordering::SeqCst) {
+            if !shared.errors.poisoned.load(Ordering::SeqCst) {
                 poison_on_failure(shared, "worker", || worker_iteration(
-                    w, shared, &mut loader, engine.as_mut(), &mut ws,
-                    &mut metrics, &mut last_loss, &mut score_feed));
+                    w, rank, shared, &plane.acc, &mut loader,
+                    engine.as_mut(), &mut ws, &mut metrics, &mut last_loss,
+                    &mut score_feed));
             }
             // Rendezvous: all gradients submitted (or the run poisoned).
-            let leader = shared.barrier.wait().is_leader();
-            if !shared.poisoned.load(Ordering::SeqCst) {
+            let leader = plane.barrier.wait().is_leader();
+            if !shared.errors.poisoned.load(Ordering::SeqCst) {
                 // Chunk-parallel reduce-scatter + update: EVERY worker
                 // folds and applies its owned chunks between the barriers.
                 poison_on_failure(shared, "chunk reduce-update",
-                                  || chunk_update(w, shared, lr));
-                if leader && !shared.poisoned.load(Ordering::SeqCst) {
+                                  || chunk_update(rank, shared, &plane.acc,
+                                                  lr));
+                if leader && !shared.errors.poisoned.load(Ordering::SeqCst) {
                     shared.iterations_done.fetch_add(1, Ordering::Relaxed);
                     shared.exec.stats.update_steps
                         .fetch_add(1, Ordering::Relaxed);
@@ -921,15 +1137,15 @@ fn worker_loop(w: usize,
             }
             // All-gather: the second barrier publishes every chunk's
             // update to the next iteration's readers...
-            shared.barrier.wait();
+            plane.barrier.wait();
             // ...after which each worker retires its own gradient slot
             // (the folds already zeroed the sums; this resets the count
             // before this worker's next submit).
             poison_on_failure(shared, "slot retire",
-                              || shared.acc.end_round(w));
+                              || plane.acc.end_round(rank));
         }
         drop(loader);
-        if res_tx.send((w, metrics)).is_err() {
+        if res_tx.send((rank, metrics)).is_err() {
             break; // coordinator gone
         }
     }
@@ -944,10 +1160,15 @@ fn worker_loop(w: usize,
 /// One worker's foreground half of an iteration: load, Listing-1 update,
 /// streamed train step (against this worker's reusable workspace) whose
 /// bucket sink submits each layer's gradients and eagerly folds whatever
-/// owned regions became ready — the PR 6 overlap window.
+/// owned regions became ready — the PR 6 overlap window. `w` is the
+/// original worker id (breakdown row, engine identity); `rank` is the
+/// dense slot in the CURRENT reduce plane (`acc`), which diverges from
+/// `w` after an elastic loss commit.
 #[allow(clippy::too_many_arguments)]
 fn worker_iteration(w: usize,
+                    rank: usize,
                     shared: &Shared<'_>,
+                    acc: &GradAccumulator,
                     loader: &mut Loader,
                     engine: Option<&mut RehearsalEngine>,
                     ws: &mut crate::runtime::StepWorkspace,
@@ -990,8 +1211,8 @@ fn worker_iteration(w: usize,
         // of backward. Eager folds only write the accumulator's own f64
         // scratch, so running them under this read lock is safe.
         let mut sink = |bucket: usize, grads: &[Literal]| -> Result<()> {
-            shared.acc.submit_bucket(w, bucket, grads)?;
-            shared.acc.fold_ready(w)?;
+            acc.submit_bucket(rank, bucket, grads)?;
+            acc.fold_ready(rank)?;
             Ok(())
         };
         if reps_len > 0 {
@@ -1015,7 +1236,7 @@ fn worker_iteration(w: usize,
     let rows = batch.len() + reps_len;
     metrics.add_step(out.loss as f64, out.top5 as f64, rows as f64);
     *last_loss = out.loss;
-    shared.acc.fold_ready(w)?;
+    acc.fold_ready(rank)?;
     Ok(())
 }
 
@@ -1029,14 +1250,15 @@ fn worker_iteration(w: usize,
 /// the old serial O(N·P) leader fold remains bounded by ~O(P·(1 + 1/N))
 /// work per worker even when nothing overlapped, with no per-iteration
 /// allocation — the chunk scratch lives in the accumulator.
-fn chunk_update(w: usize, shared: &Shared<'_>, lr: f64) -> Result<()> {
-    let plan = shared.acc.plan();
+fn chunk_update(rank: usize, shared: &Shared<'_>,
+                acc: &GradAccumulator, lr: f64) -> Result<()> {
+    let plan = acc.plan();
     // Counts are stable between the barriers (all submitters quiesced),
     // so every worker reads the same replica total for the mean.
-    let replicas = shared.acc.replicas();
+    let replicas = acc.replicas();
     let t0 = Instant::now();
-    for chunk in plan.owned_by(w) {
-        shared.acc.reduce_chunk_with(chunk, replicas, |mean| {
+    for chunk in plan.owned_by(rank) {
+        acc.reduce_chunk_with(chunk, replicas, |mean| {
             for seg in plan.segments(chunk) {
                 let g = &mean[seg.chunk_off..seg.chunk_off + seg.len()];
                 // SAFETY: chunk ownership is a static partition — this
@@ -1101,6 +1323,34 @@ mod tests {
         cfg.artifacts_dir = std::path::PathBuf::from("<nonexistent>");
         cfg.validate().unwrap();
         cfg
+    }
+
+    #[test]
+    fn drain_window_errors_are_counted_not_dropped() {
+        // The retire/teardown window poisons AFTER a boundary's take
+        // (a worker retired at a loss commit, end-of-run engine
+        // teardowns). Those errors must surface at the next take — or
+        // drive's post-join drain — with the `+k` suppressed accounting
+        // intact, never silently dropped.
+        let errs = RunErrors::default();
+        errs.poison(anyhow!("boundary error"));
+        errs.poison(anyhow!("second"));
+        errs.poison(anyhow!("third"));
+        let e = errs.take().expect("first take").to_string();
+        assert!(e.contains("boundary error")
+                    && e.contains("(+2 more worker errors)"),
+                "bad aggregate: {e}");
+        // Drain/retire window: errors raised after the take start a
+        // fresh first-error slot and a fresh suppressed count.
+        errs.poison(anyhow!("retired worker teardown"));
+        errs.poison(anyhow!("late straggler"));
+        let e = errs.take().expect("drain-window take").to_string();
+        assert!(e.contains("retired worker teardown")
+                    && e.contains("(+1 more worker errors)"),
+                "drain-window errors miscounted: {e}");
+        assert!(errs.take().is_none(), "no third error was recorded");
+        assert!(errs.poisoned.load(Ordering::SeqCst),
+                "poisoned flag is sticky across takes");
     }
 
     #[test]

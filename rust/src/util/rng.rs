@@ -185,6 +185,10 @@ pub enum SeedDomain {
     /// Fault-injection schedule of the chaos harness (PR 9) — ids: `[seed]`.
     /// Test-only: drives `FaultyTransport`'s drop/delay/error draws.
     FaultPlan,
+    /// TCP retry-backoff jitter stream (PR 10) — ids: `[seed]`. Scales the
+    /// capped exponential pauses in `TcpTransport::exchange` so chaos runs
+    /// replay the same retry timing from the experiment seed.
+    TcpBackoff,
 }
 
 /// Derive the seed for a named RNG stream from the experiment seed plus
@@ -235,6 +239,7 @@ pub fn derive_seed(domain: SeedDomain, ids: &[u64]) -> u64 {
             ids[0] ^ 0xD21F_7A5E ^ ids[1].wrapping_add(1).wrapping_mul(GOLDEN)
         }
         FaultPlan => { arity(1); ids[0] ^ 0xFA17_1A7E }
+        TcpBackoff => { arity(1); ids[0] ^ 0x0BAC_C0FF }
     }
 }
 
@@ -292,6 +297,7 @@ mod tests {
             derive_seed(SeedDomain::ScenarioBlurry, &[s, 0]),
             derive_seed(SeedDomain::ScenarioDrift, &[s, 0]),
             derive_seed(SeedDomain::FaultPlan, &[s]),
+            derive_seed(SeedDomain::TcpBackoff, &[s]),
         ];
         let mut dedup = all.to_vec();
         dedup.sort_unstable();

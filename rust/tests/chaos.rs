@@ -1,15 +1,21 @@
-//! Seeded fault-injection suite for the elastic fault domain (PR 9).
+//! Seeded fault-injection suite for the elastic fault domain.
 //!
-//! Three scenarios the unit tests cannot cover end-to-end:
+//! Four scenarios the unit tests cannot cover end-to-end:
 //!
 //! 1. a peer dying mid-run under `elastic = true` — the run must complete
 //!    with the degradation *counted* (never silent) and the loss committed
 //!    by the membership plane at an epoch boundary;
-//! 2. checkpoint → kill → resume at workers = 1 — the resumed run must be
+//! 2. the live recovery tentpole: after the commit the trainer swaps the
+//!    run onto the survivor-count plan in place (retired worker thread,
+//!    re-armed reduce plane, rebalanced rehearsal buffers) and forces a
+//!    commit-point snapshot — the degraded tail must be bit-identical to
+//!    a fresh survivor-count run resumed from that snapshot, and the
+//!    degraded-fetch tally must be confined to the pre-commit window;
+//! 3. checkpoint → kill → resume at workers = 1 — the resumed run must be
 //!    bit-identical to an uninterrupted one, and the snapshot itself must
 //!    be byte-deterministic (same seed → same file bytes), which is what
 //!    makes the atomic-rename publish equivalent to surviving a real kill;
-//! 3. a corrupted or truncated snapshot — resume must fail with a clean
+//! 4. a corrupted or truncated snapshot — resume must fail with a clean
 //!    error (CRC/magic/truncation named), never a panic or a wild alloc.
 //!
 //! All faults come from `[cluster] fault_plan`, a seeded test-only
@@ -74,6 +80,86 @@ fn elastic_run_survives_peer_death_and_counts_it() {
         "non-elastic run must fail when a peer dies");
     let chain = format!("{err:#}");
     assert!(!chain.is_empty());
+}
+
+#[test]
+fn lost_worker_is_recovered_by_a_live_plan_swap() {
+    // The recovery tentpole, end to end: a 4-worker elastic run loses
+    // peer 1 (dead transport endpoint from op 0). At the commit boundary
+    // the trainer swaps onto the 3-survivor plan in place — retires the
+    // worker thread, re-arms the reduce plane, rebalances the buffers —
+    // and forces a commit-point snapshot. The degraded tail must then be
+    // bit-identical to a fresh 3-worker run resumed from that snapshot.
+    let dir = tmp_dir("swap");
+    let mut cfg = tiny_cfg();
+    cfg.cluster.workers = 4;
+    cfg.cluster.elastic = true;
+    cfg.cluster.fault_plan = "kill:1@0".to_string();
+    cfg.training.epochs_per_task = 2; // 4 boundaries; commit lands early
+    cfg.training.ckpt_dir = Some(dir.clone());
+    cfg.training.ckpt_every_iters = usize::MAX; // only the commit saves
+    cfg.validate().unwrap();
+    let a = run_experiment(&cfg)
+        .expect("elastic run must recover from a lost worker");
+    assert_eq!(a.lost_workers, 1, "peer 1 must be committed lost");
+    assert!(a.degraded_fetches > 0,
+            "the pre-commit window must be counted as degraded");
+
+    // The forced commit-point snapshot is the recovery anchor: it records
+    // the launch topology AND the survivor count, with dense per-survivor
+    // records and the membership plane riding along. Its degraded tally
+    // already equals the whole run's: after the swap the dead peer is
+    // skipped silently, so no degraded fetch may happen post-commit.
+    let ck = Checkpoint::load(&dir).expect("commit-point snapshot");
+    assert_eq!(ck.workers, 4, "launch topology is preserved");
+    assert_eq!(ck.active(), 3, "snapshot must carry the survivor count");
+    assert_eq!(ck.membership.lost, vec![1]);
+    assert_eq!(ck.buffers.len(), 3, "survivor records are dense");
+    assert_eq!(ck.worker_state.len(), 3);
+    assert!((ck.global_epoch as usize) < a.epochs.len(),
+            "the commit must leave a post-swap tail, got epoch {}",
+            ck.global_epoch);
+    assert_eq!(ck.fabric[5], a.degraded_fetches,
+               "degraded fetches must be confined to the pre-commit window");
+
+    // Resume the snapshot as a fresh, dense 3-worker run (no fault plan,
+    // no dead peer): its replay of the post-commit epochs must match run
+    // A's live degraded tail bit for bit — proof the swap really put the
+    // run onto the 3-worker plan (shards, loader seeds, chunk plan, LR
+    // scale and buffer capacity all included).
+    let mut cfg_r = cfg.clone();
+    cfg_r.cluster.workers = 3;
+    cfg_r.cluster.fault_plan = String::new();
+    cfg_r.training.resume = true;
+    cfg_r.validate().unwrap();
+    let r = run_experiment(&cfg_r).expect("degraded resume");
+    assert_eq!(r.lost_workers, 0, "the resumed dense run is healthy");
+    assert_eq!(a.iterations, r.iterations,
+               "resume restores the iteration cursor");
+    assert_eq!(a.final_accuracy_t, r.final_accuracy_t);
+    assert_eq!(a.final_top1_accuracy_t, r.final_top1_accuracy_t);
+    let tail: Vec<_> = a.epochs.iter()
+        .filter(|e| e.epoch >= ck.global_epoch as usize).collect();
+    assert_eq!(r.epochs.len(), tail.len());
+    for (er, ea) in r.epochs.iter().zip(tail) {
+        assert_eq!(er.epoch, ea.epoch);
+        assert_eq!(er.train_loss, ea.train_loss,
+                   "epoch {} diverged from the live swap", er.epoch);
+        assert_eq!(er.train_top5, ea.train_top5);
+    }
+
+    // Resuming a degraded snapshot at the launch count is refused with
+    // actionable advice, never a mis-shaped restore.
+    let mut cfg_w = cfg.clone();
+    cfg_w.cluster.fault_plan = String::new();
+    cfg_w.training.resume = true;
+    cfg_w.validate().unwrap();
+    let err = run_experiment(&cfg_w)
+        .expect_err("a 4-worker resume of a 3-survivor snapshot");
+    let chain = format!("{err:#}");
+    assert!(chain.contains("workers = 3"),
+            "the error must name the right resume count: {chain}");
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

@@ -125,6 +125,112 @@ fn local_scope_stays_local() {
 }
 
 #[test]
+fn post_loss_plans_stay_uniform_over_survivors() {
+    // Elastic loss commit, planner's view: the committed-lost peer serves
+    // an empty count vector. Global picks must renormalize over the live
+    // peers only — no request ever targets the dead node, the draw stays
+    // χ²-uniform over the SURVIVING residents (the lost peer's classes,
+    // still hosted on survivors, are not under-served), and the degraded
+    // plan is bitwise the plan over the dense survivor-only geometry
+    // (empty nodes are invisible to the flat pick space, so the live
+    // post-swap run and a fresh survivor-count run draw identically).
+    forall(4, |rng| {
+        // 4-node geometry with node 1 committed lost. Classes 0 and 1
+        // were hosted on the dead peer too; survivors still hold them.
+        let c0 = usize_in(rng, 2, 6);
+        let c1a = usize_in(rng, 2, 6);
+        let c1b = usize_in(rng, 2, 6);
+        let c2 = usize_in(rng, 2, 6);
+        let degraded = vec![
+            vec![(0u32, c0), (1, c1a)],
+            vec![], // committed-lost peer: empty to the planner
+            vec![(1u32, c1b)],
+            vec![(2u32, c2)],
+        ];
+        let dense = vec![
+            vec![(0u32, c0), (1, c1a)],
+            vec![(1u32, c1b)],
+            vec![(2u32, c2)],
+        ];
+        let tot = total(&degraded);
+        let sampler = GlobalSampler::new(0, SamplingScope::Global);
+        let seed = rng.next_u64();
+
+        // Bitwise plan equivalence against the dense survivor geometry:
+        // same RNG stream, node ids remapped 0,2,3 -> 0,1,2.
+        let mut prng_a = Rng::new(seed);
+        let mut prng_b = Rng::new(seed);
+        for round in 0..50 {
+            let pa = sampler.plan(&degraded, 3, &mut prng_a);
+            let pb = sampler.plan(&dense, 3, &mut prng_b);
+            if pa.total != pb.total
+                || pa.requests.len() != pb.requests.len()
+            {
+                return Err(format!("round {round}: plan shapes diverged"));
+            }
+            for ((wa, la), (wb, lb)) in pa.requests.iter().zip(&pb.requests) {
+                let wa = if *wa > 1 { *wa - 1 } else { *wa };
+                if wa != *wb || la != lb {
+                    return Err(format!(
+                        "round {round}: degraded plan != dense survivor plan"));
+                }
+            }
+        }
+
+        // χ² uniformity over surviving residents; the dead node must
+        // never be asked for anything.
+        let mut index = std::collections::HashMap::new();
+        let mut next = 0usize;
+        for (w, node) in degraded.iter().enumerate() {
+            for &(c, n) in node {
+                for i in 0..n {
+                    index.insert((w, c, i), next);
+                    next += 1;
+                }
+            }
+        }
+        let mut hits = vec![0u64; tot];
+        let mut prng = Rng::new(seed ^ 0x5eed);
+        let rounds = 6000u64;
+        for _ in 0..rounds {
+            let plan = sampler.plan(&degraded, 3, &mut prng);
+            for (w, picks) in &plan.requests {
+                if *w == 1 {
+                    return Err("plan requested from the lost peer".into());
+                }
+                for &(c, i) in picks {
+                    hits[index[&(*w, c, i)]] += 1;
+                }
+            }
+        }
+        let chi2 = chi_square_uniform(&hits);
+        // dof = tot-1 ≤ 19; 0.9999 quantile of χ²(19) ≈ 46 — allow >2x.
+        if chi2 > 110.0 {
+            return Err(format!("χ²={chi2} over {tot} survivors: {hits:?}"));
+        }
+        // The lost peer's class (1) must keep its proportional share of
+        // the global picks — the renormalization may not starve it.
+        let class1: u64 = degraded
+            .iter()
+            .enumerate()
+            .flat_map(|(w, node)| node.iter().map(move |&(c, n)| (w, c, n)))
+            .filter(|&(_, c, _)| c == 1)
+            .map(|(w, c, n)| {
+                (0..n).map(|i| hits[index[&(w, c, i)]]).sum::<u64>()
+            })
+            .sum();
+        let expect = rounds as f64 * 3.0 * (c1a + c1b) as f64 / tot as f64;
+        let ratio = class1 as f64 / expect;
+        if !(0.8..=1.2).contains(&ratio) {
+            return Err(format!(
+                "class 1 got {class1} picks, expected ≈{expect:.0} \
+                 (ratio {ratio:.3}): the lost peer's class is mis-served"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn every_resident_equally_likely() {
     // χ² uniformity across ALL residents of a fixed random geometry.
     forall(4, |rng| {
